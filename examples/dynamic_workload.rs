@@ -1,0 +1,95 @@
+//! Dynamic + heterogeneous workload: tasks that are *not known in
+//! advance* (the paper's definition of workload dynamism, §I/§III-C).
+//!
+//! A "steering" loop watches completed units and decides follow-up work
+//! at runtime: short screening tasks spawn longer refinement tasks only
+//! when their (real) output passes a filter — mixing sleeps, real
+//! executables and multi-core units on one pilot.
+//!
+//!     cargo run --release --example dynamic_workload
+
+use rp::agent::real::UnitOutcome;
+use rp::api::{PilotDescription, Session, Unit, UnitDescription};
+use rp::profiler::Analysis;
+use rp::states::UnitState;
+
+const CORES: usize = 8;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let session = Session::new("dynamic");
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+    let pilot = pmgr.submit(
+        PilotDescription::new("local.localhost", CORES, 3600.0)
+            .with_override("agent.executers", "8"),
+    )?;
+    umgr.add_pilot(&pilot);
+
+    // phase 1 — screening: 16 cheap tasks whose *output* decides what
+    // runs next (here: an executable whose stdout we inspect).
+    let screen: Vec<Unit> = umgr.submit(
+        (0..16)
+            .map(|i| {
+                UnitDescription::executable(
+                    "/bin/sh",
+                    vec!["-c".into(), format!("echo score=$(( {i} * 7 % 10 ))")],
+                )
+                .name(format!("screen-{i:02}"))
+            })
+            .collect(),
+    );
+    umgr.wait_all(60.0)?;
+
+    // steering: parse real outputs, generate follow-ups at runtime
+    let mut refine = vec![];
+    for (i, u) in screen.iter().enumerate() {
+        let score = match u.outcome() {
+            Some(UnitOutcome::Exec(o)) => o
+                .stdout
+                .trim()
+                .strip_prefix("score=")
+                .and_then(|s| s.parse::<u32>().ok())
+                .unwrap_or(0),
+            _ => 0,
+        };
+        if score >= 5 {
+            // promising candidates get a longer, wider refinement task
+            refine.push(
+                UnitDescription::sleep(0.3)
+                    .cores(2)
+                    .mpi(true)
+                    .name(format!("refine-{i:02}")),
+            );
+        }
+    }
+    println!("screening promoted {}/{} candidates", refine.len(), screen.len());
+    assert!(!refine.is_empty());
+    let refined = umgr.submit(refine);
+    umgr.wait_all(60.0)?;
+
+    // phase 3 — a final aggregation task, submitted only now that the
+    // workload shape is fully known
+    let agg = umgr.submit(vec![UnitDescription::executable(
+        "/bin/sh",
+        vec!["-c".into(), "echo aggregate done".into()],
+    )
+    .name("aggregate")]);
+    umgr.wait_all(60.0)?;
+
+    let all: Vec<&Unit> = screen.iter().chain(refined.iter()).chain(agg.iter()).collect();
+    let done = all.iter().filter(|u| u.state() == UnitState::Done).count();
+    let profile = session.profiler().snapshot();
+    let a = Analysis::new(&profile);
+    println!("{done}/{} units done across 3 dynamic phases", all.len());
+    println!(
+        "ttc_a: {:.2}s  peak concurrency: {}  utilization: {:.1}%",
+        a.ttc_a(),
+        a.peak_concurrency(),
+        100.0 * a.utilization(CORES, 1)
+    );
+    assert_eq!(done, all.len());
+
+    pilot.drain()?;
+    session.close();
+    Ok(())
+}

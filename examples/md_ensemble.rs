@@ -1,0 +1,136 @@
+//! End-to-end driver: a real ensemble-MD workload through the full
+//! three-layer stack.
+//!
+//! * L1 — Pallas Lennard-Jones kernel (python/compile/kernels/lj.py)
+//! * L2 — JAX velocity-Verlet MD model (python/compile/model.py),
+//!   AOT-lowered once to `artifacts/*.hlo.txt`
+//! * L3 — this pilot system: PilotManager launches a local pilot, the
+//!   UnitManager late-binds MD and analysis units, the Agent schedules
+//!   cores and executes payloads via PJRT — **no Python on the request
+//!   path**.
+//!
+//! The workload is the paper's motivating pattern (§I: ensemble
+//! molecular dynamics): E ensemble members, each advanced CHUNKS times
+//! by an MD unit, with an Rg-analysis unit after each chunk — a
+//! heterogeneous, multi-generation bag of 2*E*CHUNKS tasks.
+//!
+//!     make artifacts && cargo run --release --example md_ensemble
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::agent::real::UnitOutcome;
+use rp::profiler::Analysis;
+use rp::states::UnitState;
+use rp::util;
+
+const ENSEMBLE: u64 = 16; // ensemble members (tasks)
+const CHUNKS: usize = 4; // MD units per member (10 steps each)
+const CORES: usize = 8;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let session = Session::new("md-ensemble");
+    session.load_artifacts(artifacts)?;
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+
+    let pilot = pmgr.submit(
+        PilotDescription::new("local.localhost", CORES, 3600.0)
+            .with_override("agent.executers", &CORES.to_string()),
+    )?;
+    umgr.add_pilot(&pilot);
+    println!(
+        "pilot {}: {} cores on {}",
+        pilot.id(),
+        pilot.cores(),
+        pilot.resource().label
+    );
+    println!(
+        "ensemble: {ENSEMBLE} members x {CHUNKS} chunks (10 MD steps each, N=256 LJ particles) + analysis"
+    );
+
+    let t0 = util::now();
+    let mut all_units = vec![];
+    // chunked execution with a generation barrier per chunk: the pattern
+    // replica-exchange style applications impose (paper §IV-D).
+    for chunk in 0..CHUNKS {
+        let mut descrs = vec![];
+        for member in 0..ENSEMBLE {
+            descrs.push(
+                UnitDescription::pjrt("md_n256_s10", member)
+                    .name(format!("md-c{chunk}-m{member:02}")),
+            );
+        }
+        let md_units = umgr.submit(descrs);
+        umgr.wait_all(600.0)?;
+        // analysis generation on the evolved trajectories
+        let rg_units = umgr.submit(
+            (0..ENSEMBLE)
+                .map(|m| {
+                    UnitDescription::pjrt("rg_n256", m).name(format!("rg-c{chunk}-m{m:02}"))
+                })
+                .collect(),
+        );
+        umgr.wait_all(600.0)?;
+
+        // report ensemble state after this chunk
+        let (mut pe_sum, mut rg_sum, mut n) = (0.0, 0.0, 0);
+        for u in md_units.iter() {
+            if let Some(UnitOutcome::Pjrt(r)) = u.outcome() {
+                pe_sum += r.pe;
+                n += 1;
+            }
+        }
+        for u in rg_units.iter() {
+            if let Some(UnitOutcome::Pjrt(r)) = u.outcome() {
+                rg_sum += r.ke_or_rg;
+            }
+        }
+        println!(
+            "chunk {chunk}: steps {:>3}  <PE> = {:>10.3}  <Rg> = {:.4}",
+            (chunk + 1) * 10,
+            pe_sum / n as f64,
+            rg_sum / ENSEMBLE as f64
+        );
+        all_units.extend(md_units);
+        all_units.extend(rg_units);
+    }
+    let wall = util::now() - t0;
+
+    let done = all_units.iter().filter(|u| u.state() == UnitState::Done).count();
+    let failed: Vec<_> = all_units
+        .iter()
+        .filter(|u| u.state() == UnitState::Failed)
+        .map(|u| u.error().unwrap_or_default())
+        .collect();
+    if !failed.is_empty() {
+        eprintln!("failures: {failed:?}");
+    }
+
+    let profile = session.profiler().snapshot();
+    let a = Analysis::new(&profile);
+    println!("---");
+    println!("units             : {done}/{} done", all_units.len());
+    println!("wall time         : {wall:.2}s");
+    println!("ttc_a             : {:.2}s", a.ttc_a());
+    println!("throughput        : {:.1} units/s", done as f64 / wall.max(1e-9));
+    println!("peak concurrency  : {}", a.peak_concurrency());
+    println!("core utilization  : {:.1}%", 100.0 * a.utilization(CORES, 1));
+    let phases = a.unit_phases();
+    let mean_overhead = phases
+        .iter()
+        .map(|p| p.occupation_overhead())
+        .sum::<f64>()
+        / phases.len().max(1) as f64;
+    println!("mean core-occupation overhead: {:.1} ms/unit", 1e3 * mean_overhead);
+
+    pilot.drain()?;
+    session.write_profile()?;
+    session.close();
+    assert_eq!(done, all_units.len(), "end-to-end run must complete fully");
+    Ok(())
+}

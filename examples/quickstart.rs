@@ -1,0 +1,49 @@
+//! Quickstart: launch a local pilot, run a bag of tasks, print the
+//! profiled timeline summary.
+//!
+//!     cargo run --release --example quickstart
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::profiler::Analysis;
+use rp::states::UnitState;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // A session owns the coordination store, profiler and sandbox.
+    let session = Session::new("quickstart");
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+
+    // Describe and submit a pilot: 4 cores on the local "resource".
+    let pilot = pmgr.submit(PilotDescription::new("local.localhost", 4, 600.0))?;
+    println!("pilot {} is {}", pilot.id(), pilot.state());
+
+    // Late-bind a workload onto it: 12 short sleep tasks + 4 real
+    // executables (the pilot is payload-agnostic).
+    umgr.add_pilot(&pilot);
+    let mut descrs: Vec<UnitDescription> = (0..12)
+        .map(|i| UnitDescription::sleep(0.2).name(format!("sleep-{i:02}")))
+        .collect();
+    for i in 0..4 {
+        descrs.push(
+            UnitDescription::executable("/bin/echo", vec![format!("hello from unit {i}")])
+                .name(format!("echo-{i}")),
+        );
+    }
+    let units = umgr.submit(descrs);
+    umgr.wait_all(60.0)?;
+
+    let done = units.iter().filter(|u| u.state() == UnitState::Done).count();
+    println!("{done}/{} units done", units.len());
+
+    // The profiler recorded every state transition; analyze it.
+    let profile = session.profiler().snapshot();
+    let a = Analysis::new(&profile);
+    println!("ttc_a             : {:.2}s", a.ttc_a());
+    println!("peak concurrency  : {}", a.peak_concurrency());
+    println!("core utilization  : {:.1}%", 100.0 * a.utilization(4, 1));
+    println!("sandbox           : {}", session.sandbox().display());
+
+    pilot.drain()?;
+    session.close();
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and its README.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per payload variant plus ``manifest.json`` describing
+shapes so the Rust runtime (rust/src/runtime/) can enumerate and validate
+them without re-parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, n_particles, steps, tile) payload variants.  n=64 is the smoke /
+# test artifact; n=256 is what examples/md_ensemble.rs runs per unit.
+MD_VARIANTS = [
+    ("md_n64_s10", 64, 10, 32),
+    ("md_n256_s10", 256, 10, 64),
+]
+ANALYSIS_VARIANTS = [
+    ("rg_n64", 64),
+    ("rg_n256", 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side can uniformly unwrap tuple outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_md(n: int, steps: int, tile: int):
+    spec = jax.ShapeDtypeStruct((3, n), jnp.float32)
+    fn = functools.partial(model.md_run, steps=steps, tile=tile)
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_rg(n: int):
+    spec = jax.ShapeDtypeStruct((3, n), jnp.float32)
+    return jax.jit(model.rg_analysis).lower(spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dt": model.DT, "mass": model.MASS, "eps": model.EPS,
+                "sigma": model.SIGMA, "payloads": []}
+
+    for name, n, steps, tile in MD_VARIANTS:
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lower_md(n, steps, tile))
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["payloads"].append({
+            "name": name, "kind": "md", "path": path, "n": n,
+            "steps": steps, "tile": tile,
+            "inputs": [[3, n], [3, n]],
+            "outputs": [[3, n], [3, n], [], []],
+        })
+        print(f"wrote {path}: {len(text)} chars")
+
+    for name, n in ANALYSIS_VARIANTS:
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lower_rg(n))
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["payloads"].append({
+            "name": name, "kind": "rg", "path": path, "n": n,
+            "steps": 0, "tile": 0,
+            "inputs": [[3, n]],
+            "outputs": [[3], []],
+        })
+        print(f"wrote {path}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['payloads'])} payloads)")
+
+    # Reference vectors for the Rust e2e test: deterministic lattice inputs
+    # and the eager-jax outputs the PJRT execution must reproduce.
+    reference = {}
+    for name, n, steps, tile in MD_VARIANTS:
+        pos, vel = model.lattice_init(n)
+        p, v, pe, ke = model.md_run(pos, vel, steps=steps, tile=tile)
+        reference[name] = {
+            "pos_in": [float(x) for x in pos.flatten()],
+            "vel_in": [float(x) for x in vel.flatten()],
+            "pos_out_sum": float(p.sum()),
+            "pos_out_abs_sum": float(abs(p).sum()),
+            "vel_out_abs_sum": float(abs(v).sum()),
+            "pe": float(pe),
+            "ke": float(ke),
+        }
+    for name, n in ANALYSIS_VARIANTS:
+        pos, _ = model.lattice_init(n)
+        com, rg = model.rg_analysis(pos)
+        reference[name] = {
+            "pos_in": [float(x) for x in pos.flatten()],
+            "com": [float(x) for x in com],
+            "rg": float(rg),
+        }
+    with open(os.path.join(args.out_dir, "reference.json"), "w") as f:
+        json.dump(reference, f)
+    print("wrote reference.json")
+
+
+if __name__ == "__main__":
+    main()

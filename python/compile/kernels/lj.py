@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernel: all-pairs Lennard-Jones forces + potential energy.
+
+This is the compute hot-spot of the MD payload that compute units execute
+(the paper's motivating workload is ensemble molecular dynamics, refs
+[1-3,14,48]).  The O(N^2) pairwise interaction is tiled over (i, j)
+particle blocks so each grid step works on a (3, TILE_I) x (3, TILE_J)
+pair of position tiles resident in VMEM, accumulating forces and
+per-particle energies into the i-tile outputs.
+
+TPU adaptation notes (see DESIGN.md "Hardware-Adaptation"):
+  * positions are laid out (3, N) — the particle axis is the lane axis,
+    so the pairwise distance/force math vectorizes on the VPU; the tiny
+    xyz axis stays on sublanes.
+  * the j-tile stream is the HBM->VMEM-bound dimension; BlockSpec maps
+    output blocks by i only, so XLA/Mosaic can keep the force accumulator
+    tile resident across the whole j sweep.
+  * VMEM footprint per grid step at TILE=128: two (3,128) f32 position
+    tiles + one (3,128) force tile + one (1,128) energy tile ~= 5 KB,
+    leaving ample room for double-buffering.
+
+The kernel MUST be lowered with interpret=True in this environment: the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example
+README).  Correctness is asserted against the pure-jnp oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile size along the particle axis.  Must divide N (aot.py pads
+# the particle count to a multiple of the tile).  128 matches the TPU
+# lane width; tests sweep smaller tiles too.
+DEFAULT_TILE = 64
+
+
+def _lj_tile_kernel(eps: float, sigma: float, tile_i: int, tile_j: int,
+                    x_i_ref, x_j_ref, f_ref, e_ref):
+    """One (i, j) tile of the LJ interaction.
+
+    x_i_ref: (3, TILE_I) positions of the "owned" particles.
+    x_j_ref: (3, TILE_J) positions of the interacting particles.
+    f_ref:   (3, TILE_I) force accumulator (block indexed by i only).
+    e_ref:   (1, TILE_I) per-particle potential energy accumulator
+             (half-counted per pair so the total sums correctly).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    x_i = x_i_ref[...]  # (3, TI)
+    x_j = x_j_ref[...]  # (3, TJ)
+
+    # Pairwise displacement dx[c, a, b] = x_i[c, a] - x_j[c, b].
+    dx = x_i[:, :, None] - x_j[:, None, :]          # (3, TI, TJ)
+    r2 = jnp.sum(dx * dx, axis=0)                   # (TI, TJ)
+
+    # Mask self-interaction (global index equality).  Because the same
+    # position array is passed for both tiles, i-tile a == j-tile b iff
+    # the *global* particle indices agree.
+    gi = i * tile_i + jax.lax.broadcasted_iota(jnp.int32, (tile_i, tile_j), 0)
+    gj = j * tile_j + jax.lax.broadcasted_iota(jnp.int32, (tile_i, tile_j), 1)
+    mask = gi != gj
+
+    r2 = jnp.where(mask, r2, 1.0)                   # avoid 0/0 on the diagonal
+    inv_r2 = (sigma * sigma) / r2                   # (sigma/r)^2
+    inv_r6 = inv_r2 * inv_r2 * inv_r2               # (sigma/r)^6
+    inv_r12 = inv_r6 * inv_r6                       # (sigma/r)^12
+
+    # Pair energy, half-attributed to particle i:  4 eps (s12 - s6) / 2.
+    e_pair = jnp.where(mask, 2.0 * eps * (inv_r12 - inv_r6), 0.0)  # (TI, TJ)
+
+    # Force on i from j:  24 eps (2 s12 - s6) / r^2 * dx.
+    f_scale = jnp.where(mask, 24.0 * eps * (2.0 * inv_r12 - inv_r6) / r2, 0.0)
+    f_tile = jnp.sum(f_scale[None, :, :] * dx, axis=2)  # (3, TI)
+    e_tile = jnp.sum(e_pair, axis=1)[None, :]            # (1, TI)
+
+    # First j-step initializes the accumulators; later steps accumulate.
+    @pl.when(j == 0)
+    def _init():
+        f_ref[...] = f_tile
+        e_ref[...] = e_tile
+
+    @pl.when(j != 0)
+    def _acc():
+        f_ref[...] += f_tile
+        e_ref[...] += e_tile
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "sigma", "tile"))
+def lj_forces(pos: jax.Array, *, eps: float = 1.0, sigma: float = 1.0,
+              tile: int = DEFAULT_TILE):
+    """All-pairs LJ forces and per-particle energies via the Pallas kernel.
+
+    pos: (3, N) f32, N a multiple of `tile`.
+    Returns (forces (3, N), energy (1, N)).
+    """
+    three, n = pos.shape
+    assert three == 3, f"positions must be (3, N), got {pos.shape}"
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    grid = (n // tile, n // tile)
+
+    kernel = functools.partial(_lj_tile_kernel, eps, sigma, tile, tile)
+    f, e = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, tile), lambda i, j: (0, i)),
+            pl.BlockSpec((3, tile), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((3, tile), lambda i, j: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((3, n), pos.dtype),
+            jax.ShapeDtypeStruct((1, n), pos.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(pos, pos)
+    return f, e
+
+
+def lj_potential(pos: jax.Array, *, eps: float = 1.0, sigma: float = 1.0,
+                 tile: int = DEFAULT_TILE) -> jax.Array:
+    """Total LJ potential energy (scalar) via the Pallas kernel."""
+    _, e = lj_forces(pos, eps=eps, sigma=sigma, tile=tile)
+    return jnp.sum(e)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Pallas LJ kernel — the CORE correctness signal.
+
+Everything here is deliberately naive and obviously-correct: dense (N, N)
+pairwise math with explicit masking, no tiling, no accumulation tricks.
+pytest asserts lj.lj_forces == ref.lj_forces_ref to float tolerance across
+shape/parameter sweeps (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lj_forces_ref(pos, *, eps: float = 1.0, sigma: float = 1.0):
+    """Reference all-pairs LJ forces + per-particle energies.
+
+    pos: (3, N).  Returns (forces (3, N), energy (1, N)) matching the
+    Pallas kernel's conventions (energy half-counted per pair).
+    """
+    _, n = pos.shape
+    dx = pos[:, :, None] - pos[:, None, :]        # (3, N, N)
+    r2 = jnp.sum(dx * dx, axis=0)                 # (N, N)
+    mask = ~jnp.eye(n, dtype=bool)
+    r2 = jnp.where(mask, r2, 1.0)
+
+    inv_r2 = (sigma * sigma) / r2
+    inv_r6 = inv_r2 ** 3
+    inv_r12 = inv_r6 ** 2
+
+    e = jnp.where(mask, 2.0 * eps * (inv_r12 - inv_r6), 0.0)
+    f_scale = jnp.where(mask, 24.0 * eps * (2.0 * inv_r12 - inv_r6) / r2, 0.0)
+    forces = jnp.sum(f_scale[None, :, :] * dx, axis=2)     # (3, N)
+    energy = jnp.sum(e, axis=1)[None, :]                    # (1, N)
+    return forces, energy
+
+
+def lj_potential_ref(pos, *, eps: float = 1.0, sigma: float = 1.0):
+    """Total LJ potential energy (scalar), reference path."""
+    _, e = lj_forces_ref(pos, eps=eps, sigma=sigma)
+    return jnp.sum(e)

@@ -1,0 +1,99 @@
+"""Layer-2 JAX model: the MD payload executed by compute units.
+
+The paper's motivating applications are ensemble molecular dynamics
+(replica exchange, diffusion-map-directed MD).  A compute unit's payload
+here is `md_run`: a fixed number of velocity-Verlet steps of an N-particle
+Lennard-Jones system, with the O(N^2) force evaluation implemented by the
+Layer-1 Pallas kernel (kernels/lj.py).
+
+This module is build-time only: aot.py lowers `md_run` (and the analysis
+payload `rg_analysis`) to HLO text once; the Rust runtime executes the
+artifacts via PJRT on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lj
+from .kernels import ref as lj_ref
+
+# Integrator constants baked into the artifact (the unit description
+# selects an artifact; runtime inputs are just (positions, velocities)).
+DT = 1e-4
+MASS = 1.0
+EPS = 1.0
+SIGMA = 1.0
+
+
+def _forces(pos, *, use_pallas: bool = True, tile: int = lj.DEFAULT_TILE):
+    if use_pallas:
+        f, e = lj.lj_forces(pos, eps=EPS, sigma=SIGMA, tile=tile)
+    else:
+        f, e = lj_ref.lj_forces_ref(pos, eps=EPS, sigma=SIGMA)
+    return f, e
+
+
+def md_step(pos, vel, forces, *, dt: float = DT, mass: float = MASS,
+            use_pallas: bool = True, tile: int = lj.DEFAULT_TILE):
+    """One velocity-Verlet step.  pos/vel/forces: (3, N)."""
+    vel_half = vel + 0.5 * dt / mass * forces
+    pos_new = pos + dt * vel_half
+    forces_new, energy = _forces(pos_new, use_pallas=use_pallas, tile=tile)
+    vel_new = vel_half + 0.5 * dt / mass * forces_new
+    return pos_new, vel_new, forces_new, energy
+
+
+def md_run(pos, vel, *, steps: int = 10, dt: float = DT, mass: float = MASS,
+           use_pallas: bool = True, tile: int = lj.DEFAULT_TILE):
+    """`steps` velocity-Verlet steps via lax.scan.
+
+    Returns (pos, vel, potential_energy, kinetic_energy) — the unit's
+    observable outputs, staged out by the Agent after execution.
+    """
+    forces0, _ = _forces(pos, use_pallas=use_pallas, tile=tile)
+
+    def body(carry, _):
+        p, v, f = carry
+        p, v, f, e = md_step(p, v, f, dt=dt, mass=mass,
+                             use_pallas=use_pallas, tile=tile)
+        return (p, v, f), jnp.sum(e)
+
+    (pos, vel, _), pe_trace = jax.lax.scan(body, (pos, vel, forces0),
+                                           None, length=steps)
+    ke = 0.5 * mass * jnp.sum(vel * vel)
+    return pos, vel, pe_trace[-1], ke
+
+
+def rg_analysis(pos):
+    """Analysis payload: radius of gyration + center of mass.
+
+    A second, cheaper artifact so examples can run *heterogeneous*
+    workloads (MD units + analysis units) through the pilot, exactly the
+    task mix the paper's intro motivates.
+    """
+    com = jnp.mean(pos, axis=1, keepdims=True)        # (3, 1)
+    d = pos - com
+    rg = jnp.sqrt(jnp.mean(jnp.sum(d * d, axis=0)))
+    return com[:, 0], rg
+
+
+def total_energy(pos, vel, *, mass: float = MASS, use_pallas: bool = True,
+                 tile: int = lj.DEFAULT_TILE):
+    """Diagnostic: total energy (drift should be small for tiny DT)."""
+    _, e = _forces(pos, use_pallas=use_pallas, tile=tile)
+    return jnp.sum(e) + 0.5 * mass * jnp.sum(vel * vel)
+
+
+def lattice_init(n: int, spacing: float = 1.5):
+    """Deterministic initial condition: particles on a cubic lattice with
+    a tiny deterministic perturbation (keeps AOT example inputs simple and
+    the dynamics non-trivial)."""
+    side = int(jnp.ceil(n ** (1.0 / 3.0)))
+    idx = jnp.arange(side ** 3)
+    xyz = jnp.stack([idx % side, (idx // side) % side, idx // (side * side)])
+    pos = spacing * xyz[:, :n].astype(jnp.float32)
+    jitter = 0.01 * jnp.sin(jnp.arange(3 * n, dtype=jnp.float32)).reshape(3, n)
+    vel = jnp.zeros((3, n), dtype=jnp.float32)
+    return pos + jitter, vel

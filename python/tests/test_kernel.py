@@ -1,0 +1,158 @@
+"""Pallas LJ kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (N, tile), LJ parameters, and position
+distributions; fixed-seed regression tests pin the basics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lj
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_positions(n, seed=0, scale=2.0, min_sep=0.8):
+    """Random positions with a minimum separation (keeps LJ forces in a
+    numerically tame range so float32 comparisons are meaningful)."""
+    rng = np.random.default_rng(seed)
+    # Lattice + bounded jitter guarantees min separation.
+    side = int(np.ceil(n ** (1 / 3)))
+    idx = np.arange(side ** 3)[:n]
+    xyz = np.stack([idx % side, (idx // side) % side, idx // side ** 2])
+    pos = scale * xyz.astype(np.float32)
+    pos += rng.uniform(-0.3, 0.3, size=pos.shape).astype(np.float32)
+    assert pos.shape == (3, n)
+    return jnp.asarray(pos)
+
+
+def assert_matches_ref(pos, eps, sigma, tile):
+    f_k, e_k = lj.lj_forces(pos, eps=eps, sigma=sigma, tile=tile)
+    f_r, e_r = ref.lj_forces_ref(pos, eps=eps, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------- basics
+
+def test_shapes():
+    pos = random_positions(64)
+    f, e = lj.lj_forces(pos, tile=32)
+    assert f.shape == (3, 64)
+    assert e.shape == (1, 64)
+    assert f.dtype == jnp.float32
+
+
+def test_matches_ref_basic():
+    assert_matches_ref(random_positions(64), 1.0, 1.0, 32)
+
+
+def test_matches_ref_single_tile():
+    # N == tile: grid is (1, 1); exercises the init-only path.
+    assert_matches_ref(random_positions(32), 1.0, 1.0, 32)
+
+
+def test_matches_ref_large():
+    assert_matches_ref(random_positions(256, seed=3), 1.0, 1.0, 64)
+
+
+def test_default_tile():
+    pos = random_positions(128)
+    f, e = lj.lj_forces(pos)  # DEFAULT_TILE = 64
+    f_r, _ = ref.lj_forces_ref(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        lj.lj_forces(jnp.zeros((2, 64)), tile=32)
+    with pytest.raises(AssertionError):
+        lj.lj_forces(jnp.zeros((3, 65)), tile=32)
+
+
+# ------------------------------------------------------- physics invariants
+
+def test_newton_third_law():
+    # Sum of all forces must vanish (pairwise antisymmetry).
+    pos = random_positions(96, seed=1)
+    f, _ = lj.lj_forces(pos, tile=32)
+    net = np.asarray(jnp.sum(f, axis=1))
+    np.testing.assert_allclose(net, np.zeros(3), atol=1e-2)
+
+
+def test_translation_invariance():
+    pos = random_positions(64, seed=2)
+    f1, e1 = lj.lj_forces(pos, tile=32)
+    f2, e2 = lj.lj_forces(pos + 7.5, tile=32)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(jnp.sum(e1)),
+                               np.asarray(jnp.sum(e2)), rtol=2e-3, atol=2e-3)
+
+
+def test_two_particles_at_minimum():
+    # At r = 2^(1/6) sigma the LJ force vanishes and energy = -eps.
+    r_min = 2.0 ** (1.0 / 6.0)
+    pos = np.zeros((3, 32), dtype=np.float32)
+    # park the other 30 particles far away on a line
+    pos[0, 2:] = np.linspace(100.0, 400.0, 30)
+    pos[0, 1] = r_min
+    f, e = lj.lj_forces(jnp.asarray(pos), tile=32)
+    # force between 0 and 1 ~ 0 (far particles contribute ~0)
+    assert abs(float(f[0, 0])) < 1e-3
+    total_01 = float(e[0, 0] + e[0, 1])
+    assert abs(total_01 - (-1.0)) < 1e-3
+
+
+def test_energy_symmetry_pair():
+    # For an isolated pair, each particle carries half the pair energy.
+    pos = np.zeros((3, 32), dtype=np.float32)
+    pos[0, 1] = 1.3
+    pos[1, 2:] = np.linspace(50.0, 200.0, 30)
+    _, e = lj.lj_forces(jnp.asarray(pos), tile=32)
+    assert abs(float(e[0, 0]) - float(e[0, 1])) < 1e-5
+
+
+# ------------------------------------------------------------- hypothesis
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([16, 32]),
+    eps=st.floats(min_value=0.1, max_value=3.0),
+    sigma=st.floats(min_value=0.5, max_value=1.5),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_matches_ref_sweep(n_tiles, tile, eps, sigma, seed):
+    n = n_tiles * tile
+    pos = random_positions(n, seed=seed)
+    assert_matches_ref(pos, eps, sigma, tile)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 96]),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_net_force_zero_sweep(n, seed):
+    pos = random_positions(n, seed=seed)
+    f, _ = lj.lj_forces(pos, tile=32)
+    assert abs(float(jnp.sum(f))) < 5e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(min_value=1.5, max_value=4.0),
+       seed=st.integers(min_value=0, max_value=999))
+def test_potential_negative_at_moderate_density(scale, seed):
+    # Dilute LJ lattices sit in the attractive well: total PE < 0.
+    pos = random_positions(64, seed=seed, scale=scale)
+    pot = float(lj.lj_potential(pos, tile=32))
+    ref_pot = float(ref.lj_potential_ref(pos))
+    assert pot == pytest.approx(ref_pot, rel=1e-3, abs=1e-3)

@@ -1,0 +1,65 @@
+//! A1 (ablation) — CRAM-style static bundling vs pilot late binding.
+//!
+//! The paper's §II argues RP generalizes CRAM's static ensembles; the
+//! benefit of late binding appears under heterogeneous task durations:
+//! a static a-priori assignment strands cores behind long tasks, while
+//! the pilot backfills.  This bench quantifies that motivation.
+
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::workload::cram::{late_binding_makespan, static_bundle};
+use rp::workload::{Workload, WorkloadSpec};
+
+fn main() {
+    let capacity = 256usize;
+    let mut rows = vec![];
+    let mut report = Report::new("A1: static bundling (CRAM) vs late binding (pilot)");
+
+    // sweep duration heterogeneity: fraction of 10x-long tasks
+    for (label, frac_long) in
+        [("uniform", 0.0), ("5% long", 0.05), ("20% long", 0.2), ("50% long", 0.5)]
+    {
+        let wl = if frac_long == 0.0 {
+            WorkloadSpec::uniform(2048, 30.0).build()
+        } else {
+            Workload::heterogeneous(
+                2048,
+                &[(1, 30.0, false, 1.0 - frac_long), (1, 300.0, false, frac_long)],
+                42,
+            )
+        };
+        let st = static_bundle(&wl.units, capacity);
+        let lb = late_binding_makespan(&wl.units, capacity);
+        let speedup = st.makespan / lb;
+        rows.push(vec![
+            label.into(),
+            format!("{:.1}", st.makespan),
+            format!("{lb:.1}"),
+            format!("{speedup:.3}"),
+            format!("{:.0}", st.idle_core_seconds),
+        ]);
+        println!(
+            "{label:>8}: static {:>8.1}s  late-binding {:>8.1}s  speedup {speedup:.2}x",
+            st.makespan, lb
+        );
+        if frac_long == 0.0 {
+            report.add(Check::shape(
+                "uniform: no gap",
+                "static == late binding for identical tasks",
+                (speedup - 1.0).abs() < 0.01,
+            ));
+        } else {
+            report.add(Check::shape(
+                format!("{label}: late binding wins"),
+                "speedup > 1.05x",
+                speedup > 1.05,
+            ));
+        }
+    }
+    write_csv(
+        "ablation_cram",
+        "mix,static_makespan,late_binding_makespan,speedup,static_idle_core_s",
+        &rows,
+    )
+    .unwrap();
+    std::process::exit(report.print());
+}

@@ -1,0 +1,104 @@
+//! Fig. 10 — Integrated performance under workload barriers.
+//!
+//! Paper: 5 generations of 60 s single-core units on 24..1152 cores
+//! (Comet-style 24-core nodes); optimal TTC 300 s.
+//! Top: ttc_a per barrier mode — Agent ~ Application below ~1k cores,
+//! diverging above; Generation barrier adds per-generation idle gaps
+//! whose cost grows with the unit count.
+//! Bottom: concurrency traces for the three barriers at 1152 cores.
+
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::config::ResourceConfig;
+use rp::profiler::Analysis;
+use rp::sim::{AgentSim, AgentSimConfig};
+use rp::util::stats;
+use rp::workload::{BarrierMode, WorkloadSpec};
+
+fn run(cfg: &rp::config::ResourceConfig, cores: usize, barrier: BarrierMode) -> rp::sim::AgentSimResult {
+    let wl = WorkloadSpec::generations(cores, 5, 60.0).build();
+    let mut sim = AgentSimConfig::paper_default(cores);
+    sim.barrier = barrier;
+    sim.generation_size = cores;
+    AgentSim::new(cfg, sim, &wl).run()
+}
+
+fn main() {
+    let comet = ResourceConfig::load("comet").unwrap();
+    let core_counts = [24usize, 48, 96, 192, 384, 768, 1152];
+    let mut rows = vec![];
+    let mut ttc: Vec<(usize, f64, f64, f64)> = vec![];
+
+    for &cores in &core_counts {
+        let a = run(&comet, cores, BarrierMode::Agent);
+        let app = run(&comet, cores, BarrierMode::Application);
+        let g = run(&comet, cores, BarrierMode::Generation);
+        rows.push(vec![
+            cores.to_string(),
+            format!("{:.1}", a.ttc_a),
+            format!("{:.1}", app.ttc_a),
+            format!("{:.1}", g.ttc_a),
+        ]);
+        println!(
+            "cores {cores:>5}: agent {:>7.1}s  application {:>7.1}s  generation {:>7.1}s",
+            a.ttc_a, app.ttc_a, g.ttc_a
+        );
+        ttc.push((cores, a.ttc_a, app.ttc_a, g.ttc_a));
+    }
+    write_csv("fig10_ttc", "cores,agent,application,generation", &rows).unwrap();
+
+    // bottom: concurrency traces at 1152 cores
+    let mut trace_rows = vec![];
+    for barrier in BarrierMode::ALL {
+        let r = run(&comet, 1152, barrier);
+        let a = Analysis::new(&r.profile);
+        let trace = a.concurrency();
+        let t_end = trace.last().map(|(t, _)| *t).unwrap_or(0.0);
+        for (t, level) in stats::sample_trace(&trace, 0.0, t_end, 2.0) {
+            trace_rows.push(vec![
+                barrier.name().to_string(),
+                format!("{t:.0}"),
+                level.to_string(),
+            ]);
+        }
+    }
+    write_csv("fig10_concurrency_1152", "barrier,t,concurrency", &trace_rows).unwrap();
+
+    let mut report = Report::new("Fig 10: barrier modes (5 generations x 60s, Comet)");
+    report.add(Check::shape(
+        "optimal TTC is 300s",
+        "all ttc_a >= 300s",
+        ttc.iter().all(|(_, a, app, g)| *a >= 300.0 && *app >= 300.0 && *g >= 300.0),
+    ));
+    // agent ~ application at small core counts
+    for (cores, a, app, _) in ttc.iter().take(4) {
+        report.add(Check::shape(
+            format!("{cores} cores: agent ~ application"),
+            "negligible difference",
+            (app - a).abs() / a < 0.08,
+        ));
+    }
+    // noticeable divergence at 1152
+    let (_, a1152, app1152, g1152) = ttc[6];
+    report.add(Check::shape(
+        "1152 cores: application barrier noticeable",
+        "app > agent (unit startup rate limited by UM->Agent feed)",
+        app1152 > a1152 + 3.0,
+    ));
+    // generation barrier overhead everywhere, growing with core count
+    let gen_overhead: Vec<f64> = ttc.iter().map(|(_, a, _, g)| g - a).collect();
+    report.add(Check::shape(
+        "generation barrier adds idle gaps",
+        "gen - agent > 10s at all scales",
+        gen_overhead.iter().all(|d| *d > 10.0),
+    ));
+    report.add(Check::shape(
+        "generation overhead grows with cores",
+        "overhead(1152) > overhead(24)",
+        gen_overhead[6] > gen_overhead[0],
+    ));
+    // each generation pays the launch ramp (~1152/55 ~ 21 s) plus the
+    // UM round-trip gap; 5 generations + 4 gaps
+    report.add(Check::band("1152 generation ttc_a (s)", (450.0, 720.0), g1152));
+
+    std::process::exit(report.print());
+}

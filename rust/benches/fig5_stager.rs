@@ -1,0 +1,93 @@
+//! Fig. 5 — Agent output Stager throughput.
+//!
+//! Top: 1 instance / 1 node on three resources (BW 492±72/s, Comet
+//! 994±189/s, Stampede 771±128/s); input stager ~1/3 with more jitter.
+//! Bottom: 1,2,4 Stagers x 1,2,4,8 Blue Waters nodes — throughput only
+//! scales with node *pairs* (two nodes share a Gemini router):
+//! 1-2 nodes ~[490..526], 4 nodes [948..1168], 8 nodes [1552..1851].
+
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::config::ResourceConfig;
+use rp::sim::microbench::{Component, MicroBench};
+
+fn main() {
+    let mut report = Report::new("Fig 5: Output-Stager throughput (units/s)");
+    let mut rows = vec![];
+
+    // --- top panel: one instance per resource
+    for (label, paper_mean, paper_std) in [
+        ("bluewaters", 492.0f64, 72.0f64),
+        ("comet", 994.0, 189.0),
+        ("stampede", 771.0, 128.0),
+    ] {
+        let cfg = ResourceConfig::load(label).unwrap();
+        let rate = MicroBench::new(Component::StagerOut).seed(5).run(&cfg).steady_rate();
+        rows.push(vec![label.into(), "1".into(), "1".into(), format!("{:.1}", rate.mean)]);
+        report.add(Check {
+            label: format!("{label} out-stager"),
+            paper: format!("{paper_mean:.0} ± {paper_std:.0}"),
+            measured: rate.pm(),
+            ok: (rate.mean - paper_mean).abs() < 2.0 * paper_std,
+        });
+        // input stager ~1/3 of output with larger jitter
+        let inp = MicroBench::new(Component::StagerIn).seed(6).run(&cfg).steady_rate();
+        report.add(Check::shape(
+            format!("{label} in-stager ~1/3 out"),
+            "in ~ out/3, more jitter",
+            inp.mean < rate.mean / 2.0 && inp.mean > rate.mean / 5.0,
+        ));
+    }
+
+    // --- bottom panel: Blue Waters scaling over instances x nodes
+    let bw = ResourceConfig::load("bluewaters").unwrap();
+    let mut by_nodes: Vec<(usize, Vec<f64>)> = vec![];
+    for nodes in [1usize, 2, 4, 8] {
+        let mut rates = vec![];
+        for per_node in [1usize, 2, 4] {
+            let inst = per_node * nodes;
+            let r = MicroBench::new(Component::StagerOut)
+                .instances(inst, nodes)
+                .seed(7)
+                .run(&bw)
+                .steady_rate();
+            rows.push(vec![
+                "bluewaters".into(),
+                inst.to_string(),
+                nodes.to_string(),
+                format!("{:.1}", r.mean),
+            ]);
+            rates.push(r.mean);
+        }
+        by_nodes.push((nodes, rates));
+    }
+    // bands from the paper
+    let band = |nodes: usize| match nodes {
+        1 | 2 => (440.0, 580.0),
+        4 => (900.0, 1220.0),
+        _ => (1450.0, 2100.0),
+    };
+    for (nodes, rates) in &by_nodes {
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        report.add(Check::band(format!("BW {nodes} node(s) aggregate"), band(*nodes), mean));
+        // instance count on the same nodes is irrelevant (router-bound)
+        if *nodes <= 2 {
+            let spread = rates.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                - rates.iter().cloned().fold(f64::INFINITY, f64::min);
+            report.add(Check::shape(
+                format!("BW {nodes} node(s): #stagers irrelevant"),
+                "flat across 1,2,4 stagers/node",
+                spread < 0.25 * mean,
+            ));
+        }
+    }
+    // scaling happens in node pairs: 2 nodes ~ 1 node, 4 ~ 2x, 8 ~ 4x-ish
+    let m = |i: usize| by_nodes[i].1.iter().sum::<f64>() / by_nodes[i].1.len() as f64;
+    report.add(Check::shape(
+        "router pairing",
+        "rate(2n) ~ rate(1n); rate(4n) ~ 2x; rate(8n) > 3x",
+        (m(1) - m(0)).abs() < 0.2 * m(0) && m(2) > 1.7 * m(0) && m(3) > 3.0 * m(0),
+    ));
+
+    write_csv("fig5_stager", "resource,instances,nodes,rate", &rows).unwrap();
+    std::process::exit(report.print());
+}

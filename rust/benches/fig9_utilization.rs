@@ -1,0 +1,79 @@
+//! Fig. 9 — Core utilization vs unit runtime and pilot size (Stampede,
+//! SSH).
+//!
+//! Paper: 3 generations per run; for short unit durations the launch
+//! rate dominates -> low utilization at high core counts; for longer
+//! units the impact decreases, first for small then for large pilots.
+
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::config::ResourceConfig;
+use rp::sim::{AgentSim, AgentSimConfig};
+use rp::workload::WorkloadSpec;
+
+fn main() {
+    let st = ResourceConfig::load("stampede").unwrap();
+    let durations = [16.0, 32.0, 64.0, 128.0, 256.0];
+    let pilots = [256usize, 512, 1024, 2048, 4096];
+
+    let mut rows = vec![];
+    let mut grid = vec![]; // utilization[pilot][duration]
+    for &pilot in &pilots {
+        let mut line = vec![];
+        for &dur in &durations {
+            let wl = WorkloadSpec::generations(pilot, 3, dur).build();
+            let cfg = AgentSimConfig::paper_default(pilot);
+            let r = AgentSim::new(&st, cfg, &wl).run();
+            rows.push(vec![
+                pilot.to_string(),
+                format!("{dur:.0}"),
+                format!("{:.4}", r.utilization),
+            ]);
+            line.push(r.utilization);
+        }
+        grid.push(line);
+        println!(
+            "pilot {pilot:>5}: utilization {}",
+            grid.last()
+                .unwrap()
+                .iter()
+                .map(|u| format!("{:>5.1}%", 100.0 * u))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    write_csv("fig9_utilization", "pilot_cores,duration,utilization", &rows).unwrap();
+
+    let mut report = Report::new("Fig 9: core utilization vs unit duration x pilot size");
+    // utilization rises with duration for every pilot size
+    for (i, &pilot) in pilots.iter().enumerate() {
+        let monotone = grid[i].windows(2).all(|w| w[1] >= w[0] - 0.02);
+        report.add(Check::shape(
+            format!("{pilot} cores: longer units -> higher utilization"),
+            "monotone in duration",
+            monotone,
+        ));
+    }
+    // utilization falls with pilot size for short units
+    let falls_short = (0..grid.len() - 1).all(|i| grid[i][0] >= grid[i + 1][0] - 0.02);
+    report.add(Check::shape(
+        "16s units: bigger pilots utilize worse",
+        "monotone decreasing in pilot size",
+        falls_short,
+    ));
+    // long units on small pilots ~ full utilization
+    report.add(Check::band("256-core pilot, 256s units (%)", (92.0, 100.0), 100.0 * grid[0][4]));
+    // short units on big pilots: launch-rate bound ->
+    // ceiling ~ rate * dur; utilization ~ min(1, rate*dur/cores)
+    report.add(Check::band(
+        "4096-core pilot, 16s units (%)",
+        (10.0, 45.0),
+        100.0 * grid[4][0],
+    ));
+    report.add(Check::shape(
+        "large pilot recovers with long units",
+        "4096 cores @256s > 80%",
+        grid[4][4] > 0.8,
+    ));
+
+    std::process::exit(report.print());
+}

@@ -1,0 +1,114 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass
+//! (EXPERIMENTS.md §Perf records before/after).
+//!
+//! * DES engine event throughput (target >= 1M events/s so 8k-core
+//!   figures regenerate in seconds);
+//! * full agent-sim events/s on the Fig. 7 heavy configuration;
+//! * real-agent end-to-end unit throughput (sleep-0 units);
+//! * JSON substrate parse throughput.
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::config::ResourceConfig;
+use rp::sim::{AgentSim, AgentSimConfig, EventQueue};
+use rp::util;
+use rp::util::json::Value;
+use rp::workload::WorkloadSpec;
+
+fn bench_event_queue() -> f64 {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let n = 2_000_000u64;
+    let t0 = util::now();
+    // push/pop interleaved with a rolling horizon (realistic heap depth)
+    for i in 0..n {
+        q.at(q.now() + ((i * 2654435761) % 1000) as f64 / 1000.0, i);
+        if i % 4 == 3 {
+            q.pop();
+            q.pop();
+            q.pop();
+        }
+    }
+    while q.pop().is_some() {}
+    2.0 * n as f64 / (util::now() - t0) // ops = push + pop
+}
+
+fn bench_agent_sim() -> (f64, f64) {
+    let st = ResourceConfig::load("stampede").unwrap();
+    let wl = WorkloadSpec::generations(8192, 3, 64.0).build();
+    let cfg = AgentSimConfig::paper_default(8192);
+    let r = AgentSim::new(&st, cfg, &wl).run();
+    (r.events as f64 / r.wall_s, r.wall_s)
+}
+
+fn bench_real_agent() -> f64 {
+    let session = Session::with_options("perf-real", true);
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+    let pilot = pmgr
+        .submit(
+            PilotDescription::new("local.localhost", 8, 600.0)
+                .with_override("agent.executers", "8"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let n = 2000;
+    let t0 = util::now();
+    umgr.submit((0..n).map(|_| UnitDescription::sleep(0.0)).collect());
+    umgr.wait_all(300.0).unwrap();
+    let rate = n as f64 / (util::now() - t0);
+    pilot.drain().unwrap();
+    session.close();
+    rate
+}
+
+fn bench_json() -> f64 {
+    let doc = Value::obj(vec![
+        ("name", "unit-000123".into()),
+        ("cores", 4u64.into()),
+        ("payload", Value::obj(vec![("kind", "synthetic".into()), ("duration", 64.0.into())])),
+        ("tags", vec![1.0f64, 2.0, 3.0, 4.0].into()),
+    ])
+    .to_json();
+    let n = 200_000;
+    let t0 = util::now();
+    for _ in 0..n {
+        let v = Value::parse(&doc).unwrap();
+        std::hint::black_box(&v);
+    }
+    n as f64 / (util::now() - t0)
+}
+
+fn main() {
+    let ev = bench_event_queue();
+    let (sim_ev, sim_wall) = bench_agent_sim();
+    let real = bench_real_agent();
+    let json = bench_json();
+
+    println!("event queue     : {:>12.0} ops/s", ev);
+    println!("agent sim (8k)  : {:>12.0} events/s  (fig7 heavy config in {sim_wall:.2}s)", sim_ev);
+    println!("real agent      : {:>12.0} units/s (sleep-0, 8 cores)", real);
+    println!("json parse      : {:>12.0} docs/s", json);
+
+    write_csv(
+        "perf_hotpath",
+        "metric,value",
+        &[
+            vec!["event_queue_ops_per_s".into(), format!("{ev:.0}")],
+            vec!["agent_sim_events_per_s".into(), format!("{sim_ev:.0}")],
+            vec!["agent_sim_fig7_wall_s".into(), format!("{sim_wall:.3}")],
+            vec!["real_agent_units_per_s".into(), format!("{real:.0}")],
+            vec!["json_docs_per_s".into(), format!("{json:.0}")],
+        ],
+    )
+    .unwrap();
+
+    let mut report = Report::new("perf hot paths");
+    report.add(Check::shape("event queue", ">= 1M ops/s", ev > 1e6));
+    report.add(Check::shape("fig7 heavy sim", "< 10s wall", sim_wall < 10.0));
+    report.add(Check::shape(
+        "real agent faster than paper's python agent",
+        "> 100 units/s spawn-to-done",
+        real > 100.0,
+    ));
+    std::process::exit(report.print());
+}

@@ -1,0 +1,76 @@
+//! T1 — Profiler overhead (paper §IV): RP measured 144.7±19.2 s with
+//! profiling and 157.1±8.3 s without on the same workload — overlapping
+//! std devs, i.e. statistically insignificant.
+//!
+//! We run the same experiment on the *real* thread-based agent (the
+//! profiler is wall-clock code, so simulation would prove nothing):
+//! REPS repetitions of a fixed workload with the profiler on and off.
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::util;
+use rp::util::stats::Summary;
+
+const REPS: usize = 5;
+const UNITS: usize = 400;
+const CORES: usize = 8;
+
+fn one_run(profile: bool, rep: usize) -> f64 {
+    let session = Session::with_options(format!("prof-bench-{profile}-{rep}"), profile);
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+    let pilot = pmgr
+        .submit(
+            PilotDescription::new("local.localhost", CORES, 600.0)
+                .with_override("agent.executers", "8"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let t0 = util::now();
+    umgr.submit((0..UNITS).map(|_| UnitDescription::sleep(0.002)).collect());
+    umgr.wait_all(120.0).unwrap();
+    let wall = util::now() - t0;
+    pilot.drain().unwrap();
+    session.close();
+    wall
+}
+
+fn main() {
+    // warm-up (thread pools, fs caches)
+    let _ = one_run(false, 999);
+    let with: Vec<f64> = (0..REPS).map(|r| one_run(true, r)).collect();
+    let without: Vec<f64> = (0..REPS).map(|r| one_run(false, r)).collect();
+    let sw = Summary::of(&with);
+    let swo = Summary::of(&without);
+
+    let rows = vec![
+        vec!["with_profiling".into(), sw.mean.to_string(), sw.std.to_string()],
+        vec!["without_profiling".into(), swo.mean.to_string(), swo.std.to_string()],
+    ];
+    write_csv("profiler_overhead", "mode,mean_s,std_s", &rows).unwrap();
+
+    let mut report = Report::new(format!(
+        "T1: profiler overhead ({UNITS} units x {REPS} reps on a {CORES}-core real agent)"
+    ));
+    report.add(Check {
+        label: "with profiling (s)".into(),
+        paper: "144.7 ± 19.2 (paper workload)".into(),
+        measured: format!("{:.3} ± {:.3}", sw.mean, sw.std),
+        ok: sw.mean > 0.0,
+    });
+    report.add(Check {
+        label: "without profiling (s)".into(),
+        paper: "157.1 ± 8.3 (paper workload)".into(),
+        measured: format!("{:.3} ± {:.3}", swo.mean, swo.std),
+        ok: swo.mean > 0.0,
+    });
+    // the paper's claim: difference statistically insignificant
+    let diff = (sw.mean - swo.mean).abs();
+    let spread = sw.std + swo.std;
+    report.add(Check::shape(
+        "overhead statistically insignificant",
+        "|with - without| <= std_with + std_without (or < 5%)",
+        diff <= spread.max(0.05 * swo.mean),
+    ));
+    std::process::exit(report.print());
+}

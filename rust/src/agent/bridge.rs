@@ -1,0 +1,125 @@
+//! Component bridges — RP connects Agent components with ZeroMQ bridges
+//! creating a network that units transit (paper §III-B).  Ours are
+//! instrumented in-process queues with the same decoupling role: every
+//! component owns only its inbound bridge; multiple component instances
+//! consume from the same bridge (competing consumers).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::db::UnitQueue;
+
+/// A named, counted bridge between Agent components.
+#[derive(Clone)]
+pub struct Bridge<T> {
+    name: &'static str,
+    queue: UnitQueue<T>,
+    in_count: Arc<AtomicU64>,
+    out_count: Arc<AtomicU64>,
+}
+
+impl<T> Bridge<T> {
+    pub fn new(name: &'static str) -> Self {
+        Bridge {
+            name,
+            queue: UnitQueue::new(),
+            in_count: Arc::new(AtomicU64::new(0)),
+            out_count: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn send(&self, item: T) {
+        self.in_count.fetch_add(1, Ordering::Relaxed);
+        self.queue.push(item);
+    }
+
+    pub fn send_bulk(&self, items: impl IntoIterator<Item = T>) {
+        let items: Vec<T> = items.into_iter().collect();
+        self.in_count.fetch_add(items.len() as u64, Ordering::Relaxed);
+        self.queue.push_bulk(items);
+    }
+
+    /// Blocking receive of up to `max` items; empty vec = bridge closed
+    /// and drained (consumer should exit).
+    pub fn recv(&self, max: usize) -> Vec<T> {
+        loop {
+            let got = self.queue.pull_wait(max, 0.5);
+            if !got.is_empty() {
+                self.out_count.fetch_add(got.len() as u64, Ordering::Relaxed);
+                return got;
+            }
+            if self.queue.is_closed() && self.queue.is_empty() {
+                return vec![];
+            }
+        }
+    }
+
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// (sent, received) counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.in_count.load(Ordering::Relaxed), self.out_count.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_counts() {
+        let b = Bridge::new("test");
+        b.send(1);
+        b.send_bulk([2, 3]);
+        assert_eq!(b.pending(), 3);
+        let got = b.recv(10);
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(b.counters(), (3, 3));
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let b = Bridge::new("test");
+        b.send(7);
+        b.close();
+        assert_eq!(b.recv(10), vec![7]);
+        assert!(b.recv(10).is_empty());
+    }
+
+    #[test]
+    fn competing_consumers() {
+        let b = Bridge::new("test");
+        for i in 0..100 {
+            b.send(i);
+        }
+        b.close();
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = vec![];
+                loop {
+                    let batch = b.recv(8);
+                    if batch.is_empty() {
+                        return got;
+                    }
+                    got.extend(batch);
+                }
+            }));
+        }
+        let mut all: Vec<i32> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,195 @@
+//! Launch methods: derive the launching command of a unit from resource
+//! configuration (paper §III-B: MPIRUN, MPIEXEC, APRUN, CCMRUN, RUNJOB,
+//! DPLACE, IBRUN, ORTE, RSH, SSH, POE, FORK; each resource configures one
+//! method for MPI tasks and one for serial tasks).
+
+use crate::agent::nodelist::Allocation;
+use crate::api::descriptions::UnitDescription;
+
+/// A launch method known to the Executer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchMethod {
+    Mpirun,
+    Mpiexec,
+    Aprun,
+    Ccmrun,
+    Runjob,
+    Dplace,
+    Ibrun,
+    Orte,
+    Rsh,
+    Ssh,
+    Poe,
+    Fork,
+}
+
+impl LaunchMethod {
+    pub fn parse(s: &str) -> Option<LaunchMethod> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "MPIRUN" => LaunchMethod::Mpirun,
+            "MPIEXEC" => LaunchMethod::Mpiexec,
+            "APRUN" => LaunchMethod::Aprun,
+            "CCMRUN" => LaunchMethod::Ccmrun,
+            "RUNJOB" => LaunchMethod::Runjob,
+            "DPLACE" => LaunchMethod::Dplace,
+            "IBRUN" => LaunchMethod::Ibrun,
+            "ORTE" => LaunchMethod::Orte,
+            "RSH" => LaunchMethod::Rsh,
+            "SSH" => LaunchMethod::Ssh,
+            "POE" => LaunchMethod::Poe,
+            "FORK" => LaunchMethod::Fork,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LaunchMethod::Mpirun => "MPIRUN",
+            LaunchMethod::Mpiexec => "MPIEXEC",
+            LaunchMethod::Aprun => "APRUN",
+            LaunchMethod::Ccmrun => "CCMRUN",
+            LaunchMethod::Runjob => "RUNJOB",
+            LaunchMethod::Dplace => "DPLACE",
+            LaunchMethod::Ibrun => "IBRUN",
+            LaunchMethod::Orte => "ORTE",
+            LaunchMethod::Rsh => "RSH",
+            LaunchMethod::Ssh => "SSH",
+            LaunchMethod::Poe => "POE",
+            LaunchMethod::Fork => "FORK",
+        }
+    }
+
+    /// Does this method wrap the task in a remote/parallel launcher
+    /// process (vs executing directly)?
+    pub fn is_wrapped(self) -> bool {
+        !matches!(self, LaunchMethod::Fork)
+    }
+
+    /// Build the argv for `exe args...` on the given allocation.
+    /// `hosts` maps node indices to hostnames.
+    pub fn build_command(
+        self,
+        exe: &str,
+        args: &[String],
+        alloc: &Allocation,
+        hosts: &dyn Fn(u32) -> String,
+    ) -> Vec<String> {
+        let n = alloc.n_cores().max(1);
+        let first_host = hosts(alloc.cores.first().map(|(h, _)| *h).unwrap_or(0));
+        let mut cmd: Vec<String> = match self {
+            LaunchMethod::Fork => vec![],
+            LaunchMethod::Ssh => vec!["ssh".into(), first_host],
+            LaunchMethod::Rsh => vec!["rsh".into(), first_host],
+            LaunchMethod::Mpirun => vec!["mpirun".into(), "-np".into(), n.to_string()],
+            LaunchMethod::Mpiexec => vec!["mpiexec".into(), "-n".into(), n.to_string()],
+            LaunchMethod::Orte => vec!["orterun".into(), "-np".into(), n.to_string()],
+            LaunchMethod::Aprun => vec!["aprun".into(), "-n".into(), n.to_string()],
+            LaunchMethod::Ccmrun => vec!["ccmrun".into(), exe.to_string()],
+            LaunchMethod::Runjob => vec![
+                "runjob".into(),
+                "--np".into(),
+                n.to_string(),
+                "--exe".into(),
+                exe.to_string(),
+            ],
+            LaunchMethod::Dplace => vec!["dplace".into()],
+            LaunchMethod::Ibrun => vec!["ibrun".into(), "-n".into(), n.to_string()],
+            LaunchMethod::Poe => vec!["poe".into()],
+        };
+        match self {
+            LaunchMethod::Ccmrun => {
+                cmd.extend(args.iter().cloned());
+            }
+            LaunchMethod::Runjob => {
+                if !args.is_empty() {
+                    cmd.push("--args".into());
+                    cmd.extend(args.iter().cloned());
+                }
+            }
+            _ => {
+                cmd.push(exe.to_string());
+                cmd.extend(args.iter().cloned());
+            }
+        }
+        cmd
+    }
+}
+
+/// Pick the launch method for a unit per the resource's configured pair
+/// (one for MPI tasks, one for serial tasks).
+pub fn select_method(
+    unit: &UnitDescription,
+    mpi_method: &str,
+    task_method: &str,
+) -> Option<LaunchMethod> {
+    LaunchMethod::parse(if unit.is_mpi { mpi_method } else { task_method })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(n: usize) -> Allocation {
+        Allocation { cores: (0..n).map(|i| (0u32, i as u32)).collect(), scanned: n }
+    }
+
+    fn localhost(_: u32) -> String {
+        "localhost".into()
+    }
+
+    #[test]
+    fn parse_all_paper_methods() {
+        for m in [
+            "MPIRUN", "MPIEXEC", "APRUN", "CCMRUN", "RUNJOB", "DPLACE", "IBRUN", "ORTE",
+            "RSH", "SSH", "POE", "FORK",
+        ] {
+            let lm = LaunchMethod::parse(m).unwrap();
+            assert_eq!(lm.name(), m);
+        }
+        assert!(LaunchMethod::parse("WARP").is_none());
+        assert_eq!(LaunchMethod::parse("ssh"), Some(LaunchMethod::Ssh));
+    }
+
+    #[test]
+    fn fork_is_direct() {
+        let cmd =
+            LaunchMethod::Fork.build_command("/bin/echo", &["hi".into()], &alloc(1), &localhost);
+        assert_eq!(cmd, vec!["/bin/echo", "hi"]);
+        assert!(!LaunchMethod::Fork.is_wrapped());
+    }
+
+    #[test]
+    fn ssh_prepends_host() {
+        let cmd = LaunchMethod::Ssh.build_command("/bin/date", &[], &alloc(1), &localhost);
+        assert_eq!(cmd, vec!["ssh", "localhost", "/bin/date"]);
+    }
+
+    #[test]
+    fn mpirun_sets_np() {
+        let cmd = LaunchMethod::Mpirun.build_command("./a.out", &[], &alloc(8), &localhost);
+        assert_eq!(cmd, vec!["mpirun", "-np", "8", "./a.out"]);
+        let cmd = LaunchMethod::Ibrun.build_command("./a.out", &[], &alloc(16), &localhost);
+        assert_eq!(cmd[0], "ibrun");
+        assert_eq!(cmd[2], "16");
+    }
+
+    #[test]
+    fn runjob_bgq_style() {
+        let cmd = LaunchMethod::Runjob.build_command(
+            "./md",
+            &["--steps".into(), "5".into()],
+            &alloc(32),
+            &localhost,
+        );
+        assert_eq!(cmd[..5], ["runjob", "--np", "32", "--exe", "./md"]);
+        assert!(cmd.contains(&"--args".to_string()));
+    }
+
+    #[test]
+    fn selection_respects_mpi_flag() {
+        let mpi = UnitDescription::sleep(1.0).cores(8).mpi(true);
+        let serial = UnitDescription::sleep(1.0);
+        assert_eq!(select_method(&mpi, "IBRUN", "SSH"), Some(LaunchMethod::Ibrun));
+        assert_eq!(select_method(&serial, "IBRUN", "SSH"), Some(LaunchMethod::Ssh));
+    }
+}

@@ -1,0 +1,11 @@
+//! Agent Executer component: derives launch commands and spawns units
+//! (paper §III-B).  Two spawning mechanisms, as in RP: **Popen**
+//! (direct process creation) and **Shell** (`/bin/sh -c`), plus
+//! **InProc** execution of PJRT payloads (the L2/L1 compute path — no
+//! Python, no process per task).
+
+pub mod launch;
+pub mod spawn;
+
+pub use launch::{select_method, LaunchMethod};
+pub use spawn::{make_spawner, ExecOutcome, PopenSpawner, ShellSpawner, Spawner};

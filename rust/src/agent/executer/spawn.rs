@@ -1,0 +1,194 @@
+//! Spawning mechanisms: Popen (direct) and Shell (`/bin/sh -c`).
+
+use std::path::Path;
+use std::process::{Command, Stdio};
+
+use crate::error::{Error, Result};
+
+/// Outcome of a spawned unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecOutcome {
+    pub exit_code: i32,
+    pub stdout: String,
+    pub stderr: String,
+}
+
+impl ExecOutcome {
+    pub fn success(&self) -> bool {
+        self.exit_code == 0
+    }
+}
+
+/// A process-spawning mechanism.
+pub trait Spawner: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Run `argv` with `env` in `cwd`, capture output, wait for exit.
+    fn spawn(
+        &self,
+        argv: &[String],
+        env: &[(String, String)],
+        cwd: &Path,
+    ) -> Result<ExecOutcome>;
+}
+
+fn run(mut cmd: Command, cwd: &Path, env: &[(String, String)]) -> Result<ExecOutcome> {
+    cmd.current_dir(cwd)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    let out = cmd
+        .output()
+        .map_err(|e| Error::Exec(format!("spawn {:?}: {e}", cmd.get_program())))?;
+    Ok(ExecOutcome {
+        exit_code: out.status.code().unwrap_or(-1),
+        stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+    })
+}
+
+/// Direct process creation (RP's Python `Popen` mechanism).
+#[derive(Debug, Default)]
+pub struct PopenSpawner;
+
+impl Spawner for PopenSpawner {
+    fn name(&self) -> &'static str {
+        "popen"
+    }
+
+    fn spawn(
+        &self,
+        argv: &[String],
+        env: &[(String, String)],
+        cwd: &Path,
+    ) -> Result<ExecOutcome> {
+        let (exe, args) = argv
+            .split_first()
+            .ok_or_else(|| Error::Exec("empty command".into()))?;
+        let mut cmd = Command::new(exe);
+        cmd.args(args);
+        run(cmd, cwd, env)
+    }
+}
+
+/// `/bin/sh -c "..."` (RP's `Shell` mechanism) — needed on systems where
+/// task wrappers are shell functions; also exercises a different node-OS
+/// code path (extra shell process per unit).
+#[derive(Debug, Default)]
+pub struct ShellSpawner;
+
+impl Spawner for ShellSpawner {
+    fn name(&self) -> &'static str {
+        "shell"
+    }
+
+    fn spawn(
+        &self,
+        argv: &[String],
+        env: &[(String, String)],
+        cwd: &Path,
+    ) -> Result<ExecOutcome> {
+        if argv.is_empty() {
+            return Err(Error::Exec("empty command".into()));
+        }
+        let line = argv
+            .iter()
+            .map(|a| shell_quote(a))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let mut cmd = Command::new("/bin/sh");
+        cmd.arg("-c").arg(line);
+        run(cmd, cwd, env)
+    }
+}
+
+/// Minimal POSIX single-quote escaping.
+fn shell_quote(s: &str) -> String {
+    if !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || "-_./=:,".contains(c))
+    {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', r"'\''"))
+    }
+}
+
+/// Factory from a config string ("popen" | "shell").
+pub fn make_spawner(kind: &str) -> Box<dyn Spawner> {
+    match kind {
+        "shell" => Box::new(ShellSpawner),
+        _ => Box::new(PopenSpawner),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("rp_spawn_test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn popen_captures_stdout() {
+        let out = PopenSpawner
+            .spawn(&["/bin/echo".into(), "hello".into()], &[], &tmp())
+            .unwrap();
+        assert!(out.success());
+        assert_eq!(out.stdout.trim(), "hello");
+    }
+
+    #[test]
+    fn popen_env_passthrough() {
+        let out = PopenSpawner
+            .spawn(
+                &["/bin/sh".into(), "-c".into(), "echo $RP_TEST_VAR".into()],
+                &[("RP_TEST_VAR".into(), "42".into())],
+                &tmp(),
+            )
+            .unwrap();
+        assert_eq!(out.stdout.trim(), "42");
+    }
+
+    #[test]
+    fn shell_quoting() {
+        let out = ShellSpawner
+            .spawn(
+                &["echo".into(), "a b".into(), "it's".into()],
+                &[],
+                &tmp(),
+            )
+            .unwrap();
+        assert_eq!(out.stdout.trim(), "a b it's");
+    }
+
+    #[test]
+    fn nonzero_exit_reported() {
+        let out = ShellSpawner
+            .spawn(&["sh".into(), "-c".into(), "exit 3".into()], &[], &tmp())
+            .unwrap();
+        assert_eq!(out.exit_code, 3);
+        assert!(!out.success());
+    }
+
+    #[test]
+    fn missing_exe_is_error() {
+        assert!(PopenSpawner
+            .spawn(&["/definitely/not/here".into()], &[], &tmp())
+            .is_err());
+        assert!(PopenSpawner.spawn(&[], &[], &tmp()).is_err());
+    }
+
+    #[test]
+    fn factory() {
+        assert_eq!(make_spawner("popen").name(), "popen");
+        assert_eq!(make_spawner("shell").name(), "shell");
+        assert_eq!(make_spawner("unknown").name(), "popen");
+    }
+}

@@ -1,0 +1,31 @@
+//! The Agent module (paper §III-B, Fig. 3).
+//!
+//! The Agent bootstraps inside a pilot's allocation, pulls units from the
+//! coordination store, and manages their execution on the cores held by
+//! the pilot through three exchangeable component kinds connected by
+//! bridges:
+//!
+//! * [`scheduler`] — assigns pilot cores to units (`Continuous` for core
+//!   continuums, `Torus` for IBM BG/Q-style n-dimensional tori);
+//! * [`executer`] — derives launching commands (SSH, MPIRUN, APRUN, …)
+//!   and spawns units via `Popen`/`Shell` mechanisms (plus `InProc` for
+//!   PJRT payloads — no Python on the request path);
+//! * [`stager`] — moves unit input/output data.
+//!
+//! Multiple Stager and Executer instances can coexist in one Agent
+//! (paper: placed on MOM/compute/service nodes); components communicate
+//! via [`bridge`]s (RP uses ZeroMQ; we use instrumented channels).
+//!
+//! [`real`] assembles the components into a thread-based pipeline for
+//! actual execution; the DES counterpart lives in [`crate::sim`] and
+//! drives the *same* scheduler implementations.
+
+pub mod bridge;
+pub mod executer;
+pub mod nodelist;
+pub mod real;
+pub mod scheduler;
+pub mod stager;
+
+pub use nodelist::{Allocation, NodeList};
+pub use scheduler::{make_scheduler, ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};

@@ -1,0 +1,207 @@
+//! Pilot core bookkeeping: the list of nodes/cores held by a pilot,
+//! with BUSY/FREE state per core (paper §III-B: the Scheduler gathers
+//! node/core partitioning from the RM and marks cores BUSY/FREE).
+
+/// A concrete assignment of cores to one unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    /// (node index, core index within node) pairs.
+    pub cores: Vec<(u32, u32)>,
+    /// Number of core slots examined during the search (models the
+    /// paper's linear list operation cost, Fig. 8).
+    pub scanned: usize,
+}
+
+impl Allocation {
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+}
+
+/// Nodes and core occupancy of a pilot's allocation.
+#[derive(Debug, Clone)]
+pub struct NodeList {
+    cores_per_node: usize,
+    /// busy[node][core]
+    busy: Vec<Vec<bool>>,
+    free_per_node: Vec<usize>,
+    free_total: usize,
+    /// Schedulable capacity (<= nodes * cores_per_node when the pilot's
+    /// core request is not node-aligned; the tail cores are permanently
+    /// occupied).
+    limit: usize,
+}
+
+impl NodeList {
+    pub fn new(nodes: usize, cores_per_node: usize) -> Self {
+        assert!(nodes > 0 && cores_per_node > 0);
+        NodeList {
+            cores_per_node,
+            busy: vec![vec![false; cores_per_node]; nodes],
+            free_per_node: vec![cores_per_node; nodes],
+            free_total: nodes * cores_per_node,
+            limit: nodes * cores_per_node,
+        }
+    }
+
+    /// Build sized for exactly `cores` schedulable cores: whole nodes are
+    /// allocated (as RMs do) but the tail cores of the last node are
+    /// permanently occupied so the pilot never over-schedules.
+    pub fn for_cores(cores: usize, cores_per_node: usize) -> Self {
+        assert!(cores > 0);
+        let mut nl = Self::new(cores.div_ceil(cores_per_node), cores_per_node);
+        nl.restrict_to(cores);
+        nl
+    }
+
+    /// Permanently occupy trailing cores so only `cores` remain usable.
+    pub fn restrict_to(&mut self, cores: usize) {
+        let total = self.nodes() * self.cores_per_node;
+        assert!(cores <= total && cores > 0);
+        let mut to_block = total - cores;
+        'outer: for node in (0..self.nodes()).rev() {
+            for core in (0..self.cores_per_node).rev() {
+                if to_block == 0 {
+                    break 'outer;
+                }
+                if !self.busy[node][core] {
+                    self.busy[node][core] = true;
+                    self.free_per_node[node] -= 1;
+                    self.free_total -= 1;
+                    to_block -= 1;
+                }
+            }
+        }
+        self.limit = cores;
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.busy.len()
+    }
+
+    pub fn cores_per_node(&self) -> usize {
+        self.cores_per_node
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.limit
+    }
+
+    pub fn free_total(&self) -> usize {
+        self.free_total
+    }
+
+    pub fn free_on(&self, node: usize) -> usize {
+        self.free_per_node[node]
+    }
+
+    pub fn is_busy(&self, node: usize, core: usize) -> bool {
+        self.busy[node][core]
+    }
+
+    /// Mark a set of cores BUSY.  Panics on double-allocation (an
+    /// invariant violation — callers own exclusive slots).
+    pub fn occupy(&mut self, cores: &[(u32, u32)]) {
+        for &(n, c) in cores {
+            let (n, c) = (n as usize, c as usize);
+            assert!(!self.busy[n][c], "double-allocation of node {n} core {c}");
+            self.busy[n][c] = true;
+            self.free_per_node[n] -= 1;
+            self.free_total -= 1;
+        }
+    }
+
+    /// Mark a set of cores FREE.  Panics on double-free.
+    pub fn release(&mut self, cores: &[(u32, u32)]) {
+        for &(n, c) in cores {
+            let (n, c) = (n as usize, c as usize);
+            assert!(self.busy[n][c], "double-free of node {n} core {c}");
+            self.busy[n][c] = false;
+            self.free_per_node[n] += 1;
+            self.free_total += 1;
+        }
+    }
+
+    /// First-fit scan for `count` free cores on node `node`, starting at
+    /// core 0.  Returns the core indices (not yet occupied) and the
+    /// number of slots scanned.
+    pub fn scan_node(&self, node: usize, count: usize) -> Option<(Vec<u32>, usize)> {
+        if self.free_per_node[node] < count {
+            return None;
+        }
+        let mut found = Vec::with_capacity(count);
+        let mut scanned = 0;
+        for (c, &b) in self.busy[node].iter().enumerate() {
+            scanned += 1;
+            if !b {
+                found.push(c as u32);
+                if found.len() == count {
+                    return Some((found, scanned));
+                }
+            }
+        }
+        None // unreachable given free_per_node check, but stay safe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_accounting() {
+        let mut nl = NodeList::new(2, 4);
+        assert_eq!(nl.capacity(), 8);
+        assert_eq!(nl.free_total(), 8);
+        nl.occupy(&[(0, 0), (0, 1), (1, 3)]);
+        assert_eq!(nl.free_total(), 5);
+        assert_eq!(nl.free_on(0), 2);
+        assert_eq!(nl.free_on(1), 3);
+        nl.release(&[(0, 1)]);
+        assert_eq!(nl.free_total(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-allocation")]
+    fn double_alloc_panics() {
+        let mut nl = NodeList::new(1, 2);
+        nl.occupy(&[(0, 0)]);
+        nl.occupy(&[(0, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn double_free_panics() {
+        let mut nl = NodeList::new(1, 2);
+        nl.release(&[(0, 0)]);
+    }
+
+    #[test]
+    fn scan_node_first_fit() {
+        let mut nl = NodeList::new(1, 8);
+        nl.occupy(&[(0, 0), (0, 2)]);
+        let (cores, scanned) = nl.scan_node(0, 3).unwrap();
+        assert_eq!(cores, vec![1, 3, 4]);
+        assert_eq!(scanned, 5);
+        assert!(nl.scan_node(0, 7).is_none());
+    }
+
+    #[test]
+    fn for_cores_limits_capacity() {
+        let nl = NodeList::for_cores(17, 16);
+        assert_eq!(nl.nodes(), 2);
+        assert_eq!(nl.capacity(), 17);
+        assert_eq!(nl.free_total(), 17);
+        // the tail of node 1 is blocked
+        assert_eq!(nl.free_on(1), 1);
+        assert!(nl.is_busy(1, 15));
+        assert!(!nl.is_busy(1, 0));
+    }
+
+    #[test]
+    fn node_aligned_for_cores_unrestricted() {
+        let nl = NodeList::for_cores(32, 16);
+        assert_eq!(nl.capacity(), 32);
+        assert_eq!(nl.free_total(), 32);
+    }
+}

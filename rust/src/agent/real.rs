@@ -1,0 +1,634 @@
+//! The real-execution Agent: thread-based pipeline assembling the
+//! Scheduler, Executer and Stager components over [`Bridge`]s — what RP
+//! bootstraps inside a pilot allocation (paper Fig. 1/3).
+//!
+//! Used by the Pilot API for local pilots (examples, the end-to-end MD
+//! driver) and by the profiler-overhead bench; the supercomputer-scale
+//! figure benches use the DES twin ([`crate::sim::AgentSim`]), which
+//! drives the same scheduler code and records the same profile events.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::agent::bridge::Bridge;
+use crate::agent::executer::spawn::make_spawner;
+use crate::agent::executer::{select_method, ExecOutcome, LaunchMethod, Spawner};
+use crate::agent::nodelist::Allocation;
+use crate::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+use crate::agent::stager;
+use crate::api::descriptions::{UnitDescription, UnitPayload};
+use crate::config::ResourceConfig;
+use crate::error::{Error, Result};
+use crate::ids::UnitId;
+use crate::profiler::Profiler;
+use crate::runtime::{PayloadStore, TaskResult};
+use crate::states::machine::StateMachine;
+use crate::states::UnitState as S;
+use crate::util;
+
+/// Execution outcome stored on the unit record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitOutcome {
+    /// Synthetic / executable unit finished.
+    Exec(ExecOutcome),
+    /// PJRT payload finished.
+    Pjrt(TaskResult),
+}
+
+/// Mutable per-unit record shared between the Agent and the API handle.
+#[derive(Debug)]
+pub struct UnitRecord {
+    pub id: UnitId,
+    pub descr: UnitDescription,
+    pub machine: StateMachine<S>,
+    pub outcome: Option<UnitOutcome>,
+    pub error: Option<String>,
+    pub cancel_requested: bool,
+}
+
+/// Shared handle to a unit record (condvar notifies state changes).
+pub type SharedUnit = Arc<(Mutex<UnitRecord>, Condvar)>;
+
+/// Create a shared unit record in state `New`.
+pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
+    Arc::new((
+        Mutex::new(UnitRecord {
+            id,
+            descr,
+            machine: StateMachine::new(S::New, util::now()),
+            outcome: None,
+            error: None,
+            cancel_requested: false,
+        }),
+        Condvar::new(),
+    ))
+}
+
+/// Advance a unit's state (recording to the profiler) and notify waiters.
+pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
+    let (m, cv) = &**unit;
+    let mut rec = m.lock().unwrap();
+    let t = util::now();
+    rec.machine.advance(to, t)?;
+    profiler.record(t, rec.id, to);
+    cv.notify_all();
+    Ok(())
+}
+
+fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
+    let (m, cv) = &**unit;
+    let mut rec = m.lock().unwrap();
+    let t = util::now();
+    let _ = rec.machine.advance(S::Failed, t);
+    profiler.record(t, rec.id, S::Failed);
+    rec.error = Some(err);
+    cv.notify_all();
+}
+
+/// Real-agent configuration, derived from the resource config.
+#[derive(Debug, Clone)]
+pub struct RealAgentConfig {
+    pub pilot_cores: usize,
+    pub cores_per_node: usize,
+    pub executers: usize,
+    pub spawner: String,
+    pub mpi_method: String,
+    pub task_method: String,
+    pub scheduler_algorithm: String,
+    pub search_mode: SearchMode,
+    pub sandbox: PathBuf,
+    /// Run synthetic units as real `sleep` processes (true exercises the
+    /// spawn path; false sleeps in-thread).
+    pub synthetic_as_process: bool,
+}
+
+impl RealAgentConfig {
+    pub fn from_resource(cfg: &ResourceConfig, pilot_cores: usize, sandbox: PathBuf) -> Self {
+        RealAgentConfig {
+            pilot_cores,
+            cores_per_node: cfg.cores_per_node,
+            executers: cfg.agent.executers.max(1),
+            spawner: cfg.agent.spawner.clone(),
+            mpi_method: cfg.launch_methods.mpi.clone(),
+            task_method: cfg.launch_methods.task.clone(),
+            scheduler_algorithm: cfg.agent.scheduler_algorithm.clone(),
+            search_mode: SearchMode::FreeList,
+            sandbox,
+            synthetic_as_process: false,
+        }
+    }
+}
+
+struct SchedShared {
+    sched: Mutex<Box<dyn CoreScheduler>>,
+    freed: Condvar,
+    stopping: Mutex<bool>,
+}
+
+/// The running Agent.
+pub struct RealAgent {
+    cfg: RealAgentConfig,
+    input: Bridge<SharedUnit>,
+    exec_bridge: Bridge<(SharedUnit, Allocation)>,
+    stage_bridge: Bridge<SharedUnit>,
+    sched_shared: Arc<SchedShared>,
+    profiler: Arc<Profiler>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Live executer threads; the last one out closes the stage bridge.
+    exec_active: std::sync::atomic::AtomicUsize,
+}
+
+impl RealAgent {
+    /// Bootstrap the Agent: start scheduler, executer and stager threads.
+    pub fn bootstrap(
+        cfg: RealAgentConfig,
+        profiler: Arc<Profiler>,
+        payloads: Option<PayloadStore>,
+    ) -> Result<Arc<RealAgent>> {
+        std::fs::create_dir_all(&cfg.sandbox)?;
+        let sched: Box<dyn CoreScheduler> = match cfg.scheduler_algorithm.as_str() {
+            "torus" => Box::new(TorusScheduler::for_cores(cfg.pilot_cores, cfg.cores_per_node)),
+            _ => Box::new(ContinuousScheduler::for_cores(
+                cfg.pilot_cores,
+                cfg.cores_per_node,
+                cfg.search_mode,
+            )),
+        };
+        let agent = Arc::new(RealAgent {
+            cfg,
+            input: Bridge::new("agent-input"),
+            exec_bridge: Bridge::new("sched-exec"),
+            stage_bridge: Bridge::new("exec-stageout"),
+            sched_shared: Arc::new(SchedShared {
+                sched: Mutex::new(sched),
+                freed: Condvar::new(),
+                stopping: Mutex::new(false),
+            }),
+            profiler,
+            threads: Mutex::new(Vec::new()),
+            exec_active: std::sync::atomic::AtomicUsize::new(0),
+        });
+        agent
+            .exec_active
+            .store(agent.cfg.executers, std::sync::atomic::Ordering::SeqCst);
+
+        let mut threads = vec![];
+        // scheduler thread
+        {
+            let a = agent.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("agent-scheduler".into())
+                    .spawn(move || a.scheduler_loop())
+                    .map_err(|e| Error::other(format!("spawn scheduler: {e}")))?,
+            );
+        }
+        // executer threads
+        for i in 0..agent.cfg.executers {
+            let a = agent.clone();
+            let payloads = payloads.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("agent-executer-{i}"))
+                    .spawn(move || a.executer_loop(payloads))
+                    .map_err(|e| Error::other(format!("spawn executer: {e}")))?,
+            );
+        }
+        // output stager thread
+        {
+            let a = agent.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("agent-stager-out".into())
+                    .spawn(move || a.stager_loop())
+                    .map_err(|e| Error::other(format!("spawn stager: {e}")))?,
+            );
+        }
+        *agent.threads.lock().unwrap() = threads;
+        Ok(agent)
+    }
+
+    /// Submit units to the Agent (they must be in `AStagingInPending`).
+    pub fn submit(&self, units: Vec<SharedUnit>) {
+        self.input.send_bulk(units);
+    }
+
+    /// Pilot capacity in cores.
+    pub fn capacity(&self) -> usize {
+        self.sched_shared.sched.lock().unwrap().capacity()
+    }
+
+    /// Drain all queued work and stop the component threads.
+    pub fn drain_and_stop(&self) {
+        self.input.close();
+        // wake a possibly-blocked scheduler so it can observe shutdown
+        *self.sched_shared.stopping.lock().unwrap() = true;
+        self.sched_shared.freed.notify_all();
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        // scheduler exits -> close exec bridge -> executers exit ->
+        // close stage bridge -> stager exits (ordering enforced below)
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+
+    // ------------------------------------------------------------- threads
+
+    fn scheduler_loop(&self) {
+        loop {
+            let batch = self.input.recv(64);
+            if batch.is_empty() {
+                break; // closed + drained
+            }
+            for unit in batch {
+                // AGENT_SCHEDULING_PENDING on entry into the scheduler
+                if advance(&unit, S::ASchedulingPending, &self.profiler).is_err() {
+                    continue; // canceled/failed upstream
+                }
+                let cores = unit.0.lock().unwrap().descr.cores;
+                // wait for an allocation
+                let alloc = {
+                    let mut sched = self.sched_shared.sched.lock().unwrap();
+                    loop {
+                        if unit.0.lock().unwrap().cancel_requested {
+                            break None;
+                        }
+                        if cores > sched.capacity() {
+                            break None;
+                        }
+                        if let Some(a) = sched.allocate(cores) {
+                            break Some(a);
+                        }
+                        if *self.sched_shared.stopping.lock().unwrap() {
+                            break None;
+                        }
+                        let (s, _t) = self
+                            .sched_shared
+                            .freed
+                            .wait_timeout(sched, std::time::Duration::from_millis(200))
+                            .unwrap();
+                        sched = s;
+                    }
+                };
+                match alloc {
+                    Some(alloc) => {
+                        let _ = advance(&unit, S::AScheduling, &self.profiler);
+                        let _ = advance(&unit, S::AExecutingPending, &self.profiler);
+                        self.exec_bridge.send((unit, alloc));
+                    }
+                    None => {
+                        let rec = unit.0.lock().unwrap();
+                        let oversized = cores > self.cfg.pilot_cores;
+                        let canceled = rec.cancel_requested;
+                        drop(rec);
+                        if canceled {
+                            let (m, cv) = &*unit;
+                            let mut r = m.lock().unwrap();
+                            let t = util::now();
+                            let _ = r.machine.advance(S::Canceled, t);
+                            self.profiler.record(t, r.id, S::Canceled);
+                            cv.notify_all();
+                        } else if oversized {
+                            fail_unit(
+                                &unit,
+                                format!(
+                                    "unit needs {cores} cores, pilot has {}",
+                                    self.cfg.pilot_cores
+                                ),
+                                &self.profiler,
+                            );
+                        } else {
+                            fail_unit(&unit, "agent shutting down".into(), &self.profiler);
+                        }
+                    }
+                }
+            }
+        }
+        self.exec_bridge.close();
+    }
+
+    fn executer_loop(&self, payloads: Option<PayloadStore>) {
+        let spawner = make_spawner(&self.cfg.spawner);
+        loop {
+            let mut batch = self.exec_bridge.recv(1);
+            let Some((unit, alloc)) = batch.pop() else { break };
+            self.execute_one(&unit, &alloc, spawner.as_ref(), payloads.as_ref());
+            // release cores when the unit leaves AExecuting
+            {
+                let mut sched = self.sched_shared.sched.lock().unwrap();
+                sched.release(&alloc);
+            }
+            self.sched_shared.freed.notify_all();
+            self.stage_bridge.send(unit);
+        }
+        // the last executer out closes the stage bridge
+        if self.exec_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
+            self.stage_bridge.close();
+        }
+    }
+
+    fn execute_one(
+        &self,
+        unit: &SharedUnit,
+        alloc: &Allocation,
+        spawner: &dyn Spawner,
+        payloads: Option<&PayloadStore>,
+    ) {
+        if advance(unit, S::AExecuting, &self.profiler).is_err() {
+            return;
+        }
+        let descr = unit.0.lock().unwrap().descr.clone();
+        let result: Result<UnitOutcome> = match &descr.payload {
+            UnitPayload::Synthetic { duration } => {
+                if self.cfg.synthetic_as_process {
+                    let argv = vec!["sleep".to_string(), format!("{duration}")];
+                    spawner
+                        .spawn(&argv, &descr.environment, &self.cfg.sandbox)
+                        .map(UnitOutcome::Exec)
+                } else {
+                    util::sleep(*duration);
+                    Ok(UnitOutcome::Exec(ExecOutcome {
+                        exit_code: 0,
+                        stdout: String::new(),
+                        stderr: String::new(),
+                    }))
+                }
+            }
+            UnitPayload::Executable { executable, args } => {
+                match select_method(&descr, &self.cfg.mpi_method, &self.cfg.task_method) {
+                    Some(method) => {
+                        // on the local resource every "host" is localhost
+                        let argv = method.build_command(executable, args, alloc, &|_| {
+                            "localhost".to_string()
+                        });
+                        // only FORK-style direct execution is actually
+                        // runnable in this environment; wrapped methods
+                        // degrade to direct execution with a note
+                        let argv = if method == LaunchMethod::Fork || which_exists(&argv[0]) {
+                            argv
+                        } else {
+                            let mut direct = vec![executable.clone()];
+                            direct.extend(args.iter().cloned());
+                            direct
+                        };
+                        spawner
+                            .spawn(&argv, &descr.environment, &self.cfg.sandbox)
+                            .map(UnitOutcome::Exec)
+                    }
+                    None => Err(Error::Exec(format!(
+                        "no launch method for unit (mpi={}, task={})",
+                        self.cfg.mpi_method, self.cfg.task_method
+                    ))),
+                }
+            }
+            UnitPayload::Pjrt { artifact, task_id, steps_chunks } => match payloads {
+                Some(store) => {
+                    let mut last = Err(Error::Runtime("no chunks".into()));
+                    for _ in 0..(*steps_chunks).max(1) {
+                        last = store.execute(artifact, *task_id);
+                        if last.is_err() {
+                            break;
+                        }
+                    }
+                    last.map(UnitOutcome::Pjrt)
+                }
+                None => Err(Error::Runtime(
+                    "pilot has no PJRT runtime (artifacts not loaded)".into(),
+                )),
+            },
+        };
+        match result {
+            Ok(outcome) => {
+                {
+                    let mut rec = unit.0.lock().unwrap();
+                    rec.outcome = Some(outcome);
+                }
+                let _ = advance(unit, S::AStagingOutPending, &self.profiler);
+            }
+            Err(e) => fail_unit(unit, e.to_string(), &self.profiler),
+        }
+    }
+
+    fn stager_loop(&self) {
+        loop {
+            let batch = self.stage_bridge.recv(32);
+            if batch.is_empty() {
+                break;
+            }
+            for unit in batch {
+                let (name, stdout, stderr, result_json, failed, out_staging) = {
+                    let rec = unit.0.lock().unwrap();
+                    let (stdout, stderr, json) = match &rec.outcome {
+                        Some(UnitOutcome::Exec(o)) => {
+                            (o.stdout.clone(), o.stderr.clone(), None)
+                        }
+                        Some(UnitOutcome::Pjrt(r)) => (
+                            String::new(),
+                            String::new(),
+                            Some(format!(
+                                r#"{{"pe":{},"ke_or_rg":{},"total_steps":{}}}"#,
+                                r.pe, r.ke_or_rg, r.total_steps
+                            )),
+                        ),
+                        None => (String::new(), String::new(), None),
+                    };
+                    let name = if rec.descr.name.is_empty() {
+                        rec.id.to_string()
+                    } else {
+                        rec.descr.name.clone()
+                    };
+                    (
+                        name,
+                        stdout,
+                        stderr,
+                        json,
+                        rec.machine.is_final(),
+                        rec.descr.output_staging.clone(),
+                    )
+                };
+                if failed {
+                    continue;
+                }
+                if advance(&unit, S::AStagingOut, &self.profiler).is_err() {
+                    continue;
+                }
+                let dir = stager::write_unit_outputs(
+                    &self.cfg.sandbox,
+                    &name,
+                    &stdout,
+                    &stderr,
+                    result_json.as_deref(),
+                );
+                match dir {
+                    Ok(dir) => {
+                        if !out_staging.is_empty() {
+                            let _ = stager::stage(&out_staging, &dir, &self.cfg.sandbox);
+                        }
+                        let _ = advance(&unit, S::UmStagingOutPending, &self.profiler);
+                        let _ = advance(&unit, S::Done, &self.profiler);
+                    }
+                    Err(e) => fail_unit(&unit, e.to_string(), &self.profiler),
+                }
+            }
+        }
+    }
+}
+
+fn which_exists(exe: &str) -> bool {
+    if exe.contains('/') {
+        return std::path::Path::new(exe).exists();
+    }
+    std::env::var_os("PATH")
+        .map(|paths| {
+            std::env::split_paths(&paths).any(|dir| dir.join(exe).is_file())
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sandbox(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("rp_agent_test").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn agent_cfg(name: &str, cores: usize, executers: usize) -> RealAgentConfig {
+        RealAgentConfig {
+            pilot_cores: cores,
+            cores_per_node: 4,
+            executers,
+            spawner: "popen".into(),
+            mpi_method: "FORK".into(),
+            task_method: "FORK".into(),
+            scheduler_algorithm: "continuous".into(),
+            search_mode: SearchMode::FreeList,
+            sandbox: sandbox(name),
+            synthetic_as_process: false,
+        }
+    }
+
+    fn wait_final(unit: &SharedUnit, timeout: f64) -> S {
+        let (m, cv) = &**unit;
+        let mut rec = m.lock().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        while !rec.machine.is_final() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (r, _) = cv.wait_timeout(rec, deadline - now).unwrap();
+            rec = r;
+        }
+        rec.machine.state()
+    }
+
+    #[test]
+    fn synthetic_units_flow_through() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("synthetic", 8, 2), profiler.clone(), None).unwrap();
+        let units: Vec<SharedUnit> = (0..16)
+            .map(|i| {
+                let u = new_unit(UnitId(i), UnitDescription::sleep(0.01).name(format!("u{i}")));
+                advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+                advance(&u, S::UmScheduling, &profiler).unwrap();
+                advance(&u, S::AStagingInPending, &profiler).unwrap();
+                u
+            })
+            .collect();
+        agent.submit(units.clone());
+        for u in &units {
+            assert_eq!(wait_final(u, 10.0), S::Done);
+        }
+        agent.drain_and_stop();
+        // profile recorded the full pipeline
+        let prof = profiler.snapshot();
+        assert!(prof.events.len() >= 16 * 8);
+    }
+
+    #[test]
+    fn executable_unit_runs() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("exe", 4, 1), profiler.clone(), None).unwrap();
+        let u = new_unit(
+            UnitId(0),
+            UnitDescription::executable("/bin/echo", vec!["hi".into()]).name("echo"),
+        );
+        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+        advance(&u, S::UmScheduling, &profiler).unwrap();
+        advance(&u, S::AStagingInPending, &profiler).unwrap();
+        agent.submit(vec![u.clone()]);
+        assert_eq!(wait_final(&u, 10.0), S::Done);
+        let rec = u.0.lock().unwrap();
+        match rec.outcome.as_ref().unwrap() {
+            UnitOutcome::Exec(o) => assert_eq!(o.stdout.trim(), "hi"),
+            _ => panic!("wrong outcome"),
+        }
+        drop(rec);
+        agent.drain_and_stop();
+        // STDOUT staged to the sandbox
+        let out = std::fs::read_to_string(
+            std::env::temp_dir().join("rp_agent_test/exe/echo/STDOUT"),
+        )
+        .unwrap();
+        assert_eq!(out.trim(), "hi");
+    }
+
+    #[test]
+    fn oversized_unit_fails_cleanly() {
+        let profiler = Arc::new(Profiler::new(false));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("oversize", 4, 1), profiler.clone(), None).unwrap();
+        let u = new_unit(UnitId(0), UnitDescription::sleep(0.01).cores(64));
+        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+        advance(&u, S::UmScheduling, &profiler).unwrap();
+        advance(&u, S::AStagingInPending, &profiler).unwrap();
+        agent.submit(vec![u.clone()]);
+        assert_eq!(wait_final(&u, 10.0), S::Failed);
+        assert!(u.0.lock().unwrap().error.as_ref().unwrap().contains("cores"));
+        agent.drain_and_stop();
+    }
+
+    #[test]
+    fn pjrt_unit_without_runtime_fails() {
+        let profiler = Arc::new(Profiler::new(false));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("nopjrt", 4, 1), profiler.clone(), None).unwrap();
+        let u = new_unit(UnitId(0), UnitDescription::pjrt("md_n64_s10", 0));
+        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+        advance(&u, S::UmScheduling, &profiler).unwrap();
+        advance(&u, S::AStagingInPending, &profiler).unwrap();
+        agent.submit(vec![u.clone()]);
+        assert_eq!(wait_final(&u, 10.0), S::Failed);
+        agent.drain_and_stop();
+    }
+
+    #[test]
+    fn concurrency_respects_capacity() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("capacity", 4, 4), profiler.clone(), None).unwrap();
+        let units: Vec<SharedUnit> = (0..12)
+            .map(|i| {
+                let u = new_unit(UnitId(i), UnitDescription::sleep(0.05));
+                advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+                advance(&u, S::UmScheduling, &profiler).unwrap();
+                advance(&u, S::AStagingInPending, &profiler).unwrap();
+                u
+            })
+            .collect();
+        agent.submit(units.clone());
+        for u in &units {
+            assert_eq!(wait_final(u, 10.0), S::Done);
+        }
+        agent.drain_and_stop();
+        let prof = profiler.snapshot();
+        let analysis = crate::profiler::Analysis::new(&prof);
+        assert!(analysis.peak_concurrency() <= 4, "peak={}", analysis.peak_concurrency());
+    }
+}

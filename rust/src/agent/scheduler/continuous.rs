@@ -1,0 +1,329 @@
+//! "Continuous" scheduling algorithm: cores organized as a continuum.
+
+use std::collections::BTreeSet;
+
+use super::{CoreScheduler, SearchMode};
+use crate::agent::nodelist::{Allocation, NodeList};
+
+/// First-fit scheduler over a linear list of nodes/cores.
+///
+/// Placement rules (paper §III-B):
+/// * requests that fit on one node are placed on a single node (threads
+///   must share memory);
+/// * larger (MPI) requests get whole consecutive node spans plus a
+///   remainder, i.e. topologically close nodes.
+///
+/// Search modes: [`SearchMode::Linear`] walks the full core list from
+/// index 0 on every allocation (faithful to the paper's implementation —
+/// the Fig. 8 intra-generation scheduling growth); the optimized
+/// [`SearchMode::FreeList`] keeps an ordered index of nodes with free
+/// cores, so allocation under churn is O(log n) instead of O(n)
+/// (`benches/ablation_sched.rs` quantifies the gap).
+#[derive(Debug)]
+pub struct ContinuousScheduler {
+    nodes: NodeList,
+    mode: SearchMode,
+    /// FreeList mode: nodes that currently have at least one free core,
+    /// ordered (first-fit still picks the lowest index).
+    free_nodes: BTreeSet<usize>,
+}
+
+impl ContinuousScheduler {
+    pub fn new(nodes: usize, cores_per_node: usize, mode: SearchMode) -> Self {
+        Self::from_nodelist(NodeList::new(nodes, cores_per_node), mode)
+    }
+
+    pub fn for_cores(cores: usize, cores_per_node: usize, mode: SearchMode) -> Self {
+        Self::from_nodelist(NodeList::for_cores(cores, cores_per_node), mode)
+    }
+
+    fn from_nodelist(nodes: NodeList, mode: SearchMode) -> Self {
+        let free_nodes = match mode {
+            SearchMode::Linear => BTreeSet::new(),
+            SearchMode::FreeList => {
+                (0..nodes.nodes()).filter(|&n| nodes.free_on(n) > 0).collect()
+            }
+        };
+        ContinuousScheduler { nodes, mode, free_nodes }
+    }
+
+    /// Keep the free-node index in sync after occupying cores.
+    fn note_occupied(&mut self, touched: impl Iterator<Item = usize>) {
+        if self.mode == SearchMode::FreeList {
+            for n in touched {
+                if self.nodes.free_on(n) == 0 {
+                    self.free_nodes.remove(&n);
+                }
+            }
+        }
+    }
+
+    fn alloc_single_node(&mut self, cores: usize) -> Option<Allocation> {
+        let cpn = self.nodes.cores_per_node();
+        match self.mode {
+            SearchMode::Linear => {
+                let mut scanned = 0usize;
+                for node in 0..self.nodes.nodes() {
+                    // Linear mode scans every core slot of every node it
+                    // passes — the paper's list walk.
+                    if let Some((found, s)) = self.nodes.scan_node(node, cores) {
+                        scanned += s;
+                        let pairs: Vec<(u32, u32)> =
+                            found.into_iter().map(|c| (node as u32, c)).collect();
+                        self.nodes.occupy(&pairs);
+                        return Some(Allocation { cores: pairs, scanned });
+                    }
+                    scanned += cpn;
+                }
+                None
+            }
+            SearchMode::FreeList => {
+                let mut scanned = 0usize;
+                let mut chosen = None;
+                for &node in self.free_nodes.iter() {
+                    scanned += 1;
+                    if self.nodes.free_on(node) >= cores {
+                        chosen = Some(node);
+                        break;
+                    }
+                }
+                let node = chosen?;
+                let (found, s) = self.nodes.scan_node(node, cores).unwrap();
+                scanned += s;
+                let pairs: Vec<(u32, u32)> =
+                    found.into_iter().map(|c| (node as u32, c)).collect();
+                self.nodes.occupy(&pairs);
+                self.note_occupied(std::iter::once(node));
+                Some(Allocation { cores: pairs, scanned })
+            }
+        }
+    }
+
+    /// Multi-node request: whole consecutive free nodes + remainder on
+    /// the next node.
+    fn alloc_multi_node(&mut self, cores: usize) -> Option<Allocation> {
+        let cpn = self.nodes.cores_per_node();
+        let full_nodes = cores / cpn;
+        let remainder = cores % cpn;
+        let span = full_nodes + usize::from(remainder > 0);
+        let n_nodes = self.nodes.nodes();
+        if span > n_nodes {
+            return None;
+        }
+        let mut scanned = 0usize;
+        'outer: for start in 0..=(n_nodes - span) {
+            scanned += 1;
+            for k in 0..full_nodes {
+                if self.nodes.free_on(start + k) != cpn {
+                    continue 'outer;
+                }
+            }
+            if remainder > 0 && self.nodes.free_on(start + full_nodes) < remainder {
+                continue;
+            }
+            let mut pairs = Vec::with_capacity(cores);
+            for k in 0..full_nodes {
+                for c in 0..cpn {
+                    pairs.push(((start + k) as u32, c as u32));
+                }
+            }
+            if remainder > 0 {
+                let (found, s) = self.nodes.scan_node(start + full_nodes, remainder).unwrap();
+                scanned += s;
+                pairs.extend(found.into_iter().map(|c| ((start + full_nodes) as u32, c)));
+            }
+            self.nodes.occupy(&pairs);
+            self.note_occupied((start..start + span).collect::<Vec<_>>().into_iter());
+            return Some(Allocation { cores: pairs, scanned });
+        }
+        None
+    }
+}
+
+impl CoreScheduler for ContinuousScheduler {
+    fn capacity(&self) -> usize {
+        self.nodes.capacity()
+    }
+
+    fn free_cores(&self) -> usize {
+        self.nodes.free_total()
+    }
+
+    fn allocate(&mut self, cores: usize) -> Option<Allocation> {
+        if cores == 0 || cores > self.capacity() || cores > self.free_cores() {
+            return None;
+        }
+        if cores <= self.nodes.cores_per_node() {
+            self.alloc_single_node(cores)
+        } else {
+            self.alloc_multi_node(cores)
+        }
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        self.nodes.release(&alloc.cores);
+        if self.mode == SearchMode::FreeList {
+            for &(n, _) in &alloc.cores {
+                self.free_nodes.insert(n as usize);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(s: &mut ContinuousScheduler, cores: usize) -> Vec<Allocation> {
+        let mut allocs = vec![];
+        while let Some(a) = s.allocate(cores) {
+            allocs.push(a);
+        }
+        allocs
+    }
+
+    #[test]
+    fn fills_to_capacity_single_core() {
+        for mode in [SearchMode::Linear, SearchMode::FreeList] {
+            let mut s = ContinuousScheduler::new(4, 8, mode);
+            let allocs = drain(&mut s, 1);
+            assert_eq!(allocs.len(), 32);
+            assert_eq!(s.free_cores(), 0);
+            assert!(s.allocate(1).is_none());
+        }
+    }
+
+    #[test]
+    fn single_node_placement() {
+        for mode in [SearchMode::Linear, SearchMode::FreeList] {
+            let mut s = ContinuousScheduler::new(4, 8, mode);
+            let a = s.allocate(6).unwrap();
+            let nodes: std::collections::HashSet<u32> =
+                a.cores.iter().map(|(n, _)| *n).collect();
+            assert_eq!(nodes.len(), 1, "<=cpn requests stay on one node");
+        }
+    }
+
+    #[test]
+    fn multi_node_spans_consecutive() {
+        let mut s = ContinuousScheduler::new(4, 8, SearchMode::Linear);
+        let a = s.allocate(20).unwrap(); // 2 full nodes + 4
+        let mut nodes: Vec<u32> = a.cores.iter().map(|(n, _)| *n).collect();
+        nodes.dedup();
+        assert_eq!(nodes, vec![0, 1, 2]);
+        assert_eq!(a.n_cores(), 20);
+        assert_eq!(s.free_cores(), 12);
+    }
+
+    #[test]
+    fn release_enables_reuse() {
+        for mode in [SearchMode::Linear, SearchMode::FreeList] {
+            let mut s = ContinuousScheduler::new(2, 4, mode);
+            let a1 = s.allocate(4).unwrap();
+            let _a2 = s.allocate(4).unwrap();
+            assert!(s.allocate(1).is_none());
+            s.release(&a1);
+            assert_eq!(s.free_cores(), 4);
+            assert!(s.allocate(3).is_some());
+        }
+    }
+
+    #[test]
+    fn linear_scan_cost_grows_as_pilot_fills() {
+        let mut s = ContinuousScheduler::new(8, 8, SearchMode::Linear);
+        let first = s.allocate(1).unwrap().scanned;
+        for _ in 0..40 {
+            s.allocate(1).unwrap();
+        }
+        let later = s.allocate(1).unwrap().scanned;
+        assert!(later > first, "linear search cost must grow: {first} -> {later}");
+    }
+
+    #[test]
+    fn freelist_scan_cost_stays_flat() {
+        let mut s = ContinuousScheduler::new(8, 8, SearchMode::FreeList);
+        for _ in 0..40 {
+            s.allocate(1).unwrap();
+        }
+        let later = s.allocate(1).unwrap().scanned;
+        assert!(later < 16, "free-node index should not rescan full nodes: {later}");
+    }
+
+    #[test]
+    fn freelist_finds_freed_cores_behind_cursor() {
+        let mut s = ContinuousScheduler::new(2, 2, SearchMode::FreeList);
+        let a0 = s.allocate(1).unwrap();
+        let _ = s.allocate(1).unwrap();
+        let _ = s.allocate(1).unwrap();
+        let _ = s.allocate(1).unwrap();
+        assert_eq!(s.free_cores(), 0);
+        s.release(&a0);
+        let a = s.allocate(1).unwrap();
+        assert_eq!(a.cores[0].0, 0, "must find the freed core on node 0");
+    }
+
+    #[test]
+    fn freelist_multinode_keeps_index_consistent() {
+        let mut s = ContinuousScheduler::new(4, 4, SearchMode::FreeList);
+        let big = s.allocate(16).unwrap(); // all 4 nodes
+        assert_eq!(s.free_cores(), 0);
+        assert!(s.allocate(1).is_none());
+        s.release(&big);
+        // index rebuilt by release: all nodes usable again
+        let allocs = drain(&mut s, 4);
+        assert_eq!(allocs.len(), 4);
+    }
+
+    #[test]
+    fn modes_agree_on_feasibility() {
+        // property-style: random alloc/release sequences leave both modes
+        // with identical free-core counts
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::seeded(99);
+        let mut lin = ContinuousScheduler::new(8, 4, SearchMode::Linear);
+        let mut fl = ContinuousScheduler::new(8, 4, SearchMode::FreeList);
+        let mut live_l = vec![];
+        let mut live_f = vec![];
+        for _ in 0..500 {
+            if rng.uniform() < 0.6 {
+                let want = 1 + rng.below(4) as usize;
+                let al = lin.allocate(want);
+                let af = fl.allocate(want);
+                assert_eq!(al.is_some(), af.is_some(), "feasibility must agree");
+                if let (Some(al), Some(af)) = (al, af) {
+                    live_l.push(al);
+                    live_f.push(af);
+                }
+            } else if !live_l.is_empty() {
+                let idx = rng.below(live_l.len() as u64) as usize;
+                lin.release(&live_l.swap_remove(idx));
+                fl.release(&live_f.swap_remove(idx));
+            }
+            assert_eq!(lin.free_cores(), fl.free_cores());
+        }
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut s = ContinuousScheduler::new(2, 4, SearchMode::Linear);
+        assert!(s.allocate(9).is_none());
+        assert!(s.allocate(0).is_none());
+        assert_eq!(s.free_cores(), 8);
+    }
+
+    #[test]
+    fn fragmentation_blocks_multinode() {
+        let mut s = ContinuousScheduler::new(2, 4, SearchMode::Linear);
+        // occupy one core on each node -> no fully-free node remains
+        let _a = s.allocate(1).unwrap();
+        let b = s.allocate(4).unwrap(); // needs a whole free node -> node 1
+        let nodes: std::collections::HashSet<u32> = b.cores.iter().map(|(n, _)| *n).collect();
+        assert_eq!(nodes, [1u32].into_iter().collect());
+        // now an 8-core (2-node) request cannot fit
+        assert!(s.allocate(8).is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! Agent Scheduler component: assigns pilot cores to units.
+//!
+//! Two algorithms, as in the paper (§III-B): [`ContinuousScheduler`] for
+//! cores organized as a continuum (Beowulf/Cray clusters) and
+//! [`TorusScheduler`] for cores organized in an n-dimensional torus
+//! (IBM BG/Q).  Multithreaded units get cores on one node; MPI units get
+//! cores on topologically close nodes to minimize communication.
+//!
+//! The paper's implementation searches a linear list of cores on every
+//! allocation — visible as intra-generation scheduling-time growth in
+//! Fig. 8.  We implement that faithful [`SearchMode::Linear`] plus an
+//! optimized [`SearchMode::FreeList`] (cursor + per-node free counters)
+//! used in the §Perf pass; `benches/ablation_sched.rs` quantifies the
+//! difference.
+
+mod continuous;
+mod torus;
+
+pub use continuous::ContinuousScheduler;
+pub use torus::TorusScheduler;
+
+use super::nodelist::Allocation;
+use crate::config::ResourceConfig;
+
+/// Search strategy for the continuous scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Faithful to the paper: full linear scan from core 0.
+    #[default]
+    Linear,
+    /// Optimized: skip-cursor over nodes with free cores.
+    FreeList,
+}
+
+/// Common interface the Agent (real or simulated) drives.
+pub trait CoreScheduler: Send {
+    /// Total cores managed.
+    fn capacity(&self) -> usize;
+    /// Currently free cores.
+    fn free_cores(&self) -> usize;
+    /// Try to allocate `cores` for one unit.  `None` if it does not fit
+    /// right now (the unit waits for a release).
+    fn allocate(&mut self, cores: usize) -> Option<Allocation>;
+    /// Return an allocation's cores to the pool.
+    fn release(&mut self, alloc: &Allocation);
+    /// Algorithm name (profiling / logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Factory from a resource config ("continuous" | "torus").
+pub fn make_scheduler(cfg: &ResourceConfig, pilot_cores: usize) -> Box<dyn CoreScheduler> {
+    match cfg.agent.scheduler_algorithm.as_str() {
+        "torus" => Box::new(TorusScheduler::for_cores(pilot_cores, cfg.cores_per_node)),
+        _ => Box::new(ContinuousScheduler::for_cores(
+            pilot_cores,
+            cfg.cores_per_node,
+            SearchMode::Linear,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+
+    #[test]
+    fn factory_dispatches() {
+        let mut cfg = builtin("xsede.stampede").unwrap();
+        let s = make_scheduler(&cfg, 64);
+        assert_eq!(s.name(), "continuous");
+        assert_eq!(s.capacity(), 64);
+        cfg.agent.scheduler_algorithm = "torus".into();
+        let s = make_scheduler(&cfg, 64);
+        assert_eq!(s.name(), "torus");
+    }
+}

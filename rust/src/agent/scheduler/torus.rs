@@ -1,0 +1,219 @@
+//! "Torus" scheduling algorithm: cores organized in an n-dimensional
+//! torus, as on IBM BG/Q (paper §III-B).
+//!
+//! BG/Q partitions are blocks of nodes that are contiguous *with
+//! wraparound* along the torus dimensions.  We model the common practical
+//! case: nodes indexed along a snake/linearized torus order, and
+//! multi-node requests allocated as wraparound-contiguous runs of whole
+//! nodes (keeping MPI neighbours topologically close).  Single-node
+//! requests fall back to first-fit within a node.
+
+use super::CoreScheduler;
+use crate::agent::nodelist::{Allocation, NodeList};
+
+/// Torus scheduler over `dims` (product = node count).
+#[derive(Debug)]
+pub struct TorusScheduler {
+    nodes: NodeList,
+    dims: Vec<usize>,
+}
+
+impl TorusScheduler {
+    pub fn new(dims: Vec<usize>, cores_per_node: usize) -> Self {
+        let n: usize = dims.iter().product();
+        assert!(n > 0, "torus must have nodes");
+        TorusScheduler { nodes: NodeList::new(n, cores_per_node), dims }
+    }
+
+    /// Near-cubic 3-D torus with *exactly* `nodes` nodes (the dims are an
+    /// exact factorization so the torus capacity equals the pilot's
+    /// allocation; prime node counts degrade to a 1-D ring).
+    pub fn cubic(nodes: usize, cores_per_node: usize) -> Self {
+        let nodes = nodes.max(1);
+        // largest divisor of `nodes` that is <= cbrt(nodes)
+        let a = (1..=nodes)
+            .take_while(|d| d * d * d <= nodes)
+            .filter(|d| nodes.is_multiple_of(*d))
+            .max()
+            .unwrap_or(1);
+        let rest = nodes / a;
+        let b = (1..=rest)
+            .take_while(|d| d * d <= rest)
+            .filter(|d| rest.is_multiple_of(*d))
+            .max()
+            .unwrap_or(1);
+        Self::new(vec![a, b, rest / b], cores_per_node)
+    }
+
+    /// Cubic torus sized for exactly `cores` schedulable cores (tail
+    /// cores of the last node are blocked, as on the continuous side).
+    pub fn for_cores(cores: usize, cores_per_node: usize) -> Self {
+        let mut s = Self::cubic(cores.div_ceil(cores_per_node), cores_per_node);
+        s.nodes.restrict_to(cores);
+        s
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Wraparound run of `span` consecutive fully-free nodes.
+    fn find_run(&self, span: usize) -> Option<(usize, usize)> {
+        let n = self.nodes.nodes();
+        if span > n {
+            return None;
+        }
+        let cpn = self.nodes.cores_per_node();
+        let mut scanned = 0;
+        let mut run = 0;
+        let mut start = 0;
+        // scan 2n-1 to allow wraparound runs
+        for i in 0..(2 * n - 1) {
+            let node = i % n;
+            scanned += 1;
+            if self.nodes.free_on(node) == cpn {
+                if run == 0 {
+                    start = i;
+                }
+                run += 1;
+                if run == span {
+                    return Some((start % n, scanned));
+                }
+            } else {
+                run = 0;
+                if i >= n {
+                    break; // second pass only extends a run crossing the seam
+                }
+            }
+        }
+        None
+    }
+}
+
+impl CoreScheduler for TorusScheduler {
+    fn capacity(&self) -> usize {
+        self.nodes.capacity()
+    }
+
+    fn free_cores(&self) -> usize {
+        self.nodes.free_total()
+    }
+
+    fn allocate(&mut self, cores: usize) -> Option<Allocation> {
+        if cores == 0 || cores > self.free_cores() {
+            return None;
+        }
+        let cpn = self.nodes.cores_per_node();
+        if cores <= cpn {
+            // single-node placement, first fit
+            let mut scanned = 0;
+            for node in 0..self.nodes.nodes() {
+                if let Some((found, s)) = self.nodes.scan_node(node, cores) {
+                    scanned += s;
+                    let pairs: Vec<(u32, u32)> =
+                        found.into_iter().map(|c| (node as u32, c)).collect();
+                    self.nodes.occupy(&pairs);
+                    return Some(Allocation { cores: pairs, scanned });
+                }
+                scanned += cpn;
+            }
+            return None;
+        }
+        // whole-node blocks, wraparound-contiguous (BG/Q-style: requests
+        // are rounded up to whole nodes)
+        let span = cores.div_ceil(cpn);
+        let (start, scanned) = self.find_run(span)?;
+        let mut pairs = Vec::with_capacity(cores);
+        let mut remaining = cores;
+        for k in 0..span {
+            let node = (start + k) % self.nodes.nodes();
+            let take = remaining.min(cpn);
+            for c in 0..take {
+                pairs.push((node as u32, c as u32));
+            }
+            remaining -= take;
+        }
+        self.nodes.occupy(&pairs);
+        Some(Allocation { cores: pairs, scanned })
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        self.nodes.release(&alloc.cores);
+    }
+
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_dims_exact() {
+        for n in [1, 2, 8, 27, 30, 64, 97, 128, 512] {
+            let s = TorusScheduler::cubic(n, 16);
+            assert_eq!(s.capacity(), n * 16, "nodes={n}");
+            assert_eq!(s.dims().len(), 3);
+            assert_eq!(s.dims().iter().product::<usize>(), n);
+        }
+        // 27 factors as a cube
+        assert_eq!(TorusScheduler::cubic(27, 1).dims(), &[3, 3, 3]);
+    }
+
+    #[test]
+    fn single_core_fill() {
+        let mut s = TorusScheduler::new(vec![2, 2, 2], 4);
+        let mut n = 0;
+        while s.allocate(1).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    fn multi_node_contiguous() {
+        let mut s = TorusScheduler::new(vec![2, 2, 1], 4);
+        let a = s.allocate(12).unwrap(); // 3 nodes
+        let mut nodes: Vec<u32> = a.cores.iter().map(|(n, _)| *n).collect();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 3);
+        // contiguity in linearized order
+        for w in nodes.windows(2) {
+            assert_eq!((w[0] + 1) % 4, w[1] % 4);
+        }
+    }
+
+    #[test]
+    fn wraparound_run_found() {
+        let mut s = TorusScheduler::new(vec![4, 1, 1], 2);
+        // occupy node 1 fully; nodes 2,3,0 form a wraparound run of 3
+        let block = s.allocate(2).unwrap(); // node 0
+        let mid = s.allocate(2).unwrap(); // node 1
+        s.release(&block); // node 0 free again; busy: node1
+        let a = s.allocate(6).unwrap(); // needs 3 nodes: 2,3,0 wraparound
+        let nodes: std::collections::HashSet<u32> =
+            a.cores.iter().map(|(n, _)| *n).collect();
+        assert_eq!(nodes, [2u32, 3, 0].into_iter().collect());
+        drop(mid);
+    }
+
+    #[test]
+    fn rejects_when_fragmented() {
+        let mut s = TorusScheduler::new(vec![2, 1, 1], 2);
+        let _one = s.allocate(1).unwrap(); // node 0 partially busy
+        assert!(s.allocate(4).is_none(), "no 2 fully-free nodes remain");
+        assert!(s.allocate(2).is_some(), "node 1 still fully free");
+    }
+
+    #[test]
+    fn release_restores() {
+        let mut s = TorusScheduler::new(vec![2, 2, 1], 4);
+        let a = s.allocate(16).unwrap();
+        assert_eq!(s.free_cores(), 0);
+        s.release(&a);
+        assert_eq!(s.free_cores(), 16);
+        assert!(s.allocate(16).is_some());
+    }
+}

@@ -1,0 +1,130 @@
+//! Agent Stager components: move unit input/output data (paper §III-B).
+//!
+//! RP stages via SAGA ((gsi)scp, (gsi)sftp, Globus Online); in this
+//! repository staging sources/targets are local paths (the shared-FS
+//! case), and the stager also materializes each unit's sandbox with
+//! `STDOUT`/`STDERR`/`result.json` files — the small-file metadata
+//! traffic whose cost Fig. 5 characterizes.
+
+use std::path::{Path, PathBuf};
+
+use crate::api::descriptions::StagingDirective;
+use crate::error::{Error, Result};
+
+/// Stage a set of directives relative to (src_root -> dst_root).
+pub fn stage(
+    directives: &[StagingDirective],
+    src_root: &Path,
+    dst_root: &Path,
+) -> Result<usize> {
+    let mut moved = 0;
+    for d in directives {
+        let src = resolve(src_root, &d.source);
+        let dst = resolve(dst_root, &d.target);
+        if let Some(parent) = dst.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::copy(&src, &dst).map_err(|e| {
+            Error::Staging(format!("{} -> {}: {e}", src.display(), dst.display()))
+        })?;
+        moved += 1;
+    }
+    Ok(moved)
+}
+
+fn resolve(root: &Path, p: &str) -> PathBuf {
+    let path = Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        root.join(path)
+    }
+}
+
+/// Create a unit sandbox directory and write its stdout/stderr files —
+/// what RP's output stager reads back (our Fig. 5 workload).
+pub fn write_unit_outputs(
+    sandbox: &Path,
+    unit_name: &str,
+    stdout: &str,
+    stderr: &str,
+    result_json: Option<&str>,
+) -> Result<PathBuf> {
+    let dir = sandbox.join(unit_name);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("STDOUT"), stdout)?;
+    std::fs::write(dir.join("STDERR"), stderr)?;
+    if let Some(json) = result_json {
+        std::fs::write(dir.join("result.json"), json)?;
+    }
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("rp_stager_test").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn stage_copies_files() {
+        let src = tmp("src");
+        let dst = tmp("dst");
+        std::fs::write(src.join("in.dat"), b"data").unwrap();
+        let n = stage(
+            &[StagingDirective { source: "in.dat".into(), target: "unit/in.dat".into() }],
+            &src,
+            &dst,
+        )
+        .unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(std::fs::read(dst.join("unit/in.dat")).unwrap(), b"data");
+    }
+
+    #[test]
+    fn missing_source_errors() {
+        let src = tmp("src2");
+        let dst = tmp("dst2");
+        let r = stage(
+            &[StagingDirective { source: "nope".into(), target: "x".into() }],
+            &src,
+            &dst,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unit_outputs_written() {
+        let sb = tmp("sb");
+        let dir =
+            write_unit_outputs(&sb, "unit.000001", "out\n", "", Some("{\"pe\":-1}")).unwrap();
+        assert!(dir.join("STDOUT").exists());
+        assert!(dir.join("STDERR").exists());
+        assert!(dir.join("result.json").exists());
+        assert_eq!(std::fs::read_to_string(dir.join("STDOUT")).unwrap(), "out\n");
+    }
+
+    #[test]
+    fn absolute_paths_respected() {
+        let src = tmp("src3");
+        let dst = tmp("dst3");
+        let abs_src = src.join("abs.dat");
+        std::fs::write(&abs_src, b"x").unwrap();
+        let n = stage(
+            &[StagingDirective {
+                source: abs_src.to_str().unwrap().into(),
+                target: "got.dat".into(),
+            }],
+            Path::new("/nonexistent"),
+            &dst,
+        )
+        .unwrap();
+        assert_eq!(n, 1);
+        assert!(dst.join("got.dat").exists());
+    }
+}

@@ -1,0 +1,236 @@
+//! Pilot API entity descriptions (paper Fig. 1: the application describes
+//! pilots and units through the Pilot API).
+
+use crate::util::json::Value;
+
+/// Description of a pilot to be launched on a resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PilotDescription {
+    /// Resource label (built-in config label or path to a config file).
+    pub resource: String,
+    /// Cores requested for the allocation.
+    pub cores: usize,
+    /// Walltime in seconds.
+    pub runtime: f64,
+    /// Batch queue name (informational for simulated RMs).
+    pub queue: Option<String>,
+    /// Project / allocation to charge.
+    pub project: Option<String>,
+    /// Runtime config overrides, applied on top of the resource config
+    /// (`key=value`, see `ResourceConfig::apply_override`).
+    pub overrides: Vec<(String, String)>,
+}
+
+impl PilotDescription {
+    pub fn new(resource: impl Into<String>, cores: usize, runtime: f64) -> Self {
+        PilotDescription {
+            resource: resource.into(),
+            cores,
+            runtime,
+            queue: None,
+            project: None,
+            overrides: vec![],
+        }
+    }
+
+    pub fn queue(mut self, q: impl Into<String>) -> Self {
+        self.queue = Some(q.into());
+        self
+    }
+
+    pub fn project(mut self, p: impl Into<String>) -> Self {
+        self.project = Some(p.into());
+        self
+    }
+
+    pub fn with_override(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.overrides.push((key.into(), value.into()));
+        self
+    }
+}
+
+/// What a unit actually runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitPayload {
+    /// Spawn an executable (Popen/Shell mechanisms, launch methods).
+    Executable { executable: String, args: Vec<String> },
+    /// Synthetic unit of a fixed duration (the paper's experimental
+    /// workload; real mode runs `sleep`, sim mode advances the clock).
+    Synthetic { duration: f64 },
+    /// Execute an AOT-compiled PJRT payload (L2/L1 MD or analysis task),
+    /// identified by artifact name in `artifacts/manifest.json`.
+    Pjrt { artifact: String, task_id: u64, steps_chunks: u32 },
+}
+
+/// Staging directive (simplified SAGA file transfer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagingDirective {
+    pub source: String,
+    pub target: String,
+}
+
+/// Description of a compute unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitDescription {
+    pub name: String,
+    pub payload: UnitPayload,
+    /// Cores required (1 = scalar; >1 with `is_mpi` = MPI-coupled).
+    pub cores: usize,
+    pub is_mpi: bool,
+    pub input_staging: Vec<StagingDirective>,
+    pub output_staging: Vec<StagingDirective>,
+    pub environment: Vec<(String, String)>,
+}
+
+impl UnitDescription {
+    /// Executable unit.
+    pub fn executable(exe: impl Into<String>, args: Vec<String>) -> Self {
+        UnitDescription {
+            name: String::new(),
+            payload: UnitPayload::Executable { executable: exe.into(), args },
+            cores: 1,
+            is_mpi: false,
+            input_staging: vec![],
+            output_staging: vec![],
+            environment: vec![],
+        }
+    }
+
+    /// Synthetic unit of a fixed duration (the paper's workloads).
+    pub fn sleep(duration: f64) -> Self {
+        UnitDescription {
+            name: String::new(),
+            payload: UnitPayload::Synthetic { duration },
+            cores: 1,
+            is_mpi: false,
+            input_staging: vec![],
+            output_staging: vec![],
+            environment: vec![],
+        }
+    }
+
+    /// PJRT payload unit (MD / analysis artifact).
+    pub fn pjrt(artifact: impl Into<String>, task_id: u64) -> Self {
+        UnitDescription {
+            name: String::new(),
+            payload: UnitPayload::Pjrt {
+                artifact: artifact.into(),
+                task_id,
+                steps_chunks: 1,
+            },
+            cores: 1,
+            is_mpi: false,
+            input_staging: vec![],
+            output_staging: vec![],
+            environment: vec![],
+        }
+    }
+
+    pub fn name(mut self, n: impl Into<String>) -> Self {
+        self.name = n.into();
+        self
+    }
+
+    pub fn cores(mut self, c: usize) -> Self {
+        self.cores = c;
+        self
+    }
+
+    pub fn mpi(mut self, yes: bool) -> Self {
+        self.is_mpi = yes;
+        self
+    }
+
+    pub fn stage_in(mut self, source: impl Into<String>, target: impl Into<String>) -> Self {
+        self.input_staging
+            .push(StagingDirective { source: source.into(), target: target.into() });
+        self
+    }
+
+    pub fn stage_out(mut self, source: impl Into<String>, target: impl Into<String>) -> Self {
+        self.output_staging
+            .push(StagingDirective { source: source.into(), target: target.into() });
+        self
+    }
+
+    pub fn env(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.environment.push((k.into(), v.into()));
+        self
+    }
+
+    /// Nominal duration for synthetic units (None otherwise).
+    pub fn duration(&self) -> Option<f64> {
+        match self.payload {
+            UnitPayload::Synthetic { duration } => Some(duration),
+            _ => None,
+        }
+    }
+
+    /// Serialize for the coordination store.
+    pub fn to_json(&self) -> Value {
+        let payload = match &self.payload {
+            UnitPayload::Executable { executable, args } => Value::obj(vec![
+                ("kind", "exe".into()),
+                ("executable", executable.as_str().into()),
+                ("args", args.iter().map(|s| s.as_str()).collect::<Vec<_>>().join("\u{1f}").into()),
+            ]),
+            UnitPayload::Synthetic { duration } => Value::obj(vec![
+                ("kind", "synthetic".into()),
+                ("duration", (*duration).into()),
+            ]),
+            UnitPayload::Pjrt { artifact, task_id, steps_chunks } => Value::obj(vec![
+                ("kind", "pjrt".into()),
+                ("artifact", artifact.as_str().into()),
+                ("task_id", (*task_id).into()),
+                ("steps_chunks", (*steps_chunks as u64).into()),
+            ]),
+        };
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("payload", payload),
+            ("cores", self.cores.into()),
+            ("is_mpi", self.is_mpi.into()),
+            ("n_stage_in", self.input_staging.len().into()),
+            ("n_stage_out", self.output_staging.len().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders() {
+        let pd = PilotDescription::new("xsede.stampede", 1024, 3600.0)
+            .queue("normal")
+            .with_override("agent.executers", "4");
+        assert_eq!(pd.cores, 1024);
+        assert_eq!(pd.queue.as_deref(), Some("normal"));
+        assert_eq!(pd.overrides.len(), 1);
+
+        let ud = UnitDescription::sleep(64.0).name("u1").cores(2).mpi(true);
+        assert_eq!(ud.duration(), Some(64.0));
+        assert_eq!(ud.cores, 2);
+        assert!(ud.is_mpi);
+    }
+
+    #[test]
+    fn staging_builders() {
+        let ud = UnitDescription::executable("/bin/date", vec![])
+            .stage_in("in.dat", "unit/in.dat")
+            .stage_out("unit/out.dat", "out.dat");
+        assert_eq!(ud.input_staging.len(), 1);
+        assert_eq!(ud.output_staging.len(), 1);
+        assert_eq!(ud.duration(), None);
+    }
+
+    #[test]
+    fn json_shape() {
+        let ud = UnitDescription::pjrt("md_n256_s10", 7).name("md-7");
+        let v = ud.to_json();
+        assert_eq!(v.get("payload").get_str("kind", ""), "pjrt");
+        assert_eq!(v.get("payload").get_u64("task_id", 0), 7);
+        assert_eq!(v.get_str("name", ""), "md-7");
+    }
+}

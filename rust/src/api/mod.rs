@@ -1,0 +1,31 @@
+//! The Pilot API (paper Fig. 1): applications describe pilots and units;
+//! the [`PilotManager`] launches pilots through SAGA, the
+//! [`UnitManager`] late-binds units onto active pilots through the
+//! coordination store.
+//!
+//! ```no_run
+//! use rp::api::{Session, PilotDescription, UnitDescription};
+//!
+//! let session = Session::new("example");
+//! let pmgr = session.pilot_manager();
+//! let umgr = session.unit_manager();
+//! let pilot = pmgr.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+//! umgr.add_pilot(&pilot);
+//! umgr.submit((0..8).map(|_| UnitDescription::sleep(0.1)).collect());
+//! umgr.wait_all(30.0).unwrap();
+//! session.close();
+//! ```
+
+pub mod descriptions;
+mod pilot;
+mod pilot_manager;
+mod session;
+mod unit;
+mod unit_manager;
+
+pub use descriptions::{PilotDescription, StagingDirective, UnitDescription, UnitPayload};
+pub use pilot::Pilot;
+pub use pilot_manager::PilotManager;
+pub use session::Session;
+pub use unit::Unit;
+pub use unit_manager::UnitManager;

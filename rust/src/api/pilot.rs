@@ -1,0 +1,83 @@
+//! Pilot handle.
+
+use std::sync::{Arc, Mutex};
+
+use crate::agent::real::RealAgent;
+use crate::config::ResourceConfig;
+use crate::error::Result;
+use crate::ids::{JobId, PilotId};
+use crate::saga::JobService;
+use crate::states::machine::StateMachine;
+use crate::states::PilotState;
+use crate::util;
+
+/// A submitted pilot: the application's view of its resource placeholder.
+#[derive(Clone)]
+pub struct Pilot {
+    pub(crate) id: PilotId,
+    pub(crate) cfg: ResourceConfig,
+    pub(crate) cores: usize,
+    pub(crate) machine: Arc<Mutex<StateMachine<PilotState>>>,
+    pub(crate) agent: Arc<RealAgent>,
+    pub(crate) job: JobId,
+    pub(crate) job_service: Arc<JobService>,
+}
+
+impl Pilot {
+    pub fn id(&self) -> PilotId {
+        self.id
+    }
+
+    pub fn resource(&self) -> &ResourceConfig {
+        &self.cfg
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    pub fn state(&self) -> PilotState {
+        self.machine.lock().unwrap().state()
+    }
+
+    pub(crate) fn agent(&self) -> Arc<RealAgent> {
+        self.agent.clone()
+    }
+
+    /// Block until the pilot is active (or final).
+    pub fn wait_active(&self, timeout: f64) -> Result<PilotState> {
+        let t0 = util::now();
+        loop {
+            let s = self.state();
+            if s == PilotState::PActive || s.is_final() {
+                return Ok(s);
+            }
+            if util::now() - t0 > timeout {
+                return Err(crate::Error::Timeout(timeout, format!("pilot {}", self.id)));
+            }
+            util::sleep(0.005);
+        }
+    }
+
+    /// Cancel the pilot: cancel the placeholder job and stop the agent.
+    pub fn cancel(&self) -> Result<()> {
+        self.job_service.cancel(self.job)?;
+        let mut m = self.machine.lock().unwrap();
+        if !m.state().is_final() {
+            let _ = m.advance(PilotState::Canceled, util::now());
+        }
+        drop(m);
+        self.agent.drain_and_stop();
+        Ok(())
+    }
+
+    /// Drain queued units and mark the pilot done.
+    pub fn drain(&self) -> Result<()> {
+        self.agent.drain_and_stop();
+        let mut m = self.machine.lock().unwrap();
+        if m.state() == PilotState::PActive {
+            let _ = m.advance(PilotState::Done, util::now());
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,177 @@
+//! PilotManager: launches pilots on resources via the SAGA layer and
+//! manages their state (paper Fig. 1/2).
+
+use std::sync::{Arc, Mutex};
+
+use crate::agent::real::{RealAgent, RealAgentConfig};
+use crate::config::ResourceConfig;
+use crate::error::{Error, Result};
+use crate::ids::PilotId;
+use crate::saga::{make_adaptor_with, JobDescription, JobService, JobState, JobUrl};
+use crate::states::machine::StateMachine;
+use crate::states::PilotState;
+use crate::util;
+use crate::util::json::Value;
+
+use super::descriptions::PilotDescription;
+use super::pilot::Pilot;
+use super::session::Session;
+
+/// Launches and tracks pilots for one session.
+#[derive(Clone)]
+pub struct PilotManager {
+    session: Session,
+    pilots: Arc<Mutex<Vec<Pilot>>>,
+}
+
+impl PilotManager {
+    pub(crate) fn new(session: Session) -> Self {
+        PilotManager { session, pilots: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// Submit a pilot: resolve the resource config, submit the
+    /// placeholder job (Launcher), wait for it to become active, and
+    /// bootstrap the Agent.
+    pub fn submit(&self, pd: PilotDescription) -> Result<Pilot> {
+        if self.session.is_closed() {
+            return Err(Error::SessionClosed);
+        }
+        let mut cfg = ResourceConfig::load(&pd.resource)?;
+        for (k, v) in &pd.overrides {
+            cfg.apply_override(k, v)?;
+        }
+        if pd.cores == 0 || pd.cores > cfg.total_cores() {
+            return Err(Error::Config(format!(
+                "pilot wants {} cores; {} has {}",
+                pd.cores,
+                cfg.label,
+                cfg.total_cores()
+            )));
+        }
+
+        let id: PilotId = self.session.inner.pilot_ids.next();
+        let machine = Arc::new(Mutex::new(StateMachine::new(PilotState::New, util::now())));
+
+        // Launcher: materialize the SAGA job description and submit.
+        let advance = |m: &Arc<Mutex<StateMachine<PilotState>>>, s: PilotState| {
+            let _ = m.lock().unwrap().advance(s, util::now());
+        };
+        advance(&machine, PilotState::PmLaunchingPending);
+        advance(&machine, PilotState::PmLaunching);
+        let adaptor = make_adaptor_with(&cfg.resource_manager, cfg.calib.queue_wait_mean)
+            .ok_or_else(|| {
+                Error::Saga(format!("no adaptor for RM '{}'", cfg.resource_manager))
+            })?;
+        let url = JobUrl::for_resource(&cfg.resource_manager, &cfg.label);
+        let job_service = Arc::new(JobService::with_adaptor(url, adaptor));
+        let jd = JobDescription {
+            name: id.to_string(),
+            cores: pd.cores,
+            walltime: pd.runtime,
+            queue: pd.queue.clone(),
+            project: pd.project.clone(),
+        };
+        let job = job_service.submit(&jd)?;
+        advance(&machine, PilotState::PmLaunch);
+
+        // Wait for the RM to start the placeholder (P_ACTIVE is dictated
+        // by the RM, managed by the PilotManager).
+        let state = job_service.wait_running(job, 60.0)?;
+        if state != JobState::Running {
+            advance(&machine, PilotState::Failed);
+            return Err(Error::Saga(format!("pilot job entered {state:?}")));
+        }
+
+        // Bootstrap the Agent inside the "allocation".
+        let sandbox = self.session.sandbox().join(id.to_string());
+        let agent_cfg = RealAgentConfig::from_resource(&cfg, pd.cores, sandbox);
+        let agent =
+            RealAgent::bootstrap(agent_cfg, self.session.profiler(), self.session.payloads())?;
+        advance(&machine, PilotState::PActive);
+
+        // Record in the coordination store (what the UnitManager sees).
+        self.session.store().insert(
+            "pilots",
+            &id.to_string(),
+            Value::obj(vec![
+                ("resource", cfg.label.as_str().into()),
+                ("cores", pd.cores.into()),
+                ("state", "P_ACTIVE".into()),
+            ]),
+        );
+
+        let pilot = Pilot { id, cfg, cores: pd.cores, machine, agent, job, job_service };
+        self.pilots.lock().unwrap().push(pilot.clone());
+        Ok(pilot)
+    }
+
+    /// Pilots submitted through this manager.
+    pub fn pilots(&self) -> Vec<Pilot> {
+        self.pilots.lock().unwrap().clone()
+    }
+
+    /// Cancel all pilots.
+    pub fn cancel_all(&self) -> Result<()> {
+        for p in self.pilots() {
+            p.cancel()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_local_pilot() {
+        let s = Session::new("pm-test");
+        let pm = s.pilot_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        assert_eq!(pilot.state(), PilotState::PActive);
+        assert_eq!(pilot.cores(), 4);
+        assert_eq!(s.store().count("pilots"), 1);
+        pilot.drain().unwrap();
+        assert_eq!(pilot.state(), PilotState::Done);
+    }
+
+    #[test]
+    fn oversized_pilot_rejected() {
+        let s = Session::new("pm-big");
+        let pm = s.pilot_manager();
+        let r = pm.submit(PilotDescription::new("local.localhost", 10_000, 60.0));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_resource_rejected() {
+        let s = Session::new("pm-unknown");
+        let pm = s.pilot_manager();
+        assert!(pm.submit(PilotDescription::new("atlantis.hpc", 4, 60.0)).is_err());
+    }
+
+    #[test]
+    fn closed_session_rejects() {
+        let s = Session::new("pm-closed");
+        s.close();
+        let pm = s.pilot_manager();
+        assert!(matches!(
+            pm.submit(PilotDescription::new("local.localhost", 1, 60.0)),
+            Err(Error::SessionClosed)
+        ));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let s = Session::new("pm-override");
+        let pm = s.pilot_manager();
+        let pilot = pm
+            .submit(
+                PilotDescription::new("local.localhost", 4, 60.0)
+                    .with_override("agent.executers", "3"),
+            )
+            .unwrap();
+        assert_eq!(pilot.resource().agent.executers, 3);
+        pilot.drain().unwrap();
+    }
+}

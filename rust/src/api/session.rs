@@ -1,0 +1,142 @@
+//! Session: the root object owning the coordination store, the profiler
+//! and the sandbox; managers are created from it.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::db::Store;
+use crate::ids::IdGen;
+use crate::profiler::Profiler;
+use crate::runtime::{PayloadStore, Runtime};
+
+use super::pilot_manager::PilotManager;
+use super::unit_manager::UnitManager;
+
+/// Shared session internals.
+pub(crate) struct SessionInner {
+    pub name: String,
+    pub store: Store,
+    pub profiler: Arc<Profiler>,
+    pub sandbox: PathBuf,
+    pub pilot_ids: IdGen,
+    pub unit_ids: IdGen,
+    pub payloads: std::sync::Mutex<Option<PayloadStore>>,
+    pub closed: AtomicBool,
+}
+
+/// An RP session.
+#[derive(Clone)]
+pub struct Session {
+    pub(crate) inner: Arc<SessionInner>,
+}
+
+impl Session {
+    /// Create a session named `name` (sandbox under the system temp dir).
+    pub fn new(name: impl Into<String>) -> Session {
+        Self::with_options(name, true)
+    }
+
+    /// Create a session, optionally disabling the profiler (the paper's
+    /// overhead experiment, `benches/profiler_overhead.rs`).
+    pub fn with_options(name: impl Into<String>, profile: bool) -> Session {
+        let name = name.into();
+        let sandbox = std::env::temp_dir()
+            .join("rp_sessions")
+            .join(format!("{}-{}", name, std::process::id()));
+        Session {
+            inner: Arc::new(SessionInner {
+                name,
+                store: Store::new(),
+                profiler: Arc::new(Profiler::new(profile)),
+                sandbox,
+                pilot_ids: IdGen::new(),
+                unit_ids: IdGen::new(),
+                payloads: std::sync::Mutex::new(None),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn sandbox(&self) -> &PathBuf {
+        &self.inner.sandbox
+    }
+
+    pub fn profiler(&self) -> Arc<Profiler> {
+        self.inner.profiler.clone()
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.inner.store
+    }
+
+    /// Attach a PJRT runtime (AOT artifacts dir) so pilots can execute
+    /// `UnitPayload::Pjrt` units.  Idempotent.
+    pub fn load_artifacts(&self, dir: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        let mut guard = self.inner.payloads.lock().unwrap();
+        if guard.is_none() {
+            let rt = Runtime::load(dir)?;
+            *guard = Some(PayloadStore::new(rt));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn payloads(&self) -> Option<PayloadStore> {
+        self.inner.payloads.lock().unwrap().clone()
+    }
+
+    /// Create a PilotManager bound to this session.
+    pub fn pilot_manager(&self) -> PilotManager {
+        PilotManager::new(self.clone())
+    }
+
+    /// Create a UnitManager bound to this session.
+    pub fn unit_manager(&self) -> UnitManager {
+        UnitManager::new(self.clone())
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+
+    /// Close the session (idempotent).  Pilots already handed out keep
+    /// draining; this marks the session closed for new submissions.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+    }
+
+    /// Write the session profile as CSV next to the sandbox.
+    pub fn write_profile(&self) -> crate::Result<PathBuf> {
+        std::fs::create_dir_all(&self.inner.sandbox)?;
+        let path = self.inner.sandbox.join("session.prof.csv");
+        self.inner.profiler.snapshot().write_csv(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_basics() {
+        let s = Session::new("t");
+        assert_eq!(s.name(), "t");
+        assert!(!s.is_closed());
+        s.close();
+        assert!(s.is_closed());
+        s.close(); // idempotent
+    }
+
+    #[test]
+    fn profiler_toggle() {
+        let s = Session::with_options("noprof", false);
+        assert!(!s.profiler().enabled());
+        let s = Session::new("prof");
+        assert!(s.profiler().enabled());
+    }
+}

@@ -1,0 +1,62 @@
+//! Unit handle.
+
+use crate::agent::real::{SharedUnit, UnitOutcome};
+use crate::error::Result;
+use crate::ids::UnitId;
+use crate::states::UnitState;
+
+/// The application's view of a submitted compute unit.
+#[derive(Clone)]
+pub struct Unit {
+    pub(crate) shared: SharedUnit,
+}
+
+impl Unit {
+    pub fn id(&self) -> UnitId {
+        self.shared.0.lock().unwrap().id
+    }
+
+    pub fn name(&self) -> String {
+        self.shared.0.lock().unwrap().descr.name.clone()
+    }
+
+    pub fn state(&self) -> UnitState {
+        self.shared.0.lock().unwrap().machine.state()
+    }
+
+    /// Execution outcome, if finished.
+    pub fn outcome(&self) -> Option<UnitOutcome> {
+        self.shared.0.lock().unwrap().outcome.clone()
+    }
+
+    /// Error message, if failed.
+    pub fn error(&self) -> Option<String> {
+        self.shared.0.lock().unwrap().error.clone()
+    }
+
+    /// Request cancellation (effective while the unit is queued).
+    pub fn cancel(&self) {
+        self.shared.0.lock().unwrap().cancel_requested = true;
+    }
+
+    /// Time the unit entered a state, if it did (profiled timeline).
+    pub fn entered(&self, state: UnitState) -> Option<f64> {
+        self.shared.0.lock().unwrap().machine.entered(state)
+    }
+
+    /// Block until the unit reaches a final state.
+    pub fn wait(&self, timeout: f64) -> Result<UnitState> {
+        let (m, cv) = &*self.shared;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        let mut rec = m.lock().unwrap();
+        while !rec.machine.is_final() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(crate::Error::Timeout(timeout, format!("unit {}", rec.id)));
+            }
+            let (r, _) = cv.wait_timeout(rec, deadline - now).unwrap();
+            rec = r;
+        }
+        Ok(rec.machine.state())
+    }
+}

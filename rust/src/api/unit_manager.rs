@@ -1,0 +1,263 @@
+//! UnitManager: late-binds units onto active pilots through the
+//! coordination store (paper Fig. 1/3).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::agent::real::{advance, new_unit};
+use crate::db::LatencyModel;
+use crate::error::{Error, Result};
+use crate::ids::UnitId;
+use crate::states::UnitState as S;
+use crate::util;
+
+use super::descriptions::UnitDescription;
+use super::pilot::Pilot;
+use super::session::Session;
+use super::unit::Unit;
+
+/// Callback invoked on every observed unit state change.
+pub type StateCallback = Box<dyn Fn(&Unit, crate::states::UnitState) + Send>;
+
+/// Schedules units over the pilots added to it (round-robin late
+/// binding; RP ships exchangeable UnitManager schedulers — round-robin
+/// is its default for homogeneous pilots).
+#[derive(Clone)]
+pub struct UnitManager {
+    session: Session,
+    pilots: Arc<Mutex<Vec<Pilot>>>,
+    units: Arc<Mutex<Vec<Unit>>>,
+    next_pilot: Arc<Mutex<usize>>,
+    /// Communication model applied when feeding units (None = local).
+    latency: Arc<Mutex<Option<LatencyModel>>>,
+    callbacks: Arc<Mutex<Vec<StateCallback>>>,
+    watcher_running: Arc<Mutex<bool>>,
+}
+
+impl UnitManager {
+    pub(crate) fn new(session: Session) -> Self {
+        UnitManager {
+            session,
+            pilots: Arc::new(Mutex::new(Vec::new())),
+            units: Arc::new(Mutex::new(Vec::new())),
+            next_pilot: Arc::new(Mutex::new(0)),
+            latency: Arc::new(Mutex::new(None)),
+            callbacks: Arc::new(Mutex::new(Vec::new())),
+            watcher_running: Arc::new(Mutex::new(false)),
+        }
+    }
+
+    /// Register a state-change callback (the Pilot API's
+    /// `register_callback`).  As in RP, the client side observes state by
+    /// polling the coordination layer, so transitions faster than the
+    /// poll interval may be coalesced — final states are always
+    /// delivered.
+    pub fn register_callback(&self, cb: StateCallback) {
+        self.callbacks.lock().unwrap().push(cb);
+        let mut running = self.watcher_running.lock().unwrap();
+        if !*running {
+            *running = true;
+            let me = self.clone();
+            std::thread::Builder::new()
+                .name("umgr-watcher".into())
+                .spawn(move || me.watch_loop())
+                .expect("spawn watcher");
+        }
+    }
+
+    fn watch_loop(&self) {
+        let mut last: HashMap<crate::ids::UnitId, crate::states::UnitState> = HashMap::new();
+        loop {
+            if self.session.is_closed() {
+                return;
+            }
+            let units = self.units();
+            let mut all_final = !units.is_empty();
+            for u in &units {
+                let s = u.state();
+                if last.get(&u.id()) != Some(&s) {
+                    last.insert(u.id(), s);
+                    for cb in self.callbacks.lock().unwrap().iter() {
+                        cb(u, s);
+                    }
+                }
+                all_final &= s.is_final();
+            }
+            // keep watching (new submissions may arrive) unless closed
+            let _ = all_final;
+            crate::util::sleep(0.005);
+        }
+    }
+
+    /// Make a pilot available for unit scheduling.
+    pub fn add_pilot(&self, pilot: &Pilot) {
+        self.pilots.lock().unwrap().push(pilot.clone());
+    }
+
+    /// Inject a UM->Agent communication latency model (used by the
+    /// integrated experiments; local sessions default to none).
+    pub fn set_latency(&self, model: LatencyModel) {
+        *self.latency.lock().unwrap() = Some(model);
+    }
+
+    /// Submit unit descriptions; returns handles.  Units transit
+    /// NEW -> UMGR_SCHEDULING -> (store) -> AGENT_* on the bound pilot.
+    pub fn submit(&self, descrs: Vec<UnitDescription>) -> Vec<Unit> {
+        let profiler = self.session.profiler();
+        let pilots = self.pilots.lock().unwrap().clone();
+        let mut created = Vec::with_capacity(descrs.len());
+        let mut per_pilot: Vec<Vec<_>> = vec![Vec::new(); pilots.len().max(1)];
+        {
+            let mut rr = self.next_pilot.lock().unwrap();
+            for d in descrs {
+                let id: UnitId = self.session.inner.unit_ids.next();
+                let shared = new_unit(id, d);
+                let unit = Unit { shared: shared.clone() };
+                // UM-side states
+                let _ = advance(&shared, S::UmSchedulingPending, &profiler);
+                if pilots.is_empty() {
+                    // no pilot yet: the unit fails immediately (the
+                    // application can resubmit) — RP would keep it
+                    // pending; failing fast keeps the API honest here.
+                    let _ = advance(&shared, S::Failed, &profiler);
+                    shared.0.lock().unwrap().error = Some("no pilot added".into());
+                } else {
+                    let _ = advance(&shared, S::UmScheduling, &profiler);
+                    let k = *rr % pilots.len();
+                    *rr += 1;
+                    self.session.store().insert(
+                        "units",
+                        &id.to_string(),
+                        shared.0.lock().unwrap().descr.to_json(),
+                    );
+                    let _ = advance(&shared, S::AStagingInPending, &profiler);
+                    per_pilot[k].push(shared.clone());
+                }
+                created.push(unit);
+            }
+        }
+        // feed each pilot's agent (optionally paying the modeled
+        // communication latency, bulked as the store would)
+        let latency = *self.latency.lock().unwrap();
+        for (k, batch) in per_pilot.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            if let Some(model) = latency {
+                util::sleep(model.transfer_time(batch.len() as u64));
+            }
+            pilots[k].agent().submit(batch);
+        }
+        self.units.lock().unwrap().extend(created.iter().cloned());
+        created
+    }
+
+    /// All units submitted through this manager.
+    pub fn units(&self) -> Vec<Unit> {
+        self.units.lock().unwrap().clone()
+    }
+
+    /// Wait for every submitted unit to reach a final state.
+    pub fn wait_all(&self, timeout: f64) -> Result<()> {
+        let deadline = util::now() + timeout;
+        for u in self.units() {
+            let remaining = deadline - util::now();
+            if remaining <= 0.0 {
+                return Err(Error::Timeout(timeout, "units".into()));
+            }
+            u.wait(remaining)?;
+        }
+        Ok(())
+    }
+
+    /// Count of units currently in a final state.
+    pub fn completed(&self) -> usize {
+        self.units
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|u| u.state().is_final())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::descriptions::PilotDescription;
+    use crate::states::UnitState;
+
+    #[test]
+    fn roundtrip_sleep_units() {
+        let s = Session::new("um-test");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        let units = um.submit((0..8).map(|_| UnitDescription::sleep(0.01)).collect());
+        um.wait_all(20.0).unwrap();
+        assert_eq!(um.completed(), 8);
+        for u in units {
+            assert_eq!(u.state(), UnitState::Done);
+            assert!(u.entered(UnitState::AExecuting).is_some());
+        }
+        assert_eq!(s.store().count("units"), 8);
+        pilot.drain().unwrap();
+    }
+
+    #[test]
+    fn callbacks_fire_on_state_changes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let s = Session::new("um-callbacks");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+
+        let dones = Arc::new(AtomicUsize::new(0));
+        let events = Arc::new(AtomicUsize::new(0));
+        let (d2, e2) = (dones.clone(), events.clone());
+        um.register_callback(Box::new(move |_, state| {
+            e2.fetch_add(1, Ordering::SeqCst);
+            if state == UnitState::Done {
+                d2.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+        let _units = um.submit((0..4).map(|_| UnitDescription::sleep(0.05)).collect());
+        um.wait_all(20.0).unwrap();
+        // polling coalesces fast transitions, but every final state lands
+        let t0 = crate::util::now();
+        while dones.load(Ordering::SeqCst) < 4 && crate::util::now() - t0 < 5.0 {
+            crate::util::sleep(0.01);
+        }
+        assert_eq!(dones.load(Ordering::SeqCst), 4);
+        assert!(events.load(Ordering::SeqCst) >= 4);
+        pilot.drain().unwrap();
+        s.close();
+    }
+
+    #[test]
+    fn no_pilot_fails_fast() {
+        let s = Session::new("um-nopilot");
+        let um = s.unit_manager();
+        let units = um.submit(vec![UnitDescription::sleep(0.01)]);
+        assert_eq!(units[0].state(), UnitState::Failed);
+        assert!(units[0].error().unwrap().contains("no pilot"));
+    }
+
+    #[test]
+    fn round_robin_across_pilots() {
+        let s = Session::new("um-rr");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let p1 = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        let p2 = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&p1);
+        um.add_pilot(&p2);
+        let _ = um.submit((0..6).map(|_| UnitDescription::sleep(0.01)).collect());
+        um.wait_all(20.0).unwrap();
+        assert_eq!(um.completed(), 6);
+        p1.drain().unwrap();
+        p2.drain().unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared machinery for the figure-regeneration benches
+//! (`rust/benches/*.rs`, one per paper table/figure — DESIGN.md §4).
+//!
+//! Each bench prints a paper-vs-measured table and writes the figure's
+//! raw series as CSV under `bench_out/`.
+
+pub mod report;
+
+pub use report::{csv_path, write_csv, Check, Report};

@@ -1,0 +1,137 @@
+//! Paper-vs-measured reporting + CSV output.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+/// One paper-vs-measured row.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub label: String,
+    pub paper: String,
+    pub measured: String,
+    /// Within the acceptance band?
+    pub ok: bool,
+}
+
+impl Check {
+    /// Numeric check: `measured` within `rel_tol` of `paper_value` (or
+    /// inside an explicit band).
+    pub fn rel(label: impl Into<String>, paper_value: f64, measured: f64, rel_tol: f64) -> Check {
+        Check {
+            label: label.into(),
+            paper: format!("{paper_value:.1}"),
+            measured: format!("{measured:.1}"),
+            ok: (measured - paper_value).abs() <= rel_tol * paper_value.abs().max(1e-9),
+        }
+    }
+
+    /// Band check: measured in [lo, hi].
+    pub fn band(label: impl Into<String>, band: (f64, f64), measured: f64) -> Check {
+        Check {
+            label: label.into(),
+            paper: format!("[{:.0}..{:.0}]", band.0, band.1),
+            measured: format!("{measured:.1}"),
+            ok: measured >= band.0 && measured <= band.1,
+        }
+    }
+
+    /// Qualitative check (ordering, shape).
+    pub fn shape(label: impl Into<String>, expectation: impl Into<String>, ok: bool) -> Check {
+        Check {
+            label: label.into(),
+            paper: expectation.into(),
+            measured: if ok { "holds".into() } else { "VIOLATED".into() },
+            ok,
+        }
+    }
+}
+
+/// A figure/table report accumulating checks.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub checks: Vec<Check>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Report {
+        Report { title: title.into(), checks: vec![] }
+    }
+
+    pub fn add(&mut self, check: Check) {
+        self.checks.push(check);
+    }
+
+    pub fn all_ok(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    /// Print the table; returns process exit code (0 = all within band).
+    pub fn print(&self) -> i32 {
+        println!("\n=== {} ===", self.title);
+        let w1 = self.checks.iter().map(|c| c.label.len()).max().unwrap_or(10).max(8);
+        let w2 = self.checks.iter().map(|c| c.paper.len()).max().unwrap_or(10).max(6);
+        println!("{:<w1$}  {:>w2$}  {:>12}  status", "series", "paper", "measured");
+        for c in &self.checks {
+            println!(
+                "{:<w1$}  {:>w2$}  {:>12}  {}",
+                c.label,
+                c.paper,
+                c.measured,
+                if c.ok { "ok" } else { "OUT-OF-BAND" }
+            );
+        }
+        let ok = self.checks.iter().filter(|c| c.ok).count();
+        println!("--- {}/{} within band", ok, self.checks.len());
+        i32::from(!self.all_ok())
+    }
+}
+
+/// `bench_out/<name>.csv` (creating the directory).
+pub fn csv_path(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("{name}.csv"))
+}
+
+/// Write rows as CSV.
+pub fn write_csv(name: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<PathBuf> {
+    let path = csv_path(name);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checks_evaluate() {
+        assert!(Check::rel("x", 100.0, 105.0, 0.1).ok);
+        assert!(!Check::rel("x", 100.0, 120.0, 0.1).ok);
+        assert!(Check::band("x", (10.0, 20.0), 15.0).ok);
+        assert!(!Check::band("x", (10.0, 20.0), 25.0).ok);
+        assert!(Check::shape("x", "a<b", true).ok);
+    }
+
+    #[test]
+    fn report_prints_and_scores() {
+        let mut r = Report::new("test");
+        r.add(Check::rel("a", 1.0, 1.0, 0.1));
+        assert_eq!(r.print(), 0);
+        r.add(Check::rel("b", 1.0, 2.0, 0.1));
+        assert_eq!(r.print(), 1);
+        assert!(!r.all_ok());
+    }
+
+    #[test]
+    fn csv_written() {
+        let p = write_csv("unit_test", "a,b", &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,225 @@
+//! Command-line interface (hand-rolled; no `clap` in the offline vendor
+//! set).  `rp <command> [--flag value ...]`.
+
+mod args;
+
+pub use args::Args;
+
+use crate::api::{PilotDescription, Session, UnitDescription};
+use crate::config::{builtin_labels, ResourceConfig};
+use crate::error::Result;
+use crate::profiler::Analysis;
+use crate::sim::microbench::{Component, MicroBench};
+use crate::sim::{AgentSim, AgentSimConfig};
+use crate::workload::{BarrierMode, WorkloadSpec};
+
+pub const USAGE: &str = "\
+rp — a Rust pilot system for many-task workloads (RADICAL-Pilot reproduction)
+
+USAGE:
+    rp <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run        execute a workload on a real local pilot
+                 --cores N (4) --units N (16) --duration S (0.1)
+                 --executers N  --artifact NAME (run PJRT payloads)
+    sim        simulated agent-level experiment on a paper testbed
+                 --resource LABEL (stampede) --cores N (1024)
+                 --generations N (3) --duration S (64)
+                 --barrier agent|application|generation
+    micro      component micro-benchmark (paper §IV-B)
+                 --component scheduler|stager_in|stager_out|executer
+                 --resource LABEL --instances N (1) --nodes N (1)
+    resources  list built-in resource configurations
+    help       show this help
+
+EXAMPLES:
+    rp run --cores 8 --units 64 --duration 0.05
+    rp sim --resource bluewaters --cores 2048 --duration 64
+    rp micro --component executer --resource stampede --instances 4 --nodes 2
+";
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn main_with(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("rp: error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("micro") => cmd_micro(&args),
+        Some("resources") => cmd_resources(),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(crate::Error::other(format!(
+            "unknown command '{other}' (try `rp help`)"
+        ))),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cores = args.get_usize("cores", 4)?;
+    let n_units = args.get_usize("units", 16)?;
+    let duration = args.get_f64("duration", 0.1)?;
+    let executers = args.get_usize("executers", 2)?;
+    let artifact = args.get("artifact");
+
+    let session = Session::new("cli-run");
+    if artifact.is_some() {
+        session.load_artifacts("artifacts")?;
+    }
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+    let pilot = pmgr.submit(
+        PilotDescription::new("local.localhost", cores, 3600.0)
+            .with_override("agent.executers", executers.to_string()),
+    )?;
+    umgr.add_pilot(&pilot);
+
+    let descrs: Vec<UnitDescription> = (0..n_units)
+        .map(|i| match artifact {
+            Some(a) => UnitDescription::pjrt(a, i as u64).name(format!("task-{i:04}")),
+            None => UnitDescription::sleep(duration).name(format!("task-{i:04}")),
+        })
+        .collect();
+    let t0 = crate::util::now();
+    let units = umgr.submit(descrs);
+    umgr.wait_all(3600.0)?;
+    let wall = crate::util::now() - t0;
+
+    let done = units.iter().filter(|u| u.state() == crate::states::UnitState::Done).count();
+    let profile = session.profiler().snapshot();
+    let analysis = Analysis::new(&profile);
+    println!("units: {done}/{n_units} done");
+    println!("wall: {wall:.3}s  ttc_a: {:.3}s", analysis.ttc_a());
+    println!(
+        "peak concurrency: {}  utilization: {:.1}%",
+        analysis.peak_concurrency(),
+        100.0 * analysis.utilization(cores, 1)
+    );
+    pilot.drain()?;
+    session.close();
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let resource = args.get("resource").unwrap_or("stampede");
+    let cores = args.get_usize("cores", 1024)?;
+    let generations = args.get_usize("generations", 3)?;
+    let duration = args.get_f64("duration", 64.0)?;
+    let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
+        .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
+
+    let cfg = ResourceConfig::load(resource)?;
+    let wl = WorkloadSpec::generations(cores, generations, duration).build();
+    let mut sim_cfg = AgentSimConfig::paper_default(cores);
+    sim_cfg.barrier = barrier;
+    let r = AgentSim::new(&cfg, sim_cfg, &wl).run();
+    println!("resource: {}  pilot: {cores} cores", cfg.label);
+    println!(
+        "workload: {} units x {duration}s ({generations} generations, {} barrier)",
+        wl.len(),
+        barrier.name()
+    );
+    println!("optimal ttc: {:.1}s", wl.optimal_ttc(cores));
+    println!("ttc_a: {:.1}s", r.ttc_a);
+    println!("core utilization: {:.1}%", 100.0 * r.utilization);
+    println!("peak concurrency: {}", r.peak_concurrency);
+    println!(
+        "sim: {} events in {:.3}s wall ({:.0} ev/s)",
+        r.events,
+        r.wall_s,
+        r.events as f64 / r.wall_s.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_micro(args: &Args) -> Result<()> {
+    let component = match args.get("component").unwrap_or("scheduler") {
+        "scheduler" => Component::Scheduler,
+        "stager_in" => Component::StagerIn,
+        "stager_out" => Component::StagerOut,
+        "executer" | "executor" => Component::Executer,
+        other => {
+            return Err(crate::Error::other(format!("unknown component '{other}'")))
+        }
+    };
+    let resource = args.get("resource").unwrap_or("stampede");
+    let instances = args.get_usize("instances", 1)?;
+    let nodes = args.get_usize("nodes", 1)?;
+    let cfg = ResourceConfig::load(resource)?;
+    let result = MicroBench::new(component).instances(instances, nodes).run(&cfg);
+    let rate = result.steady_rate();
+    println!(
+        "{} on {} ({instances} instance(s), {nodes} node(s)): {} units/s",
+        component.name(),
+        cfg.label,
+        rate.pm()
+    );
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    for label in builtin_labels() {
+        let c = ResourceConfig::load(&label)?;
+        println!(
+            "{:20} {:>3} cores/node x {:>6} nodes  rm={:12} {}",
+            c.label, c.cores_per_node, c.nodes, c.resource_manager, c.description
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(args: &[&str]) -> i32 {
+        main_with(args.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn help_and_resources() {
+        assert_eq!(run(&["help"]), 0);
+        assert_eq!(run(&[]), 0);
+        assert_eq!(run(&["resources"]), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(&["frobnicate"]), 1);
+    }
+
+    #[test]
+    fn micro_runs() {
+        assert_eq!(run(&["micro", "--component", "scheduler", "--resource", "comet"]), 0);
+        assert_eq!(run(&["micro", "--component", "bogus"]), 1);
+    }
+
+    #[test]
+    fn sim_runs_small() {
+        assert_eq!(
+            run(&["sim", "--cores", "64", "--generations", "2", "--duration", "10"]),
+            0
+        );
+        assert_eq!(run(&["sim", "--barrier", "bogus"]), 1);
+    }
+
+    #[test]
+    fn run_real_small() {
+        assert_eq!(
+            run(&["run", "--cores", "2", "--units", "4", "--duration", "0.01"]),
+            0
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Built-in resource configurations, embedded at compile time from
+//! `configs/*.json` (the same files users can copy and modify).
+
+use once_cell::sync::Lazy;
+
+use super::ResourceConfig;
+use crate::util::json::Value;
+
+const STAMPEDE: &str = include_str!("../../../configs/stampede.json");
+const COMET: &str = include_str!("../../../configs/comet.json");
+const BLUEWATERS: &str = include_str!("../../../configs/bluewaters.json");
+const LOCALHOST: &str = include_str!("../../../configs/localhost.json");
+
+static BUILTINS: Lazy<Vec<ResourceConfig>> = Lazy::new(|| {
+    [STAMPEDE, COMET, BLUEWATERS, LOCALHOST]
+        .iter()
+        .map(|text| {
+            ResourceConfig::from_json(&Value::parse(text).expect("builtin config parses"))
+                .expect("builtin config valid")
+        })
+        .collect()
+});
+
+/// Look up a built-in resource config by label (e.g. `xsede.stampede`).
+/// Short aliases (`stampede`) are accepted too.
+pub fn builtin(label: &str) -> Option<ResourceConfig> {
+    BUILTINS
+        .iter()
+        .find(|c| c.label == label || c.label.split('.').next_back() == Some(label))
+        .cloned()
+}
+
+/// Labels of all built-in configs.
+pub fn builtin_labels() -> Vec<String> {
+    BUILTINS.iter().map(|c| c.label.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtins_parse() {
+        assert_eq!(builtin_labels().len(), 4);
+    }
+
+    #[test]
+    fn stampede_matches_paper() {
+        let c = builtin("xsede.stampede").unwrap();
+        assert_eq!(c.cores_per_node, 16);
+        assert_eq!(c.calib.sched_rate_mean, 158.0);
+        assert_eq!(c.calib.exec_rate_mean, 171.0);
+        assert_eq!(c.launch_methods.task, "SSH");
+    }
+
+    #[test]
+    fn bluewaters_router_pairing() {
+        let c = builtin("bluewaters").unwrap();
+        assert_eq!(c.nodes_per_router, 2);
+        assert_eq!(c.cores_per_node, 32);
+        assert!(c.calib.router_rate_cap > 0.0);
+        assert_eq!(c.calib.exec_rate_mean, 11.0);
+    }
+
+    #[test]
+    fn comet_rates() {
+        let c = builtin("comet").unwrap();
+        assert_eq!(c.calib.sched_rate_mean, 211.0);
+        assert_eq!(c.calib.stage_out_rate_mean, 994.0);
+    }
+
+    #[test]
+    fn short_alias() {
+        assert!(builtin("localhost").is_some());
+        assert!(builtin("nope").is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! Resource configuration system (paper §III-B).
+//!
+//! RP ships configuration files for XSEDE / NCSA / NERSC / ORNL machines;
+//! users can add files or override parameters at runtime for a pilot or a
+//! whole session.  We ship configs for the paper's three testbeds plus
+//! `local.localhost`, embed them in the binary ([`builtin`]), and support
+//! loading user files and applying key overrides.
+
+mod builtin;
+mod resource;
+
+pub use builtin::{builtin, builtin_labels};
+pub use resource::{AgentLayout, Calibration, LaunchMethods, ResourceConfig};

@@ -1,0 +1,351 @@
+//! Resource configuration schema + JSON (de)serialization.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Launch methods configured per resource: one for MPI tasks, one for
+/// serial tasks (paper §III-B).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaunchMethods {
+    pub mpi: String,
+    pub task: String,
+}
+
+/// Number and kind of Agent components to instantiate (paper Fig. 3:
+/// multiple Stager and Executer instances can coexist in one Agent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentLayout {
+    pub schedulers: usize,
+    pub executers: usize,
+    pub stagers_in: usize,
+    pub stagers_out: usize,
+    /// "popen" | "shell" spawning mechanism.
+    pub spawner: String,
+    /// "continuous" | "torus" scheduling algorithm.
+    pub scheduler_algorithm: String,
+}
+
+impl Default for AgentLayout {
+    fn default() -> Self {
+        AgentLayout {
+            schedulers: 1,
+            executers: 1,
+            stagers_in: 1,
+            stagers_out: 1,
+            spawner: "popen".into(),
+            scheduler_algorithm: "continuous".into(),
+        }
+    }
+}
+
+/// Calibrated performance model of a resource, in the paper's units
+/// (component throughputs in units/second).  Used by the DES substrate;
+/// ignored in real execution mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// Agent Scheduler: core (de)allocation rate, 1 instance (Fig. 4).
+    pub sched_rate_mean: f64,
+    pub sched_rate_std: f64,
+    /// Linear-list walk cost per core slot scanned (s) — the Fig. 8
+    /// intra-generation scheduling-time growth.
+    pub sched_scan_cost: f64,
+    /// Agent output Stager rate, 1 instance (Fig. 5 top).
+    pub stage_out_rate_mean: f64,
+    pub stage_out_rate_std: f64,
+    /// Agent input Stager rate (~1/3 of output, larger jitter).
+    pub stage_in_rate_mean: f64,
+    pub stage_in_rate_std: f64,
+    /// Agent Executer spawn rate, 1 instance (Fig. 6 top).
+    pub exec_rate_mean: f64,
+    pub exec_rate_std: f64,
+    /// Executer scaling model: aggregate rate = rinf * n / (n + k)
+    /// over total instance count n (Fig. 6 bottom: placement-independent).
+    pub exec_scale_k: f64,
+    pub exec_scale_rinf: f64,
+    pub exec_node_independent: bool,
+    /// Relative jitter added per extra instance on the same node
+    /// ("increased stress on the node OS").
+    pub exec_jitter_growth: f64,
+    /// Agent-level effective launch rate (units/s) with the configured
+    /// task launch method — lower than the micro-benchmark rate because
+    /// components compete for shared resources (Fig. 7: ~64/s on
+    /// Stampede with SSH).
+    pub agent_launch_rate: f64,
+    /// Aggregate shared-FS metadata-operation cap (Lustre, ~1000/s per
+    /// client; cluster-wide cap).
+    pub fs_rate_cap: f64,
+    /// Per-network-router throughput cap; with `nodes_per_router` this
+    /// produces Blue Waters' pairwise stager scaling (Fig. 5 bottom).
+    pub router_rate_cap: f64,
+    /// Stager multi-instance saturation constant.
+    pub stage_scale_k: f64,
+    /// Spawn-cost multiplier during the first workload generation
+    /// (contention; paper Fig. 8 discussion).
+    pub spawn_contention_first_gen: f64,
+    /// Agent bootstrap time after the pilot becomes active.
+    pub bootstrap_time: f64,
+    /// Batch-queue wait model (exponential mean; 0 disables).
+    pub queue_wait_mean: f64,
+    /// Coordination-store cost per unit transferred (UM <-> Agent).
+    pub db_unit_cost: f64,
+    /// Agent polling interval against the store.
+    pub db_poll_interval: f64,
+    /// Max units moved per poll.
+    pub db_bulk_size: u64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            sched_rate_mean: 158.0,
+            sched_rate_std: 15.0,
+            sched_scan_cost: 1.2e-6,
+            stage_out_rate_mean: 771.0,
+            stage_out_rate_std: 128.0,
+            stage_in_rate_mean: 257.0,
+            stage_in_rate_std: 128.0,
+            exec_rate_mean: 171.0,
+            exec_rate_std: 20.0,
+            exec_scale_k: 12.0,
+            exec_scale_rinf: 2223.0,
+            exec_node_independent: true,
+            exec_jitter_growth: 0.04,
+            agent_launch_rate: 64.0,
+            fs_rate_cap: 6000.0,
+            router_rate_cap: 0.0,
+            stage_scale_k: 6.0,
+            spawn_contention_first_gen: 1.35,
+            bootstrap_time: 30.0,
+            queue_wait_mean: 0.0,
+            db_unit_cost: 0.012,
+            db_poll_interval: 2.0,
+            db_bulk_size: 128,
+        }
+    }
+}
+
+/// Full description of a target resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceConfig {
+    pub label: String,
+    pub description: String,
+    pub cores_per_node: usize,
+    pub nodes: usize,
+    /// Nodes sharing one network router (Blue Waters Gemini: 2); 0 = n/a.
+    pub nodes_per_router: usize,
+    /// Resource manager kind ("slurm", "torque", "pbspro", "sge", "lsf",
+    /// "loadleveler", "ccm", "fork").
+    pub resource_manager: String,
+    pub launch_methods: LaunchMethods,
+    pub agent: AgentLayout,
+    pub calib: Calibration,
+}
+
+impl ResourceConfig {
+    /// Parse from a JSON document.
+    pub fn from_json(v: &Value) -> Result<ResourceConfig> {
+        let label = v
+            .get("label")
+            .as_str()
+            .ok_or_else(|| Error::Config("resource config missing 'label'".into()))?
+            .to_string();
+        let cores_per_node = v.get_u64("cores_per_node", 0) as usize;
+        if cores_per_node == 0 {
+            return Err(Error::Config(format!("{label}: cores_per_node missing/zero")));
+        }
+        let lm = v.get("launch_methods");
+        let ag = v.get("agent");
+        let c = v.get("calib");
+        let d = Calibration::default();
+        Ok(ResourceConfig {
+            label,
+            description: v.get_str("description", "").to_string(),
+            cores_per_node,
+            nodes: v.get_u64("nodes", 1) as usize,
+            nodes_per_router: v.get_u64("nodes_per_router", 0) as usize,
+            resource_manager: v.get_str("resource_manager", "fork").to_string(),
+            launch_methods: LaunchMethods {
+                mpi: lm.get_str("mpi", "MPIRUN").to_string(),
+                task: lm.get_str("task", "FORK").to_string(),
+            },
+            agent: AgentLayout {
+                schedulers: ag.get_u64("schedulers", 1) as usize,
+                executers: ag.get_u64("executers", 1) as usize,
+                stagers_in: ag.get_u64("stagers_in", 1) as usize,
+                stagers_out: ag.get_u64("stagers_out", 1) as usize,
+                spawner: ag.get_str("spawner", "popen").to_string(),
+                scheduler_algorithm: ag
+                    .get_str("scheduler_algorithm", "continuous")
+                    .to_string(),
+            },
+            calib: Calibration {
+                sched_rate_mean: c.get_f64("sched_rate_mean", d.sched_rate_mean),
+                sched_rate_std: c.get_f64("sched_rate_std", d.sched_rate_std),
+                sched_scan_cost: c.get_f64("sched_scan_cost", d.sched_scan_cost),
+                stage_out_rate_mean: c.get_f64("stage_out_rate_mean", d.stage_out_rate_mean),
+                stage_out_rate_std: c.get_f64("stage_out_rate_std", d.stage_out_rate_std),
+                stage_in_rate_mean: c.get_f64("stage_in_rate_mean", d.stage_in_rate_mean),
+                stage_in_rate_std: c.get_f64("stage_in_rate_std", d.stage_in_rate_std),
+                exec_rate_mean: c.get_f64("exec_rate_mean", d.exec_rate_mean),
+                exec_rate_std: c.get_f64("exec_rate_std", d.exec_rate_std),
+                exec_scale_k: c.get_f64("exec_scale_k", d.exec_scale_k),
+                exec_scale_rinf: c.get_f64("exec_scale_rinf", d.exec_scale_rinf),
+                exec_node_independent: c.get_bool("exec_node_independent", true),
+                exec_jitter_growth: c.get_f64("exec_jitter_growth", d.exec_jitter_growth),
+                agent_launch_rate: c.get_f64("agent_launch_rate", d.agent_launch_rate),
+                fs_rate_cap: c.get_f64("fs_rate_cap", d.fs_rate_cap),
+                router_rate_cap: c.get_f64("router_rate_cap", d.router_rate_cap),
+                stage_scale_k: c.get_f64("stage_scale_k", d.stage_scale_k),
+                spawn_contention_first_gen: c
+                    .get_f64("spawn_contention_first_gen", d.spawn_contention_first_gen),
+                bootstrap_time: c.get_f64("bootstrap_time", d.bootstrap_time),
+                queue_wait_mean: c.get_f64("queue_wait_mean", d.queue_wait_mean),
+                db_unit_cost: c.get_f64("db_unit_cost", d.db_unit_cost),
+                db_poll_interval: c.get_f64("db_poll_interval", d.db_poll_interval),
+                db_bulk_size: c.get_u64("db_bulk_size", d.db_bulk_size),
+            },
+        })
+    }
+
+    /// Parse a config file.
+    pub fn from_file(path: &Path) -> Result<ResourceConfig> {
+        Self::from_json(&Value::parse_file(path)?)
+    }
+
+    /// Look up a built-in config by label, or treat `label` as a path.
+    pub fn load(label: &str) -> Result<ResourceConfig> {
+        if let Some(cfg) = super::builtin(label) {
+            return Ok(cfg);
+        }
+        let p = Path::new(label);
+        if p.exists() {
+            return Self::from_file(p);
+        }
+        Err(Error::Unknown { kind: "resource", id: label.to_string() })
+    }
+
+    /// Total cores of the machine.
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_node * self.nodes
+    }
+
+    /// Nodes needed to host `cores`.
+    pub fn nodes_for(&self, cores: usize) -> usize {
+        cores.div_ceil(self.cores_per_node)
+    }
+
+    /// Apply a runtime override (`key=value`, dotted keys into calib /
+    /// agent).  Mirrors RP's "alter existing configuration parameters at
+    /// runtime" capability.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        let num = || -> Result<f64> {
+            value
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("override {key}={value}: not a number")))
+        };
+        match key {
+            "cores_per_node" => self.cores_per_node = num()? as usize,
+            "nodes" => self.nodes = num()? as usize,
+            "nodes_per_router" => self.nodes_per_router = num()? as usize,
+            "resource_manager" => self.resource_manager = value.to_string(),
+            "launch_methods.task" => self.launch_methods.task = value.to_string(),
+            "launch_methods.mpi" => self.launch_methods.mpi = value.to_string(),
+            "agent.schedulers" => self.agent.schedulers = num()? as usize,
+            "agent.executers" => self.agent.executers = num()? as usize,
+            "agent.stagers_in" => self.agent.stagers_in = num()? as usize,
+            "agent.stagers_out" => self.agent.stagers_out = num()? as usize,
+            "agent.spawner" => self.agent.spawner = value.to_string(),
+            "agent.scheduler_algorithm" => {
+                self.agent.scheduler_algorithm = value.to_string()
+            }
+            k if k.starts_with("calib.") => {
+                let v = num()?;
+                let c = &mut self.calib;
+                match &k[6..] {
+                    "sched_rate_mean" => c.sched_rate_mean = v,
+                    "sched_rate_std" => c.sched_rate_std = v,
+                    "sched_scan_cost" => c.sched_scan_cost = v,
+                    "stage_out_rate_mean" => c.stage_out_rate_mean = v,
+                    "stage_out_rate_std" => c.stage_out_rate_std = v,
+                    "stage_in_rate_mean" => c.stage_in_rate_mean = v,
+                    "stage_in_rate_std" => c.stage_in_rate_std = v,
+                    "exec_rate_mean" => c.exec_rate_mean = v,
+                    "exec_rate_std" => c.exec_rate_std = v,
+                    "exec_scale_k" => c.exec_scale_k = v,
+                    "exec_scale_rinf" => c.exec_scale_rinf = v,
+                    "exec_jitter_growth" => c.exec_jitter_growth = v,
+                    "agent_launch_rate" => c.agent_launch_rate = v,
+                    "fs_rate_cap" => c.fs_rate_cap = v,
+                    "router_rate_cap" => c.router_rate_cap = v,
+                    "stage_scale_k" => c.stage_scale_k = v,
+                    "spawn_contention_first_gen" => c.spawn_contention_first_gen = v,
+                    "bootstrap_time" => c.bootstrap_time = v,
+                    "queue_wait_mean" => c.queue_wait_mean = v,
+                    "db_unit_cost" => c.db_unit_cost = v,
+                    "db_poll_interval" => c.db_poll_interval = v,
+                    "db_bulk_size" => c.db_bulk_size = v as u64,
+                    other => {
+                        return Err(Error::Config(format!("unknown calib key: {other}")))
+                    }
+                }
+            }
+            other => return Err(Error::Config(format!("unknown config key: {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let v = Value::parse(r#"{"label": "x", "cores_per_node": 4}"#).unwrap();
+        let c = ResourceConfig::from_json(&v).unwrap();
+        assert_eq!(c.label, "x");
+        assert_eq!(c.cores_per_node, 4);
+        assert_eq!(c.agent.schedulers, 1);
+        assert_eq!(c.calib.sched_rate_mean, 158.0);
+    }
+
+    #[test]
+    fn missing_label_rejected() {
+        let v = Value::parse(r#"{"cores_per_node": 4}"#).unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn zero_cores_rejected() {
+        let v = Value::parse(r#"{"label": "x"}"#).unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let v = Value::parse(r#"{"label": "x", "cores_per_node": 4}"#).unwrap();
+        let mut c = ResourceConfig::from_json(&v).unwrap();
+        c.apply_override("agent.executers", "8").unwrap();
+        assert_eq!(c.agent.executers, 8);
+        c.apply_override("calib.exec_rate_mean", "99.5").unwrap();
+        assert_eq!(c.calib.exec_rate_mean, 99.5);
+        c.apply_override("launch_methods.task", "SSH").unwrap();
+        assert_eq!(c.launch_methods.task, "SSH");
+        assert!(c.apply_override("bogus", "1").is_err());
+        assert!(c.apply_override("calib.bogus", "1").is_err());
+        assert!(c.apply_override("nodes", "abc").is_err());
+    }
+
+    #[test]
+    fn capacity_helpers() {
+        let v = Value::parse(r#"{"label": "x", "cores_per_node": 16, "nodes": 10}"#)
+            .unwrap();
+        let c = ResourceConfig::from_json(&v).unwrap();
+        assert_eq!(c.total_cores(), 160);
+        assert_eq!(c.nodes_for(1), 1);
+        assert_eq!(c.nodes_for(16), 1);
+        assert_eq!(c.nodes_for(17), 2);
+    }
+}

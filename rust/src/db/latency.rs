@@ -1,0 +1,81 @@
+//! Communication-latency model for the coordination store.
+//!
+//! In RP the UnitManager and Agent exchange units and state updates
+//! through a remote MongoDB, so every transfer pays wide-area round trips
+//! plus (de)serialization.  This model captures those costs so the
+//! real-mode pipeline (and the Fig. 10 benches through the DES) see the
+//! same feed-rate limits the paper measures.
+
+/// Cost model for moving documents between UM and Agent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    /// Fixed round-trip latency per poll / bulk operation (s).
+    pub rtt: f64,
+    /// Marginal cost per unit transferred (s) — serialization + insert.
+    pub per_unit: f64,
+    /// Poll interval of the consumer side (s).
+    pub poll_interval: f64,
+    /// Max documents per bulk transfer.
+    pub bulk_size: u64,
+}
+
+impl LatencyModel {
+    /// Effectively-free local model (tests, localhost runs).
+    pub fn local() -> Self {
+        LatencyModel { rtt: 0.0, per_unit: 0.0, poll_interval: 0.01, bulk_size: 4096 }
+    }
+
+    /// Model from resource calibration values.
+    pub fn from_calib(c: &crate::config::Calibration) -> Self {
+        LatencyModel {
+            rtt: c.db_poll_interval / 2.0,
+            per_unit: c.db_unit_cost,
+            poll_interval: c.db_poll_interval,
+            bulk_size: c.db_bulk_size,
+        }
+    }
+
+    /// Time to transfer `n` units in one direction, including bulking.
+    pub fn transfer_time(&self, n: u64) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let bulks = n.div_ceil(self.bulk_size.max(1));
+        bulks as f64 * self.rtt + n as f64 * self.per_unit
+    }
+
+    /// Expected delay until the consumer notices newly-available items
+    /// (half a poll interval on average; we use the full interval as the
+    /// conservative bound the paper's traces show).
+    pub fn notice_delay(&self) -> f64 {
+        self.poll_interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales() {
+        let m = LatencyModel { rtt: 1.0, per_unit: 0.01, poll_interval: 2.0, bulk_size: 100 };
+        assert_eq!(m.transfer_time(0), 0.0);
+        assert!((m.transfer_time(100) - (1.0 + 1.0)).abs() < 1e-9);
+        assert!((m.transfer_time(250) - (3.0 + 2.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_is_cheap() {
+        let m = LatencyModel::local();
+        assert!(m.transfer_time(10_000) < 1e-9);
+    }
+
+    #[test]
+    fn from_calib_maps_fields() {
+        let c = crate::config::Calibration::default();
+        let m = LatencyModel::from_calib(&c);
+        assert_eq!(m.per_unit, c.db_unit_cost);
+        assert_eq!(m.poll_interval, c.db_poll_interval);
+        assert_eq!(m.bulk_size, c.db_bulk_size);
+    }
+}

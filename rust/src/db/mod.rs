@@ -1,0 +1,18 @@
+//! Coordination store — the MongoDB analog (paper Fig. 1).
+//!
+//! RP communicates the workload between UnitManager and Agents through a
+//! MongoDB instance reachable from both the workstation and the target
+//! resource.  We implement the same coordination pattern as an in-process
+//! document store ([`Store`]): named collections of JSON documents with
+//! insert / find / update, plus polled work queues ([`queue::UnitQueue`])
+//! with a configurable latency model ([`latency::LatencyModel`]) standing
+//! in for the wide-area round trips that produce the Fig. 10 barrier
+//! effects.
+
+pub mod latency;
+pub mod queue;
+mod store;
+
+pub use latency::LatencyModel;
+pub use queue::UnitQueue;
+pub use store::Store;

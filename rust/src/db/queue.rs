@@ -1,0 +1,173 @@
+//! Polled work queues over the store — how units travel UM -> Agent and
+//! state updates travel back.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A multi-producer multi-consumer FIFO with bulk pull, mirroring the
+//  pull-based consumption of RP Agents against MongoDB.
+#[derive(Debug, Clone, Default)]
+pub struct UnitQueue<T> {
+    inner: Arc<(Mutex<QueueInner<T>>, Condvar)>,
+}
+
+#[derive(Debug)]
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for QueueInner<T> {
+    fn default() -> Self {
+        QueueInner { items: VecDeque::new(), closed: false }
+    }
+}
+
+impl<T> UnitQueue<T> {
+    pub fn new() -> Self {
+        UnitQueue { inner: Arc::new((Mutex::default(), Condvar::new())) }
+    }
+
+    /// Push one item.
+    pub fn push(&self, item: T) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().items.push_back(item);
+        cv.notify_one();
+    }
+
+    /// Push many items as one bulk.
+    pub fn push_bulk(&self, items: impl IntoIterator<Item = T>) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().items.extend(items);
+        cv.notify_all();
+    }
+
+    /// Non-blocking pull of up to `max` items.
+    pub fn pull_bulk(&self, max: usize) -> Vec<T> {
+        let (m, _) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let n = g.items.len().min(max);
+        g.items.drain(..n).collect()
+    }
+
+    /// Blocking pull: waits until at least one item or the queue closes.
+    /// Returns an empty vec only when closed and drained.
+    pub fn pull_wait(&self, max: usize, timeout: f64) -> Vec<T> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        while g.items.is_empty() && !g.closed {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return vec![];
+            }
+            let (g2, res) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if res.timed_out() && g.items.is_empty() {
+                return vec![];
+            }
+        }
+        let n = g.items.len().min(max);
+        g.items.drain(..n).collect()
+    }
+
+    /// Mark the queue closed (producers done); consumers drain then stop.
+    pub fn close(&self) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.0.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = UnitQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push_bulk([3, 4]);
+        assert_eq!(q.pull_bulk(3), vec![1, 2, 3]);
+        assert_eq!(q.pull_bulk(10), vec![4]);
+        assert!(q.pull_bulk(10).is_empty());
+    }
+
+    #[test]
+    fn pull_wait_blocks_until_push() {
+        let q = UnitQueue::new();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pull_wait(10, 5.0));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.push(7);
+        assert_eq!(h.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn pull_wait_times_out() {
+        let q: UnitQueue<u32> = UnitQueue::new();
+        let t0 = std::time::Instant::now();
+        assert!(q.pull_wait(1, 0.05).is_empty());
+        assert!(t0.elapsed().as_secs_f64() >= 0.04);
+    }
+
+    #[test]
+    fn close_unblocks_consumers() {
+        let q: UnitQueue<u32> = UnitQueue::new();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pull_wait(1, 10.0));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_empty());
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn mpmc() {
+        let q = UnitQueue::new();
+        let mut producers = vec![];
+        for t in 0..3 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(t * 100 + i);
+                }
+            }));
+        }
+        let mut consumers = vec![];
+        for _ in 0..2 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = vec![];
+                loop {
+                    let batch = q.pull_wait(16, 0.2);
+                    if batch.is_empty() {
+                        return got;
+                    }
+                    got.extend(batch);
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all.len(), 300);
+        all.dedup();
+        assert_eq!(all.len(), 300, "no duplicates");
+    }
+}

@@ -1,0 +1,153 @@
+//! Document store: named collections of JSON documents.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// A concurrent, in-process document store.
+///
+/// Documents are [`Value`] objects keyed by a string id within named
+/// collections — the subset of MongoDB semantics RP relies on (insert,
+/// lookup, field update, filtered scan, delete).
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    inner: Arc<Mutex<BTreeMap<String, BTreeMap<String, Value>>>>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a document.
+    pub fn insert(&self, collection: &str, id: &str, doc: Value) {
+        self.inner
+            .lock()
+            .unwrap()
+            .entry(collection.to_string())
+            .or_default()
+            .insert(id.to_string(), doc);
+    }
+
+    /// Fetch a document by id.
+    pub fn find_one(&self, collection: &str, id: &str) -> Option<Value> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .and_then(|c| c.get(id))
+            .cloned()
+    }
+
+    /// All (id, doc) pairs matching a predicate.
+    pub fn find(&self, collection: &str, pred: impl Fn(&Value) -> bool) -> Vec<(String, Value)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .map(|c| {
+                c.iter()
+                    .filter(|(_, d)| pred(d))
+                    .map(|(k, d)| (k.clone(), d.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Set one field of a document.  Errors if the document is missing.
+    pub fn update_field(&self, collection: &str, id: &str, key: &str, value: Value) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let doc = g
+            .get_mut(collection)
+            .and_then(|c| c.get_mut(id))
+            .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
+        doc.set(key, value);
+        Ok(())
+    }
+
+    /// Remove a document; returns it if present.
+    pub fn remove(&self, collection: &str, id: &str) -> Option<Value> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get_mut(collection)
+            .and_then(|c| c.remove(id))
+    }
+
+    /// Document count in a collection.
+    pub fn count(&self, collection: &str) -> usize {
+        self.inner.lock().unwrap().get(collection).map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Drop a whole collection.
+    pub fn drop_collection(&self, collection: &str) {
+        self.inner.lock().unwrap().remove(collection);
+    }
+
+    /// Names of existing collections.
+    pub fn collections(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_find_remove() {
+        let s = Store::new();
+        s.insert("units", "u1", Value::obj(vec![("state", "NEW".into())]));
+        assert_eq!(s.count("units"), 1);
+        let d = s.find_one("units", "u1").unwrap();
+        assert_eq!(d.get_str("state", ""), "NEW");
+        assert!(s.find_one("units", "u2").is_none());
+        assert!(s.remove("units", "u1").is_some());
+        assert_eq!(s.count("units"), 0);
+    }
+
+    #[test]
+    fn update_field_and_filtered_find() {
+        let s = Store::new();
+        for i in 0..10 {
+            s.insert(
+                "units",
+                &format!("u{i}"),
+                Value::obj(vec![("state", "NEW".into()), ("i", (i as u64).into())]),
+            );
+        }
+        s.update_field("units", "u3", "state", "DONE".into()).unwrap();
+        let done = s.find("units", |d| d.get_str("state", "") == "DONE");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, "u3");
+        assert!(s.update_field("units", "zz", "state", "X".into()).is_err());
+    }
+
+    #[test]
+    fn clone_shares_data() {
+        let s = Store::new();
+        let s2 = s.clone();
+        s.insert("c", "a", Value::Null);
+        assert_eq!(s2.count("c"), 1);
+    }
+
+    #[test]
+    fn concurrent_inserts() {
+        let s = Store::new();
+        let mut hs = vec![];
+        for t in 0..4 {
+            let s = s.clone();
+            hs.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    s.insert("c", &format!("{t}-{i}"), Value::Num(i as f64));
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count("c"), 400);
+    }
+}

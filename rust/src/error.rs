@@ -1,0 +1,95 @@
+//! Crate-wide error type.
+
+use crate::states::{PilotState, UnitState};
+
+/// Errors surfaced by the pilot system.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// An illegal pilot state transition was attempted.
+    #[error("illegal pilot state transition: {from:?} -> {to:?}")]
+    PilotTransition { from: PilotState, to: PilotState },
+
+    /// An illegal unit state transition was attempted.
+    #[error("illegal unit state transition: {from:?} -> {to:?}")]
+    UnitTransition { from: UnitState, to: UnitState },
+
+    /// Referenced entity does not exist.
+    #[error("unknown {kind}: {id}")]
+    Unknown { kind: &'static str, id: String },
+
+    /// Resource configuration problems.
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// SAGA / resource-manager layer failures.
+    #[error("saga error: {0}")]
+    Saga(String),
+
+    /// Scheduling failures (e.g. unit larger than the pilot).
+    #[error("scheduling error: {0}")]
+    Schedule(String),
+
+    /// Unit execution failures.
+    #[error("execution error: {0}")]
+    Exec(String),
+
+    /// Staging failures.
+    #[error("staging error: {0}")]
+    Staging(String),
+
+    /// Coordination-store failures.
+    #[error("db error: {0}")]
+    Db(String),
+
+    /// JSON parse/serialize failures (util::json).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// PJRT runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Timeouts on waits.
+    #[error("timed out after {0}s waiting for {1}")]
+    Timeout(f64, String),
+
+    /// Session is already closed.
+    #[error("session closed")]
+    SessionClosed,
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    /// Convenience constructor for ad-hoc errors.
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Unknown { kind: "pilot", id: "p.0001".into() };
+        assert_eq!(e.to_string(), "unknown pilot: p.0001");
+        let e = Error::Timeout(5.0, "units".into());
+        assert!(e.to_string().contains("5s"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

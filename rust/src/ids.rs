@@ -1,0 +1,95 @@
+//! Typed identifiers for sessions, pilots, units, and components.
+//!
+//! RP names entities `pilot.0000`, `unit.000042`, etc.  We keep the same
+//! human-readable convention but back it with cheap `u64`s; the string
+//! form is derived on demand.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+macro_rules! typed_id {
+    ($name:ident, $prefix:literal, $width:literal) => {
+        /// Typed numeric id with RP-style display (`concat!($prefix, ".NNNN")`).
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct $name(pub u64);
+
+        impl $name {
+            /// Raw numeric value.
+            pub fn raw(self) -> u64 {
+                self.0
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, ".{:0width$}"), self.0, width = $width)
+            }
+        }
+
+        impl From<u64> for $name {
+            fn from(v: u64) -> Self {
+                $name(v)
+            }
+        }
+    };
+}
+
+typed_id!(SessionId, "session", 4);
+typed_id!(PilotId, "pilot", 4);
+typed_id!(UnitId, "unit", 6);
+typed_id!(JobId, "job", 4);
+typed_id!(ComponentId, "comp", 4);
+typed_id!(NodeId, "node", 5);
+
+/// Monotonic id generator (one per entity kind per session).
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: AtomicU64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self { next: AtomicU64::new(0) }
+    }
+
+    /// Allocate the next id.
+    pub fn next<T: From<u64>>(&self) -> T {
+        T::from(self.next.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Number of ids allocated so far.
+    pub fn count(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_convention() {
+        assert_eq!(PilotId(3).to_string(), "pilot.0003");
+        assert_eq!(UnitId(42).to_string(), "unit.000042");
+        assert_eq!(NodeId(12345).to_string(), "node.12345");
+    }
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::new();
+        let a: UnitId = g.next();
+        let b: UnitId = g.next();
+        assert_eq!(a.raw() + 1, b.raw());
+        assert_eq!(g.count(), 2);
+    }
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(UnitId(1));
+        s.insert(UnitId(1));
+        assert_eq!(s.len(), 1);
+        assert!(UnitId(1) < UnitId(2));
+    }
+}

@@ -1,0 +1,39 @@
+//! # rp-rs — a Rust + JAX + Pallas reproduction of RADICAL-Pilot
+//!
+//! A pilot system for executing many-task workloads on supercomputers,
+//! reproducing Merzky, Santcroos, Turilli & Jha, *"Using Pilot Systems to
+//! Execute Many Task Workloads on Supercomputers"* (2015).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the pilot system: [`api`] (Pilot API),
+//!   [`saga`] (resource-interoperability layer), [`db`] (coordination
+//!   store), [`agent`] (Scheduler / Stager / Executer components),
+//!   [`profiler`], and a calibrated discrete-event simulation substrate
+//!   ([`sim`]) standing in for Stampede / Comet / Blue Waters.
+//! * **L2** — the JAX MD payload model (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1** — the Pallas Lennard-Jones kernel
+//!   (`python/compile/kernels/lj.py`).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT so compute
+//! units can execute real MD payloads with no Python on the request path.
+
+pub mod agent;
+pub mod api;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod db;
+pub mod error;
+pub mod ids;
+pub mod profiler;
+pub mod runtime;
+pub mod saga;
+pub mod sim;
+pub mod states;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,6 @@
+//! `rp` binary entrypoint: the Layer-3 leader CLI.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(rp::cli::main_with(argv));
+}

@@ -1,0 +1,253 @@
+//! Derived metrics over a [`Profile`] — the paper's §IV-A quantities.
+
+use std::collections::HashMap;
+
+use super::recorder::Profile;
+use crate::ids::UnitId;
+use crate::states::UnitState;
+use crate::util::stats;
+
+/// Per-unit phase decomposition (Fig. 8): the chronological phases each
+/// unit spends time in, relative to entering `AScheduling`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitPhases {
+    pub unit: UnitId,
+    /// t(AScheduling entry).
+    pub t_sched: f64,
+    /// AScheduling -> AExecutingPending: core search/assignment time.
+    pub scheduling: f64,
+    /// AExecutingPending -> AExecuting: executor pickup delay + spawn.
+    pub pickup: f64,
+    /// AExecuting -> AStagingOutPending: the unit's actual runtime.
+    pub runtime: f64,
+    /// Total core occupation: AScheduling(end) .. AStagingOutPending.
+    pub occupation: f64,
+}
+
+impl UnitPhases {
+    /// Core occupation overhead = occupation - runtime (paper Fig. 8).
+    pub fn occupation_overhead(&self) -> f64 {
+        self.occupation - self.runtime
+    }
+}
+
+/// Analysis wrapper over a profile.
+pub struct Analysis<'a> {
+    profile: &'a Profile,
+}
+
+impl<'a> Analysis<'a> {
+    pub fn new(profile: &'a Profile) -> Self {
+        Analysis { profile }
+    }
+
+    /// `ttc_a`: first unit entering agent scope .. last unit leaving it.
+    /// The paper spans first `A_STAGING_IN`(pending) entry to last
+    /// `A_STAGING_OUT` exit; we use the recorded agent-side states.
+    pub fn ttc_a(&self) -> f64 {
+        let start_states = [
+            UnitState::AStagingInPending,
+            UnitState::AStagingIn,
+            UnitState::ASchedulingPending,
+        ];
+        let end_states = [
+            UnitState::UmStagingOutPending,
+            UnitState::AStagingOut,
+            UnitState::AStagingOutPending,
+        ];
+        let t0 = start_states
+            .iter()
+            .flat_map(|s| self.profile.times_of(*s))
+            .fold(f64::INFINITY, f64::min);
+        // the *last* event among end states
+        let t1 = end_states
+            .iter()
+            .flat_map(|s| self.profile.times_of(*s))
+            .fold(f64::NEG_INFINITY, f64::max);
+        if t0.is_finite() && t1.is_finite() {
+            (t1 - t0).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// (start, end) execution intervals (`AExecuting` ..
+    /// `AStagingOutPending`) for each unit.
+    pub fn exec_intervals(&self) -> Vec<(f64, f64)> {
+        self.intervals(UnitState::AExecuting, UnitState::AStagingOutPending)
+    }
+
+    /// (start, end) core *occupation* intervals: cores are BUSY from the
+    /// end of AScheduling (we use AExecutingPending entry, which is that
+    /// same instant) until AStagingOutPending.
+    pub fn occupation_intervals(&self) -> Vec<(f64, f64)> {
+        self.intervals(UnitState::AExecutingPending, UnitState::AStagingOutPending)
+    }
+
+    fn intervals(&self, from: UnitState, to: UnitState) -> Vec<(f64, f64)> {
+        let mut start: HashMap<UnitId, f64> = HashMap::new();
+        let mut out = Vec::new();
+        for e in &self.profile.events {
+            if e.state == from {
+                start.insert(e.unit, e.t);
+            } else if e.state == to {
+                if let Some(s) = start.remove(&e.unit) {
+                    out.push((s, e.t));
+                }
+            }
+        }
+        out
+    }
+
+    /// Unit concurrency step-trace (Fig. 7 / Fig. 10 bottom).
+    pub fn concurrency(&self) -> Vec<(f64, i64)> {
+        stats::concurrency_trace(&self.exec_intervals())
+    }
+
+    /// Peak concurrent executing units.
+    pub fn peak_concurrency(&self) -> i64 {
+        stats::peak_concurrency(&self.exec_intervals())
+    }
+
+    /// Core utilization over `ttc_a` (paper §IV-A): "a function of how
+    /// many units are in the A_EXECUTING state at any point in time of
+    /// ttc_a" — i.e. the integral of *executing* units (not of core
+    /// occupation, which additionally includes the pickup delay).
+    pub fn utilization(&self, capacity: usize, cores_per_unit: usize) -> f64 {
+        let iv = self.exec_intervals();
+        let start_states = [
+            UnitState::AStagingInPending,
+            UnitState::AStagingIn,
+            UnitState::ASchedulingPending,
+        ];
+        let t0 = start_states
+            .iter()
+            .flat_map(|s| self.profile.times_of(*s))
+            .fold(f64::INFINITY, f64::min);
+        let t1 = t0 + self.ttc_a();
+        if !t0.is_finite() {
+            return 0.0;
+        }
+        stats::utilization(&iv, (capacity / cores_per_unit.max(1)) as f64, t0, t1)
+    }
+
+    /// Fig. 8 decomposition for every unit that completed execution.
+    pub fn unit_phases(&self) -> Vec<UnitPhases> {
+        #[derive(Default, Clone, Copy)]
+        struct Ts {
+            sched: Option<f64>,
+            pending: Option<f64>,
+            exec: Option<f64>,
+            out: Option<f64>,
+        }
+        let mut map: HashMap<UnitId, Ts> = HashMap::new();
+        for e in &self.profile.events {
+            let ts = map.entry(e.unit).or_default();
+            match e.state {
+                UnitState::AScheduling => ts.sched = Some(e.t),
+                UnitState::AExecutingPending => ts.pending = Some(e.t),
+                UnitState::AExecuting => ts.exec = Some(e.t),
+                UnitState::AStagingOutPending => ts.out = Some(e.t),
+                _ => {}
+            }
+        }
+        let mut out: Vec<UnitPhases> = map
+            .into_iter()
+            .filter_map(|(unit, ts)| {
+                let (s, p, x, o) = (ts.sched?, ts.pending?, ts.exec?, ts.out?);
+                Some(UnitPhases {
+                    unit,
+                    t_sched: s,
+                    scheduling: p - s,
+                    pickup: x - p,
+                    runtime: o - x,
+                    occupation: o - p,
+                })
+            })
+            .collect();
+        out.sort_by(|a, b| a.t_sched.partial_cmp(&b.t_sched).unwrap());
+        out
+    }
+
+    /// Throughput summary of entries into `state` (Figs. 4-6): rate
+    /// series binned at 1 s, ramp-up/drain trimmed.
+    pub fn rate_summary(&self, state: UnitState) -> stats::Summary {
+        stats::steady_rate(&self.profile.times_of(state), 1.0, 0.1)
+    }
+
+    /// Full rate time-series for CSV output.
+    pub fn rate_series(&self, state: UnitState, bin: f64) -> Vec<(f64, f64)> {
+        stats::rate_series(&self.profile.times_of(state), bin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::Profiler;
+    use crate::states::UnitState as S;
+
+    fn profile_two_units() -> Profile {
+        let p = Profiler::new(true);
+        // unit 0: sched@1, pending@1.5, exec@2, out@12
+        p.record(1.0, UnitId(0), S::ASchedulingPending);
+        p.record(1.0, UnitId(0), S::AScheduling);
+        p.record(1.5, UnitId(0), S::AExecutingPending);
+        p.record(2.0, UnitId(0), S::AExecuting);
+        p.record(12.0, UnitId(0), S::AStagingOutPending);
+        // unit 1: sched@2, pending@2.2, exec@3, out@13
+        p.record(2.0, UnitId(1), S::ASchedulingPending);
+        p.record(2.0, UnitId(1), S::AScheduling);
+        p.record(2.2, UnitId(1), S::AExecutingPending);
+        p.record(3.0, UnitId(1), S::AExecuting);
+        p.record(13.0, UnitId(1), S::AStagingOutPending);
+        p.snapshot()
+    }
+
+    #[test]
+    fn ttc_a_span() {
+        let prof = profile_two_units();
+        let a = Analysis::new(&prof);
+        assert!((a.ttc_a() - 12.0).abs() < 1e-9); // 1.0 .. 13.0
+    }
+
+    #[test]
+    fn phases_decompose() {
+        let prof = profile_two_units();
+        let phases = Analysis::new(&prof).unit_phases();
+        assert_eq!(phases.len(), 2);
+        let u0 = phases[0];
+        assert_eq!(u0.unit, UnitId(0));
+        assert!((u0.scheduling - 0.5).abs() < 1e-9);
+        assert!((u0.pickup - 0.5).abs() < 1e-9);
+        assert!((u0.runtime - 10.0).abs() < 1e-9);
+        assert!((u0.occupation - 10.5).abs() < 1e-9);
+        assert!((u0.occupation_overhead() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_and_peak() {
+        let prof = profile_two_units();
+        let a = Analysis::new(&prof);
+        assert_eq!(a.peak_concurrency(), 2);
+    }
+
+    #[test]
+    fn utilization_partial() {
+        let prof = profile_two_units();
+        let a = Analysis::new(&prof);
+        // executing: (2..12) + (3..13) = 10 + 10 = 20 busy core-s
+        // capacity 2 cores over ttc_a 12 => 24 core-s
+        let u = a.utilization(2, 1);
+        assert!((u - 20.0 / 24.0).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn empty_profile_is_zeroes() {
+        let prof = Profile::default();
+        let a = Analysis::new(&prof);
+        assert_eq!(a.ttc_a(), 0.0);
+        assert_eq!(a.peak_concurrency(), 0);
+        assert_eq!(a.unit_phases().len(), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Profiling facility (paper §IV).
+//!
+//! RP records timestamps of its operations to disk with minimal runtime
+//! effect; utility methods fetch and analyze them.  Here the
+//! [`Profiler`] records `(time, unit, state)` events into an in-memory
+//! ring (optionally mirrored to a file), and [`analysis`] computes the
+//! paper's derived metrics: `ttc_a`, core utilization, concurrency
+//! traces, rate series, and the Fig. 8 per-unit decomposition.
+//!
+//! The profiler can be disabled at construction; the overhead of enabling
+//! it is characterized by `benches/profiler_overhead.rs` (paper reports
+//! 144.7±19.2 s with vs 157.1±8.3 s without — statistically
+//! insignificant).
+
+pub mod analysis;
+mod recorder;
+
+pub use analysis::{Analysis, UnitPhases};
+pub use recorder::{Profile, Profiler};

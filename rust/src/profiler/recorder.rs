@@ -1,0 +1,178 @@
+//! Event recording.
+
+use std::io::Write as _;
+use std::sync::Mutex;
+
+use crate::ids::UnitId;
+use crate::states::UnitState;
+
+/// One recorded state-transition event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub unit: UnitId,
+    pub state: UnitState,
+}
+
+/// Thread-safe, optionally-disabled event recorder.
+///
+/// Designed to be non-invasive: a disabled profiler is a single branch;
+/// an enabled one is a mutex-guarded `Vec::push` (events are fixed-size
+/// `Copy` records; no allocation per event after warm-up).
+#[derive(Debug)]
+pub struct Profiler {
+    enabled: bool,
+    events: Mutex<Vec<Event>>,
+}
+
+impl Profiler {
+    pub fn new(enabled: bool) -> Self {
+        Profiler {
+            enabled,
+            events: Mutex::new(Vec::with_capacity(if enabled { 1 << 16 } else { 0 })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record `unit` entering `state` at time `t`.
+    #[inline]
+    pub fn record(&self, t: f64, unit: UnitId, state: UnitState) {
+        if self.enabled {
+            self.events.lock().unwrap().push(Event { t, unit, state });
+        }
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the recorded events into an immutable [`Profile`].
+    pub fn snapshot(&self) -> Profile {
+        Profile { events: self.events.lock().unwrap().clone() }
+    }
+
+    /// Drain events (used between experiment repetitions).
+    pub fn reset(&self) {
+        self.events.lock().unwrap().clear();
+    }
+}
+
+/// An immutable profile: the unit-of-analysis the paper's utility methods
+/// operate on.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    pub events: Vec<Event>,
+}
+
+impl Profile {
+    /// Timestamps of entry into `state`, in event order.
+    pub fn times_of(&self, state: UnitState) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter(|e| e.state == state)
+            .map(|e| e.t)
+            .collect()
+    }
+
+    /// Entry time into `state` for one unit.
+    pub fn time_of(&self, unit: UnitId, state: UnitState) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| e.unit == unit && e.state == state)
+            .map(|e| e.t)
+    }
+
+    /// All unit ids seen, in first-seen order.
+    pub fn units(&self) -> Vec<UnitId> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for e in &self.events {
+            if seen.insert(e.unit) {
+                out.push(e.unit);
+            }
+        }
+        out
+    }
+
+    /// Write a CSV (`time,unit,state`) — RP writes `*.prof` files; this
+    /// is our equivalent for offline analysis.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "time,unit,state")?;
+        for e in &self.events {
+            writeln!(f, "{:.6},{},{}", e.t, e.unit, e.state.name())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let p = Profiler::new(false);
+        p.record(1.0, UnitId(0), UnitState::New);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn enabled_records_and_snapshots() {
+        let p = Profiler::new(true);
+        p.record(1.0, UnitId(0), UnitState::New);
+        p.record(2.0, UnitId(0), UnitState::AExecuting);
+        p.record(3.0, UnitId(1), UnitState::New);
+        let prof = p.snapshot();
+        assert_eq!(prof.events.len(), 3);
+        assert_eq!(prof.times_of(UnitState::New), vec![1.0, 3.0]);
+        assert_eq!(prof.time_of(UnitId(0), UnitState::AExecuting), Some(2.0));
+        assert_eq!(prof.units(), vec![UnitId(0), UnitId(1)]);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let p = Profiler::new(true);
+        p.record(1.0, UnitId(0), UnitState::New);
+        p.reset();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = Profiler::new(true);
+        p.record(1.5, UnitId(7), UnitState::AExecuting);
+        let dir = std::env::temp_dir().join("rp_prof_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.csv");
+        p.snapshot().write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("1.500000,unit.000007,AGENT_EXECUTING"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let p = std::sync::Arc::new(Profiler::new(true));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    p.record(i as f64, UnitId(t * 1000 + i), UnitState::New);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.len(), 1000);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (L2 JAX model +
+//! L1 Pallas kernel, lowered once by `python/compile/aot.py`) and
+//! executes them on the request path — **no Python at runtime**.
+//!
+//! PJRT handles are not `Send`, so a dedicated service thread owns the
+//! client and the compiled executables (one per model variant); the
+//! [`Runtime`] handle is a cheap cloneable channel front-end that any
+//! Executer thread can call.
+
+mod payload;
+mod pjrt;
+
+pub use payload::{lattice_init, PayloadKind, PayloadStore, TaskResult};
+pub use pjrt::{Manifest, PayloadInfo, Runtime};

@@ -1,0 +1,257 @@
+//! PJRT client service thread + artifact manifest.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One AOT payload entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct PayloadInfo {
+    pub name: String,
+    /// "md" | "rg".
+    pub kind: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: String,
+    /// Particle count.
+    pub n: usize,
+    /// MD steps per invocation (0 for analysis payloads).
+    pub steps: usize,
+    /// Input shapes (row-major), e.g. [[3, n], [3, n]].
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes ([] = scalar).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub payloads: Vec<PayloadInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = Value::parse_file(&dir.join("manifest.json"))?;
+        let payloads = v
+            .get("payloads")
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("manifest missing payloads".into()))?
+            .iter()
+            .map(|p| {
+                let shapes = |key: &str| -> Vec<Vec<usize>> {
+                    p.get(key)
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|d| d.as_u64())
+                                .map(|d| d as usize)
+                                .collect()
+                        })
+                        .collect()
+                };
+                PayloadInfo {
+                    name: p.get_str("name", "").to_string(),
+                    kind: p.get_str("kind", "").to_string(),
+                    path: p.get_str("path", "").to_string(),
+                    n: p.get_u64("n", 0) as usize,
+                    steps: p.get_u64("steps", 0) as usize,
+                    inputs: shapes("inputs"),
+                    outputs: shapes("outputs"),
+                }
+            })
+            .collect();
+        Ok(Manifest { dir: dir.to_path_buf(), payloads })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PayloadInfo> {
+        self.payloads.iter().find(|p| p.name == name)
+    }
+}
+
+struct ExecRequest {
+    artifact: String,
+    /// Flat row-major f32 buffers, one per input.
+    inputs: Vec<Vec<f32>>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct Runtime {
+    tx: mpsc::Sender<ExecRequest>,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load `artifacts/` (manifest + HLO texts), compile every payload on
+    /// the PJRT CPU client, and start the service thread.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir.as_ref())?;
+        let (tx, rx) = mpsc::channel::<ExecRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let m = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || service_thread(m, rx, ready_tx))
+            .map_err(|e| Error::Runtime(format!("spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during init".into()))??;
+        Ok(Runtime { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute `artifact` with flat f32 inputs; returns flat f32 outputs
+    /// (tuple elements in order).  Thread-safe; blocks until done.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let info = self
+            .manifest
+            .get(artifact)
+            .ok_or_else(|| Error::Unknown { kind: "artifact", id: artifact.into() })?;
+        if inputs.len() != info.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{artifact}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&info.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::Runtime(format!(
+                    "{artifact}: input {i} has {} elements, want {want}",
+                    buf.len()
+                )));
+            }
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ExecRequest { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| Error::Runtime("runtime thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("runtime thread dropped reply".into()))?
+    }
+}
+
+fn service_thread(
+    manifest: Manifest,
+    rx: mpsc::Receiver<ExecRequest>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Owns all non-Send PJRT state.
+    let init = (|| -> Result<(xla::PjRtClient, HashMap<String, CompiledPayload>)> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut exes = HashMap::new();
+        for p in &manifest.payloads {
+            let path = manifest.dir.join(&p.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", p.path)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", p.name)))?;
+            exes.insert(p.name.clone(), CompiledPayload { info: p.clone(), exe });
+        }
+        Ok((client, exes))
+    })();
+
+    let exes = match init {
+        Ok((_client, exes)) => {
+            let _ = ready.send(Ok(()));
+            exes
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        let result = run_one(&exes, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+struct CompiledPayload {
+    info: PayloadInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn run_one(exes: &HashMap<String, CompiledPayload>, req: &ExecRequest) -> Result<Vec<Vec<f32>>> {
+    let cp = exes
+        .get(&req.artifact)
+        .ok_or_else(|| Error::Unknown { kind: "artifact", id: req.artifact.clone() })?;
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (buf, shape) in req.inputs.iter().zip(&cp.info.inputs) {
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(buf)
+            .reshape(&dims)
+            .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+        literals.push(lit);
+    }
+    let result = cp
+        .exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Runtime(format!("execute {}: {e}", req.artifact)))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+    // aot.py lowers with return_tuple=True, so the root is always a tuple
+    let elems = tuple
+        .to_tuple()
+        .map_err(|e| Error::Runtime(format!("untuple result: {e}")))?;
+    elems
+        .into_iter()
+        .map(|l| l.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("md_n64_s10").is_some());
+        let p = m.get("md_n64_s10").unwrap();
+        assert_eq!(p.n, 64);
+        assert_eq!(p.inputs, vec![vec![3, 64], vec![3, 64]]);
+        assert_eq!(p.outputs.len(), 4);
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.execute("nope", vec![]).is_err());
+        assert!(rt.execute("md_n64_s10", vec![vec![0.0; 3]]).is_err());
+        assert!(rt
+            .execute("md_n64_s10", vec![vec![0.0; 5], vec![0.0; 192]])
+            .is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Simulated batch-system adaptor (SLURM/TORQUE/PBS Pro/SGE/LSF/
+//! LoadLeveler/Cray CCM flavors).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::Adaptor;
+use crate::error::{Error, Result};
+use crate::ids::{IdGen, JobId};
+use crate::saga::job::{JobDescription, JobInfo, JobState};
+use crate::util;
+use crate::util::rng::Pcg;
+
+struct BatchJob {
+    submitted_at: f64,
+    queue_wait: f64,
+    walltime: f64,
+    overridden: Option<JobState>,
+}
+
+/// A batch RM: jobs wait an exponential queue delay, run for their
+/// walltime, then complete.
+pub struct BatchAdaptor {
+    kind: String,
+    ids: IdGen,
+    jobs: Mutex<HashMap<JobId, BatchJob>>,
+    rng: Mutex<Pcg>,
+    queue_wait_mean: f64,
+}
+
+impl BatchAdaptor {
+    pub fn new(kind: &str, queue_wait_mean: f64) -> Self {
+        BatchAdaptor {
+            kind: kind.to_string(),
+            ids: IdGen::new(),
+            jobs: Mutex::new(HashMap::new()),
+            rng: Mutex::new(Pcg::seeded(0x5a6a)),
+            queue_wait_mean,
+        }
+    }
+
+    fn derive_state(&self, j: &BatchJob) -> (JobState, Option<f64>) {
+        if let Some(s) = j.overridden {
+            let started =
+                (util::now() - j.submitted_at >= j.queue_wait).then_some(j.submitted_at + j.queue_wait);
+            return (s, started);
+        }
+        let elapsed = util::now() - j.submitted_at;
+        if elapsed < j.queue_wait {
+            (JobState::Pending, None)
+        } else if elapsed < j.queue_wait + j.walltime {
+            (JobState::Running, Some(j.submitted_at + j.queue_wait))
+        } else {
+            (JobState::Done, Some(j.submitted_at + j.queue_wait))
+        }
+    }
+}
+
+impl Adaptor for BatchAdaptor {
+    fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    fn submit(&self, jd: &JobDescription) -> Result<JobId> {
+        if jd.cores == 0 {
+            return Err(Error::Saga(format!("{}: job '{}' requests 0 cores", self.kind, jd.name)));
+        }
+        let id: JobId = self.ids.next();
+        let queue_wait = if self.queue_wait_mean > 0.0 {
+            self.rng.lock().unwrap().exponential(self.queue_wait_mean)
+        } else {
+            0.0
+        };
+        self.jobs.lock().unwrap().insert(
+            id,
+            BatchJob {
+                submitted_at: util::now(),
+                queue_wait,
+                walltime: jd.walltime,
+                overridden: None,
+            },
+        );
+        Ok(id)
+    }
+
+    fn state(&self, id: JobId) -> Result<JobState> {
+        Ok(self.info(id)?.state)
+    }
+
+    fn info(&self, id: JobId) -> Result<JobInfo> {
+        let jobs = self.jobs.lock().unwrap();
+        let j = jobs
+            .get(&id)
+            .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
+        let (state, started_at) = self.derive_state(j);
+        Ok(JobInfo { id, state, started_at })
+    }
+
+    fn cancel(&self, id: JobId) -> Result<()> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let j = jobs
+            .get_mut(&id)
+            .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
+        let (state, _) = self.derive_state(j);
+        if !state.is_final() {
+            j.overridden = Some(JobState::Canceled);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jd(walltime: f64) -> JobDescription {
+        JobDescription { name: "j".into(), cores: 4, walltime, queue: None, project: None }
+    }
+
+    #[test]
+    fn lifecycle_pending_running_done() {
+        let a = BatchAdaptor::new("slurm", 0.03);
+        let id = a.submit(&jd(0.08)).unwrap();
+        // immediately: most likely pending (wait > 0 almost surely)
+        let s0 = a.state(id).unwrap();
+        assert!(matches!(s0, JobState::Pending | JobState::Running));
+        // after generous time: done
+        util::sleep(0.5);
+        assert_eq!(a.state(id).unwrap(), JobState::Done);
+    }
+
+    #[test]
+    fn zero_wait_starts_instantly() {
+        let a = BatchAdaptor::new("slurm", 0.0);
+        let id = a.submit(&jd(10.0)).unwrap();
+        assert_eq!(a.state(id).unwrap(), JobState::Running);
+    }
+
+    #[test]
+    fn cancel_sticks() {
+        let a = BatchAdaptor::new("torque", 0.0);
+        let id = a.submit(&jd(10.0)).unwrap();
+        a.cancel(id).unwrap();
+        assert_eq!(a.state(id).unwrap(), JobState::Canceled);
+        // canceling a final job is a no-op
+        a.cancel(id).unwrap();
+        assert_eq!(a.state(id).unwrap(), JobState::Canceled);
+    }
+
+    #[test]
+    fn zero_core_job_rejected() {
+        let a = BatchAdaptor::new("sge", 0.0);
+        let mut d = jd(1.0);
+        d.cores = 0;
+        assert!(a.submit(&d).is_err());
+    }
+}

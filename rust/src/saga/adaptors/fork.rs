@@ -1,0 +1,128 @@
+//! `fork` adaptor: jobs start immediately (no batch queue) — used for
+//! local pilots, the examples, and the end-to-end driver.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::Adaptor;
+use crate::error::{Error, Result};
+use crate::ids::{IdGen, JobId};
+use crate::saga::job::{JobDescription, JobInfo, JobState};
+use crate::util;
+
+struct ForkJob {
+    started_at: f64,
+    walltime: f64,
+    overridden: Option<JobState>,
+}
+
+/// Immediate-start adaptor.
+pub struct ForkAdaptor {
+    ids: IdGen,
+    jobs: Mutex<HashMap<JobId, ForkJob>>,
+}
+
+impl Default for ForkAdaptor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ForkAdaptor {
+    pub fn new() -> Self {
+        ForkAdaptor { ids: IdGen::new(), jobs: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl Adaptor for ForkAdaptor {
+    fn kind(&self) -> &str {
+        "fork"
+    }
+
+    fn submit(&self, jd: &JobDescription) -> Result<JobId> {
+        if jd.cores == 0 {
+            return Err(Error::Saga(format!("fork: job '{}' requests 0 cores", jd.name)));
+        }
+        let id: JobId = self.ids.next();
+        self.jobs.lock().unwrap().insert(
+            id,
+            ForkJob { started_at: util::now(), walltime: jd.walltime, overridden: None },
+        );
+        Ok(id)
+    }
+
+    fn state(&self, id: JobId) -> Result<JobState> {
+        Ok(self.info(id)?.state)
+    }
+
+    fn info(&self, id: JobId) -> Result<JobInfo> {
+        let jobs = self.jobs.lock().unwrap();
+        let j = jobs
+            .get(&id)
+            .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
+        let state = j.overridden.unwrap_or({
+            if util::now() - j.started_at < j.walltime {
+                JobState::Running
+            } else {
+                JobState::Done
+            }
+        });
+        Ok(JobInfo { id, state, started_at: Some(j.started_at) })
+    }
+
+    fn cancel(&self, id: JobId) -> Result<()> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let j = jobs
+            .get_mut(&id)
+            .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
+        let current = j.overridden.unwrap_or({
+            if util::now() - j.started_at < j.walltime {
+                JobState::Running
+            } else {
+                JobState::Done
+            }
+        });
+        if !current.is_final() {
+            j.overridden = Some(JobState::Canceled);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_immediately_and_expires() {
+        let a = ForkAdaptor::new();
+        let id = a
+            .submit(&JobDescription {
+                name: "p".into(),
+                cores: 1,
+                walltime: 0.05,
+                queue: None,
+                project: None,
+            })
+            .unwrap();
+        assert_eq!(a.state(id).unwrap(), JobState::Running);
+        util::sleep(0.08);
+        assert_eq!(a.state(id).unwrap(), JobState::Done);
+    }
+
+    #[test]
+    fn cancel_running() {
+        let a = ForkAdaptor::new();
+        let id = a
+            .submit(&JobDescription {
+                name: "p".into(),
+                cores: 1,
+                walltime: 100.0,
+                queue: None,
+                project: None,
+            })
+            .unwrap();
+        a.cancel(id).unwrap();
+        assert_eq!(a.state(id).unwrap(), JobState::Canceled);
+    }
+}

@@ -1,0 +1,162 @@
+//! SAGA job API: descriptions, states, and the job service.
+
+use std::sync::Arc;
+
+use super::adaptors::{make_adaptor, Adaptor};
+use super::url::JobUrl;
+use crate::error::{Error, Result};
+use crate::ids::JobId;
+use crate::util;
+
+/// SAGA job states (the subset RP's PilotManager drives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted by the RM, waiting in the batch queue.
+    Pending,
+    /// Allocation active.
+    Running,
+    /// Finished nominally (walltime exhausted or exited).
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl JobState {
+    pub fn is_final(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Canceled)
+    }
+}
+
+/// Description of a batch job (the pilot placeholder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDescription {
+    pub name: String,
+    /// Cores requested.
+    pub cores: usize,
+    /// Walltime (seconds).
+    pub walltime: f64,
+    pub queue: Option<String>,
+    pub project: Option<String>,
+}
+
+/// Info snapshot for a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobInfo {
+    pub id: JobId,
+    pub state: JobState,
+    /// Wall-clock time the job entered `Running`, if it has.
+    pub started_at: Option<f64>,
+}
+
+/// Uniform job management over one adaptor (paper: "The SAGA API
+/// implements an adapter for each type of supported resource, exposing
+/// uniform methods for job and data management").
+pub struct JobService {
+    url: JobUrl,
+    adaptor: Arc<dyn Adaptor>,
+}
+
+impl JobService {
+    /// Connect to `url` (e.g. `slurm://stampede`, `fork://localhost`).
+    pub fn connect(url: &str) -> Result<JobService> {
+        let url = JobUrl::parse(url)?;
+        let adaptor = make_adaptor(&url.scheme)
+            .ok_or_else(|| Error::Saga(format!("no adaptor for scheme '{}'", url.scheme)))?;
+        Ok(JobService { url, adaptor })
+    }
+
+    /// Connect with an explicit adaptor (tests, custom queue models).
+    pub fn with_adaptor(url: JobUrl, adaptor: Arc<dyn Adaptor>) -> JobService {
+        JobService { url, adaptor }
+    }
+
+    pub fn url(&self) -> &JobUrl {
+        &self.url
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&self, jd: &JobDescription) -> Result<JobId> {
+        self.adaptor.submit(jd)
+    }
+
+    /// Current state.
+    pub fn state(&self, id: JobId) -> Result<JobState> {
+        self.adaptor.state(id)
+    }
+
+    pub fn info(&self, id: JobId) -> Result<JobInfo> {
+        self.adaptor.info(id)
+    }
+
+    /// Cancel the job.
+    pub fn cancel(&self, id: JobId) -> Result<()> {
+        self.adaptor.cancel(id)
+    }
+
+    /// Block until the job leaves `Pending` (or `timeout` seconds pass).
+    pub fn wait_running(&self, id: JobId, timeout: f64) -> Result<JobState> {
+        let t0 = util::now();
+        loop {
+            let s = self.state(id)?;
+            if s != JobState::Pending {
+                return Ok(s);
+            }
+            if util::now() - t0 > timeout {
+                return Err(Error::Timeout(timeout, format!("job {id} to start")));
+            }
+            util::sleep(0.005);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jd() -> JobDescription {
+        JobDescription {
+            name: "pilot.0000".into(),
+            cores: 8,
+            walltime: 0.2,
+            queue: None,
+            project: None,
+        }
+    }
+
+    #[test]
+    fn fork_runs_immediately() {
+        let js = JobService::connect("fork://localhost").unwrap();
+        let id = js.submit(&jd()).unwrap();
+        let s = js.wait_running(id, 1.0).unwrap();
+        assert_eq!(s, JobState::Running);
+        assert!(js.info(id).unwrap().started_at.is_some());
+    }
+
+    #[test]
+    fn job_expires_after_walltime() {
+        let js = JobService::connect("fork://localhost").unwrap();
+        let id = js.submit(&jd()).unwrap();
+        js.wait_running(id, 1.0).unwrap();
+        util::sleep(0.25);
+        assert_eq!(js.state(id).unwrap(), JobState::Done);
+    }
+
+    #[test]
+    fn cancel_pending_or_running() {
+        let js = JobService::connect("slurm://test?wait=10").unwrap();
+        let id = js.submit(&jd()).unwrap();
+        js.cancel(id).unwrap();
+        assert_eq!(js.state(id).unwrap(), JobState::Canceled);
+    }
+
+    #[test]
+    fn unknown_scheme_rejected() {
+        assert!(JobService::connect("warp://x").is_err());
+    }
+
+    #[test]
+    fn unknown_job_rejected() {
+        let js = JobService::connect("fork://localhost").unwrap();
+        assert!(js.state(JobId(999)).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! SAGA-like resource interoperability layer (paper §III: RP "utilizes
+//! SAGA to interface to the resource layer").
+//!
+//! SAGA exposes uniform job management over heterogeneous resource
+//! managers through per-RM *adaptors*.  We implement the same shape: a
+//! [`JobService`] fronting an [`adaptors::Adaptor`] per RM kind (SLURM,
+//! TORQUE, PBS Pro, SGE, LSF, LoadLeveler, Cray CCM — simulated batch
+//! systems with configurable queue-wait models — plus `fork` for
+//! immediate local execution).
+
+pub mod adaptors;
+mod job;
+mod url;
+
+pub use adaptors::{make_adaptor, make_adaptor_with, Adaptor};
+pub use job::{JobDescription, JobInfo, JobService, JobState};
+pub use url::JobUrl;

@@ -1,0 +1,81 @@
+//! SAGA job-service URLs: `scheme://host[:port][/path]` where the scheme
+//! selects the adaptor (e.g. `slurm://stampede.tacc.utexas.edu`).
+
+use crate::error::{Error, Result};
+
+/// Parsed job-service URL.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobUrl {
+    pub scheme: String,
+    pub host: String,
+    pub port: Option<u16>,
+    pub path: String,
+}
+
+impl JobUrl {
+    pub fn parse(s: &str) -> Result<JobUrl> {
+        let (scheme, rest) = s
+            .split_once("://")
+            .ok_or_else(|| Error::Saga(format!("bad job url (no scheme): {s}")))?;
+        if scheme.is_empty() {
+            return Err(Error::Saga(format!("bad job url (empty scheme): {s}")));
+        }
+        let (authority, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], rest[i..].to_string()),
+            None => (rest, String::from("/")),
+        };
+        let (host, port) = match authority.rsplit_once(':') {
+            Some((h, p)) => {
+                let port = p
+                    .parse::<u16>()
+                    .map_err(|_| Error::Saga(format!("bad port in job url: {s}")))?;
+                (h.to_string(), Some(port))
+            }
+            None => (authority.to_string(), None),
+        };
+        Ok(JobUrl { scheme: scheme.to_string(), host, port, path })
+    }
+
+    /// URL for a resource config (scheme = RM kind, host = label).
+    pub fn for_resource(rm: &str, label: &str) -> JobUrl {
+        JobUrl { scheme: rm.to_string(), host: label.to_string(), port: None, path: "/".into() }
+    }
+}
+
+impl std::fmt::Display for JobUrl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.port {
+            Some(p) => write!(f, "{}://{}:{}{}", self.scheme, self.host, p, self.path),
+            None => write!(f, "{}://{}{}", self.scheme, self.host, self.path),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full() {
+        let u = JobUrl::parse("slurm://stampede.tacc.utexas.edu:2222/jobs").unwrap();
+        assert_eq!(u.scheme, "slurm");
+        assert_eq!(u.host, "stampede.tacc.utexas.edu");
+        assert_eq!(u.port, Some(2222));
+        assert_eq!(u.path, "/jobs");
+    }
+
+    #[test]
+    fn parse_minimal_and_display() {
+        let u = JobUrl::parse("fork://localhost").unwrap();
+        assert_eq!(u.port, None);
+        assert_eq!(u.path, "/");
+        assert_eq!(u.to_string(), "fork://localhost/");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(JobUrl::parse("no-scheme").is_err());
+        assert!(JobUrl::parse("://x").is_err());
+        assert!(JobUrl::parse("slurm://h:notaport").is_err());
+    }
+}

@@ -1,0 +1,621 @@
+//! The simulated Agent pipeline: stage-in -> schedule -> execute ->
+//! stage-out, with barrier feeders (paper §IV-C/D).
+//!
+//! Drives a real [`CoreScheduler`] (Continuous or Torus — the same code
+//! the real-mode Agent runs) and records a real [`Profiler`] trace, so
+//! every figure is computed by the same analysis code in both modes.
+//! Component timings come from the calibrated [`MachineModel`].
+
+use std::collections::{HashMap, VecDeque};
+
+use super::engine::EventQueue;
+use super::machine::MachineModel;
+use crate::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+use crate::agent::nodelist::Allocation;
+use crate::config::ResourceConfig;
+use crate::db::LatencyModel;
+use crate::ids::UnitId;
+use crate::profiler::{Analysis, Profile, Profiler};
+use crate::states::UnitState as S;
+use crate::util::rng::Pcg;
+use crate::workload::{BarrierMode, Workload};
+
+/// Simulation parameters for one agent-level experiment.
+#[derive(Debug, Clone)]
+pub struct AgentSimConfig {
+    /// Pilot size in cores.
+    pub pilot_cores: usize,
+    /// Executer instances and the nodes they are spread over.
+    pub executers: usize,
+    pub executer_nodes: usize,
+    /// Output/input stager instances and their node spread.
+    pub stagers_out: usize,
+    pub stager_nodes: usize,
+    /// Whether units perform agent-side input staging.
+    pub stage_in: bool,
+    /// Whether units perform agent-side output staging (stdout/stderr
+    /// reads — the paper's units always do).
+    pub stage_out: bool,
+    /// Barrier mode (Fig. 10).
+    pub barrier: BarrierMode,
+    /// Units per generation for the Generation barrier (also used to
+    /// flag first-generation spawn contention).
+    pub generation_size: usize,
+    /// Use the agent-level effective launch rate (true for agent-level
+    /// experiments) instead of the isolated micro rate.
+    pub agent_level_launch: bool,
+    /// Scheduler search mode (Linear = faithful; FreeList = optimized).
+    pub search_mode: SearchMode,
+    /// Concurrent Scheduler instances, each owning an equal partition of
+    /// the pilot's cores (the paper's §VI future-work item (i): "a
+    /// concurrent Scheduler to support partitioning of the pilot
+    /// resources").  1 = the paper's published design.
+    pub schedulers: usize,
+    /// Use the torus scheduler instead of continuous.
+    pub torus: bool,
+    /// Profiler enabled?
+    pub profile: bool,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl AgentSimConfig {
+    /// The paper's standard agent-level setup on a given pilot size.
+    pub fn paper_default(pilot_cores: usize) -> Self {
+        AgentSimConfig {
+            pilot_cores,
+            executers: 1,
+            executer_nodes: 1,
+            stagers_out: 1,
+            stager_nodes: 1,
+            stage_in: false,
+            stage_out: true,
+            barrier: BarrierMode::Agent,
+            generation_size: pilot_cores,
+            agent_level_launch: true,
+            search_mode: SearchMode::Linear,
+            schedulers: 1,
+            torus: false,
+            profile: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of an agent-level simulation.
+#[derive(Debug)]
+pub struct AgentSimResult {
+    pub profile: Profile,
+    /// ttc_a (paper §IV-A).
+    pub ttc_a: f64,
+    /// Core utilization over ttc_a.
+    pub utilization: f64,
+    /// Peak concurrent executing units.
+    pub peak_concurrency: i64,
+    /// Virtual completion time of the full workload.
+    pub makespan: f64,
+    /// DES events processed (perf accounting).
+    pub events: u64,
+    /// Wall-clock seconds the simulation took.
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A batch of units arrives at the agent (index range into `units`).
+    Arrive(u32, u32),
+    /// Input stager finished a unit.
+    StageInDone(u32),
+    /// Scheduler finished the allocation op for a unit.
+    SchedDone(u32),
+    /// Executer finished spawning a unit (execution starts).
+    Spawned(u32),
+    /// Unit finished executing.
+    ExecDone(u32),
+    /// Output stager finished a unit.
+    StageOutDone(u32),
+    /// Generation-barrier feeder releases generation `g`.
+    FeedGeneration(u32),
+}
+
+struct SimUnit {
+    duration: f64,
+    cores: usize,
+    alloc: Option<Allocation>,
+}
+
+/// The simulated Agent.
+pub struct AgentSim {
+    cfg: AgentSimConfig,
+    machine: MachineModel,
+    db: LatencyModel,
+    q: EventQueue<Ev>,
+    rng: Pcg,
+    profiler: Profiler,
+
+    units: Vec<SimUnit>,
+    /// One scheduler per core partition (paper design: exactly one).
+    scheds: Vec<Box<dyn CoreScheduler>>,
+    sched_queues: Vec<VecDeque<u32>>,
+    sched_busy: Vec<bool>,
+    exec_queue: VecDeque<u32>,
+    exec_busy: bool,
+    stage_in_queue: VecDeque<u32>,
+    stage_in_busy: bool,
+    stage_out_queue: VecDeque<u32>,
+    stage_out_busy: bool,
+
+    spawned_count: usize,
+    completed: usize,
+    gen_completed: HashMap<u32, usize>,
+    gens: Vec<(u32, u32)>,
+}
+
+impl AgentSim {
+    pub fn new(resource: &ResourceConfig, cfg: AgentSimConfig, workload: &Workload) -> Self {
+        let n_sched = cfg.schedulers.max(1);
+        assert!(
+            cfg.pilot_cores.is_multiple_of(n_sched),
+            "pilot cores must divide evenly over scheduler partitions"
+        );
+        let part = cfg.pilot_cores / n_sched;
+        let scheds: Vec<Box<dyn CoreScheduler>> = (0..n_sched)
+            .map(|_| -> Box<dyn CoreScheduler> {
+                if cfg.torus {
+                    Box::new(TorusScheduler::for_cores(part, resource.cores_per_node))
+                } else {
+                    Box::new(ContinuousScheduler::for_cores(
+                        part,
+                        resource.cores_per_node,
+                        cfg.search_mode,
+                    ))
+                }
+            })
+            .collect();
+        let units = workload
+            .units
+            .iter()
+            .map(|u| SimUnit {
+                duration: u.duration().unwrap_or(0.0),
+                cores: u.cores,
+                alloc: None,
+            })
+            .collect::<Vec<_>>();
+        let gen = cfg.generation_size.max(1);
+        let n = units.len();
+        let gens: Vec<(u32, u32)> = (0..n)
+            .step_by(gen)
+            .map(|s| (s as u32, ((s + gen).min(n)) as u32))
+            .collect();
+        let profile = cfg.profile;
+        let seed = cfg.seed;
+        AgentSim {
+            cfg,
+            machine: MachineModel::new(resource.clone()),
+            db: LatencyModel::from_calib(&resource.calib),
+            q: EventQueue::new(),
+            rng: Pcg::seeded(seed),
+            profiler: Profiler::new(profile),
+            units,
+            sched_queues: vec![VecDeque::new(); scheds.len()],
+            sched_busy: vec![false; scheds.len()],
+            scheds,
+            exec_queue: VecDeque::new(),
+            exec_busy: false,
+            stage_in_queue: VecDeque::new(),
+            stage_in_busy: false,
+            stage_out_queue: VecDeque::new(),
+            stage_out_busy: false,
+            spawned_count: 0,
+            completed: 0,
+            gen_completed: HashMap::new(),
+            gens,
+        }
+    }
+
+    #[inline]
+    fn prof(&self, t: f64, unit: u32, state: S) {
+        self.profiler.record(t, UnitId(unit as u64), state);
+    }
+
+    /// Seed the event queue according to the barrier mode.
+    fn seed_arrivals(&mut self) {
+        let n = self.units.len() as u32;
+        match self.cfg.barrier {
+            BarrierMode::Agent => {
+                // startup barrier: the whole workload is at the agent
+                self.q.at(0.0, Ev::Arrive(0, n));
+            }
+            BarrierMode::Application => {
+                // UM feeds through the store in bulks
+                let bulk = self.db.bulk_size.max(1) as u32;
+                let mut t = self.db.notice_delay();
+                let mut s = 0u32;
+                while s < n {
+                    let e = (s + bulk).min(n);
+                    t += self.db.transfer_time((e - s) as u64);
+                    self.q.at(t, Ev::Arrive(s, e));
+                    s = e;
+                }
+            }
+            BarrierMode::Generation => {
+                self.q.at(0.0, Ev::FeedGeneration(0));
+            }
+        }
+    }
+
+    fn feed_generation(&mut self, g: u32) {
+        if let Some(&(s, e)) = self.gens.get(g as usize) {
+            // transfer of the generation through the store
+            let t = self.q.now()
+                + self.db.notice_delay()
+                + self.db.transfer_time((e - s) as u64);
+            self.q.at(t, Ev::Arrive(s, e));
+        }
+    }
+
+    /// Partition a unit belongs to (round-robin by unit index).
+    #[inline]
+    fn partition(&self, u: u32) -> usize {
+        u as usize % self.scheds.len()
+    }
+
+    fn kick_scheduler(&mut self, p: usize) {
+        if self.sched_busy[p] {
+            return;
+        }
+        let Some(&u) = self.sched_queues[p].front() else { return };
+        let cores = self.units[u as usize].cores;
+        let Some(alloc) = self.scheds[p].allocate(cores) else {
+            return; // head-of-line waits for a release
+        };
+        self.sched_queues[p].pop_front();
+        self.sched_busy[p] = true;
+        let now = self.q.now();
+        self.prof(now, u, S::AScheduling);
+        let service = self.machine.sched_service(&mut self.rng, alloc.scanned);
+        self.units[u as usize].alloc = Some(alloc);
+        self.q.after(service, Ev::SchedDone(u));
+    }
+
+    fn kick_executer(&mut self) {
+        if self.exec_busy {
+            return;
+        }
+        let Some(u) = self.exec_queue.pop_front() else { return };
+        self.exec_busy = true;
+        // first-generation burst contention: spawning is less gradual
+        let contended = self.spawned_count < self.cfg.generation_size
+            && self.exec_queue.len() > self.cfg.generation_size / 2;
+        let service = if self.cfg.agent_level_launch {
+            self.machine.agent_launch_service(
+                &mut self.rng,
+                self.cfg.executers,
+                self.cfg.executer_nodes,
+                contended,
+            )
+        } else {
+            self.machine
+                .exec_service(&mut self.rng, self.cfg.executers, self.cfg.executer_nodes)
+        };
+        self.q.after(service, Ev::Spawned(u));
+    }
+
+    fn kick_stage_in(&mut self) {
+        if self.stage_in_busy {
+            return;
+        }
+        let Some(u) = self.stage_in_queue.pop_front() else { return };
+        self.stage_in_busy = true;
+        let now = self.q.now();
+        self.prof(now, u, S::AStagingIn);
+        let service = self.machine.stage_service(
+            &mut self.rng,
+            false,
+            self.cfg.stagers_out,
+            self.cfg.stager_nodes,
+        );
+        self.q.after(service, Ev::StageInDone(u));
+    }
+
+    fn kick_stage_out(&mut self) {
+        if self.stage_out_busy {
+            return;
+        }
+        let Some(u) = self.stage_out_queue.pop_front() else { return };
+        self.stage_out_busy = true;
+        let now = self.q.now();
+        self.prof(now, u, S::AStagingOut);
+        let service = self.machine.stage_service(
+            &mut self.rng,
+            true,
+            self.cfg.stagers_out,
+            self.cfg.stager_nodes,
+        );
+        self.q.after(service, Ev::StageOutDone(u));
+    }
+
+    fn to_sched_queue(&mut self, u: u32) {
+        let now = self.q.now();
+        self.prof(now, u, S::ASchedulingPending);
+        let p = self.partition(u);
+        self.sched_queues[p].push_back(u);
+        self.kick_scheduler(p);
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(s, e) => {
+                let now = self.q.now();
+                for u in s..e {
+                    self.prof(now, u, S::AStagingInPending);
+                    if self.cfg.stage_in {
+                        self.stage_in_queue.push_back(u);
+                    } else {
+                        self.to_sched_queue(u);
+                    }
+                }
+                if self.cfg.stage_in {
+                    self.kick_stage_in();
+                }
+            }
+            Ev::StageInDone(u) => {
+                self.stage_in_busy = false;
+                self.to_sched_queue(u);
+                self.kick_stage_in();
+            }
+            Ev::SchedDone(u) => {
+                let p = self.partition(u);
+                self.sched_busy[p] = false;
+                let now = self.q.now();
+                self.prof(now, u, S::AExecutingPending);
+                self.exec_queue.push_back(u);
+                self.kick_executer();
+                self.kick_scheduler(p);
+            }
+            Ev::Spawned(u) => {
+                self.exec_busy = false;
+                self.spawned_count += 1;
+                let now = self.q.now();
+                self.prof(now, u, S::AExecuting);
+                let d = self.units[u as usize].duration;
+                self.q.after(d, Ev::ExecDone(u));
+                self.kick_executer();
+            }
+            Ev::ExecDone(u) => {
+                let now = self.q.now();
+                self.prof(now, u, S::AStagingOutPending);
+                // cores are released when the unit leaves AExecuting
+                if let Some(alloc) = self.units[u as usize].alloc.take() {
+                    let p = self.partition(u);
+                    self.scheds[p].release(&alloc);
+                }
+                if self.cfg.stage_out {
+                    self.stage_out_queue.push_back(u);
+                    self.kick_stage_out();
+                } else {
+                    self.finish_unit(u);
+                }
+                let p = self.partition(u);
+                self.kick_scheduler(p);
+            }
+            Ev::StageOutDone(u) => {
+                self.stage_out_busy = false;
+                self.finish_unit(u);
+                self.kick_stage_out();
+            }
+            Ev::FeedGeneration(g) => {
+                self.feed_generation(g);
+            }
+        }
+    }
+
+    fn finish_unit(&mut self, u: u32) {
+        let now = self.q.now();
+        self.prof(now, u, S::UmStagingOutPending);
+        self.completed += 1;
+        if self.cfg.barrier == BarrierMode::Generation {
+            let g = self
+                .gens
+                .iter()
+                .position(|&(s, e)| u >= s && u < e)
+                .unwrap_or(0) as u32;
+            let done = self.gen_completed.entry(g).or_insert(0);
+            *done += 1;
+            let (s, e) = self.gens[g as usize];
+            if *done == (e - s) as usize && (g as usize + 1) < self.gens.len() {
+                // completion notices travel back to the UM before the
+                // next generation is released
+                let gap = self.db.notice_delay()
+                    + self.db.transfer_time((e - s) as u64)
+                    + self.db.notice_delay();
+                self.q.after(gap, Ev::FeedGeneration(g + 1));
+            }
+        }
+    }
+
+    /// Run to completion; returns the result bundle.
+    pub fn run(mut self) -> AgentSimResult {
+        let wall0 = std::time::Instant::now();
+        self.seed_arrivals();
+        while let Some((_, ev)) = self.q.pop() {
+            self.handle(ev);
+        }
+        assert_eq!(
+            self.completed,
+            self.units.len(),
+            "all units must complete (deadlock in the pipeline?)"
+        );
+        let profile = self.profiler.snapshot();
+        let analysis = Analysis::new(&profile);
+        let cores_per_unit = self.units.first().map(|u| u.cores).unwrap_or(1);
+        AgentSimResult {
+            ttc_a: analysis.ttc_a(),
+            utilization: analysis.utilization(self.cfg.pilot_cores, cores_per_unit),
+            peak_concurrency: analysis.peak_concurrency(),
+            makespan: self.q.now(),
+            events: self.q.processed(),
+            wall_s: wall0.elapsed().as_secs_f64(),
+            profile,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::workload::WorkloadSpec;
+
+    fn stampede() -> ResourceConfig {
+        builtin("stampede").unwrap()
+    }
+
+    fn run(pilot: usize, gens: usize, dur: f64, barrier: BarrierMode) -> AgentSimResult {
+        let wl = WorkloadSpec::generations(pilot, gens, dur).build();
+        let mut cfg = AgentSimConfig::paper_default(pilot);
+        cfg.barrier = barrier;
+        AgentSim::new(&stampede(), cfg, &wl).run()
+    }
+
+    #[test]
+    fn small_run_completes() {
+        let r = run(64, 3, 10.0, BarrierMode::Agent);
+        // optimal = 30s; overheads exist but bounded
+        assert!(r.ttc_a >= 30.0, "ttc_a={}", r.ttc_a);
+        assert!(r.ttc_a < 45.0, "ttc_a={}", r.ttc_a);
+        assert!(r.utilization > 0.5 && r.utilization <= 1.0, "u={}", r.utilization);
+        assert_eq!(r.peak_concurrency, 64);
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_cores() {
+        let r = run(128, 3, 20.0, BarrierMode::Agent);
+        assert!(r.peak_concurrency <= 128);
+    }
+
+    #[test]
+    fn launch_rate_ceiling_fig7() {
+        // 64 s units on a big pilot: concurrency ceiling ~ launch_rate *
+        // duration ~ 64/s * 64 s ~ 4100 (Fig. 7)
+        let r = run(8192, 1, 64.0, BarrierMode::Agent);
+        assert!(
+            (3000..5000).contains(&(r.peak_concurrency as i32)),
+            "peak={} (want ~4100)",
+            r.peak_concurrency
+        );
+    }
+
+    #[test]
+    fn small_pilot_fully_utilized_fig7() {
+        let r = run(1024, 3, 64.0, BarrierMode::Agent);
+        assert_eq!(r.peak_concurrency, 1024, "1k pilot must fill with 64s units");
+    }
+
+    #[test]
+    fn generation_barrier_slower_than_agent() {
+        let a = run(192, 5, 60.0, BarrierMode::Agent);
+        let g = run(192, 5, 60.0, BarrierMode::Generation);
+        assert!(
+            g.ttc_a > a.ttc_a + 5.0,
+            "generation barrier must add idle gaps: agent={} gen={}",
+            a.ttc_a,
+            g.ttc_a
+        );
+    }
+
+    #[test]
+    fn application_barrier_close_to_agent_at_small_scale() {
+        let a = run(96, 5, 60.0, BarrierMode::Agent);
+        let app = run(96, 5, 60.0, BarrierMode::Application);
+        assert!(
+            (app.ttc_a - a.ttc_a).abs() / a.ttc_a < 0.10,
+            "at small core counts the difference is negligible: agent={} app={}",
+            a.ttc_a,
+            app.ttc_a
+        );
+    }
+
+    #[test]
+    fn utilization_improves_with_duration_fig9() {
+        let short = run(1024, 3, 16.0, BarrierMode::Agent);
+        let long = run(1024, 3, 256.0, BarrierMode::Agent);
+        assert!(
+            long.utilization > short.utilization,
+            "longer units utilize better: {} vs {}",
+            long.utilization,
+            short.utilization
+        );
+        assert!(long.utilization > 0.9, "u={}", long.utilization);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = run(64, 2, 10.0, BarrierMode::Agent);
+        let r2 = run(64, 2, 10.0, BarrierMode::Agent);
+        assert_eq!(r1.ttc_a, r2.ttc_a);
+        assert_eq!(r1.events, r2.events);
+    }
+
+    #[test]
+    fn profile_has_full_state_coverage() {
+        let r = run(32, 2, 5.0, BarrierMode::Agent);
+        let a = Analysis::new(&r.profile);
+        let phases = a.unit_phases();
+        assert_eq!(phases.len(), 64);
+        for p in &phases {
+            assert!(p.scheduling >= 0.0 && p.pickup >= 0.0);
+            assert!((p.runtime - 5.0).abs() < 0.5);
+            assert!(p.occupation_overhead() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn partitioned_scheduler_lifts_sched_bottleneck() {
+        // paper SVI future work (i): with 4 executers the launch rate
+        // (~211/s) exceeds the single scheduler's 158/s, so the
+        // scheduler binds; partitioning the cores over 4 concurrent
+        // schedulers removes that bottleneck.
+        let wl = WorkloadSpec::generations(2048, 3, 8.0).build();
+        let mut one = AgentSimConfig::paper_default(2048);
+        one.executers = 4;
+        let r1 = AgentSim::new(&stampede(), one, &wl).run();
+        let mut four = AgentSimConfig::paper_default(2048);
+        four.executers = 4;
+        four.schedulers = 4;
+        let r4 = AgentSim::new(&stampede(), four, &wl).run();
+        assert!(
+            r4.ttc_a < r1.ttc_a * 0.95,
+            "partitioning must help a sched-bound config: 1 sched {:.1}s vs 4 scheds {:.1}s",
+            r1.ttc_a,
+            r4.ttc_a
+        );
+        assert!(r4.peak_concurrency > r1.peak_concurrency);
+    }
+
+    #[test]
+    fn partitioned_scheduler_same_result_when_not_bound() {
+        // with the default single executer the launch rate (64/s) binds,
+        // so extra schedulers change little
+        let wl = WorkloadSpec::generations(512, 3, 64.0).build();
+        let mut one = AgentSimConfig::paper_default(512);
+        one.schedulers = 1;
+        let mut two = AgentSimConfig::paper_default(512);
+        two.schedulers = 2;
+        let r1 = AgentSim::new(&stampede(), one, &wl).run();
+        let r2 = AgentSim::new(&stampede(), two, &wl).run();
+        assert!((r1.ttc_a - r2.ttc_a).abs() / r1.ttc_a < 0.05);
+    }
+
+    #[test]
+    fn torus_scheduler_path_works() {
+        // Blue Waters launches at ~9 units/s, so 30 s units are needed to
+        // fill 64 cores (ceiling = launch_rate * duration = 270).
+        let wl = WorkloadSpec::generations(64, 2, 30.0).build();
+        let mut cfg = AgentSimConfig::paper_default(64);
+        cfg.torus = true;
+        let r = AgentSim::new(&builtin("bluewaters").unwrap(), cfg, &wl).run();
+        assert!(r.ttc_a >= 60.0);
+        assert_eq!(r.peak_concurrency as usize, 64);
+    }
+}

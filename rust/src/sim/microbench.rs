@@ -1,0 +1,240 @@
+//! Component micro-benchmarks (paper §IV-B).
+//!
+//! RP's micro-benchmark launches a pilot with one unit; when the unit
+//! enters the component under investigation it is cloned 10,000 times;
+//! clones are dropped downstream, so the component is stressed in
+//! isolation and the measurement is an upper bound of component
+//! performance.  We reproduce the same protocol against the calibrated
+//! service models: all clones arrive at t=0, the component drains them,
+//! and the completion timestamps yield the units/s rate series.
+
+use super::machine::MachineModel;
+use crate::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode};
+use crate::config::ResourceConfig;
+use crate::util::rng::Pcg;
+use crate::util::stats::{self, Summary};
+
+/// Which component a micro-benchmark stresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    Scheduler,
+    StagerIn,
+    StagerOut,
+    Executer,
+}
+
+impl Component {
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::Scheduler => "scheduler",
+            Component::StagerIn => "stager_in",
+            Component::StagerOut => "stager_out",
+            Component::Executer => "executer",
+        }
+    }
+}
+
+/// Micro-benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroBench {
+    pub component: Component,
+    /// Clones of the probe unit (paper: 10,000).
+    pub clones: usize,
+    /// Component instances.
+    pub instances: usize,
+    /// Compute nodes the instances are spread over.
+    pub nodes: usize,
+    pub seed: u64,
+}
+
+impl MicroBench {
+    pub fn new(component: Component) -> Self {
+        MicroBench { component, clones: 10_000, instances: 1, nodes: 1, seed: 0 }
+    }
+
+    pub fn instances(mut self, instances: usize, nodes: usize) -> Self {
+        self.instances = instances;
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn clones(mut self, clones: usize) -> Self {
+        self.clones = clones;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run against `resource`'s machine model; returns per-clone
+    /// completion timestamps (virtual seconds).
+    pub fn run(&self, resource: &ResourceConfig) -> MicroResult {
+        let machine = MachineModel::new(resource.clone());
+        let mut rng = Pcg::seeded(self.seed);
+        let mut t = 0.0;
+        let mut completions = Vec::with_capacity(self.clones);
+        match self.component {
+            Component::Scheduler => {
+                // The scheduler micro-bench allocates and deallocates one
+                // core per clone on a near-empty pilot (clones drop right
+                // after scheduling), driving the real allocator so the
+                // scan cost is the real scan cost.
+                let mut sched = ContinuousScheduler::new(
+                    2,
+                    resource.cores_per_node,
+                    SearchMode::Linear,
+                );
+                for _ in 0..self.clones {
+                    let alloc = sched.allocate(1).expect("near-empty pilot");
+                    t += machine.sched_service(&mut rng, alloc.scanned);
+                    sched.release(&alloc);
+                    completions.push(t);
+                }
+            }
+            Component::StagerIn | Component::StagerOut => {
+                let output = self.component == Component::StagerOut;
+                for _ in 0..self.clones {
+                    t += machine.stage_service(&mut rng, output, self.instances, self.nodes);
+                    completions.push(t);
+                }
+            }
+            Component::Executer => {
+                for _ in 0..self.clones {
+                    t += machine.exec_service(&mut rng, self.instances, self.nodes);
+                    completions.push(t);
+                }
+            }
+        }
+        MicroResult { completions }
+    }
+}
+
+/// Micro-benchmark output.
+#[derive(Debug)]
+pub struct MicroResult {
+    /// Completion timestamps (virtual time).
+    pub completions: Vec<f64>,
+}
+
+impl MicroResult {
+    /// Steady-state throughput (units/s, ramp trimmed) — the number the
+    /// paper reports as `mean ± std`.
+    pub fn steady_rate(&self) -> Summary {
+        stats::steady_rate(&self.completions, 1.0, 0.1)
+    }
+
+    /// Full 1-second-binned rate series (the Figs. 4-6 traces).
+    pub fn rate_series(&self) -> Vec<(f64, f64)> {
+        stats::rate_series(&self.completions, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+
+    fn rate(c: Component, label: &str, inst: usize, nodes: usize) -> Summary {
+        MicroBench::new(c)
+            .instances(inst, nodes)
+            .run(&builtin(label).unwrap())
+            .steady_rate()
+    }
+
+    #[test]
+    fn fig4_scheduler_rates() {
+        for (label, want, tol) in
+            [("bluewaters", 72.0, 8.0), ("comet", 211.0, 21.0), ("stampede", 158.0, 16.0)]
+        {
+            let r = rate(Component::Scheduler, label, 1, 1);
+            assert!(
+                (r.mean - want).abs() < tol,
+                "{label} scheduler: got {:.1}, want {want}±{tol}",
+                r.mean
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_stager_rates() {
+        for (label, want, tol) in
+            [("bluewaters", 492.0, 50.0), ("comet", 994.0, 100.0), ("stampede", 771.0, 80.0)]
+        {
+            let r = rate(Component::StagerOut, label, 1, 1);
+            assert!(
+                (r.mean - want).abs() < tol,
+                "{label} stager: got {:.1}, want {want}±{tol}",
+                r.mean
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_bottom_bluewaters_scaling() {
+        // flat on 1-2 nodes, scaling with node pairs beyond
+        let r1 = rate(Component::StagerOut, "bluewaters", 4, 1).mean;
+        let r2 = rate(Component::StagerOut, "bluewaters", 4, 2).mean;
+        let r4 = rate(Component::StagerOut, "bluewaters", 4, 4).mean;
+        let r8 = rate(Component::StagerOut, "bluewaters", 8, 8).mean;
+        assert!((r1 - r2).abs() / r1 < 0.15, "1 vs 2 nodes flat: {r1} {r2}");
+        assert!(r4 > 1.7 * r2, "4 nodes ~2x: {r4} vs {r2}");
+        assert!(r8 > 1.4 * r4, "8 nodes scale on: {r8} vs {r4}");
+        assert!((900.0..1250.0).contains(&r4), "r4={r4}");
+        assert!((1400.0..2150.0).contains(&r8), "r8={r8}");
+    }
+
+    #[test]
+    fn fig6_executer_rates() {
+        for (label, want, tol) in
+            [("bluewaters", 11.0, 2.0), ("comet", 102.0, 15.0), ("stampede", 171.0, 18.0)]
+        {
+            let r = rate(Component::Executer, label, 1, 1);
+            assert!(
+                (r.mean - want).abs() < tol,
+                "{label} executer: got {:.1}, want {want}±{tol}",
+                r.mean
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_bottom_stampede_scaling_placement_independent() {
+        let r_8x2 = rate(Component::Executer, "stampede", 16, 8).mean;
+        let r_4x4 = rate(Component::Executer, "stampede", 16, 4).mean;
+        let r_8x4 = rate(Component::Executer, "stampede", 32, 8).mean;
+        assert!(
+            (r_8x2 - r_4x4).abs() / r_8x2 < 0.12,
+            "placement independent: {r_8x2} vs {r_4x4}"
+        );
+        assert!((1000.0..1400.0).contains(&r_8x2), "16 inst: {r_8x2}");
+        assert!((1450.0..1900.0).contains(&r_8x4), "32 inst: {r_8x4}");
+    }
+
+    #[test]
+    fn executer_jitter_grows_with_crowding() {
+        let lo = rate(Component::Executer, "stampede", 8, 8);
+        let hi = rate(Component::Executer, "stampede", 32, 8);
+        assert!(
+            hi.std / hi.mean > lo.std / lo.mean,
+            "relative jitter must grow: {:?} vs {:?}",
+            hi,
+            lo
+        );
+    }
+
+    #[test]
+    fn input_stager_third_of_output() {
+        let out = rate(Component::StagerOut, "stampede", 1, 1).mean;
+        let inp = rate(Component::StagerIn, "stampede", 1, 1).mean;
+        assert!(inp < out / 2.0 && inp > out / 5.0, "in={inp} out={out}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = rate(Component::Scheduler, "comet", 1, 1);
+        let b = rate(Component::Scheduler, "comet", 1, 1);
+        assert_eq!(a.mean, b.mean);
+    }
+}

@@ -1,0 +1,28 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's experiments ran on Stampede, Comet and Blue Waters with
+//! pilots of up to 8,192 cores.  Those machines are not available here,
+//! so the figure benches run the *same scheduling algorithms and agent
+//! pipeline logic* against calibrated machine models in virtual time:
+//!
+//! * [`engine`] — the event queue / virtual clock;
+//! * [`machine`] — per-resource service-time models (scheduler ops,
+//!   Lustre metadata staging with Gemini-router topology caps, node-OS
+//!   process-spawn costs with instance-scaling saturation), calibrated
+//!   to the component throughputs the paper reports (see
+//!   `configs/*.json` and DESIGN.md §2);
+//! * [`agent_sim`] — the Agent pipeline (stage-in -> schedule -> execute
+//!   -> stage-out) with barrier feeders, driving a real
+//!   [`crate::agent::CoreScheduler`] and recording a real
+//!   [`crate::profiler::Profiler`] trace;
+//! * [`microbench`] — the clone-10k-units-in-one-component micro-bench
+//!   harness of §IV-B.
+
+pub mod agent_sim;
+pub mod engine;
+pub mod machine;
+pub mod microbench;
+
+pub use agent_sim::{AgentSim, AgentSimConfig, AgentSimResult};
+pub use engine::EventQueue;
+pub use machine::MachineModel;

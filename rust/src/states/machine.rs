@@ -1,0 +1,140 @@
+//! Generic state-machine wrapper enforcing transition legality and
+//! recording a timestamped history (which the profiler consumes).
+
+use crate::error::{Error, Result};
+use crate::states::{PilotState, UnitState};
+
+/// A state with a legality relation.
+pub trait State: Copy + PartialEq + std::fmt::Debug {
+    fn can_transition(self, to: Self) -> bool;
+    fn is_final(self) -> bool;
+    fn transition_error(from: Self, to: Self) -> Error;
+}
+
+impl State for PilotState {
+    fn can_transition(self, to: Self) -> bool {
+        PilotState::can_transition(self, to)
+    }
+    fn is_final(self) -> bool {
+        PilotState::is_final(self)
+    }
+    fn transition_error(from: Self, to: Self) -> Error {
+        Error::PilotTransition { from, to }
+    }
+}
+
+impl State for UnitState {
+    fn can_transition(self, to: Self) -> bool {
+        UnitState::can_transition(self, to)
+    }
+    fn is_final(self) -> bool {
+        UnitState::is_final(self)
+    }
+    fn transition_error(from: Self, to: Self) -> Error {
+        Error::UnitTransition { from, to }
+    }
+}
+
+/// Stateful entity core: current state + timestamped history.
+#[derive(Debug, Clone)]
+pub struct StateMachine<S: State> {
+    current: S,
+    history: Vec<(f64, S)>,
+}
+
+impl<S: State> StateMachine<S> {
+    /// Start in `initial` at time `t`.
+    pub fn new(initial: S, t: f64) -> Self {
+        StateMachine { current: initial, history: vec![(t, initial)] }
+    }
+
+    pub fn state(&self) -> S {
+        self.current
+    }
+
+    pub fn is_final(&self) -> bool {
+        self.current.is_final()
+    }
+
+    /// Attempt a transition at time `t`; errors if illegal.
+    pub fn advance(&mut self, to: S, t: f64) -> Result<()> {
+        if !self.current.can_transition(to) {
+            return Err(S::transition_error(self.current, to));
+        }
+        self.current = to;
+        self.history.push((t, to));
+        Ok(())
+    }
+
+    /// Timestamped (t, state) history, in order.
+    pub fn history(&self) -> &[(f64, S)] {
+        &self.history
+    }
+
+    /// Time at which the entity *entered* `state` (first occurrence).
+    pub fn entered(&self, state: S) -> Option<f64> {
+        self.history.iter().find(|(_, s)| *s == state).map(|(t, _)| *t)
+    }
+
+    /// Duration spent in `state` (entered(state) .. entered(next)); `None`
+    /// if the state was never entered or never left.
+    pub fn duration_in(&self, state: S) -> Option<f64> {
+        let idx = self.history.iter().position(|(_, s)| *s == state)?;
+        let t0 = self.history[idx].0;
+        let t1 = self.history.get(idx + 1)?.0;
+        Some(t1 - t0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_machine_happy_path() {
+        let mut m = StateMachine::new(PilotState::New, 0.0);
+        m.advance(PilotState::PmLaunchingPending, 1.0).unwrap();
+        m.advance(PilotState::PmLaunching, 2.0).unwrap();
+        m.advance(PilotState::PmLaunch, 3.0).unwrap();
+        m.advance(PilotState::PActive, 10.0).unwrap();
+        m.advance(PilotState::Done, 100.0).unwrap();
+        assert!(m.is_final());
+        assert_eq!(m.entered(PilotState::PActive), Some(10.0));
+        assert_eq!(m.duration_in(PilotState::PActive), Some(90.0));
+        assert_eq!(m.history().len(), 6);
+    }
+
+    #[test]
+    fn illegal_transition_rejected() {
+        let mut m = StateMachine::new(PilotState::New, 0.0);
+        let err = m.advance(PilotState::PActive, 1.0).unwrap_err();
+        assert!(matches!(err, Error::PilotTransition { .. }));
+        assert_eq!(m.state(), PilotState::New); // unchanged
+    }
+
+    #[test]
+    fn unit_machine_with_skips() {
+        let mut m = StateMachine::new(UnitState::New, 0.0);
+        m.advance(UnitState::UmSchedulingPending, 0.1).unwrap();
+        m.advance(UnitState::UmScheduling, 0.2).unwrap();
+        m.advance(UnitState::AStagingInPending, 0.3).unwrap(); // skip staging
+        m.advance(UnitState::ASchedulingPending, 0.4).unwrap();
+        m.advance(UnitState::AScheduling, 0.5).unwrap();
+        m.advance(UnitState::AExecutingPending, 0.6).unwrap();
+        m.advance(UnitState::AExecuting, 0.7).unwrap();
+        m.advance(UnitState::AStagingOutPending, 10.7).unwrap();
+        m.advance(UnitState::UmStagingOutPending, 10.8).unwrap();
+        m.advance(UnitState::Done, 10.9).unwrap();
+        assert!(m.is_final());
+        assert_eq!(m.duration_in(UnitState::AExecuting), Some(10.0));
+    }
+
+    #[test]
+    fn cancel_midway() {
+        let mut m = StateMachine::new(UnitState::New, 0.0);
+        m.advance(UnitState::UmSchedulingPending, 0.1).unwrap();
+        m.advance(UnitState::Canceled, 0.2).unwrap();
+        assert!(m.is_final());
+        assert!(m.advance(UnitState::Done, 0.3).is_err());
+    }
+}

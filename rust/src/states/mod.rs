@@ -1,0 +1,13 @@
+//! Pilot and Unit state models (paper §III-A, Figs. 2 & 3).
+//!
+//! Both entity kinds are stateful with strictly sequential lifecycles;
+//! every transition can instead end in `Failed` or `Canceled`.  The
+//! [`machine::StateMachine`] wrapper enforces legality and notifies the
+//! profiler on every transition.
+
+pub mod machine;
+mod pilot;
+mod unit;
+
+pub use pilot::PilotState;
+pub use unit::UnitState;

@@ -1,0 +1,136 @@
+//! Pilot state model (paper Fig. 2).
+
+use std::fmt;
+
+/// Lifecycle states of a pilot.
+///
+/// `New -> PmLaunchingPending -> PmLaunching -> PmLaunch -> PActive ->
+/// Done`; any state may instead transition to `Failed` or `Canceled`.
+/// The `PActive` transition is dictated by the resource's RM but managed
+/// by the PilotManager (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PilotState {
+    /// Instantiated by the PilotManager.
+    New,
+    /// Queued inside the PilotManager's Launcher.
+    PmLaunchingPending,
+    /// Launcher is materializing the submission (SAGA job description).
+    PmLaunching,
+    /// Submitted to the resource manager; waiting in the batch queue.
+    PmLaunch,
+    /// The allocation started and the Agent bootstrapped.
+    PActive,
+    /// Walltime exhausted (or drained) — final.
+    Done,
+    /// Failed — final.
+    Failed,
+    /// Canceled by the application — final.
+    Canceled,
+}
+
+impl PilotState {
+    /// All states, in lifecycle order (finals last).
+    pub const ALL: [PilotState; 8] = [
+        PilotState::New,
+        PilotState::PmLaunchingPending,
+        PilotState::PmLaunching,
+        PilotState::PmLaunch,
+        PilotState::PActive,
+        PilotState::Done,
+        PilotState::Failed,
+        PilotState::Canceled,
+    ];
+
+    /// Is this a terminal state?
+    pub fn is_final(self) -> bool {
+        matches!(self, PilotState::Done | PilotState::Failed | PilotState::Canceled)
+    }
+
+    /// The single legal successor in the nominal (non-failure) lifecycle.
+    pub fn next(self) -> Option<PilotState> {
+        use PilotState::*;
+        match self {
+            New => Some(PmLaunchingPending),
+            PmLaunchingPending => Some(PmLaunching),
+            PmLaunching => Some(PmLaunch),
+            PmLaunch => Some(PActive),
+            PActive => Some(Done),
+            _ => None,
+        }
+    }
+
+    /// Is `to` a legal transition target from `self`?
+    /// (Sequential successor, or failure/cancel from any non-final state.)
+    pub fn can_transition(self, to: PilotState) -> bool {
+        if self.is_final() {
+            return false;
+        }
+        if matches!(to, PilotState::Failed | PilotState::Canceled) {
+            return true;
+        }
+        self.next() == Some(to)
+    }
+
+    /// RP-style state name (for profiles & logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            PilotState::New => "NEW",
+            PilotState::PmLaunchingPending => "PM_LAUNCHING_PENDING",
+            PilotState::PmLaunching => "PM_LAUNCHING",
+            PilotState::PmLaunch => "PM_LAUNCH",
+            PilotState::PActive => "P_ACTIVE",
+            PilotState::Done => "DONE",
+            PilotState::Failed => "FAILED",
+            PilotState::Canceled => "CANCELED",
+        }
+    }
+}
+
+impl fmt::Display for PilotState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_chain_reaches_done() {
+        let mut s = PilotState::New;
+        let mut hops = 0;
+        while let Some(n) = s.next() {
+            assert!(s.can_transition(n));
+            s = n;
+            hops += 1;
+        }
+        assert_eq!(s, PilotState::Done);
+        assert_eq!(hops, 5);
+    }
+
+    #[test]
+    fn failure_from_any_nonfinal() {
+        for s in PilotState::ALL {
+            if !s.is_final() {
+                assert!(s.can_transition(PilotState::Failed));
+                assert!(s.can_transition(PilotState::Canceled));
+            }
+        }
+    }
+
+    #[test]
+    fn finals_are_sinks() {
+        for from in [PilotState::Done, PilotState::Failed, PilotState::Canceled] {
+            for to in PilotState::ALL {
+                assert!(!from.can_transition(to));
+            }
+        }
+    }
+
+    #[test]
+    fn no_skipping() {
+        assert!(!PilotState::New.can_transition(PilotState::PActive));
+        assert!(!PilotState::PmLaunch.can_transition(PilotState::Done));
+    }
+}

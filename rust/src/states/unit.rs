@@ -1,0 +1,221 @@
+//! Unit state model (paper Fig. 3).
+
+use std::fmt;
+
+/// Lifecycle states of a compute unit.
+///
+/// The nominal chain (staging states are optional, taken only when the
+/// unit declares input/output staging):
+///
+/// `New -> UmSchedulingPending -> UmScheduling -> [UmStagingInPending ->
+/// UmStagingIn] -> AStagingInPending -> [AStagingIn] ->
+/// ASchedulingPending -> AScheduling -> AExecutingPending -> AExecuting
+/// -> AStagingOutPending -> [AStagingOut] -> UmStagingOutPending ->
+/// [UmStagingOut] -> Done`
+///
+/// Any state may instead transition to `Failed` or `Canceled`.
+/// Cores are BUSY from the end of `AScheduling` until the unit enters
+/// `AStagingOutPending` (paper Fig. 8 "core occupation").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum UnitState {
+    /// Instantiated by the UnitManager.
+    New,
+    /// Waiting for the UnitManager scheduler.
+    UmSchedulingPending,
+    /// Being bound to a pilot (late binding).
+    UmScheduling,
+    /// Waiting for UM-side input staging.
+    UmStagingInPending,
+    /// UnitManager pushes input data toward the resource.
+    UmStagingIn,
+    /// In the coordination store, waiting for the Agent to pull it.
+    AStagingInPending,
+    /// Agent-side input staging.
+    AStagingIn,
+    /// In the Agent Scheduler's wait queue.
+    ASchedulingPending,
+    /// Agent Scheduler searching cores for the unit.
+    AScheduling,
+    /// Cores assigned; waiting for an Executer to pick it up.
+    AExecutingPending,
+    /// Executing on the pilot's cores.
+    AExecuting,
+    /// Execution done; cores released; waiting for output staging.
+    AStagingOutPending,
+    /// Agent-side output staging.
+    AStagingOut,
+    /// Waiting for UM-side output staging.
+    UmStagingOutPending,
+    /// UnitManager stages output to its destination.
+    UmStagingOut,
+    /// Final.
+    Done,
+    /// Final.
+    Failed,
+    /// Final.
+    Canceled,
+}
+
+impl UnitState {
+    /// All states in lifecycle order (finals last).
+    pub const ALL: [UnitState; 18] = [
+        UnitState::New,
+        UnitState::UmSchedulingPending,
+        UnitState::UmScheduling,
+        UnitState::UmStagingInPending,
+        UnitState::UmStagingIn,
+        UnitState::AStagingInPending,
+        UnitState::AStagingIn,
+        UnitState::ASchedulingPending,
+        UnitState::AScheduling,
+        UnitState::AExecutingPending,
+        UnitState::AExecuting,
+        UnitState::AStagingOutPending,
+        UnitState::AStagingOut,
+        UnitState::UmStagingOutPending,
+        UnitState::UmStagingOut,
+        UnitState::Done,
+        UnitState::Failed,
+        UnitState::Canceled,
+    ];
+
+    pub fn is_final(self) -> bool {
+        matches!(self, UnitState::Done | UnitState::Failed | UnitState::Canceled)
+    }
+
+    /// Position in the nominal chain (used for ordering / skip checks).
+    fn ord_idx(self) -> usize {
+        UnitState::ALL.iter().position(|s| *s == self).unwrap()
+    }
+
+    /// Which optional states may be skipped when staging is not required.
+    fn is_optional(self) -> bool {
+        matches!(
+            self,
+            UnitState::UmStagingInPending
+                | UnitState::UmStagingIn
+                | UnitState::AStagingIn
+                | UnitState::AStagingOut
+                | UnitState::UmStagingOut
+        )
+    }
+
+    /// Is `to` a legal transition from `self`?  Forward moves are legal
+    /// iff every skipped intermediate state is optional (staging).
+    pub fn can_transition(self, to: UnitState) -> bool {
+        if self.is_final() {
+            return false;
+        }
+        if matches!(to, UnitState::Failed | UnitState::Canceled) {
+            return true;
+        }
+        if to == UnitState::Done {
+            // Done is reached from UmStagingOut, or from
+            // UmStagingOutPending when output staging is skipped.
+            return matches!(
+                self,
+                UnitState::UmStagingOut | UnitState::UmStagingOutPending
+            );
+        }
+        let (a, b) = (self.ord_idx(), to.ord_idx());
+        if b <= a {
+            return false;
+        }
+        UnitState::ALL[a + 1..b].iter().all(|s| s.is_optional())
+    }
+
+    /// RP-style state name.
+    pub fn name(self) -> &'static str {
+        use UnitState::*;
+        match self {
+            New => "NEW",
+            UmSchedulingPending => "UMGR_SCHEDULING_PENDING",
+            UmScheduling => "UMGR_SCHEDULING",
+            UmStagingInPending => "UMGR_STAGING_INPUT_PENDING",
+            UmStagingIn => "UMGR_STAGING_INPUT",
+            AStagingInPending => "AGENT_STAGING_INPUT_PENDING",
+            AStagingIn => "AGENT_STAGING_INPUT",
+            ASchedulingPending => "AGENT_SCHEDULING_PENDING",
+            AScheduling => "AGENT_SCHEDULING",
+            AExecutingPending => "AGENT_EXECUTING_PENDING",
+            AExecuting => "AGENT_EXECUTING",
+            AStagingOutPending => "AGENT_STAGING_OUTPUT_PENDING",
+            AStagingOut => "AGENT_STAGING_OUTPUT",
+            UmStagingOutPending => "UMGR_STAGING_OUTPUT_PENDING",
+            UmStagingOut => "UMGR_STAGING_OUTPUT",
+            Done => "DONE",
+            Failed => "FAILED",
+            Canceled => "CANCELED",
+        }
+    }
+}
+
+impl fmt::Display for UnitState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use UnitState::*;
+
+    #[test]
+    fn nominal_full_chain() {
+        // with staging everywhere, every consecutive hop is legal
+        let chain = &UnitState::ALL[..16]; // New..=Done
+        for w in chain.windows(2) {
+            assert!(
+                w[0].can_transition(w[1]),
+                "{} -> {} should be legal",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn skip_staging_states() {
+        // no UM input staging:
+        assert!(UmScheduling.can_transition(AStagingInPending));
+        // no agent input staging:
+        assert!(AStagingInPending.can_transition(ASchedulingPending));
+        // no output staging at all:
+        assert!(AStagingOutPending.can_transition(UmStagingOutPending));
+        assert!(UmStagingOutPending.can_transition(Done));
+    }
+
+    #[test]
+    fn cannot_skip_mandatory() {
+        assert!(!UmScheduling.can_transition(AScheduling));
+        assert!(!ASchedulingPending.can_transition(AExecutingPending));
+        assert!(!AExecuting.can_transition(Done));
+        assert!(!New.can_transition(AExecuting));
+    }
+
+    #[test]
+    fn no_backwards() {
+        assert!(!AExecuting.can_transition(AScheduling));
+        assert!(!Done.can_transition(New));
+    }
+
+    #[test]
+    fn failure_always_possible() {
+        for s in UnitState::ALL {
+            if !s.is_final() {
+                assert!(s.can_transition(Failed));
+                assert!(s.can_transition(Canceled));
+            } else {
+                assert!(!s.can_transition(Failed));
+            }
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        use std::collections::HashSet;
+        let names: HashSet<_> = UnitState::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), UnitState::ALL.len());
+    }
+}

@@ -1,0 +1,9 @@
+//! Mini property-based testing kit (the vendor set has no `proptest`).
+//!
+//! Deterministic, seeded generators on top of [`crate::util::rng::Pcg`]
+//! plus a property runner with linear input shrinking for integer-vector
+//! cases.  Used by the scheduler / state-machine / JSON invariant tests.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

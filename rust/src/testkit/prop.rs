@@ -1,0 +1,180 @@
+//! Property runner + generators.
+
+use crate::util::rng::Pcg;
+
+/// A value generator: draws a case from the PRNG.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Pcg) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Pcg) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg) -> T {
+        (self.f)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| g(self.sample(rng)))
+    }
+}
+
+/// Integers uniform in [lo, hi].
+pub fn ints(lo: i64, hi: i64) -> Gen<i64> {
+    assert!(lo <= hi);
+    Gen::new(move |rng| lo + rng.below((hi - lo + 1) as u64) as i64)
+}
+
+/// usize uniform in [lo, hi].
+pub fn usizes(lo: usize, hi: usize) -> Gen<usize> {
+    ints(lo as i64, hi as i64).map(|v| v as usize)
+}
+
+/// Floats uniform in [lo, hi).
+pub fn floats(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng| rng.range(lo, hi))
+}
+
+/// Vec of `inner` with length in [min_len, max_len].
+pub fn vecs<T: 'static>(inner: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |rng| {
+        let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+        (0..len).map(|_| inner.sample(rng)).collect()
+    })
+}
+
+/// One of the given values.
+pub fn one_of<T: Clone + 'static>(items: Vec<T>) -> Gen<T> {
+    Gen::new(move |rng| rng.choice(&items).clone())
+}
+
+/// ASCII strings (printable) with length in [0, max_len].
+pub fn strings(max_len: usize) -> Gen<String> {
+    Gen::new(move |rng| {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        (0..len)
+            .map(|_| (0x20 + rng.below(0x5f) as u8) as char)
+            .collect()
+    })
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// debug dump of the (shrunk, when possible) failing case.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = std::env::var("RP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Pcg::seeded(seed);
+    for case_idx in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case {case_idx}):\n  input = {input:?}\n\
+                 re-run with RP_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] for `Vec<T>` inputs, with greedy element-removal
+/// shrinking on failure.
+pub fn forall_vec<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<Vec<T>>,
+    cases: usize,
+    prop: impl Fn(&[T]) -> bool,
+) {
+    let seed = std::env::var("RP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Pcg::seeded(seed);
+    for case_idx in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_vec(input, &prop);
+            panic!(
+                "property failed (seed={seed}, case {case_idx}):\n  shrunk input = {shrunk:?}\n\
+                 re-run with RP_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Greedy removal shrinking: repeatedly drop elements while the property
+/// still fails.
+fn shrink_vec<T: Clone>(mut input: Vec<T>, prop: &impl Fn(&[T]) -> bool) -> Vec<T> {
+    loop {
+        let mut improved = false;
+        let mut i = 0;
+        while i < input.len() {
+            let mut candidate = input.clone();
+            candidate.remove(i);
+            if !prop(&candidate) {
+                input = candidate;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !improved {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ints_in_range() {
+        forall(&ints(-5, 5), 500, |v| (-5..=5).contains(v));
+    }
+
+    #[test]
+    fn vecs_lengths() {
+        forall(&vecs(ints(0, 9), 2, 6), 200, |v| v.len() >= 2 && v.len() <= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(&ints(0, 100), 1000, |v| *v < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_minimal() {
+        // property: no vec contains an element > 90. Failing cases shrink
+        // to a single offending element.
+        let g = vecs(ints(0, 100), 0, 20);
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            if v.iter().any(|x| *x > 90) {
+                let shrunk = shrink_vec(v, &|s: &[i64]| !s.iter().any(|x| *x > 90));
+                assert_eq!(shrunk.len(), 1);
+                assert!(shrunk[0] > 90);
+                return;
+            }
+        }
+        panic!("no failing case generated");
+    }
+
+    #[test]
+    fn strings_printable() {
+        forall(&strings(16), 200, |s| s.chars().all(|c| (' '..='~').contains(&c)));
+    }
+
+    #[test]
+    fn one_of_picks_members() {
+        forall(&one_of(vec![2, 4, 8]), 100, |v| [2, 4, 8].contains(v));
+    }
+}

@@ -1,0 +1,43 @@
+//! Small self-built substrates: JSON, PRNG + distributions, statistics.
+//!
+//! The offline vendor set has no `serde`/`rand`/`criterion`, so the pieces
+//! the coordinator needs are implemented (and tested) here.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Wall-clock seconds since the process-wide epoch (first call).
+/// Used by the profiler in real mode; sim mode uses the virtual clock.
+pub fn now() -> f64 {
+    use std::time::Instant;
+    static EPOCH: once_cell::sync::Lazy<Instant> =
+        once_cell::sync::Lazy::new(Instant::now);
+    EPOCH.elapsed().as_secs_f64()
+}
+
+/// Sleep helper taking fractional seconds.
+pub fn sleep(secs: f64) {
+    if secs > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_is_monotonic() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sleep_zero_is_noop() {
+        let a = now();
+        sleep(0.0);
+        assert!(now() - a < 0.5);
+    }
+}

@@ -1,0 +1,239 @@
+//! Statistics helpers: summary stats, percentiles, time-binned rate
+//! series (the "units handled per second" traces of Figs. 4–6), and step
+//! functions for concurrency traces (Figs. 7 & 10).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: std(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// `mean ± std` display, RP-paper style.
+    pub fn pm(&self) -> String {
+        format!("{:.1} ± {:.1}", self.mean, self.std)
+    }
+}
+
+/// Percentile via linear interpolation (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Bin event timestamps into a per-`bin`-second rate series.
+/// Returns (bin_center_time, events_per_second) pairs.
+pub fn rate_series(timestamps: &[f64], bin: f64) -> Vec<(f64, f64)> {
+    if timestamps.is_empty() || bin <= 0.0 {
+        return vec![];
+    }
+    let t0 = timestamps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let t1 = timestamps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let nbins = (((t1 - t0) / bin).floor() as usize) + 1;
+    let mut counts = vec![0usize; nbins];
+    for &t in timestamps {
+        let idx = (((t - t0) / bin) as usize).min(nbins - 1);
+        counts[idx] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (t0 + (i as f64 + 0.5) * bin, c as f64 / bin))
+        .collect()
+}
+
+/// Steady-state throughput: mean ± std of the rate series with the first
+/// and last `trim` fraction of bins dropped (ramp-up / drain excluded) —
+/// this matches how the paper reports component rates.
+pub fn steady_rate(timestamps: &[f64], bin: f64, trim: f64) -> Summary {
+    let series = rate_series(timestamps, bin);
+    let n = series.len();
+    let skip = ((n as f64) * trim) as usize;
+    let rates: Vec<f64> = series
+        .iter()
+        .skip(skip)
+        .take(n.saturating_sub(2 * skip))
+        .map(|(_, r)| *r)
+        .collect();
+    if rates.is_empty() {
+        Summary::of(&series.iter().map(|(_, r)| *r).collect::<Vec<_>>())
+    } else {
+        Summary::of(&rates)
+    }
+}
+
+/// Build a concurrency step-trace from (start, end) interval pairs:
+/// number of intervals active at each change point.
+pub fn concurrency_trace(intervals: &[(f64, f64)]) -> Vec<(f64, i64)> {
+    let mut events: Vec<(f64, i64)> = Vec::with_capacity(intervals.len() * 2);
+    for &(s, e) in intervals {
+        events.push((s, 1));
+        events.push((e, -1));
+    }
+    events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut level = 0i64;
+    let mut out = Vec::with_capacity(events.len());
+    for (t, d) in events {
+        level += d;
+        out.push((t, level));
+    }
+    out
+}
+
+/// Peak of a concurrency trace.
+pub fn peak_concurrency(intervals: &[(f64, f64)]) -> i64 {
+    concurrency_trace(intervals).iter().map(|(_, l)| *l).max().unwrap_or(0)
+}
+
+/// Integrated busy core-seconds over [t0, t1] given (start, end) busy
+/// intervals, divided by capacity*(t1-t0): the paper's core-utilization
+/// metric (§IV-A).
+pub fn utilization(intervals: &[(f64, f64)], capacity: f64, t0: f64, t1: f64) -> f64 {
+    if t1 <= t0 || capacity <= 0.0 {
+        return 0.0;
+    }
+    let busy: f64 = intervals
+        .iter()
+        .map(|&(s, e)| (e.min(t1) - s.max(t0)).max(0.0))
+        .sum();
+    busy / (capacity * (t1 - t0))
+}
+
+/// Sample a step trace onto a regular grid (for CSV output of figures).
+pub fn sample_trace(trace: &[(f64, i64)], t0: f64, t1: f64, dt: f64) -> Vec<(f64, i64)> {
+    let mut out = Vec::new();
+    let mut idx = 0usize;
+    let mut level = 0i64;
+    let mut t = t0;
+    while t <= t1 + 1e-9 {
+        while idx < trace.len() && trace[idx].0 <= t {
+            level = trace[idx].1;
+            idx += 1;
+        }
+        out.push((t, level));
+        t += dt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(std(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn rate_series_counts() {
+        // 10 events in [0,1), 20 in [1,2)
+        let mut ts = vec![];
+        for i in 0..10 {
+            ts.push(i as f64 * 0.1);
+        }
+        for i in 0..20 {
+            ts.push(1.0 + i as f64 * 0.05);
+        }
+        let series = rate_series(&ts, 1.0);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].1, 10.0);
+        assert_eq!(series[1].1, 20.0);
+    }
+
+    #[test]
+    fn steady_rate_trims_ramp() {
+        // ramp bin (1 event) then steady 100/s bins
+        let mut ts = vec![0.5];
+        for b in 1..11 {
+            for i in 0..100 {
+                ts.push(b as f64 + i as f64 * 0.01);
+            }
+        }
+        let s = steady_rate(&ts, 1.0, 0.2);
+        assert!((s.mean - 100.0).abs() < 1.0, "{:?}", s);
+    }
+
+    #[test]
+    fn concurrency_peak() {
+        let iv = [(0.0, 10.0), (1.0, 5.0), (2.0, 3.0)];
+        assert_eq!(peak_concurrency(&iv), 3);
+        let trace = concurrency_trace(&iv);
+        assert_eq!(trace.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn utilization_full() {
+        let iv = [(0.0, 10.0), (0.0, 10.0)];
+        assert!((utilization(&iv, 2.0, 0.0, 10.0) - 1.0).abs() < 1e-12);
+        assert!((utilization(&iv, 4.0, 0.0, 10.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_clips_window() {
+        let iv = [(5.0, 15.0)];
+        assert!((utilization(&iv, 1.0, 0.0, 10.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_trace_grid() {
+        let iv = [(0.0, 2.0), (1.0, 3.0)];
+        let tr = concurrency_trace(&iv);
+        let s = sample_trace(&tr, 0.0, 3.0, 1.0);
+        assert_eq!(s, vec![(0.0, 1), (1.0, 2), (2.0, 1), (3.0, 0)]);
+    }
+}

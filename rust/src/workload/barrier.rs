@@ -1,0 +1,58 @@
+//! Workload barrier modes (paper §IV-D, Fig. 10).
+//!
+//! * **Agent barrier** — the entire workload is staged to the Agent
+//!   before it starts processing (the configuration of the Agent-level
+//!   experiments: isolates the Agent from UM/communication effects).
+//! * **Application barrier** — the Agent starts first; the UnitManager
+//!   then feeds the whole workload through the coordination store.
+//! * **Generation barrier** — the application submits one generation,
+//!   waits for it to complete, then submits the next (synchronous
+//!   ensembles, e.g. replica exchange).
+
+/// When the workload is released toward the Agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BarrierMode {
+    /// Everything available at the Agent before processing starts.
+    #[default]
+    Agent,
+    /// UnitManager feeds the full workload while the Agent runs.
+    Application,
+    /// One generation at a time, gated on completion of the previous.
+    Generation,
+}
+
+impl BarrierMode {
+    pub const ALL: [BarrierMode; 3] =
+        [BarrierMode::Agent, BarrierMode::Application, BarrierMode::Generation];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BarrierMode::Agent => "agent",
+            BarrierMode::Application => "application",
+            BarrierMode::Generation => "generation",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BarrierMode> {
+        match s {
+            "agent" => Some(BarrierMode::Agent),
+            "application" | "app" => Some(BarrierMode::Application),
+            "generation" | "gen" => Some(BarrierMode::Generation),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in BarrierMode::ALL {
+            assert_eq!(BarrierMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(BarrierMode::parse("app"), Some(BarrierMode::Application));
+        assert_eq!(BarrierMode::parse("x"), None);
+    }
+}

@@ -1,0 +1,124 @@
+//! CRAM-like static-bundling baseline (paper §II).
+//!
+//! CRAM (LLNL, for Sequoia) bundles a static ensemble of MPI tasks into a
+//! single job: the full execution plan is fixed *before* submission and
+//! every task occupies its partition for the duration of the longest
+//! task in its slot-sequence.  RP's late binding instead backfills cores
+//! as they free.  `benches/ablation_cram.rs` compares the two makespans
+//! under heterogeneous task durations — the gap is the paper's
+//! motivation for pilot-based late binding.
+
+use crate::api::descriptions::UnitDescription;
+
+/// Outcome of a static bundling plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaticPlan {
+    /// Per-slot (core) task queues, fixed up front by round-robin.
+    pub slots: Vec<Vec<f64>>,
+    /// Makespan if every slot runs its fixed queue sequentially.
+    pub makespan: f64,
+    /// Sum of idle core-seconds (cores waiting on the longest slot).
+    pub idle_core_seconds: f64,
+}
+
+/// Statically bundle `units` (single-core, known durations) onto
+/// `capacity` cores, round-robin — CRAM's a-priori partitioning.
+pub fn static_bundle(units: &[UnitDescription], capacity: usize) -> StaticPlan {
+    assert!(capacity > 0);
+    let mut slots: Vec<Vec<f64>> = vec![Vec::new(); capacity];
+    for (i, u) in units.iter().enumerate() {
+        slots[i % capacity].push(u.duration().unwrap_or(0.0));
+    }
+    let loads: Vec<f64> = slots.iter().map(|s| s.iter().sum()).collect();
+    let makespan = loads.iter().cloned().fold(0.0, f64::max);
+    let idle = loads.iter().map(|l| makespan - l).sum();
+    StaticPlan { slots, makespan, idle_core_seconds: idle }
+}
+
+/// Late-binding (list-scheduling) makespan on `capacity` cores: each
+/// finishing core immediately takes the next queued task.  This is the
+/// zero-overhead idealization of what the RP Agent does.
+pub fn late_binding_makespan(units: &[UnitDescription], capacity: usize) -> f64 {
+    assert!(capacity > 0);
+    // min-heap of core-available times
+    let mut heap = std::collections::BinaryHeap::new();
+    for _ in 0..capacity {
+        heap.push(std::cmp::Reverse(OrderedF64(0.0)));
+    }
+    let mut makespan = 0.0f64;
+    for u in units {
+        let std::cmp::Reverse(OrderedF64(t)) = heap.pop().unwrap();
+        let end = t + u.duration().unwrap_or(0.0);
+        makespan = makespan.max(end);
+        heap.push(std::cmp::Reverse(OrderedF64(end)));
+    }
+    makespan
+}
+
+#[derive(PartialEq)]
+struct OrderedF64(f64);
+
+impl Eq for OrderedF64 {}
+
+impl PartialOrd for OrderedF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrderedF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Workload, WorkloadSpec};
+
+    #[test]
+    fn uniform_workload_no_gap() {
+        // with identical durations, static == late binding
+        let wl = WorkloadSpec::uniform(64, 10.0).build();
+        let p = static_bundle(&wl.units, 16);
+        let lb = late_binding_makespan(&wl.units, 16);
+        assert!((p.makespan - 40.0).abs() < 1e-9);
+        assert!((lb - 40.0).abs() < 1e-9);
+        assert!(p.idle_core_seconds < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_late_binding_wins() {
+        let wl = Workload::heterogeneous(
+            400,
+            &[(1, 10.0, false, 0.8), (1, 100.0, false, 0.2)],
+            11,
+        );
+        let st = static_bundle(&wl.units, 32);
+        let lb = late_binding_makespan(&wl.units, 32);
+        assert!(
+            lb < st.makespan,
+            "late binding ({lb:.1}s) must beat static bundling ({:.1}s)",
+            st.makespan
+        );
+        assert!(st.idle_core_seconds > 0.0);
+    }
+
+    #[test]
+    fn late_binding_lower_bounds() {
+        let wl = WorkloadSpec::uniform(10, 7.0).build();
+        // one core: serial
+        assert!((late_binding_makespan(&wl.units, 1) - 70.0).abs() < 1e-9);
+        // plenty of cores: single task time
+        assert!((late_binding_makespan(&wl.units, 100) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slots_partition_all_units() {
+        let wl = WorkloadSpec::uniform(37, 5.0).build();
+        let p = static_bundle(&wl.units, 8);
+        let total: usize = p.slots.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 37);
+    }
+}

@@ -1,0 +1,213 @@
+//! Synthetic + heterogeneous workload generation.
+
+use crate::api::descriptions::UnitDescription;
+use crate::util::rng::Pcg;
+
+/// Parameterized workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Total number of units.
+    pub n_units: usize,
+    /// Cores per unit.
+    pub cores_per_unit: usize,
+    /// Nominal unit duration (seconds).
+    pub duration: f64,
+    /// Relative jitter on the duration (lognormal; 0 = fixed).
+    pub duration_jitter: f64,
+    /// MPI coupling flag for multi-core units.
+    pub mpi: bool,
+    /// PRNG seed for jittered workloads.
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// The paper's standard module-level workload: `generations` x
+    /// pilot-capacity single-core units of fixed `duration`.
+    pub fn generations(pilot_cores: usize, generations: usize, duration: f64) -> Self {
+        WorkloadSpec {
+            n_units: pilot_cores * generations,
+            cores_per_unit: 1,
+            duration,
+            duration_jitter: 0.0,
+            mpi: false,
+            seed: 0,
+        }
+    }
+
+    pub fn uniform(n_units: usize, duration: f64) -> Self {
+        WorkloadSpec {
+            n_units,
+            cores_per_unit: 1,
+            duration,
+            duration_jitter: 0.0,
+            mpi: false,
+            seed: 0,
+        }
+    }
+
+    pub fn with_jitter(mut self, jitter: f64, seed: u64) -> Self {
+        self.duration_jitter = jitter;
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: usize, mpi: bool) -> Self {
+        self.cores_per_unit = cores;
+        self.mpi = mpi;
+        self
+    }
+
+    /// Materialize unit descriptions.
+    pub fn build(&self) -> Workload {
+        let mut rng = Pcg::seeded(self.seed);
+        let units = (0..self.n_units)
+            .map(|i| {
+                let d = if self.duration_jitter > 0.0 {
+                    rng.lognormal_ms(self.duration, self.duration * self.duration_jitter)
+                } else {
+                    self.duration
+                };
+                UnitDescription::sleep(d)
+                    .name(format!("unit-{i:06}"))
+                    .cores(self.cores_per_unit)
+                    .mpi(self.mpi)
+            })
+            .collect();
+        Workload { units }
+    }
+}
+
+/// A materialized workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub units: Vec<UnitDescription>,
+}
+
+impl Workload {
+    /// A heterogeneous mix: fractions of (cores, duration, mpi) classes —
+    /// the multi-component application mixes the paper's intro motivates.
+    pub fn heterogeneous(
+        n_units: usize,
+        classes: &[(usize, f64, bool, f64)], // (cores, duration, mpi, weight)
+        seed: u64,
+    ) -> Workload {
+        assert!(!classes.is_empty());
+        let total_w: f64 = classes.iter().map(|c| c.3).sum();
+        let mut rng = Pcg::seeded(seed);
+        let units = (0..n_units)
+            .map(|i| {
+                let mut pick = rng.uniform() * total_w;
+                let mut chosen = &classes[0];
+                for c in classes {
+                    if pick < c.3 {
+                        chosen = c;
+                        break;
+                    }
+                    pick -= c.3;
+                }
+                let d = rng.lognormal_ms(chosen.1, chosen.1 * 0.1);
+                UnitDescription::sleep(d)
+                    .name(format!("unit-{i:06}"))
+                    .cores(chosen.0)
+                    .mpi(chosen.2)
+            })
+            .collect();
+        Workload { units }
+    }
+
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Split into generations of `per_gen` units (the last may be short).
+    pub fn generations(&self, per_gen: usize) -> Vec<&[UnitDescription]> {
+        assert!(per_gen > 0);
+        self.units.chunks(per_gen).collect()
+    }
+
+    /// Total core-seconds of the workload (for optimal-TTC estimates).
+    pub fn core_seconds(&self) -> f64 {
+        self.units
+            .iter()
+            .map(|u| u.duration().unwrap_or(0.0) * u.cores as f64)
+            .sum()
+    }
+
+    /// The optimal (zero-overhead) makespan on `capacity` cores.
+    pub fn optimal_ttc(&self, capacity: usize) -> f64 {
+        // for uniform single-core workloads this is
+        // ceil(n/capacity) * duration; in general use core-seconds bound
+        // and longest-unit bound
+        let bound_work = self.core_seconds() / capacity as f64;
+        let bound_unit = self
+            .units
+            .iter()
+            .filter_map(|u| u.duration())
+            .fold(0.0, f64::max);
+        bound_work.max(bound_unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_spec() {
+        let wl = WorkloadSpec::generations(1024, 3, 64.0).build();
+        assert_eq!(wl.len(), 3072);
+        assert!(wl.units.iter().all(|u| u.cores == 1));
+        assert!(wl.units.iter().all(|u| u.duration() == Some(64.0)));
+        let gens = wl.generations(1024);
+        assert_eq!(gens.len(), 3);
+        assert_eq!(gens[2].len(), 1024);
+    }
+
+    #[test]
+    fn jittered_durations_vary() {
+        let wl = WorkloadSpec::uniform(100, 60.0).with_jitter(0.3, 42).build();
+        let ds: Vec<f64> = wl.units.iter().map(|u| u.duration().unwrap()).collect();
+        let mean = crate::util::stats::mean(&ds);
+        assert!((mean - 60.0).abs() < 6.0, "mean={mean}");
+        assert!(crate::util::stats::std(&ds) > 1.0);
+        assert!(ds.iter().all(|d| *d > 0.0));
+    }
+
+    #[test]
+    fn heterogeneous_mix() {
+        let wl = Workload::heterogeneous(
+            1000,
+            &[(1, 60.0, false, 0.7), (16, 300.0, true, 0.3)],
+            7,
+        );
+        let mpi = wl.units.iter().filter(|u| u.is_mpi).count();
+        assert!(mpi > 200 && mpi < 400, "mpi={mpi}");
+        assert!(wl.units.iter().all(|u| u.cores == 1 || u.cores == 16));
+    }
+
+    #[test]
+    fn optimal_ttc_uniform() {
+        let wl = WorkloadSpec::generations(16, 3, 60.0).build();
+        assert!((wl.optimal_ttc(16) - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_ttc_longest_unit_bound() {
+        let mut wl = WorkloadSpec::uniform(4, 10.0).build();
+        wl.units.push(UnitDescription::sleep(100.0).name("long"));
+        assert!(wl.optimal_ttc(1000) >= 100.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = WorkloadSpec::uniform(50, 60.0).with_jitter(0.2, 9).build();
+        let b = WorkloadSpec::uniform(50, 60.0).with_jitter(0.2, 9).build();
+        for (x, y) in a.units.iter().zip(&b.units) {
+            assert_eq!(x.duration(), y.duration());
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload generation (paper §IV-C/D).
+//!
+//! The paper's experiments use synthetic workloads structured in
+//! *generations*: a generation is the subset of units that fits
+//! concurrently on the pilot's cores.  Barriers control when the next
+//! part of the workload reaches the Agent ([`barrier::BarrierMode`]).
+//! [`cram`] implements the CRAM-like static-bundling baseline used by
+//! `benches/ablation_cram.rs`.
+
+pub mod barrier;
+pub mod cram;
+mod generator;
+
+pub use barrier::BarrierMode;
+pub use generator::{Workload, WorkloadSpec};

@@ -1,0 +1,181 @@
+//! End-to-end runtime tests: the Rust PJRT path must reproduce the
+//! eager-JAX reference values pinned by `python/compile/aot.py` in
+//! `artifacts/reference.json` — proving L1 (Pallas kernel) -> L2 (JAX
+//! model) -> AOT HLO -> L3 (Rust, PJRT) compose correctly.
+//!
+//! These tests skip (with a notice) if `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::runtime::{lattice_init, PayloadStore, Runtime};
+use rp::util::json::Value;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn reference() -> Option<Value> {
+    let d = artifacts_dir()?;
+    Value::parse_file(&d.join("reference.json")).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match (artifacts_dir(), reference()) {
+            (Some(d), Some(r)) => (d, r),
+            _ => {
+                eprintln!("SKIPPED: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn lattice_init_matches_python() {
+    let (_, reference) = require_artifacts!();
+    for (name, n) in [("md_n64_s10", 64usize), ("md_n256_s10", 256)] {
+        let want: Vec<f64> = reference
+            .get(name)
+            .get("pos_in")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let (pos, _) = lattice_init(n, 1.5);
+        assert_eq!(pos.len(), want.len());
+        for (i, (a, b)) in pos.iter().zip(&want).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 1e-4,
+                "{name} pos[{i}]: rust={a} python={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn md_artifact_reproduces_reference() {
+    let (dir, reference) = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime loads artifacts");
+    for name in ["md_n64_s10", "md_n256_s10"] {
+        let r = reference.get(name);
+        let pos: Vec<f32> = r
+            .get("pos_in")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let vel = vec![0.0f32; pos.len()];
+        let outs = rt.execute(name, vec![pos, vel]).expect("execute");
+        assert_eq!(outs.len(), 4, "{name}: pos, vel, pe, ke");
+
+        let pos_sum: f64 = outs[0].iter().map(|x| *x as f64).sum();
+        let pos_abs: f64 = outs[0].iter().map(|x| x.abs() as f64).sum();
+        let vel_abs: f64 = outs[1].iter().map(|x| x.abs() as f64).sum();
+        let pe = outs[2][0] as f64;
+        let ke = outs[3][0] as f64;
+
+        let close = |got: f64, want: f64, what: &str| {
+            let tol = 1e-3 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() < tol,
+                "{name} {what}: rust={got} python={}",
+                want
+            );
+        };
+        close(pos_sum, r.get_f64("pos_out_sum", f64::NAN), "pos_sum");
+        close(pos_abs, r.get_f64("pos_out_abs_sum", f64::NAN), "pos_abs_sum");
+        close(vel_abs, r.get_f64("vel_out_abs_sum", f64::NAN), "vel_abs_sum");
+        close(pe, r.get_f64("pe", f64::NAN), "pe");
+        close(ke, r.get_f64("ke", f64::NAN), "ke");
+    }
+}
+
+#[test]
+fn rg_artifact_reproduces_reference() {
+    let (dir, reference) = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    for name in ["rg_n64", "rg_n256"] {
+        let r = reference.get(name);
+        let pos: Vec<f32> = r
+            .get("pos_in")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let outs = rt.execute(name, vec![pos]).expect("execute rg");
+        assert_eq!(outs.len(), 2);
+        let rg = outs[1][0] as f64;
+        let want = r.get_f64("rg", f64::NAN);
+        assert!((rg - want).abs() < 1e-3 * want, "{name} rg: {rg} vs {want}");
+        // COM matches too
+        let want_com: Vec<f64> = r
+            .get("com")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (got, want) in outs[0].iter().zip(&want_com) {
+            assert!((*got as f64 - want).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn payload_store_chains_md_chunks() {
+    let (dir, _) = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let store = PayloadStore::new(rt);
+    let r1 = store.execute("md_n64_s10", 0).unwrap();
+    assert_eq!(r1.total_steps, 10);
+    let r2 = store.execute("md_n64_s10", 0).unwrap();
+    assert_eq!(r2.total_steps, 20, "state persists across unit invocations");
+    // energies evolve but stay finite
+    assert!(r1.pe.is_finite() && r2.pe.is_finite());
+    assert!(r2.ke_or_rg >= 0.0);
+    // a different task id starts fresh
+    let other = store.execute("md_n64_s10", 1).unwrap();
+    assert_eq!(other.total_steps, 10);
+    assert!((other.pe - r1.pe).abs() < 1e-6, "same init => same first chunk");
+    assert_eq!(store.task_count(), 2);
+    // analysis payload on the evolved trajectory
+    let rg = store.execute("rg_n64", 0).unwrap();
+    assert!(rg.ke_or_rg > 0.0);
+}
+
+#[test]
+fn full_stack_pjrt_units_through_pilot() {
+    let (dir, _) = require_artifacts!();
+    let session = Session::new("e2e-pjrt");
+    session.load_artifacts(&dir).unwrap();
+    let pmgr = session.pilot_manager();
+    let umgr = session.unit_manager();
+    let pilot = pmgr
+        .submit(PilotDescription::new("local.localhost", 4, 600.0))
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(
+        (0..6)
+            .map(|i| UnitDescription::pjrt("md_n64_s10", i).name(format!("md-{i}")))
+            .collect(),
+    );
+    umgr.wait_all(120.0).unwrap();
+    for u in &units {
+        assert_eq!(u.state(), rp::states::UnitState::Done, "unit {:?}", u.error());
+        match u.outcome().unwrap() {
+            rp::agent::real::UnitOutcome::Pjrt(r) => {
+                assert_eq!(r.total_steps, 10);
+                assert!(r.pe.is_finite());
+            }
+            other => panic!("wrong outcome {other:?}"),
+        }
+    }
+    pilot.drain().unwrap();
+    session.close();
+}

@@ -1,0 +1,308 @@
+//! Integration tests across the full API surface: sessions, pilots,
+//! units, staging, cancellation, failure injection, multi-pilot late
+//! binding, and the coordination store's view of the workload.
+
+use rp::api::{PilotDescription, Session, UnitDescription};
+use rp::agent::real::UnitOutcome;
+use rp::profiler::Analysis;
+use rp::saga::{JobDescription, JobService, JobState};
+use rp::states::{PilotState, UnitState};
+
+fn local_pilot(session: &Session, cores: usize) -> rp::api::Pilot {
+    session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", cores, 600.0)
+                .with_override("agent.executers", &cores.to_string()),
+        )
+        .unwrap()
+}
+
+#[test]
+fn full_lifecycle_with_staging() {
+    let session = Session::new("int-staging");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 2);
+    umgr.add_pilot(&pilot);
+
+    // stage a real input file in, consume it, stage output back
+    let sandbox = session.sandbox().clone();
+    std::fs::create_dir_all(&sandbox).unwrap();
+    let input = sandbox.join("input.txt");
+    std::fs::write(&input, "payload-data").unwrap();
+
+    let units = umgr.submit(vec![UnitDescription::executable(
+        "/bin/cat",
+        vec![input.to_str().unwrap().to_string()],
+    )
+    .name("cat-unit")]);
+    umgr.wait_all(30.0).unwrap();
+    assert_eq!(units[0].state(), UnitState::Done);
+    match units[0].outcome().unwrap() {
+        UnitOutcome::Exec(o) => assert_eq!(o.stdout, "payload-data"),
+        _ => panic!(),
+    }
+    // the stager materialized STDOUT in the unit sandbox
+    let stdout_file = session
+        .sandbox()
+        .join(pilot.id().to_string())
+        .join("cat-unit")
+        .join("STDOUT");
+    assert_eq!(std::fs::read_to_string(stdout_file).unwrap(), "payload-data");
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn failing_executable_marks_unit_failed() {
+    let session = Session::new("int-fail");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 2);
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(vec![
+        UnitDescription::executable("/bin/sh", vec!["-c".into(), "exit 7".into()]).name("rc7"),
+        UnitDescription::executable("/definitely/not/a/binary", vec![]).name("noexe"),
+        UnitDescription::sleep(0.01).name("ok"),
+    ]);
+    umgr.wait_all(30.0).unwrap();
+    // non-zero exit: RP reports the exit code; the unit still completed
+    assert_eq!(units[0].state(), UnitState::Done);
+    match units[0].outcome().unwrap() {
+        UnitOutcome::Exec(o) => assert_eq!(o.exit_code, 7),
+        _ => panic!(),
+    }
+    // spawn failure: unit fails with an error message
+    assert_eq!(units[1].state(), UnitState::Failed);
+    assert!(units[1].error().is_some());
+    // healthy unit unaffected by sibling failures
+    assert_eq!(units[2].state(), UnitState::Done);
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn cancel_queued_units() {
+    let session = Session::new("int-cancel");
+    let umgr = session.unit_manager();
+    // 1 core, 1 executer: units serialize
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 1, 600.0)
+                .with_override("agent.executers", "1"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(
+        (0..6)
+            .map(|i| UnitDescription::sleep(0.15).name(format!("u{i}")))
+            .collect(),
+    );
+    // cancel the tail while the head still runs
+    for u in &units[3..] {
+        u.cancel();
+    }
+    umgr.wait_all(30.0).unwrap();
+    let done = units.iter().filter(|u| u.state() == UnitState::Done).count();
+    let canceled = units.iter().filter(|u| u.state() == UnitState::Canceled).count();
+    assert_eq!(done + canceled, 6);
+    assert!(canceled >= 2, "tail units should cancel, got {canceled}");
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn heterogeneous_unit_sizes_share_pilot() {
+    let session = Session::new("int-hetero");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 8);
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(vec![
+        UnitDescription::sleep(0.05).cores(4).mpi(true).name("mpi4"),
+        UnitDescription::sleep(0.05).cores(2).name("smp2"),
+        UnitDescription::sleep(0.05).name("serial-a"),
+        UnitDescription::sleep(0.05).name("serial-b"),
+        UnitDescription::sleep(0.05).cores(8).mpi(true).name("mpi8"),
+    ]);
+    umgr.wait_all(30.0).unwrap();
+    assert!(units.iter().all(|u| u.state() == UnitState::Done));
+    // profiled concurrency respected the 8-core capacity
+    let profile = session.profiler().snapshot();
+    let a = Analysis::new(&profile);
+    assert!(a.peak_concurrency() <= 5);
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn multi_pilot_round_robin_and_drain() {
+    let session = Session::new("int-multi");
+    let umgr = session.unit_manager();
+    let p1 = local_pilot(&session, 2);
+    let p2 = local_pilot(&session, 2);
+    umgr.add_pilot(&p1);
+    umgr.add_pilot(&p2);
+    let units = umgr.submit((0..10).map(|_| UnitDescription::sleep(0.02)).collect());
+    umgr.wait_all(30.0).unwrap();
+    assert!(units.iter().all(|u| u.state() == UnitState::Done));
+    // both pilot sandboxes saw units
+    for p in [&p1, &p2] {
+        let dir = session.sandbox().join(p.id().to_string());
+        assert!(std::fs::read_dir(dir).unwrap().count() > 0);
+    }
+    p1.drain().unwrap();
+    p2.drain().unwrap();
+    assert_eq!(p1.state(), PilotState::Done);
+}
+
+#[test]
+fn pilot_cancellation_path() {
+    let session = Session::new("int-pcancel");
+    let pilot = local_pilot(&session, 2);
+    assert_eq!(pilot.wait_active(5.0).unwrap(), PilotState::PActive);
+    pilot.cancel().unwrap();
+    assert_eq!(pilot.state(), PilotState::Canceled);
+}
+
+#[test]
+fn store_reflects_workload() {
+    let session = Session::new("int-store");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 2);
+    umgr.add_pilot(&pilot);
+    umgr.submit((0..5).map(|i| UnitDescription::sleep(0.01).name(format!("u{i}"))).collect());
+    umgr.wait_all(30.0).unwrap();
+    assert_eq!(session.store().count("units"), 5);
+    assert_eq!(session.store().count("pilots"), 1);
+    let found = session
+        .store()
+        .find("units", |d| d.get_str("name", "").starts_with("u"));
+    assert_eq!(found.len(), 5);
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn profiler_csv_export() {
+    let session = Session::new("int-prof");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 2);
+    umgr.add_pilot(&pilot);
+    umgr.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect());
+    umgr.wait_all(30.0).unwrap();
+    let path = session.write_profile().unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    assert!(text.lines().count() > 4 * 8, "full pipeline recorded");
+    assert!(text.contains("AGENT_EXECUTING"));
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn drain_with_queued_units_fails_them_cleanly() {
+    // failure injection: the pilot goes away while work is queued —
+    // queued units must reach a final state (no deadlock, no hang)
+    let session = Session::new("int-drain");
+    let umgr = session.unit_manager();
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 1, 600.0)
+                .with_override("agent.executers", "1"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(
+        (0..8)
+            .map(|i| UnitDescription::sleep(0.2).name(format!("u{i}")))
+            .collect(),
+    );
+    rp::util::sleep(0.05); // let the head start executing
+    pilot.drain().unwrap(); // shut the agent down under load
+    umgr.wait_all(30.0).unwrap();
+    for u in &units {
+        assert!(
+            u.state().is_final(),
+            "unit {} stuck in {:?}",
+            u.id(),
+            u.state()
+        );
+    }
+    let done = units.iter().filter(|u| u.state() == UnitState::Done).count();
+    assert!(done >= 1, "the running unit completes");
+}
+
+#[test]
+fn saga_all_batch_adaptors_roundtrip() {
+    for kind in rp::saga::adaptors::BATCH_KINDS {
+        let js = JobService::connect(&format!("{kind}://testhost")).unwrap();
+        let id = js
+            .submit(&JobDescription {
+                name: format!("{kind}-job"),
+                cores: 16,
+                walltime: 0.05,
+                queue: Some("normal".into()),
+                project: None,
+            })
+            .unwrap();
+        let s = js.wait_running(id, 2.0).unwrap();
+        assert_eq!(s, JobState::Running, "{kind}");
+        rp::util::sleep(0.1);
+        assert_eq!(js.state(id).unwrap(), JobState::Done, "{kind}");
+    }
+}
+
+#[test]
+fn synthetic_as_process_spawns_real_sleep() {
+    // exercise the Popen path with actual /bin/sleep processes
+    use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig};
+    use rp::profiler::Profiler;
+    use std::sync::Arc;
+
+    let profiler = Arc::new(Profiler::new(true));
+    let mut cfg = RealAgentConfig::from_resource(
+        &rp::config::builtin("localhost").unwrap(),
+        4,
+        std::env::temp_dir().join("rp_int_popen"),
+    );
+    cfg.synthetic_as_process = true;
+    cfg.executers = 4;
+    let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+    let units: Vec<_> = (0..8)
+        .map(|i| {
+            let u = new_unit(rp::ids::UnitId(i), UnitDescription::sleep(0.05));
+            advance(&u, UnitState::UmSchedulingPending, &profiler).unwrap();
+            advance(&u, UnitState::UmScheduling, &profiler).unwrap();
+            advance(&u, UnitState::AStagingInPending, &profiler).unwrap();
+            u
+        })
+        .collect();
+    agent.submit(units.clone());
+    for u in &units {
+        let (m, cv) = &**u;
+        let mut rec = m.lock().unwrap();
+        while !rec.machine.is_final() {
+            let (r, _) = cv
+                .wait_timeout(rec, std::time::Duration::from_secs(20))
+                .unwrap();
+            rec = r;
+        }
+        assert_eq!(rec.machine.state(), UnitState::Done);
+    }
+    agent.drain_and_stop();
+}
+
+#[test]
+fn launch_method_fallback_on_missing_wrapper() {
+    // stampede config wants SSH/IBRUN; on this box the wrapped launcher
+    // may be missing — the executer degrades to direct execution
+    let session = Session::new("int-fallback");
+    let umgr = session.unit_manager();
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 2, 600.0)
+                .with_override("launch_methods.task", "IBRUN"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let units =
+        umgr.submit(vec![UnitDescription::executable("/bin/echo", vec!["ok".into()])]);
+    umgr.wait_all(30.0).unwrap();
+    assert_eq!(units[0].state(), UnitState::Done);
+    pilot.drain().unwrap();
+}

@@ -1,0 +1,334 @@
+//! Property-based tests (testkit::prop) over the coordinator's
+//! invariants: scheduler bookkeeping, state machines, JSON round-trips,
+//! workload accounting, queue semantics, and the DES.
+
+use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+use rp::sim::EventQueue;
+use rp::states::{PilotState, UnitState};
+use rp::testkit::prop::{self, forall};
+use rp::util::json::Value;
+use rp::util::rng::Pcg;
+use rp::util::stats;
+
+// ------------------------------------------------------------- scheduler
+
+/// Random alloc/release scripts: (op, size) with op < 60 => allocate.
+fn scripts() -> prop::Gen<Vec<(u8, u8)>> {
+    prop::vecs(
+        prop::Gen::new(|rng: &mut Pcg| (rng.below(100) as u8, 1 + rng.below(40) as u8)),
+        1,
+        400,
+    )
+}
+
+fn run_script(sched: &mut dyn CoreScheduler, script: &[(u8, u8)]) -> bool {
+    let capacity = sched.capacity();
+    let mut live = Vec::new();
+    let mut busy = 0usize;
+    for &(op, size) in script {
+        if op < 60 {
+            let want = size as usize;
+            if let Some(a) = sched.allocate(want) {
+                // exactly the requested size, within capacity
+                if a.n_cores() != want {
+                    return false;
+                }
+                busy += want;
+                live.push(a);
+            }
+        } else if !live.is_empty() {
+            let idx = (op as usize * 7 + size as usize) % live.len();
+            let a = live.swap_remove(idx);
+            busy -= a.n_cores();
+            sched.release(&a);
+        }
+        // conservation: free + busy == capacity
+        if sched.free_cores() + busy != capacity {
+            return false;
+        }
+        if busy > capacity {
+            return false;
+        }
+    }
+    // release everything: full capacity restored
+    for a in live.drain(..) {
+        sched.release(&a);
+    }
+    sched.free_cores() == capacity
+}
+
+#[test]
+fn prop_continuous_linear_conserves_cores() {
+    forall(&scripts(), 60, |script| {
+        run_script(
+            &mut ContinuousScheduler::new(8, 16, SearchMode::Linear),
+            script,
+        )
+    });
+}
+
+#[test]
+fn prop_continuous_freelist_conserves_cores() {
+    forall(&scripts(), 60, |script| {
+        run_script(
+            &mut ContinuousScheduler::new(8, 16, SearchMode::FreeList),
+            script,
+        )
+    });
+}
+
+#[test]
+fn prop_torus_conserves_cores() {
+    forall(&scripts(), 60, |script| {
+        run_script(&mut TorusScheduler::new(vec![2, 2, 2], 16), script)
+    });
+}
+
+#[test]
+fn prop_no_core_double_assignment() {
+    // overlapping live allocations never share a (node, core) slot
+    forall(&scripts(), 40, |script| {
+        let mut sched = ContinuousScheduler::new(4, 8, SearchMode::FreeList);
+        let mut live: Vec<rp::agent::Allocation> = Vec::new();
+        let mut slots = std::collections::HashSet::new();
+        for &(op, size) in script {
+            if op < 60 {
+                if let Some(a) = sched.allocate(1 + (size as usize % 8)) {
+                    for c in &a.cores {
+                        if !slots.insert(*c) {
+                            return false; // double assignment!
+                        }
+                    }
+                    live.push(a);
+                }
+            } else if !live.is_empty() {
+                let a = live.swap_remove((op as usize) % live.len());
+                for c in &a.cores {
+                    slots.remove(c);
+                }
+                sched.release(&a);
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_single_node_placement_invariant() {
+    // any allocation <= cores_per_node lands on exactly one node
+    forall(&prop::usizes(1, 16), 100, |&want| {
+        let mut s = ContinuousScheduler::new(6, 16, SearchMode::Linear);
+        // fragment the pilot a bit first
+        let _junk: Vec<_> = (0..5).filter_map(|_| s.allocate(3)).collect();
+        match s.allocate(want) {
+            Some(a) => {
+                let nodes: std::collections::HashSet<u32> =
+                    a.cores.iter().map(|(n, _)| *n).collect();
+                nodes.len() == 1
+            }
+            None => true,
+        }
+    });
+}
+
+// ----------------------------------------------------------- state model
+
+#[test]
+fn prop_unit_state_transitions_antisymmetric() {
+    // for distinct non-failure states, legal transitions are one-way
+    let g = prop::Gen::new(|rng: &mut Pcg| {
+        let a = UnitState::ALL[rng.below(18) as usize];
+        let b = UnitState::ALL[rng.below(18) as usize];
+        (a, b)
+    });
+    forall(&g, 400, |&(a, b)| {
+        if a == b || matches!(b, UnitState::Failed | UnitState::Canceled) {
+            return true;
+        }
+        if matches!(a, UnitState::Failed | UnitState::Canceled) {
+            return !a.can_transition(b);
+        }
+        !(a.can_transition(b) && b.can_transition(a))
+    });
+}
+
+#[test]
+fn prop_pilot_state_chain_terminates() {
+    forall(&prop::usizes(0, 7), 50, |&start| {
+        let mut s = PilotState::ALL[start];
+        let mut hops = 0;
+        while let Some(n) = s.next() {
+            s = n;
+            hops += 1;
+            if hops > 10 {
+                return false;
+            }
+        }
+        s.is_final() || s.next().is_none()
+    });
+}
+
+// ------------------------------------------------------------------ json
+
+#[test]
+fn prop_json_string_roundtrip() {
+    forall(&prop::strings(64), 300, |s| {
+        let v = Value::Str(s.clone());
+        Value::parse(&v.to_json()).map(|p| p == v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_number_roundtrip() {
+    forall(&prop::floats(-1e9, 1e9), 300, |&f| {
+        let v = Value::Num(f);
+        match Value::parse(&v.to_json()) {
+            Ok(Value::Num(g)) => (g - f).abs() <= 1e-9 * f.abs().max(1.0),
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn prop_json_nested_roundtrip() {
+    // random nested documents survive serialize -> parse
+    fn gen_value(rng: &mut Pcg, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.uniform() < 0.5),
+            2 => Value::Num((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Value::Str((0..n).map(|_| (0x20 + rng.below(0x5f) as u8) as char).collect())
+            }
+            4 => {
+                let n = rng.below(5) as usize;
+                Value::Arr((0..n).map(|_| gen_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(5) as usize;
+                Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    let g = prop::Gen::new(|rng: &mut Pcg| gen_value(rng, 3));
+    forall(&g, 300, |v| Value::parse(&v.to_json()).map(|p| p == *v).unwrap_or(false));
+}
+
+// ------------------------------------------------------------- workload
+
+#[test]
+fn prop_workload_accounting() {
+    let g = prop::Gen::new(|rng: &mut Pcg| {
+        (
+            1 + rng.below(500) as usize,
+            1.0 + rng.uniform() * 200.0,
+            1 + rng.below(64) as usize,
+        )
+    });
+    forall(&g, 100, |&(n, dur, cap)| {
+        let wl = rp::workload::WorkloadSpec::uniform(n, dur).build();
+        let opt = wl.optimal_ttc(cap);
+        // optimum bounds: at least one task duration, at least work/capacity
+        (opt >= dur - 1e-9) && (opt >= wl.core_seconds() / cap as f64 - 1e-9)
+    });
+}
+
+#[test]
+fn prop_cram_late_binding_never_worse() {
+    let g = prop::Gen::new(|rng: &mut Pcg| {
+        let n = 10 + rng.below(300) as usize;
+        let frac = rng.uniform() * 0.5;
+        let seed = rng.next_u64();
+        (n, frac, seed)
+    });
+    forall(&g, 60, |&(n, frac, seed)| {
+        let wl = rp::workload::Workload::heterogeneous(
+            n,
+            &[(1, 10.0, false, 1.0 - frac), (1, 100.0, false, frac.max(0.01))],
+            seed,
+        );
+        let st = rp::workload::cram::static_bundle(&wl.units, 16);
+        let lb = rp::workload::cram::late_binding_makespan(&wl.units, 16);
+        lb <= st.makespan + 1e-6
+    });
+}
+
+// ------------------------------------------------------------------- DES
+
+#[test]
+fn prop_event_queue_ordered() {
+    let g = prop::vecs(prop::floats(0.0, 1e6), 1, 200);
+    forall(&g, 100, |times| {
+        let mut q = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.at(t, i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some((t, _)) = q.pop() {
+            if t < last {
+                return false;
+            }
+            last = t;
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_concurrency_trace_nonnegative_and_closes() {
+    let g = prop::vecs(
+        prop::Gen::new(|rng: &mut Pcg| {
+            let s = rng.uniform() * 100.0;
+            (s, s + rng.uniform() * 50.0)
+        }),
+        1,
+        200,
+    );
+    forall(&g, 100, |intervals| {
+        let trace = stats::concurrency_trace(intervals);
+        trace.iter().all(|(_, l)| *l >= 0) && trace.last().map(|(_, l)| *l == 0).unwrap_or(true)
+    });
+}
+
+#[test]
+fn prop_utilization_bounded() {
+    let g = prop::vecs(
+        prop::Gen::new(|rng: &mut Pcg| {
+            let s = rng.uniform() * 100.0;
+            (s, s + rng.uniform() * 50.0)
+        }),
+        1,
+        64,
+    );
+    forall(&g, 100, |intervals| {
+        // capacity >= peak concurrency => utilization in [0, 1]
+        let peak = stats::peak_concurrency(intervals) as f64;
+        let u = stats::utilization(intervals, peak.max(1.0), 0.0, 160.0);
+        (0.0..=1.0 + 1e-9).contains(&u)
+    });
+}
+
+// ---------------------------------------------------------------- queues
+
+#[test]
+fn prop_unit_queue_preserves_all_items() {
+    let g = prop::vecs(prop::ints(0, 1_000_000), 0, 500);
+    forall(&g, 50, |items| {
+        let q = rp::db::UnitQueue::new();
+        q.push_bulk(items.iter().cloned());
+        let mut out = vec![];
+        loop {
+            let batch = q.pull_bulk(17);
+            if batch.is_empty() {
+                break;
+            }
+            out.extend(batch);
+        }
+        out == *items
+    });
+}

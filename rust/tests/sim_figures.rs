@@ -1,0 +1,136 @@
+//! Fast regression guards over the simulated figure results — the same
+//! quantities the benches regenerate, pinned at test-friendly scales so
+//! `cargo test` catches calibration drift without running `cargo bench`.
+
+use rp::config::ResourceConfig;
+use rp::profiler::Analysis;
+use rp::sim::microbench::{Component, MicroBench};
+use rp::sim::{AgentSim, AgentSimConfig};
+use rp::workload::{BarrierMode, WorkloadSpec};
+
+fn sim(resource: &str, pilot: usize, gens: usize, dur: f64, barrier: BarrierMode) -> rp::sim::AgentSimResult {
+    let cfg = ResourceConfig::load(resource).unwrap();
+    let wl = WorkloadSpec::generations(pilot, gens, dur).build();
+    let mut sc = AgentSimConfig::paper_default(pilot);
+    sc.barrier = barrier;
+    AgentSim::new(&cfg, sc, &wl).run()
+}
+
+#[test]
+fn fig4_rates_guard() {
+    for (label, want, tol) in [("bluewaters", 72.0, 8.0), ("comet", 211.0, 22.0), ("stampede", 158.0, 16.0)] {
+        let cfg = ResourceConfig::load(label).unwrap();
+        let r = MicroBench::new(Component::Scheduler).run(&cfg).steady_rate();
+        assert!((r.mean - want).abs() < tol, "{label}: {:?}", r);
+    }
+}
+
+#[test]
+fn fig5_router_pairing_guard() {
+    let cfg = ResourceConfig::load("bluewaters").unwrap();
+    let r2 = MicroBench::new(Component::StagerOut).instances(4, 2).run(&cfg).steady_rate();
+    let r4 = MicroBench::new(Component::StagerOut).instances(4, 4).run(&cfg).steady_rate();
+    assert!(r4.mean > 1.6 * r2.mean, "router pairing: {} vs {}", r4.mean, r2.mean);
+}
+
+#[test]
+fn fig6_scaling_guard() {
+    let cfg = ResourceConfig::load("stampede").unwrap();
+    let r1 = MicroBench::new(Component::Executer).run(&cfg).steady_rate();
+    let r16a = MicroBench::new(Component::Executer).instances(16, 8).run(&cfg).steady_rate();
+    let r16b = MicroBench::new(Component::Executer).instances(16, 4).run(&cfg).steady_rate();
+    assert!((r1.mean - 171.0).abs() < 20.0);
+    assert!((r16a.mean - r16b.mean).abs() < 0.15 * r16a.mean, "placement independence");
+}
+
+#[test]
+fn fig7_ceiling_guard() {
+    let r = sim("stampede", 8192, 1, 64.0, BarrierMode::Agent);
+    assert!((3300..4900).contains(&(r.peak_concurrency as i32)), "peak={}", r.peak_concurrency);
+    let r = sim("stampede", 1024, 3, 64.0, BarrierMode::Agent);
+    assert_eq!(r.peak_concurrency, 1024);
+}
+
+#[test]
+fn fig8_decomposition_guard() {
+    let r = sim("stampede", 512, 3, 64.0, BarrierMode::Agent);
+    let a = Analysis::new(&r.profile);
+    let phases = a.unit_phases();
+    assert_eq!(phases.len(), 1536);
+    let pickup: f64 = phases.iter().map(|p| p.pickup).sum();
+    let sched: f64 = phases.iter().map(|p| p.scheduling).sum();
+    assert!(pickup > 10.0 * sched, "pickup delay dominates");
+    let overhead: f64 = phases.iter().map(|p| p.occupation_overhead()).sum();
+    assert!(pickup / overhead > 0.8);
+}
+
+#[test]
+fn fig9_utilization_guard() {
+    let short = sim("stampede", 1024, 3, 16.0, BarrierMode::Agent);
+    let long = sim("stampede", 1024, 3, 256.0, BarrierMode::Agent);
+    assert!(long.utilization > 0.95, "long units ~ full: {}", long.utilization);
+    assert!(short.utilization < long.utilization - 0.1);
+}
+
+#[test]
+fn fig10_barrier_guard() {
+    let a = sim("comet", 192, 5, 60.0, BarrierMode::Agent);
+    let app = sim("comet", 192, 5, 60.0, BarrierMode::Application);
+    let g = sim("comet", 192, 5, 60.0, BarrierMode::Generation);
+    assert!(a.ttc_a >= 300.0 && a.ttc_a < 330.0, "agent={}", a.ttc_a);
+    assert!((app.ttc_a - a.ttc_a).abs() / a.ttc_a < 0.1);
+    assert!(g.ttc_a > a.ttc_a + 20.0, "gen barrier gaps: {} vs {}", g.ttc_a, a.ttc_a);
+}
+
+#[test]
+fn bluewaters_agent_level_consistent() {
+    // BW launches at ~9/s: a 256-core pilot with 60 s units can't fill
+    let r = sim("bluewaters", 1024, 1, 60.0, BarrierMode::Agent);
+    assert!(
+        (400..700).contains(&(r.peak_concurrency as i32)),
+        "BW ceiling ~ 9/s * 60s: {}",
+        r.peak_concurrency
+    );
+}
+
+#[test]
+fn multi_core_units_in_sim() {
+    let cfg = ResourceConfig::load("stampede").unwrap();
+    let wl = WorkloadSpec::uniform(96, 30.0).with_cores(16, true).build();
+    let sc = AgentSimConfig::paper_default(256);
+    let r = AgentSim::new(&cfg, sc, &wl).run();
+    // 96 units x 16 cores on 256 cores = 6 units concurrent per gen
+    assert_eq!(r.peak_concurrency, 16);
+    assert!(r.ttc_a >= 6.0 * 30.0);
+}
+
+#[test]
+fn sim_deterministic_across_runs() {
+    let a = sim("comet", 256, 2, 30.0, BarrierMode::Application);
+    let b = sim("comet", 256, 2, 30.0, BarrierMode::Application);
+    assert_eq!(a.ttc_a, b.ttc_a);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.utilization, b.utilization);
+}
+
+#[test]
+fn profile_state_sequences_legal_in_sim() {
+    // every profiled unit respects the state machine ordering
+    use rp::states::UnitState as S;
+    let r = sim("stampede", 64, 2, 5.0, BarrierMode::Agent);
+    let mut per_unit: std::collections::HashMap<_, Vec<S>> = Default::default();
+    for e in &r.profile.events {
+        per_unit.entry(e.unit).or_default().push(e.state);
+    }
+    assert_eq!(per_unit.len(), 128);
+    for (unit, states) in per_unit {
+        for w in states.windows(2) {
+            assert!(
+                w[0].can_transition(w[1]),
+                "unit {unit}: illegal {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}

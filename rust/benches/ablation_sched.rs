@@ -5,13 +5,18 @@
 //!     allocation micro-throughput as the pilot fills.
 //! (b) Continuous vs Torus on multi-node MPI workloads: allocation
 //!     success under fragmentation.
+//! (c) Concurrent (partitioned) schedulers — paper §VI future work (i).
+//! (d) Wait-pool policy: FIFO (faithful head-of-line) vs backfill on a
+//!     mixed-size workload — utilization and placement throughput.
 
-use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
-use rp::bench_harness::{write_csv, Check, Report};
+use rp::agent::scheduler::{
+    ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode, TorusScheduler, WaitPool,
+};
+use rp::bench_harness::{policy_probe, write_csv, Check, Report};
 use rp::config::ResourceConfig;
 use rp::sim::{AgentSim, AgentSimConfig};
 use rp::util;
-use rp::workload::WorkloadSpec;
+use rp::workload::{Workload, WorkloadSpec};
 
 /// Fill-and-churn throughput: allocate to 95% full, then measure
 /// release+allocate cycles/second (steady-state churn like generation 2+).
@@ -52,8 +57,12 @@ fn main() {
             r_fl / r_lin
         );
     }
-    write_csv("ablation_sched_search", "cores,linear_allocs_per_s,freelist_allocs_per_s,speedup", &rows)
-        .unwrap();
+    write_csv(
+        "ablation_sched_search",
+        "cores,linear_allocs_per_s,freelist_allocs_per_s,speedup",
+        &rows,
+    )
+    .unwrap();
     // linear degrades with pilot size; freelist doesn't (much)
     let first = rows.first().unwrap();
     let last = rows.last().unwrap();
@@ -142,6 +151,64 @@ fn main() {
         "4 partitions beat 1 on a sched-bound config",
         ttcs[2] < ttcs[0] * 0.95,
     ));
+
+    // (d) wait-pool policy: FIFO vs backfill on a mixed-size workload.
+    // 30% wide (16-core MPI) units among 1-core units: every wide unit
+    // that blocks the FIFO head strands free cores behind it.
+    let mixed = Workload::heterogeneous(
+        1024,
+        &[(1, 30.0, false, 0.7), (16, 90.0, true, 0.3)],
+        2015,
+    );
+    let pilot = 256usize;
+    let mut utils = vec![];
+    let mut policy_rows = vec![];
+    for policy in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
+        let (ttc, util) = policy_probe(&st, &mixed, pilot, policy, SearchMode::Linear);
+        println!(
+            "policy {:>8}: ttc_a {ttc:>7.1}s  core utilization {:>5.1}%",
+            policy.name(),
+            100.0 * util
+        );
+        policy_rows.push(vec![
+            policy.name().to_string(),
+            format!("{ttc:.1}"),
+            format!("{util:.4}"),
+        ]);
+        utils.push(util);
+    }
+    write_csv("ablation_sched_policy", "policy,ttc_a,core_utilization", &policy_rows).unwrap();
+    report.add(Check::shape(
+        "wait-pool backfill vs FIFO (mixed sizes)",
+        "backfill utilization >= FIFO",
+        utils[1] >= utils[0],
+    ));
+
+    // placement-pass micro-throughput of the pool itself: full pool over
+    // a churning pilot, passes per second
+    for policy in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
+        let mut sched = ContinuousScheduler::for_cores(4096, 32, SearchMode::FreeList);
+        let mut pool: WaitPool<u32> = WaitPool::new(policy);
+        for u in 0..8192u32 {
+            pool.push(u, if u % 8 == 0 { 32 } else { 1 });
+        }
+        let t0 = util::now();
+        let mut live = vec![];
+        let mut placed_total = 0usize;
+        while !pool.is_empty() {
+            pool.place_all(&mut sched, |_, a| live.push(a));
+            placed_total += live.len();
+            for a in live.drain(..) {
+                sched.release(&a);
+            }
+        }
+        let dt = util::now() - t0;
+        println!(
+            "pool churn {:>8}: {placed_total} placements in {dt:.3}s ({:.0}/s)",
+            policy.name(),
+            placed_total as f64 / dt.max(1e-9)
+        );
+    }
 
     std::process::exit(report.print());
 }

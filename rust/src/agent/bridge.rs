@@ -58,6 +58,20 @@ impl<T> Bridge<T> {
         }
     }
 
+    /// Non-blocking receive of everything currently queued (may be
+    /// empty).  Used by event-driven consumers that multiplex several
+    /// wake sources and must not block on any single bridge.
+    pub fn try_recv_all(&self) -> Vec<T> {
+        let got = self.queue.pull_bulk(usize::MAX);
+        self.out_count.fetch_add(got.len() as u64, Ordering::Relaxed);
+        got
+    }
+
+    /// Closed with nothing left to drain?
+    pub fn is_drained(&self) -> bool {
+        self.queue.is_closed() && self.queue.is_empty()
+    }
+
     pub fn close(&self) {
         self.queue.close();
     }
@@ -92,8 +106,19 @@ mod tests {
         let b = Bridge::new("test");
         b.send(7);
         b.close();
+        assert!(!b.is_drained());
         assert_eq!(b.recv(10), vec![7]);
         assert!(b.recv(10).is_empty());
+        assert!(b.is_drained());
+    }
+
+    #[test]
+    fn try_recv_all_never_blocks() {
+        let b: Bridge<u32> = Bridge::new("test");
+        assert!(b.try_recv_all().is_empty());
+        b.send_bulk([1, 2, 3]);
+        assert_eq!(b.try_recv_all(), vec![1, 2, 3]);
+        assert_eq!(b.counters(), (3, 3));
     }
 
     #[test]

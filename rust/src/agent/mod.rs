@@ -6,7 +6,10 @@
 //! bridges:
 //!
 //! * [`scheduler`] — assigns pilot cores to units (`Continuous` for core
-//!   continuums, `Torus` for IBM BG/Q-style n-dimensional tori);
+//!   continuums, `Torus` for IBM BG/Q-style n-dimensional tori), with an
+//!   event-driven wait-pool in front: pending units are held in a
+//!   [`scheduler::WaitPool`] and a placement pass runs on every submit
+//!   and core-release event (`fifo` head-of-line or `backfill` policy);
 //! * [`executer`] — derives launching commands (SSH, MPIRUN, APRUN, …)
 //!   and spawns units via `Popen`/`Shell` mechanisms (plus `InProc` for
 //!   PJRT payloads — no Python on the request path);
@@ -28,4 +31,7 @@ pub mod scheduler;
 pub mod stager;
 
 pub use nodelist::{Allocation, NodeList};
-pub use scheduler::{make_scheduler, ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+pub use scheduler::{
+    make_scheduler, make_scheduler_with, ContinuousScheduler, CoreScheduler, SchedPolicy,
+    SearchMode, TorusScheduler, WaitPool,
+};

@@ -2,10 +2,18 @@
 //! Scheduler, Executer and Stager components over [`Bridge`]s — what RP
 //! bootstraps inside a pilot allocation (paper Fig. 1/3).
 //!
+//! Scheduling is event-driven through a [`WaitPool`]: the scheduler
+//! thread drains the input bridge into the pool and runs a placement
+//! pass on every submit and every core-release event (no polling, no
+//! head-of-line blocking of the thread).  The pool's policy decides
+//! whether a blocked head stalls the queue (`fifo`, paper-faithful) or
+//! smaller units may overtake it (`backfill`).
+//!
 //! Used by the Pilot API for local pilots (examples, the end-to-end MD
 //! driver) and by the profiler-overhead bench; the supercomputer-scale
 //! figure benches use the DES twin ([`crate::sim::AgentSim`]), which
-//! drives the same scheduler code and records the same profile events.
+//! drives the same scheduler implementations *and the same wait-pool*
+//! and records the same profile events.
 
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
@@ -15,7 +23,9 @@ use crate::agent::bridge::Bridge;
 use crate::agent::executer::spawn::make_spawner;
 use crate::agent::executer::{select_method, ExecOutcome, LaunchMethod, Spawner};
 use crate::agent::nodelist::Allocation;
-use crate::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+use crate::agent::scheduler::{
+    make_scheduler_with, CoreScheduler, SchedPolicy, SearchMode, WaitPool,
+};
 use crate::agent::stager;
 use crate::api::descriptions::{UnitDescription, UnitPayload};
 use crate::config::ResourceConfig;
@@ -45,6 +55,11 @@ pub struct UnitRecord {
     pub outcome: Option<UnitOutcome>,
     pub error: Option<String>,
     pub cancel_requested: bool,
+    /// Wake handle to the owning Agent's scheduler, set when the unit is
+    /// admitted into the wait-pool: cancellation is a scheduling event
+    /// too, so `Unit::cancel` can finalize a pooled unit promptly instead
+    /// of waiting for the next submit/release.
+    pub(crate) sched_wake: Option<std::sync::Weak<SchedShared>>,
 }
 
 /// Shared handle to a unit record (condvar notifies state changes).
@@ -60,6 +75,7 @@ pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
             outcome: None,
             error: None,
             cancel_requested: false,
+            sched_wake: None,
         }),
         Condvar::new(),
     ))
@@ -86,6 +102,15 @@ fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
     cv.notify_all();
 }
 
+fn cancel_unit(unit: &SharedUnit, profiler: &Profiler) {
+    let (m, cv) = &**unit;
+    let mut rec = m.lock().unwrap();
+    let t = util::now();
+    let _ = rec.machine.advance(S::Canceled, t);
+    profiler.record(t, rec.id, S::Canceled);
+    cv.notify_all();
+}
+
 /// Real-agent configuration, derived from the resource config.
 #[derive(Debug, Clone)]
 pub struct RealAgentConfig {
@@ -97,6 +122,7 @@ pub struct RealAgentConfig {
     pub task_method: String,
     pub scheduler_algorithm: String,
     pub search_mode: SearchMode,
+    pub scheduler_policy: SchedPolicy,
     pub sandbox: PathBuf,
     /// Run synthetic units as real `sleep` processes (true exercises the
     /// spawn path; false sleeps in-thread).
@@ -113,17 +139,36 @@ impl RealAgentConfig {
             mpi_method: cfg.launch_methods.mpi.clone(),
             task_method: cfg.launch_methods.task.clone(),
             scheduler_algorithm: cfg.agent.scheduler_algorithm.clone(),
-            search_mode: SearchMode::FreeList,
+            search_mode: SearchMode::parse(&cfg.agent.search_mode).unwrap_or_default(),
+            scheduler_policy: SchedPolicy::parse(&cfg.agent.scheduler_policy)
+                .unwrap_or_default(),
             sandbox,
             synthetic_as_process: false,
         }
     }
 }
 
-struct SchedShared {
-    sched: Mutex<Box<dyn CoreScheduler>>,
-    freed: Condvar,
-    stopping: Mutex<bool>,
+/// Scheduler-side shared state.  `wake_seq` is bumped under the lock by
+/// every scheduling event (submit, core release, stop); the scheduler
+/// thread snapshots it before draining input and sleeps only while it is
+/// unchanged, so no event can be missed and no poll timeout is needed.
+struct SchedState {
+    sched: Box<dyn CoreScheduler>,
+    wake_seq: u64,
+    stopping: bool,
+}
+
+pub(crate) struct SchedShared {
+    state: Mutex<SchedState>,
+    wake: Condvar,
+}
+
+impl SchedShared {
+    /// Record a scheduling event and wake the scheduler thread.
+    pub(crate) fn notify_event(&self) {
+        self.state.lock().unwrap().wake_seq += 1;
+        self.wake.notify_all();
+    }
 }
 
 /// The running Agent.
@@ -147,23 +192,21 @@ impl RealAgent {
         payloads: Option<PayloadStore>,
     ) -> Result<Arc<RealAgent>> {
         std::fs::create_dir_all(&cfg.sandbox)?;
-        let sched: Box<dyn CoreScheduler> = match cfg.scheduler_algorithm.as_str() {
-            "torus" => Box::new(TorusScheduler::for_cores(cfg.pilot_cores, cfg.cores_per_node)),
-            _ => Box::new(ContinuousScheduler::for_cores(
-                cfg.pilot_cores,
-                cfg.cores_per_node,
-                cfg.search_mode,
-            )),
-        };
+        // single construction path shared with the rest of the system
+        let sched = make_scheduler_with(
+            &cfg.scheduler_algorithm,
+            cfg.search_mode,
+            cfg.pilot_cores,
+            cfg.cores_per_node,
+        );
         let agent = Arc::new(RealAgent {
             cfg,
             input: Bridge::new("agent-input"),
             exec_bridge: Bridge::new("sched-exec"),
             stage_bridge: Bridge::new("exec-stageout"),
             sched_shared: Arc::new(SchedShared {
-                sched: Mutex::new(sched),
-                freed: Condvar::new(),
-                stopping: Mutex::new(false),
+                state: Mutex::new(SchedState { sched, wake_seq: 0, stopping: false }),
+                wake: Condvar::new(),
             }),
             profiler,
             threads: Mutex::new(Vec::new()),
@@ -210,21 +253,28 @@ impl RealAgent {
     }
 
     /// Submit units to the Agent (they must be in `AStagingInPending`).
+    /// Every submission is a scheduling event: it triggers a placement
+    /// pass over the wait-pool.
     pub fn submit(&self, units: Vec<SharedUnit>) {
         self.input.send_bulk(units);
+        self.sched_shared.notify_event();
     }
 
     /// Pilot capacity in cores.
     pub fn capacity(&self) -> usize {
-        self.sched_shared.sched.lock().unwrap().capacity()
+        self.sched_shared.state.lock().unwrap().sched.capacity()
     }
 
     /// Drain all queued work and stop the component threads.
     pub fn drain_and_stop(&self) {
         self.input.close();
-        // wake a possibly-blocked scheduler so it can observe shutdown
-        *self.sched_shared.stopping.lock().unwrap() = true;
-        self.sched_shared.freed.notify_all();
+        // wake a possibly-idle scheduler so it can observe shutdown
+        {
+            let mut st = self.sched_shared.state.lock().unwrap();
+            st.stopping = true;
+            st.wake_seq += 1;
+        }
+        self.sched_shared.wake.notify_all();
         let threads = std::mem::take(&mut *self.threads.lock().unwrap());
         // scheduler exits -> close exec bridge -> executers exit ->
         // close stage bridge -> stager exits (ordering enforced below)
@@ -235,74 +285,103 @@ impl RealAgent {
 
     // ------------------------------------------------------------- threads
 
+    /// Event-driven scheduling: drain-input -> place-from-pool -> sleep
+    /// until the next submit / core-release / stop event.  The pool (not
+    /// the thread) holds units that do not fit yet, so a blocked head
+    /// never stalls unit intake, and under the backfill policy it does
+    /// not stall placement of smaller units either.
     fn scheduler_loop(&self) {
+        let mut pool: WaitPool<SharedUnit> = WaitPool::new(self.cfg.scheduler_policy);
         loop {
-            let batch = self.input.recv(64);
-            if batch.is_empty() {
-                break; // closed + drained
-            }
-            for unit in batch {
+            // Snapshot the wake sequence *before* draining input: any
+            // event racing with this pass bumps it and the sleep below
+            // returns immediately, so no wakeup can be lost.
+            let seen_seq = self.sched_shared.state.lock().unwrap().wake_seq;
+
+            // drain-input: admit everything queued into the wait-pool
+            for unit in self.input.try_recv_all() {
                 // AGENT_SCHEDULING_PENDING on entry into the scheduler
                 if advance(&unit, S::ASchedulingPending, &self.profiler).is_err() {
                     continue; // canceled/failed upstream
                 }
-                let cores = unit.0.lock().unwrap().descr.cores;
-                // wait for an allocation
-                let alloc = {
-                    let mut sched = self.sched_shared.sched.lock().unwrap();
-                    loop {
-                        if unit.0.lock().unwrap().cancel_requested {
-                            break None;
-                        }
-                        if cores > sched.capacity() {
-                            break None;
-                        }
-                        if let Some(a) = sched.allocate(cores) {
-                            break Some(a);
-                        }
-                        if *self.sched_shared.stopping.lock().unwrap() {
-                            break None;
-                        }
-                        let (s, _t) = self
-                            .sched_shared
-                            .freed
-                            .wait_timeout(sched, std::time::Duration::from_millis(200))
-                            .unwrap();
-                        sched = s;
-                    }
+                let (canceled, cores) = {
+                    let mut rec = unit.0.lock().unwrap();
+                    // cancellation must be able to wake this loop
+                    rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
+                    (rec.cancel_requested, rec.descr.cores)
                 };
-                match alloc {
-                    Some(alloc) => {
-                        let _ = advance(&unit, S::AScheduling, &self.profiler);
-                        let _ = advance(&unit, S::AExecutingPending, &self.profiler);
-                        self.exec_bridge.send((unit, alloc));
-                    }
-                    None => {
-                        let rec = unit.0.lock().unwrap();
-                        let oversized = cores > self.cfg.pilot_cores;
-                        let canceled = rec.cancel_requested;
-                        drop(rec);
-                        if canceled {
-                            let (m, cv) = &*unit;
-                            let mut r = m.lock().unwrap();
-                            let t = util::now();
-                            let _ = r.machine.advance(S::Canceled, t);
-                            self.profiler.record(t, r.id, S::Canceled);
-                            cv.notify_all();
-                        } else if oversized {
-                            fail_unit(
-                                &unit,
-                                format!(
-                                    "unit needs {cores} cores, pilot has {}",
-                                    self.cfg.pilot_cores
-                                ),
-                                &self.profiler,
-                            );
-                        } else {
-                            fail_unit(&unit, "agent shutting down".into(), &self.profiler);
-                        }
-                    }
+                // cancellation wins over the oversize check, matching
+                // the shutdown path below
+                if canceled {
+                    cancel_unit(&unit, &self.profiler);
+                    continue;
                 }
+                if cores > self.cfg.pilot_cores {
+                    fail_unit(
+                        &unit,
+                        format!(
+                            "unit needs {cores} cores, pilot has {}",
+                            self.cfg.pilot_cores
+                        ),
+                        &self.profiler,
+                    );
+                    continue;
+                }
+                pool.push(unit, cores);
+            }
+
+            // finalize cancellations before attempting placement
+            for (unit, _) in
+                pool.retain_or_remove(|u, _| !u.0.lock().unwrap().cancel_requested)
+            {
+                cancel_unit(&unit, &self.profiler);
+            }
+
+            // placement pass: allocate cores under the scheduler lock,
+            // hand the placed units to the executers outside of it
+            let mut placed = Vec::new();
+            let stopping = {
+                let mut st = self.sched_shared.state.lock().unwrap();
+                pool.place_all(&mut *st.sched, |unit, alloc| placed.push((unit, alloc)));
+                st.stopping
+            };
+            for (unit, alloc) in placed {
+                let _ = advance(&unit, S::AScheduling, &self.profiler);
+                let _ = advance(&unit, S::AExecutingPending, &self.profiler);
+                self.exec_bridge.send((unit, alloc));
+            }
+
+            if stopping || (self.input.is_drained() && pool.is_empty()) {
+                break;
+            }
+
+            // sleep until the next scheduling event (no poll timeout)
+            let mut st = self.sched_shared.state.lock().unwrap();
+            while st.wake_seq == seen_seq && !st.stopping {
+                st = self.sched_shared.wake.wait(st).unwrap();
+            }
+        }
+        // shutdown: every unit still waiting reaches a final state
+        let leftovers = self
+            .input
+            .try_recv_all()
+            .into_iter()
+            .chain(pool.drain_all().into_iter().map(|(unit, _)| unit));
+        for unit in leftovers {
+            let (canceled, cores) = {
+                let rec = unit.0.lock().unwrap();
+                (rec.cancel_requested, rec.descr.cores)
+            };
+            if canceled {
+                cancel_unit(&unit, &self.profiler);
+            } else if cores > self.cfg.pilot_cores {
+                fail_unit(
+                    &unit,
+                    format!("unit needs {cores} cores, pilot has {}", self.cfg.pilot_cores),
+                    &self.profiler,
+                );
+            } else {
+                fail_unit(&unit, "agent shutting down".into(), &self.profiler);
             }
         }
         self.exec_bridge.close();
@@ -314,12 +393,14 @@ impl RealAgent {
             let mut batch = self.exec_bridge.recv(1);
             let Some((unit, alloc)) = batch.pop() else { break };
             self.execute_one(&unit, &alloc, spawner.as_ref(), payloads.as_ref());
-            // release cores when the unit leaves AExecuting
+            // release cores when the unit leaves AExecuting; every
+            // release is a scheduling event (re-place from the pool)
             {
-                let mut sched = self.sched_shared.sched.lock().unwrap();
-                sched.release(&alloc);
+                let mut st = self.sched_shared.state.lock().unwrap();
+                st.sched.release(&alloc);
+                st.wake_seq += 1;
             }
-            self.sched_shared.freed.notify_all();
+            self.sched_shared.wake.notify_all();
             self.stage_bridge.send(unit);
         }
         // the last executer out closes the stage bridge
@@ -506,6 +587,7 @@ mod tests {
             task_method: "FORK".into(),
             scheduler_algorithm: "continuous".into(),
             search_mode: SearchMode::FreeList,
+            scheduler_policy: SchedPolicy::Fifo,
             sandbox: sandbox(name),
             synthetic_as_process: false,
         }
@@ -605,6 +687,52 @@ mod tests {
         advance(&u, S::AStagingInPending, &profiler).unwrap();
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Failed);
+        agent.drain_and_stop();
+    }
+
+    #[test]
+    fn backfill_small_unit_overtakes_blocked_wide_head() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("backfill", 4, 2);
+        cfg.scheduler_policy = SchedPolicy::Backfill;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        let mk = |i: u64, cores: usize, dur: f64| {
+            let u = new_unit(UnitId(i), UnitDescription::sleep(dur).cores(cores));
+            advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+            advance(&u, S::UmScheduling, &profiler).unwrap();
+            advance(&u, S::AStagingInPending, &profiler).unwrap();
+            u
+        };
+        // the long unit occupies a core; the wide unit then blocks at
+        // the head of the pool; the small unit backfills around it
+        let long = mk(0, 1, 0.5);
+        let wide = mk(1, 4, 0.05);
+        let small = mk(2, 1, 0.05);
+        agent.submit(vec![long.clone()]);
+        // make sure the long unit is placed before the wide one arrives
+        {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            let (m, cv) = &*long;
+            let mut rec = m.lock().unwrap();
+            while rec.machine.entered(S::AExecuting).is_none() {
+                assert!(std::time::Instant::now() < deadline, "long unit never started");
+                let (r, _) = cv
+                    .wait_timeout(rec, std::time::Duration::from_millis(100))
+                    .unwrap();
+                rec = r;
+            }
+        }
+        agent.submit(vec![wide.clone(), small.clone()]);
+        for u in [&long, &wide, &small] {
+            assert_eq!(wait_final(u, 10.0), S::Done);
+        }
+        let small_done = small.0.lock().unwrap().machine.entered(S::Done).unwrap();
+        let wide_started = wide.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+        assert!(
+            small_done < wide_started,
+            "small unit must finish ({small_done:.3}s) before the blocked wide head \
+             starts ({wide_started:.3}s)"
+        );
         agent.drain_and_stop();
     }
 

@@ -12,12 +12,21 @@
 //! optimized [`SearchMode::FreeList`] (cursor + per-node free counters)
 //! used in the §Perf pass; `benches/ablation_sched.rs` quantifies the
 //! difference.
+//!
+//! In front of the core search sits the event-driven [`WaitPool`]
+//! (`waitpool`): pending units wait there, and each submit/core-release
+//! event triggers a placement pass under [`SchedPolicy::Fifo`]
+//! (paper-faithful head-of-line) or [`SchedPolicy::Backfill`]; both the
+//! real Agent and the DES twin schedule through it
+//! (`benches/ablation_policy.rs` quantifies the policies).
 
 mod continuous;
 mod torus;
+mod waitpool;
 
 pub use continuous::ContinuousScheduler;
 pub use torus::TorusScheduler;
+pub use waitpool::{SchedPolicy, WaitPool};
 
 use super::nodelist::Allocation;
 use crate::config::ResourceConfig;
@@ -30,6 +39,23 @@ pub enum SearchMode {
     Linear,
     /// Optimized: skip-cursor over nodes with free cores.
     FreeList,
+}
+
+impl SearchMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchMode::Linear => "linear",
+            SearchMode::FreeList => "freelist",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s {
+            "linear" => Some(SearchMode::Linear),
+            "freelist" | "free_list" => Some(SearchMode::FreeList),
+            _ => None,
+        }
+    }
 }
 
 /// Common interface the Agent (real or simulated) drives.
@@ -47,15 +73,31 @@ pub trait CoreScheduler: Send {
     fn name(&self) -> &'static str;
 }
 
-/// Factory from a resource config ("continuous" | "torus").
+/// Factory from a resource config ("continuous" | "torus"), honoring the
+/// configured search mode.  The single construction path shared by the
+/// real Agent and any direct caller — keep it in sync with nothing,
+/// because there is nothing else.
 pub fn make_scheduler(cfg: &ResourceConfig, pilot_cores: usize) -> Box<dyn CoreScheduler> {
-    match cfg.agent.scheduler_algorithm.as_str() {
-        "torus" => Box::new(TorusScheduler::for_cores(pilot_cores, cfg.cores_per_node)),
-        _ => Box::new(ContinuousScheduler::for_cores(
-            pilot_cores,
-            cfg.cores_per_node,
-            SearchMode::Linear,
-        )),
+    make_scheduler_with(
+        &cfg.agent.scheduler_algorithm,
+        SearchMode::parse(&cfg.agent.search_mode).unwrap_or_default(),
+        pilot_cores,
+        cfg.cores_per_node,
+    )
+}
+
+/// Lower-level factory used by [`make_scheduler`] and by
+/// [`crate::agent::real::RealAgent::bootstrap`] (which carries the
+/// algorithm/mode in its own config).
+pub fn make_scheduler_with(
+    algorithm: &str,
+    mode: SearchMode,
+    pilot_cores: usize,
+    cores_per_node: usize,
+) -> Box<dyn CoreScheduler> {
+    match algorithm {
+        "torus" => Box::new(TorusScheduler::for_cores(pilot_cores, cores_per_node)),
+        _ => Box::new(ContinuousScheduler::for_cores(pilot_cores, cores_per_node, mode)),
     }
 }
 
@@ -73,5 +115,27 @@ mod tests {
         cfg.agent.scheduler_algorithm = "torus".into();
         let s = make_scheduler(&cfg, 64);
         assert_eq!(s.name(), "torus");
+    }
+
+    #[test]
+    fn factory_honors_search_mode_config() {
+        let mut cfg = builtin("xsede.stampede").unwrap();
+        cfg.agent.search_mode = "freelist".into();
+        let s = make_scheduler(&cfg, 64);
+        assert_eq!(s.capacity(), 64);
+        // unknown mode falls back to the paper-faithful default
+        cfg.agent.search_mode = "bogus".into();
+        let s = make_scheduler(&cfg, 64);
+        assert_eq!(s.name(), "continuous");
+    }
+
+    #[test]
+    fn search_mode_parse_roundtrip() {
+        for m in [SearchMode::Linear, SearchMode::FreeList] {
+            assert_eq!(SearchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SearchMode::parse("free_list"), Some(SearchMode::FreeList));
+        assert_eq!(SearchMode::parse("quadratic"), None);
+        assert_eq!(SearchMode::default(), SearchMode::Linear);
     }
 }

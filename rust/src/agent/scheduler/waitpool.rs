@@ -1,0 +1,293 @@
+//! Event-driven wait-pool: the queue of units waiting for pilot cores.
+//!
+//! The paper's Agent Scheduler (§III-B) holds schedulable units in a
+//! wait queue and assigns cores as they free up.  The pool is driven by
+//! *events* — every submit and every core-release triggers a placement
+//! pass — instead of blocking on the head unit, and it is shared by both
+//! execution substrates: [`crate::agent::real::RealAgent`] (thread
+//! pipeline) and [`crate::sim::AgentSim`] (DES twin) place through the
+//! same pass logic, so policy behavior is identical in both modes.
+//!
+//! Two policies:
+//!
+//! * [`SchedPolicy::Fifo`] — faithful to the paper: the head unit blocks
+//!   the queue until it can be placed (head-of-line);
+//! * [`SchedPolicy::Backfill`] — smaller units may overtake a blocked
+//!   head (EASY-style backfilling), which keeps cores busy under
+//!   heterogeneous (mixed 1-core / wide-MPI) workloads.
+//!
+//! Within one placement pass free cores only shrink, so a single ordered
+//! sweep is complete: a unit that did not fit earlier in the pass cannot
+//! fit later in the same pass.
+
+use std::collections::VecDeque;
+
+use super::CoreScheduler;
+use crate::agent::nodelist::Allocation;
+
+/// Placement policy of the wait-pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict submission order; a blocked head blocks everything behind
+    /// it (the paper's published behavior).
+    #[default]
+    Fifo,
+    /// Units behind a blocked head may be placed if they fit.
+    Backfill,
+}
+
+impl SchedPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Backfill => "backfill",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "backfill" => Some(SchedPolicy::Backfill),
+            _ => None,
+        }
+    }
+}
+
+/// A unit waiting for cores: caller payload plus its core request.
+#[derive(Debug, Clone)]
+struct Waiting<T> {
+    item: T,
+    cores: usize,
+}
+
+/// The pool of units awaiting placement onto pilot cores.
+///
+/// Generic over the caller's unit handle: the real Agent stores
+/// `SharedUnit`s, the DES twin stores unit indices.
+#[derive(Debug)]
+pub struct WaitPool<T> {
+    policy: SchedPolicy,
+    queue: VecDeque<Waiting<T>>,
+    submitted: u64,
+    placed: u64,
+}
+
+impl<T> WaitPool<T> {
+    pub fn new(policy: SchedPolicy) -> Self {
+        WaitPool { policy, queue: VecDeque::new(), submitted: 0, placed: 0 }
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Units currently waiting.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Total cores requested by waiting units (backlog gauge).
+    pub fn waiting_cores(&self) -> usize {
+        self.queue.iter().map(|w| w.cores).sum()
+    }
+
+    /// (submitted, placed) lifetime counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.submitted, self.placed)
+    }
+
+    /// Enqueue a unit requesting `cores` (0 is clamped to 1 so a bogus
+    /// request cannot wedge the FIFO head forever).
+    pub fn push(&mut self, item: T, cores: usize) {
+        self.submitted += 1;
+        self.queue.push_back(Waiting { item, cores: cores.max(1) });
+    }
+
+    /// Remove and return every waiting unit for which `pred` is false
+    /// (canceled units, shutdown).  Retained units keep their order.
+    /// Runs on every scheduling event, so the nothing-to-remove case
+    /// (by far the common one) is a pure scan with no allocation.
+    pub fn retain_or_remove(
+        &mut self,
+        mut pred: impl FnMut(&T, usize) -> bool,
+    ) -> Vec<(T, usize)> {
+        let Some(start) = self.queue.iter().position(|w| !pred(&w.item, w.cores)) else {
+            return Vec::new();
+        };
+        // rebuild only the tail from the first removal on; `pred` may be
+        // re-evaluated for that element (removal predicates — canceled,
+        // shutdown — are monotone, so the answer cannot flip back)
+        let mut removed = Vec::new();
+        let tail: Vec<Waiting<T>> = self.queue.drain(start..).collect();
+        for w in tail {
+            if pred(&w.item, w.cores) {
+                self.queue.push_back(w);
+            } else {
+                removed.push((w.item, w.cores));
+            }
+        }
+        removed
+    }
+
+    /// Drain the whole pool (agent shutdown), in queue order.
+    pub fn drain_all(&mut self) -> Vec<(T, usize)> {
+        self.queue.drain(..).map(|w| (w.item, w.cores)).collect()
+    }
+
+    /// Take the next placeable unit under the policy, allocating its
+    /// cores from `sched`.  Returns `None` when nothing (more) can be
+    /// placed right now.  Used by the DES twin, whose scheduler is a
+    /// service station placing one unit per service completion.
+    pub fn pop_placeable(&mut self, sched: &mut dyn CoreScheduler) -> Option<(T, Allocation)> {
+        let limit = match self.policy {
+            SchedPolicy::Fifo => 1.min(self.queue.len()),
+            SchedPolicy::Backfill => self.queue.len(),
+        };
+        for i in 0..limit {
+            if let Some(alloc) = sched.allocate(self.queue[i].cores) {
+                let w = self.queue.remove(i).expect("index in bounds");
+                self.placed += 1;
+                return Some((w.item, alloc));
+            }
+        }
+        None
+    }
+
+    /// One full placement pass: place every unit that fits, calling
+    /// `on_place` for each.  Under FIFO the pass stops at the first unit
+    /// that does not fit; under Backfill blocked units are skipped.
+    /// Returns the number of units placed.  Used by the real Agent on
+    /// every submit and core-release event.
+    pub fn place_all(
+        &mut self,
+        sched: &mut dyn CoreScheduler,
+        mut on_place: impl FnMut(T, Allocation),
+    ) -> usize {
+        let mut n_placed = 0;
+        let mut i = 0;
+        while i < self.queue.len() {
+            match sched.allocate(self.queue[i].cores) {
+                Some(alloc) => {
+                    let w = self.queue.remove(i).expect("index in bounds");
+                    self.placed += 1;
+                    n_placed += 1;
+                    on_place(w.item, alloc);
+                    // the next candidate shifted into slot `i`
+                }
+                None if self.policy == SchedPolicy::Fifo => break,
+                None => i += 1,
+            }
+        }
+        n_placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::scheduler::{ContinuousScheduler, SearchMode};
+
+    fn sched(nodes: usize, cpn: usize) -> ContinuousScheduler {
+        ContinuousScheduler::new(nodes, cpn, SearchMode::FreeList)
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
+            assert_eq!(SchedPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("lifo"), None);
+        assert_eq!(SchedPolicy::default(), SchedPolicy::Fifo);
+    }
+
+    #[test]
+    fn fifo_head_of_line_blocks() {
+        let mut s = sched(1, 4);
+        let blocker = s.allocate(2).unwrap(); // 2 of 4 cores busy
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
+        pool.push(0, 4); // head cannot fit while the blocker runs
+        pool.push(1, 1); // would fit, but FIFO must not overtake
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        assert!(placed.is_empty(), "blocked head must block the queue");
+        assert_eq!(pool.len(), 2);
+        // release: now the head fits and the pass places it
+        s.release(&blocker);
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        assert_eq!(placed, vec![0]);
+        // 4-core head placed; 1-core follower no longer fits (0 free)
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn backfill_overtakes_blocked_head() {
+        let mut s = sched(1, 4);
+        let _blocker = s.allocate(2).unwrap();
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Backfill);
+        pool.push(0, 4); // blocked head
+        pool.push(1, 1);
+        pool.push(2, 1);
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        assert_eq!(placed, vec![1, 2], "small units overtake the wide head");
+        assert_eq!(pool.len(), 1, "the wide head keeps waiting");
+        assert_eq!(s.free_cores(), 0);
+    }
+
+    #[test]
+    fn pop_placeable_matches_policy() {
+        let mut s = sched(1, 4);
+        let _blocker = s.allocate(3).unwrap();
+        let mut fifo: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
+        fifo.push(0, 2);
+        fifo.push(1, 1);
+        assert!(fifo.pop_placeable(&mut s).is_none(), "FIFO only tries the head");
+        let mut bf: WaitPool<u32> = WaitPool::new(SchedPolicy::Backfill);
+        bf.push(0, 2);
+        bf.push(1, 1);
+        let (u, a) = bf.pop_placeable(&mut s).unwrap();
+        assert_eq!(u, 1);
+        assert_eq!(a.n_cores(), 1);
+        assert!(bf.pop_placeable(&mut s).is_none());
+    }
+
+    #[test]
+    fn retain_or_remove_splits() {
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
+        for u in 0..6 {
+            pool.push(u, 1);
+        }
+        let removed = pool.retain_or_remove(|u, _| u % 2 == 0);
+        assert_eq!(removed.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![1, 3, 5]);
+        assert_eq!(pool.len(), 3);
+        let rest = pool.drain_all();
+        assert_eq!(rest.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut s = sched(2, 4);
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
+        pool.push(0, 3);
+        pool.push(1, 2);
+        assert_eq!(pool.waiting_cores(), 5);
+        pool.place_all(&mut s, |_, _| {});
+        assert_eq!(pool.counters(), (2, 2));
+        assert_eq!(pool.waiting_cores(), 0);
+    }
+
+    #[test]
+    fn zero_core_request_clamped() {
+        let mut s = sched(1, 2);
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
+        pool.push(0, 0);
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, a| placed.push((u, a.n_cores())));
+        assert_eq!(placed, vec![(0, 1)]);
+    }
+}

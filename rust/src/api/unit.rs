@@ -34,9 +34,18 @@ impl Unit {
         self.shared.0.lock().unwrap().error.clone()
     }
 
-    /// Request cancellation (effective while the unit is queued).
+    /// Request cancellation (effective while the unit is queued).  If
+    /// the unit is already waiting in an Agent's pool, the Agent's
+    /// scheduler is woken so the cancellation finalizes promptly.
     pub fn cancel(&self) {
-        self.shared.0.lock().unwrap().cancel_requested = true;
+        let wake = {
+            let mut rec = self.shared.0.lock().unwrap();
+            rec.cancel_requested = true;
+            rec.sched_wake.clone()
+        };
+        if let Some(shared) = wake.and_then(|w| w.upgrade()) {
+            shared.notify_event();
+        }
     }
 
     /// Time the unit entered a state, if it did (profiled timeline).

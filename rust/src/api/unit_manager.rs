@@ -102,10 +102,16 @@ impl UnitManager {
 
     /// Submit unit descriptions; returns handles.  Units transit
     /// NEW -> UMGR_SCHEDULING -> (store) -> AGENT_* on the bound pilot.
+    ///
+    /// The store sees the whole submission as one bulk insert
+    /// ([`crate::db::Store::insert_bulk`]) *after* the round-robin
+    /// assignment loop, so the store lock is taken once per submission
+    /// instead of once per unit.
     pub fn submit(&self, descrs: Vec<UnitDescription>) -> Vec<Unit> {
         let profiler = self.session.profiler();
         let pilots = self.pilots.lock().unwrap().clone();
         let mut created = Vec::with_capacity(descrs.len());
+        let mut docs = Vec::with_capacity(descrs.len());
         let mut per_pilot: Vec<Vec<_>> = vec![Vec::new(); pilots.len().max(1)];
         {
             let mut rr = self.next_pilot.lock().unwrap();
@@ -125,16 +131,16 @@ impl UnitManager {
                     let _ = advance(&shared, S::UmScheduling, &profiler);
                     let k = *rr % pilots.len();
                     *rr += 1;
-                    self.session.store().insert(
-                        "units",
-                        &id.to_string(),
-                        shared.0.lock().unwrap().descr.to_json(),
-                    );
+                    docs.push((id.to_string(), shared.0.lock().unwrap().descr.to_json()));
                     let _ = advance(&shared, S::AStagingInPending, &profiler);
                     per_pilot[k].push(shared.clone());
                 }
                 created.push(unit);
             }
+        }
+        // one bulk write to the coordination store for the submission
+        if !docs.is_empty() {
+            self.session.store().insert_bulk("units", docs);
         }
         // feed each pilot's agent (optionally paying the modeled
         // communication latency, bulked as the store would)

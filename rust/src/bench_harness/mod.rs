@@ -4,6 +4,8 @@
 //! Each bench prints a paper-vs-measured table and writes the figure's
 //! raw series as CSV under `bench_out/`.
 
+pub mod policy;
 pub mod report;
 
+pub use policy::policy_probe;
 pub use report::{csv_path, write_csv, Check, Report};

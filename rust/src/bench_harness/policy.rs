@@ -1,0 +1,47 @@
+//! Shared wait-pool policy measurement used by the policy benches
+//! (`ablation_policy`, `ablation_sched` §d, `fig9_utilization`
+//! extension), so the three report the same quantity the same way.
+
+use crate::agent::scheduler::{SchedPolicy, SearchMode};
+use crate::config::ResourceConfig;
+use crate::sim::{AgentSim, AgentSimConfig};
+use crate::workload::Workload;
+
+/// Run `wl` on a `pilot_cores` pilot under `policy`/`search` and return
+/// `(ttc_a, core-weighted utilization)`.  Utilization is computed from
+/// the workload's total core-seconds over `pilot_cores * ttc_a`, which
+/// stays meaningful when units have mixed widths (unlike the per-unit
+/// metric in [`crate::profiler::Analysis::utilization`]).
+pub fn policy_probe(
+    resource: &ResourceConfig,
+    wl: &Workload,
+    pilot_cores: usize,
+    policy: SchedPolicy,
+    search: SearchMode,
+) -> (f64, f64) {
+    let mut cfg = AgentSimConfig::paper_default(pilot_cores);
+    cfg.policy = policy;
+    cfg.search_mode = search;
+    cfg.generation_size = pilot_cores;
+    let r = AgentSim::new(resource, cfg, wl).run();
+    let util = wl.core_seconds() / (pilot_cores as f64 * r.ttc_a);
+    (r.ttc_a, util)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+
+    #[test]
+    fn probe_is_deterministic_and_bounded() {
+        let st = builtin("stampede").unwrap();
+        let wl = crate::workload::WorkloadSpec::generations(64, 2, 10.0).build();
+        let (t1, u1) = policy_probe(&st, &wl, 64, SchedPolicy::Fifo, SearchMode::Linear);
+        let (t2, u2) = policy_probe(&st, &wl, 64, SchedPolicy::Fifo, SearchMode::Linear);
+        assert_eq!(t1, t2);
+        assert_eq!(u1, u2);
+        assert!(t1 >= 20.0, "2 gens x 10s lower bound: {t1}");
+        assert!(u1 > 0.0 && u1 <= 1.0 + 1e-9, "u={u1}");
+    }
+}

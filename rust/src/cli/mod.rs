@@ -5,6 +5,7 @@ mod args;
 
 pub use args::Args;
 
+use crate::agent::scheduler::{SchedPolicy, SearchMode};
 use crate::api::{PilotDescription, Session, UnitDescription};
 use crate::config::{builtin_labels, ResourceConfig};
 use crate::error::Result;
@@ -23,10 +24,13 @@ COMMANDS:
     run        execute a workload on a real local pilot
                  --cores N (4) --units N (16) --duration S (0.1)
                  --executers N  --artifact NAME (run PJRT payloads)
+                 --policy fifo|backfill  --search linear|freelist
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
                  --generations N (3) --duration S (64)
                  --barrier agent|application|generation
+                 --policy fifo|backfill  --search linear|freelist
+                 --schedulers N (1, concurrent partitions)
     micro      component micro-benchmark (paper §IV-B)
                  --component scheduler|stager_in|stager_out|executer
                  --resource LABEL --instances N (1) --nodes N (1)
@@ -67,12 +71,33 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
+/// Parse `--policy` / `--search` when given, validating the names; the
+/// resource config's own defaults apply otherwise.
+fn sched_flags(args: &Args) -> Result<(Option<SchedPolicy>, Option<SearchMode>)> {
+    let policy = args
+        .get("policy")
+        .map(|s| {
+            SchedPolicy::parse(s)
+                .ok_or_else(|| crate::Error::other("bad --policy (fifo|backfill)"))
+        })
+        .transpose()?;
+    let search = args
+        .get("search")
+        .map(|s| {
+            SearchMode::parse(s)
+                .ok_or_else(|| crate::Error::other("bad --search (linear|freelist)"))
+        })
+        .transpose()?;
+    Ok((policy, search))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cores = args.get_usize("cores", 4)?;
     let n_units = args.get_usize("units", 16)?;
     let duration = args.get_f64("duration", 0.1)?;
     let executers = args.get_usize("executers", 2)?;
     let artifact = args.get("artifact");
+    let (policy, search) = sched_flags(args)?;
 
     let session = Session::new("cli-run");
     if artifact.is_some() {
@@ -80,10 +105,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let pmgr = session.pilot_manager();
     let umgr = session.unit_manager();
-    let pilot = pmgr.submit(
-        PilotDescription::new("local.localhost", cores, 3600.0)
-            .with_override("agent.executers", executers.to_string()),
-    )?;
+    let mut pd = PilotDescription::new("local.localhost", cores, 3600.0)
+        .with_override("agent.executers", executers.to_string());
+    if let Some(p) = policy {
+        pd = pd.with_override("agent.scheduler_policy", p.name());
+    }
+    if let Some(s) = search {
+        pd = pd.with_override("agent.search_mode", s.name());
+    }
+    let pilot = pmgr.submit(pd)?;
     umgr.add_pilot(&pilot);
 
     let descrs: Vec<UnitDescription> = (0..n_units)
@@ -117,15 +147,26 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let cores = args.get_usize("cores", 1024)?;
     let generations = args.get_usize("generations", 3)?;
     let duration = args.get_f64("duration", 64.0)?;
+    let schedulers = args.get_usize("schedulers", 1)?;
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
+    let (policy, search) = sched_flags(args)?;
 
     let cfg = ResourceConfig::load(resource)?;
     let wl = WorkloadSpec::generations(cores, generations, duration).build();
     let mut sim_cfg = AgentSimConfig::paper_default(cores);
     sim_cfg.barrier = barrier;
+    sim_cfg.schedulers = schedulers.max(1);
+    if let Some(p) = policy {
+        sim_cfg.policy = p;
+    }
+    if let Some(s) = search {
+        sim_cfg.search_mode = s;
+    }
+    let (pname, sname) = (sim_cfg.policy.name(), sim_cfg.search_mode.name());
     let r = AgentSim::new(&cfg, sim_cfg, &wl).run();
     println!("resource: {}  pilot: {cores} cores", cfg.label);
+    println!("scheduler: policy={pname} search={sname} x{}", schedulers.max(1));
     println!(
         "workload: {} units x {duration}s ({generations} generations, {} barrier)",
         wl.len(),
@@ -216,10 +257,35 @@ mod tests {
     }
 
     #[test]
+    fn sim_scheduler_flags() {
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "2", "--duration", "10",
+                "--policy", "backfill", "--search", "freelist", "--schedulers", "2",
+            ]),
+            0
+        );
+        assert_eq!(run(&["sim", "--policy", "lifo"]), 1);
+        assert_eq!(run(&["sim", "--search", "quadratic"]), 1);
+    }
+
+    #[test]
     fn run_real_small() {
         assert_eq!(
             run(&["run", "--cores", "2", "--units", "4", "--duration", "0.01"]),
             0
         );
+    }
+
+    #[test]
+    fn run_real_backfill_policy() {
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--policy", "backfill",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--policy", "bogus"]), 1);
     }
 }

@@ -1,7 +1,7 @@
 //! Built-in resource configurations, embedded at compile time from
 //! `configs/*.json` (the same files users can copy and modify).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 use super::ResourceConfig;
 use crate::util::json::Value;
@@ -11,20 +11,23 @@ const COMET: &str = include_str!("../../../configs/comet.json");
 const BLUEWATERS: &str = include_str!("../../../configs/bluewaters.json");
 const LOCALHOST: &str = include_str!("../../../configs/localhost.json");
 
-static BUILTINS: Lazy<Vec<ResourceConfig>> = Lazy::new(|| {
-    [STAMPEDE, COMET, BLUEWATERS, LOCALHOST]
-        .iter()
-        .map(|text| {
-            ResourceConfig::from_json(&Value::parse(text).expect("builtin config parses"))
-                .expect("builtin config valid")
-        })
-        .collect()
-});
+fn builtins() -> &'static [ResourceConfig] {
+    static BUILTINS: OnceLock<Vec<ResourceConfig>> = OnceLock::new();
+    BUILTINS.get_or_init(|| {
+        [STAMPEDE, COMET, BLUEWATERS, LOCALHOST]
+            .iter()
+            .map(|text| {
+                ResourceConfig::from_json(&Value::parse(text).expect("builtin config parses"))
+                    .expect("builtin config valid")
+            })
+            .collect()
+    })
+}
 
 /// Look up a built-in resource config by label (e.g. `xsede.stampede`).
 /// Short aliases (`stampede`) are accepted too.
 pub fn builtin(label: &str) -> Option<ResourceConfig> {
-    BUILTINS
+    builtins()
         .iter()
         .find(|c| c.label == label || c.label.split('.').next_back() == Some(label))
         .cloned()
@@ -32,7 +35,7 @@ pub fn builtin(label: &str) -> Option<ResourceConfig> {
 
 /// Labels of all built-in configs.
 pub fn builtin_labels() -> Vec<String> {
-    BUILTINS.iter().map(|c| c.label.clone()).collect()
+    builtins().iter().map(|c| c.label.clone()).collect()
 }
 
 #[cfg(test)]

@@ -25,6 +25,11 @@ pub struct AgentLayout {
     pub spawner: String,
     /// "continuous" | "torus" scheduling algorithm.
     pub scheduler_algorithm: String,
+    /// "fifo" (paper-faithful head-of-line) | "backfill" wait-pool
+    /// placement policy.
+    pub scheduler_policy: String,
+    /// "linear" (paper-faithful full scan) | "freelist" core search.
+    pub search_mode: String,
 }
 
 impl Default for AgentLayout {
@@ -36,6 +41,8 @@ impl Default for AgentLayout {
             stagers_out: 1,
             spawner: "popen".into(),
             scheduler_algorithm: "continuous".into(),
+            scheduler_policy: "fifo".into(),
+            search_mode: "linear".into(),
         }
     }
 }
@@ -159,6 +166,21 @@ impl ResourceConfig {
         let ag = v.get("agent");
         let c = v.get("calib");
         let d = Calibration::default();
+        // validate the enum-like agent strings here, exactly like
+        // apply_override does, so a typo in a config file fails loudly
+        // instead of silently falling back to the fifo/linear defaults
+        let scheduler_policy = ag.get_str("scheduler_policy", "fifo").to_string();
+        if crate::agent::scheduler::SchedPolicy::parse(&scheduler_policy).is_none() {
+            return Err(Error::Config(format!(
+                "{label}: scheduler_policy '{scheduler_policy}': expected fifo|backfill"
+            )));
+        }
+        let search_mode = ag.get_str("search_mode", "linear").to_string();
+        if crate::agent::scheduler::SearchMode::parse(&search_mode).is_none() {
+            return Err(Error::Config(format!(
+                "{label}: search_mode '{search_mode}': expected linear|freelist"
+            )));
+        }
         Ok(ResourceConfig {
             label,
             description: v.get_str("description", "").to_string(),
@@ -179,6 +201,8 @@ impl ResourceConfig {
                 scheduler_algorithm: ag
                     .get_str("scheduler_algorithm", "continuous")
                     .to_string(),
+                scheduler_policy,
+                search_mode,
             },
             calib: Calibration {
                 sched_rate_mean: c.get_f64("sched_rate_mean", d.sched_rate_mean),
@@ -260,6 +284,18 @@ impl ResourceConfig {
             "agent.scheduler_algorithm" => {
                 self.agent.scheduler_algorithm = value.to_string()
             }
+            "agent.scheduler_policy" => {
+                crate::agent::scheduler::SchedPolicy::parse(value).ok_or_else(|| {
+                    Error::Config(format!("override {key}={value}: expected fifo|backfill"))
+                })?;
+                self.agent.scheduler_policy = value.to_string();
+            }
+            "agent.search_mode" => {
+                crate::agent::scheduler::SearchMode::parse(value).ok_or_else(|| {
+                    Error::Config(format!("override {key}={value}: expected linear|freelist"))
+                })?;
+                self.agent.search_mode = value.to_string();
+            }
             k if k.starts_with("calib.") => {
                 let v = num()?;
                 let c = &mut self.calib;
@@ -308,6 +344,8 @@ mod tests {
         assert_eq!(c.label, "x");
         assert_eq!(c.cores_per_node, 4);
         assert_eq!(c.agent.schedulers, 1);
+        assert_eq!(c.agent.scheduler_policy, "fifo");
+        assert_eq!(c.agent.search_mode, "linear");
         assert_eq!(c.calib.sched_rate_mean, 158.0);
     }
 
@@ -324,6 +362,26 @@ mod tests {
     }
 
     #[test]
+    fn bad_policy_or_search_mode_rejected() {
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "agent": {"scheduler_policy": "backfil"}}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "agent": {"search_mode": "free-list"}}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4,
+                "agent": {"scheduler_policy": "backfill", "search_mode": "freelist"}}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_ok());
+    }
+
+    #[test]
     fn overrides() {
         let v = Value::parse(r#"{"label": "x", "cores_per_node": 4}"#).unwrap();
         let mut c = ResourceConfig::from_json(&v).unwrap();
@@ -333,6 +391,13 @@ mod tests {
         assert_eq!(c.calib.exec_rate_mean, 99.5);
         c.apply_override("launch_methods.task", "SSH").unwrap();
         assert_eq!(c.launch_methods.task, "SSH");
+        c.apply_override("agent.scheduler_policy", "backfill").unwrap();
+        assert_eq!(c.agent.scheduler_policy, "backfill");
+        c.apply_override("agent.search_mode", "freelist").unwrap();
+        assert_eq!(c.agent.search_mode, "freelist");
+        // typos are rejected rather than silently falling back to fifo
+        assert!(c.apply_override("agent.scheduler_policy", "backfil").is_err());
+        assert!(c.apply_override("agent.search_mode", "quadratic").is_err());
         assert!(c.apply_override("bogus", "1").is_err());
         assert!(c.apply_override("calib.bogus", "1").is_err());
         assert!(c.apply_override("nodes", "abc").is_err());

@@ -31,6 +31,17 @@ impl Store {
             .insert(id.to_string(), doc);
     }
 
+    /// Insert (or replace) many documents under one lock acquisition —
+    /// the MongoDB `insert_many` analog the UnitManager uses to feed a
+    /// whole submission without serializing per-unit on the store lock.
+    pub fn insert_bulk(&self, collection: &str, docs: impl IntoIterator<Item = (String, Value)>) {
+        let mut g = self.inner.lock().unwrap();
+        let coll = g.entry(collection.to_string()).or_default();
+        for (id, doc) in docs {
+            coll.insert(id, doc);
+        }
+    }
+
     /// Fetch a document by id.
     pub fn find_one(&self, collection: &str, id: &str) -> Option<Value> {
         self.inner
@@ -123,6 +134,21 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].0, "u3");
         assert!(s.update_field("units", "zz", "state", "X".into()).is_err());
+    }
+
+    #[test]
+    fn insert_bulk_matches_per_insert() {
+        let s = Store::new();
+        s.insert_bulk(
+            "units",
+            (0..50).map(|i| (format!("u{i}"), Value::Num(i as f64))),
+        );
+        assert_eq!(s.count("units"), 50);
+        assert_eq!(s.find_one("units", "u49"), Some(Value::Num(49.0)));
+        // replaces like insert does
+        s.insert_bulk("units", [("u0".to_string(), Value::Null)]);
+        assert_eq!(s.count("units"), 50);
+        assert_eq!(s.find_one("units", "u0"), Some(Value::Null));
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //!   store), [`agent`] (Scheduler / Stager / Executer components),
 //!   [`profiler`], and a calibrated discrete-event simulation substrate
 //!   ([`sim`]) standing in for Stampede / Comet / Blue Waters.
+//!
+//! Agent scheduling is event-driven: units wait in a shared
+//! [`agent::scheduler::WaitPool`], and every submit and core-release
+//! event triggers a placement pass under a configurable policy (`fifo`,
+//! the paper-faithful head-of-line default, or `backfill`, which lets
+//! smaller units overtake a blocked wide head).  The real thread-based
+//! Agent and the DES twin drive the same pool and the same scheduler
+//! implementations, so policies behave identically in both substrates.
 //! * **L2** — the JAX MD payload model (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts.
 //! * **L1** — the Pallas Lennard-Jones kernel

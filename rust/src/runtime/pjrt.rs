@@ -1,5 +1,6 @@
 //! PJRT client service thread + artifact manifest.
 
+#[cfg(feature = "xla-runtime")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -75,6 +76,7 @@ impl Manifest {
     }
 }
 
+#[cfg_attr(not(feature = "xla-runtime"), allow(dead_code))]
 struct ExecRequest {
     artifact: String,
     /// Flat row-major f32 buffers, one per input.
@@ -142,6 +144,25 @@ impl Runtime {
     }
 }
 
+/// Without the `xla-runtime` feature (the offline default — the vendored
+/// XLA/PJRT crate is not part of the zero-dependency build), the service
+/// thread reports at init that no backend is available; [`Runtime::load`]
+/// surfaces that as an error and everything else (manifest parsing, the
+/// whole pilot system) works without it.
+#[cfg(not(feature = "xla-runtime"))]
+fn service_thread(
+    _manifest: Manifest,
+    _rx: mpsc::Receiver<ExecRequest>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let _ = ready.send(Err(Error::Runtime(
+        "PJRT backend not built: enable the `xla-runtime` feature (vendored XLA/PJRT) \
+         to execute AOT artifacts"
+            .into(),
+    )));
+}
+
+#[cfg(feature = "xla-runtime")]
 fn service_thread(
     manifest: Manifest,
     rx: mpsc::Receiver<ExecRequest>,
@@ -184,11 +205,13 @@ fn service_thread(
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 struct CompiledPayload {
     info: PayloadInfo,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla-runtime")]
 fn run_one(exes: &HashMap<String, CompiledPayload>, req: &ExecRequest) -> Result<Vec<Vec<f32>>> {
     let cp = exes
         .get(&req.artifact)
@@ -242,6 +265,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "xla-runtime")]
     fn input_validation() {
         let Some(dir) = artifacts_dir() else {
             eprintln!("skipped: run `make artifacts` first");

@@ -13,7 +13,9 @@
 //!   `configs/*.json` and DESIGN.md §2);
 //! * [`agent_sim`] — the Agent pipeline (stage-in -> schedule -> execute
 //!   -> stage-out) with barrier feeders, driving a real
-//!   [`crate::agent::CoreScheduler`] and recording a real
+//!   [`crate::agent::CoreScheduler`] through the same event-driven
+//!   [`crate::agent::WaitPool`] the real Agent runs (fifo/backfill
+//!   policies included) and recording a real
 //!   [`crate::profiler::Profiler`] trace;
 //! * [`microbench`] — the clone-10k-units-in-one-component micro-bench
 //!   harness of §IV-B.

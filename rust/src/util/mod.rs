@@ -1,7 +1,8 @@
 //! Small self-built substrates: JSON, PRNG + distributions, statistics.
 //!
 //! The offline vendor set has no `serde`/`rand`/`criterion`, so the pieces
-//! the coordinator needs are implemented (and tested) here.
+//! the coordinator needs are implemented (and tested) here — the crate is
+//! zero-dependency (std only; see `Cargo.toml`).
 
 pub mod json;
 pub mod rng;
@@ -10,10 +11,10 @@ pub mod stats;
 /// Wall-clock seconds since the process-wide epoch (first call).
 /// Used by the profiler in real mode; sim mode uses the virtual clock.
 pub fn now() -> f64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    static EPOCH: once_cell::sync::Lazy<Instant> =
-        once_cell::sync::Lazy::new(Instant::now);
-    EPOCH.elapsed().as_secs_f64()
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Sleep helper taking fractional seconds.

@@ -109,6 +109,42 @@ fn cancel_queued_units() {
 }
 
 #[test]
+fn cancel_of_pooled_unit_finalizes_without_a_release() {
+    // event-driven regression: canceling a unit waiting in the pool is
+    // itself a scheduling event — it must not wait for the running
+    // unit's core release to be observed
+    let session = Session::new("int-cancel-wake");
+    let umgr = session.unit_manager();
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 1, 600.0)
+                .with_override("agent.executers", "1"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let units = umgr.submit(vec![
+        UnitDescription::sleep(1.0).name("head"),
+        UnitDescription::sleep(1.0).name("queued"),
+    ]);
+    let t0 = rp::util::now();
+    while units[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
+        rp::util::sleep(0.005);
+    }
+    assert!(units[0].entered(UnitState::AExecuting).is_some(), "head must start");
+    let t_cancel = rp::util::now();
+    units[1].cancel();
+    assert_eq!(units[1].wait(5.0).unwrap(), UnitState::Canceled);
+    assert!(
+        rp::util::now() - t_cancel < 0.5,
+        "cancellation must finalize while the head still runs"
+    );
+    umgr.wait_all(30.0).unwrap();
+    assert_eq!(units[0].state(), UnitState::Done);
+    pilot.drain().unwrap();
+}
+
+#[test]
 fn heterogeneous_unit_sizes_share_pilot() {
     let session = Session::new("int-hetero");
     let umgr = session.unit_manager();
@@ -127,6 +163,82 @@ fn heterogeneous_unit_sizes_share_pilot() {
     let profile = session.profiler().snapshot();
     let a = Analysis::new(&profile);
     assert!(a.peak_concurrency() <= 5);
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn backfill_small_unit_finishes_while_wide_head_waits() {
+    // wait-pool regression: a currently-unplaceable wide unit at the
+    // head of the pool must not block a 1-core unit under `backfill`
+    let session = Session::new("int-backfill");
+    let umgr = session.unit_manager();
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 4, 600.0)
+                .with_override("agent.executers", "4")
+                .with_override("agent.scheduler_policy", "backfill"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+
+    // a long 1-core unit occupies the pilot so the wide unit cannot fit
+    let long = umgr.submit(vec![UnitDescription::sleep(0.5).name("long")]);
+    let t0 = rp::util::now();
+    while long[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
+        rp::util::sleep(0.005);
+    }
+    assert!(long[0].entered(UnitState::AExecuting).is_some(), "long unit must start");
+
+    let rest = umgr.submit(vec![
+        UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
+        UnitDescription::sleep(0.05).name("small"),
+    ]);
+    umgr.wait_all(30.0).unwrap();
+    for u in umgr.units() {
+        assert_eq!(u.state(), UnitState::Done, "unit {} ({:?})", u.name(), u.error());
+    }
+    let small_done = rest[1].entered(UnitState::Done).unwrap();
+    let wide_started = rest[0].entered(UnitState::AExecuting).unwrap();
+    assert!(
+        small_done < wide_started,
+        "backfill: small unit done at {small_done:.3}s must beat the wide head's \
+         execution start at {wide_started:.3}s"
+    );
+    pilot.drain().unwrap();
+}
+
+#[test]
+fn fifo_policy_preserves_submission_order() {
+    // the paper-faithful default: the blocked wide head holds back the
+    // small unit behind it
+    let session = Session::new("int-fifo-order");
+    let umgr = session.unit_manager();
+    let pilot = session
+        .pilot_manager()
+        .submit(
+            PilotDescription::new("local.localhost", 4, 600.0)
+                .with_override("agent.executers", "4"),
+        )
+        .unwrap();
+    umgr.add_pilot(&pilot);
+    let long = umgr.submit(vec![UnitDescription::sleep(0.3).name("long")]);
+    let t0 = rp::util::now();
+    while long[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
+        rp::util::sleep(0.005);
+    }
+    let rest = umgr.submit(vec![
+        UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
+        UnitDescription::sleep(0.05).name("small"),
+    ]);
+    umgr.wait_all(30.0).unwrap();
+    let wide_started = rest[0].entered(UnitState::AExecuting).unwrap();
+    let small_started = rest[1].entered(UnitState::AExecuting).unwrap();
+    assert!(
+        small_started >= wide_started,
+        "fifo: the small unit ({small_started:.3}s) must not overtake the wide head \
+         ({wide_started:.3}s)"
+    );
     pilot.drain().unwrap();
 }
 

@@ -2,7 +2,9 @@
 //! invariants: scheduler bookkeeping, state machines, JSON round-trips,
 //! workload accounting, queue semantics, and the DES.
 
-use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SearchMode, TorusScheduler};
+use rp::agent::scheduler::{
+    ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode, TorusScheduler, WaitPool,
+};
 use rp::sim::EventQueue;
 use rp::states::{PilotState, UnitState};
 use rp::testkit::prop::{self, forall};
@@ -111,6 +113,101 @@ fn prop_no_core_double_assignment() {
         }
         true
     });
+}
+
+/// Drive a wait-pool with a random submit/release script, running a
+/// placement pass after every event exactly as the Agent does.  Checks:
+/// no (node, core) slot is ever double-allocated, free + busy always
+/// equals capacity, FIFO places in submission order, and after releasing
+/// everything the pool drains completely (no unit is lost or starved).
+fn pool_script_holds(policy: SchedPolicy, script: &[(u8, u8)]) -> bool {
+    let mut sched = ContinuousScheduler::new(4, 8, SearchMode::FreeList);
+    let capacity = sched.capacity();
+    let mut pool: WaitPool<u64> = WaitPool::new(policy);
+    let mut next_id = 0u64;
+    let mut fifo_expect = 0u64;
+    let mut live: Vec<(u64, rp::agent::Allocation)> = Vec::new();
+    let mut slots = std::collections::HashSet::new();
+    let mut busy = 0usize;
+
+    let pass = |pool: &mut WaitPool<u64>,
+                    sched: &mut ContinuousScheduler,
+                    live: &mut Vec<(u64, rp::agent::Allocation)>,
+                    slots: &mut std::collections::HashSet<(u32, u32)>,
+                    busy: &mut usize,
+                    fifo_expect: &mut u64|
+     -> bool {
+        let mut placed = Vec::new();
+        pool.place_all(sched, |u, a| placed.push((u, a)));
+        for (u, a) in placed {
+            if policy == SchedPolicy::Fifo {
+                if u != *fifo_expect {
+                    return false; // FIFO placed out of order
+                }
+                *fifo_expect += 1;
+            }
+            for c in &a.cores {
+                if !slots.insert(*c) {
+                    return false; // double-allocated core slot
+                }
+            }
+            *busy += a.n_cores();
+            live.push((u, a));
+        }
+        true
+    };
+
+    for &(op, size) in script {
+        if op < 50 {
+            pool.push(next_id, 1 + (size as usize % 12));
+            next_id += 1;
+        } else if op < 80 && !live.is_empty() {
+            let idx = (op as usize * 31 + size as usize) % live.len();
+            let (_, a) = live.swap_remove(idx);
+            for c in &a.cores {
+                slots.remove(c);
+            }
+            busy -= a.n_cores();
+            sched.release(&a);
+        }
+        if !pass(&mut pool, &mut sched, &mut live, &mut slots, &mut busy, &mut fifo_expect) {
+            return false;
+        }
+        if sched.free_cores() + busy != capacity {
+            return false; // capacity not conserved
+        }
+    }
+    // drain: with everything released, repeated passes must empty the
+    // pool (every request <= capacity, so progress is guaranteed)
+    loop {
+        for (_, a) in live.drain(..) {
+            for c in &a.cores {
+                slots.remove(c);
+            }
+            busy -= a.n_cores();
+            sched.release(&a);
+        }
+        if pool.is_empty() {
+            break;
+        }
+        if !pass(&mut pool, &mut sched, &mut live, &mut slots, &mut busy, &mut fifo_expect) {
+            return false;
+        }
+        if live.is_empty() {
+            return false; // no progress: a waiting unit can never place
+        }
+    }
+    sched.free_cores() == capacity && busy == 0
+}
+
+#[test]
+fn prop_waitpool_fifo_conserves_and_orders() {
+    forall(&scripts(), 60, |script| pool_script_holds(SchedPolicy::Fifo, script));
+}
+
+#[test]
+fn prop_waitpool_backfill_conserves_capacity() {
+    forall(&scripts(), 60, |script| pool_script_holds(SchedPolicy::Backfill, script));
 }
 
 #[test]

@@ -7,6 +7,7 @@
 //! 8n x 4e reaches 1685±451 with growing jitter (node-OS stress).
 //! Blue Waters scales only ~2.5x with fast jitter growth.
 
+use rp::agent::executer::{PopenSpawner, Reactor, Spawner};
 use rp::bench_harness::{write_csv, Check, Report};
 use rp::config::ResourceConfig;
 use rp::sim::microbench::{Component, MicroBench};
@@ -102,6 +103,41 @@ fn main() {
         "throughput gain <= ~2.5x",
         bw32.mean / bw1.mean < 3.0 && bw32.mean / bw1.mean > 1.5,
     ));
+
+    // --- real executer reactor: spawn+reap throughput of actual OS
+    // processes through the non-blocking start/try_wait path (the
+    // paper's headline requires > 100 tasks/s; the seed's blocking
+    // spawn met it only with many threads — the reactor does it on one)
+    let sandbox = std::env::temp_dir().join("rp_fig6_reactor");
+    std::fs::create_dir_all(&sandbox).unwrap();
+    let n = 300usize;
+    let mut reactor: Reactor<usize> = Reactor::new(64);
+    let t0 = std::time::Instant::now();
+    let (mut started, mut reaped) = (0usize, 0usize);
+    while reaped < n {
+        while started < n && reactor.has_capacity() {
+            match PopenSpawner.start(&["true".into()], &[], &sandbox) {
+                Ok(h) => {
+                    reactor.admit_child(started, h);
+                    started += 1;
+                }
+                Err(e) => {
+                    eprintln!("spawn failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        reaped += reactor.sweep(|_| false).len();
+        std::thread::sleep(std::time::Duration::from_secs_f64(reactor.poll_timeout()));
+    }
+    let real_rate = n as f64 / t0.elapsed().as_secs_f64();
+    println!("real reactor: {n} processes spawned+reaped at {real_rate:.0} units/s");
+    report.add(Check::shape(
+        "real reactor spawn rate",
+        "> 100 units/s on one thread (paper headline)",
+        real_rate > 100.0,
+    ));
+    rows.push(vec!["local-reactor".into(), "1".into(), "1".into(), format!("{real_rate:.1}")]);
 
     write_csv("fig6_executor", "resource,instances,nodes,rate", &rows).unwrap();
     std::process::exit(report.print());

@@ -78,6 +78,59 @@ fn main() {
         peaks.iter().all(|(_, _, t)| *t >= 192.0),
     ));
 
+    // --- reactor ablation: the executer's in-flight admission window
+    // (`agent.max_inflight`) replaces the seed's thread-per-slot cap;
+    // sweeping it shows concurrency pegged at min(window, launch
+    // ceiling, pilot cores), the real agent's new shape
+    let mut ab_rows = vec![];
+    let mut ab = vec![];
+    for window in [64usize, 512, 0] {
+        let wl = WorkloadSpec::generations(2048, 3, 64.0).build();
+        let mut cfg = AgentSimConfig::paper_default(2048);
+        cfg.max_inflight = window;
+        let r = AgentSim::new(&st, cfg, &wl).run();
+        ab_rows.push(vec![
+            window.to_string(),
+            r.peak_concurrency.to_string(),
+            format!("{:.1}", r.ttc_a),
+        ]);
+        ab.push((window, r.peak_concurrency, r.ttc_a));
+        let wname = match window {
+            0 => "open".to_string(),
+            w => w.to_string(),
+        };
+        println!(
+            "window {:>5}: peak concurrency {:>5}  ttc_a {:>7.1}s",
+            wname, r.peak_concurrency, r.ttc_a
+        );
+    }
+    report.add(Check::shape(
+        "window 64 pegs concurrency",
+        "peak in (57..=64]",
+        ab[0].1 > 57 && ab[0].1 <= 64,
+    ));
+    report.add(Check::shape(
+        "window 512 pegs concurrency",
+        "peak in (460..=512]",
+        ab[1].1 > 460 && ab[1].1 <= 512,
+    ));
+    report.add(Check::shape(
+        "open window fills the pilot",
+        "peak == 2048 cores",
+        ab[2].1 == 2048,
+    ));
+    report.add(Check::shape(
+        "tighter window stretches ttc",
+        "ttc(64) > ttc(512) > ttc(open)",
+        ab[0].2 > ab[1].2 && ab[1].2 > ab[2].2,
+    ));
+
     write_csv("fig7_concurrency", "pilot_cores,t,concurrency", &rows).unwrap();
+    write_csv(
+        "fig7_inflight_window",
+        "max_inflight,peak_concurrency,ttc_a",
+        &ab_rows,
+    )
+    .unwrap();
     std::process::exit(report.print());
 }

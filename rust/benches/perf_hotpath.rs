@@ -5,12 +5,23 @@
 //!   figures regenerate in seconds);
 //! * full agent-sim events/s on the Fig. 7 heavy configuration;
 //! * real-agent end-to-end unit throughput (sleep-0 units);
+//! * reactor-vs-threadpool ablation: sustained concurrent in-flight
+//!   children at a fixed thread count (the seed's thread-per-slot
+//!   executer capped concurrency at `executers`; the reactor must
+//!   sustain >= 4x that with the same threads);
 //! * JSON substrate parse throughput.
 
+use std::sync::Arc;
+
+use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig, SharedUnit};
+use rp::agent::scheduler::{SchedPolicy, SearchMode};
 use rp::api::{PilotDescription, Session, UnitDescription};
 use rp::bench_harness::{write_csv, Check, Report};
 use rp::config::ResourceConfig;
+use rp::ids::UnitId;
+use rp::profiler::{Analysis, Profiler};
 use rp::sim::{AgentSim, AgentSimConfig, EventQueue};
+use rp::states::UnitState as S;
 use rp::util;
 use rp::util::json::Value;
 use rp::workload::WorkloadSpec;
@@ -61,6 +72,53 @@ fn bench_real_agent() -> f64 {
     rate
 }
 
+/// Reactor-vs-threadpool ablation: run `sleep`-as-process units through
+/// a RealAgent with `threads` executer threads and measure the peak
+/// number of concurrently running children.  The seed thread-per-slot
+/// executer pinned this at `threads`; the reactor's in-flight window
+/// (pilot cores here) is what bounds it now.
+fn bench_reactor_inflight(threads: usize) -> i64 {
+    let cores = 32;
+    let profiler = Arc::new(Profiler::new(true));
+    let cfg = RealAgentConfig {
+        pilot_cores: cores,
+        cores_per_node: 8,
+        executers: threads,
+        max_inflight: 0, // auto: pilot cores
+        spawner: "popen".into(),
+        mpi_method: "FORK".into(),
+        task_method: "FORK".into(),
+        scheduler_algorithm: "continuous".into(),
+        search_mode: SearchMode::FreeList,
+        scheduler_policy: SchedPolicy::Fifo,
+        sandbox: std::env::temp_dir().join("rp_perf_reactor"),
+        synthetic_as_process: true, // real children
+    };
+    let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+    let units: Vec<SharedUnit> = (0..64)
+        .map(|i| {
+            let u = new_unit(UnitId(i), UnitDescription::sleep(0.5));
+            advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+            advance(&u, S::UmScheduling, &profiler).unwrap();
+            advance(&u, S::AStagingInPending, &profiler).unwrap();
+            u
+        })
+        .collect();
+    agent.submit(units.clone());
+    for u in &units {
+        let (m, cv) = &**u;
+        let mut rec = m.lock().unwrap();
+        while !rec.machine.is_final() {
+            let (r, _) = cv
+                .wait_timeout(rec, std::time::Duration::from_millis(200))
+                .unwrap();
+            rec = r;
+        }
+    }
+    agent.drain_and_stop();
+    Analysis::new(&profiler.snapshot()).peak_concurrency()
+}
+
 fn bench_json() -> f64 {
     let doc = Value::obj(vec![
         ("name", "unit-000123".into()),
@@ -82,11 +140,17 @@ fn main() {
     let ev = bench_event_queue();
     let (sim_ev, sim_wall) = bench_agent_sim();
     let real = bench_real_agent();
+    let threads = 2usize;
+    let peak_children = bench_reactor_inflight(threads);
     let json = bench_json();
 
     println!("event queue     : {:>12.0} ops/s", ev);
     println!("agent sim (8k)  : {:>12.0} events/s  (fig7 heavy config in {sim_wall:.2}s)", sim_ev);
     println!("real agent      : {:>12.0} units/s (sleep-0, 8 cores)", real);
+    println!(
+        "reactor ablation: {:>12} concurrent children ({threads} threads; seed cap = {threads})",
+        peak_children
+    );
     println!("json parse      : {:>12.0} docs/s", json);
 
     write_csv(
@@ -97,6 +161,8 @@ fn main() {
             vec!["agent_sim_events_per_s".into(), format!("{sim_ev:.0}")],
             vec!["agent_sim_fig7_wall_s".into(), format!("{sim_wall:.3}")],
             vec!["real_agent_units_per_s".into(), format!("{real:.0}")],
+            vec!["reactor_peak_children".into(), format!("{peak_children}")],
+            vec!["reactor_threadpool_equiv_cap".into(), format!("{threads}")],
             vec!["json_docs_per_s".into(), format!("{json:.0}")],
         ],
     )
@@ -110,5 +176,11 @@ fn main() {
         "> 100 units/s spawn-to-done",
         real > 100.0,
     ));
+    report.add(Check {
+        label: "reactor lifts thread-per-slot cap".into(),
+        paper: format!("seed: {threads} children at {threads} threads"),
+        measured: format!("{peak_children} concurrent children"),
+        ok: peak_children >= 4 * threads as i64,
+    });
     std::process::exit(report.print());
 }

@@ -58,6 +58,16 @@ impl<T> Bridge<T> {
         }
     }
 
+    /// Receive up to `max` items, waiting at most `timeout` seconds for
+    /// the first one.  May return empty on timeout *or* when the bridge
+    /// is closed and drained — callers multiplexing other wake sources
+    /// (the executer reactor) distinguish via [`Bridge::is_drained`].
+    pub fn recv_timeout(&self, max: usize, timeout: f64) -> Vec<T> {
+        let got = self.queue.pull_wait(max, timeout);
+        self.out_count.fetch_add(got.len() as u64, Ordering::Relaxed);
+        got
+    }
+
     /// Non-blocking receive of everything currently queued (may be
     /// empty).  Used by event-driven consumers that multiplex several
     /// wake sources and must not block on any single bridge.
@@ -119,6 +129,17 @@ mod tests {
         b.send_bulk([1, 2, 3]);
         assert_eq!(b.try_recv_all(), vec![1, 2, 3]);
         assert_eq!(b.counters(), (3, 3));
+    }
+
+    #[test]
+    fn recv_timeout_returns_empty_on_timeout() {
+        let b: Bridge<u32> = Bridge::new("test");
+        let t0 = std::time::Instant::now();
+        assert!(b.recv_timeout(4, 0.05).is_empty());
+        assert!(t0.elapsed().as_secs_f64() >= 0.04);
+        assert!(!b.is_drained());
+        b.send(9);
+        assert_eq!(b.recv_timeout(4, 1.0), vec![9]);
     }
 
     #[test]

@@ -3,9 +3,16 @@
 //! (direct process creation) and **Shell** (`/bin/sh -c`), plus
 //! **InProc** execution of PJRT payloads (the L2/L1 compute path — no
 //! Python, no process per task).
+//!
+//! Execution is event-driven: [`Spawner::start`] launches a child
+//! without blocking and the [`reactor`] owns the in-flight set, reaping
+//! completions via `try_wait` sweeps — so concurrency is bounded by the
+//! configurable `agent.max_inflight` window, not by a thread count.
 
 pub mod launch;
+pub mod reactor;
 pub mod spawn;
 
 pub use launch::{select_method, LaunchMethod};
-pub use spawn::{make_spawner, ExecOutcome, PopenSpawner, ShellSpawner, Spawner};
+pub use reactor::{Completion, Reactor};
+pub use spawn::{make_spawner, ExecOutcome, PopenSpawner, ShellSpawner, SpawnHandle, Spawner};

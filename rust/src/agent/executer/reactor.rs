@@ -1,0 +1,375 @@
+//! Event-driven executer reactor: the in-flight set of running units.
+//!
+//! The seed Executer dedicated one OS thread per slot, blocking in
+//! `Command::output()` for the full lifetime of each child — so real
+//! concurrency was capped at `agent.executers` threads (the bottleneck
+//! the RP follow-up papers identify as dominating agent performance).
+//! The reactor lifts that cap the same way the wait-pool lifted the
+//! scheduler's head-of-line block: one thread owns *all* in-flight
+//! units, admitting up to `max_inflight` at a time and reaping
+//! completions via non-blocking `try_wait` sweeps with adaptive
+//! backoff.  Each sweep also drains child stdout/stderr incrementally
+//! (see [`SpawnHandle`]), so pipes never deadlock, and kills units
+//! whose cancellation was requested — cancel is immediate for running
+//! children instead of "effective while queued".
+//!
+//! Two kinds of in-flight work:
+//! * **children** — real OS processes started by [`super::Spawner::start`];
+//! * **timers** — in-thread synthetic units (virtual `sleep`s), which
+//!   complete when their deadline passes.  Modeling them as reactor
+//!   entries keeps one code path for completion, cancellation and
+//!   core-release bookkeeping.
+//!
+//! The reactor is deliberately free of agent plumbing (bridges,
+//! profiler, scheduler): it maps tokens to completions, and the caller
+//! turns each completion into the core-release + wake scheduling event
+//! the wait-pool consumes.
+
+use std::time::{Duration, Instant};
+
+use super::spawn::{ExecOutcome, SpawnHandle};
+use crate::error::Error;
+
+/// Reap backoff bounds (seconds): reset to `MIN` after any activity,
+/// doubled per idle sweep up to `MAX`.  The cap also bounds how long a
+/// cancellation request can sit before the sweep that enforces it.
+const BACKOFF_MIN: f64 = 0.0005;
+const BACKOFF_MAX: f64 = 0.02;
+
+/// How one in-flight unit finished.
+#[derive(Debug)]
+pub enum Completion {
+    /// Child exited (any exit code); pipes fully drained.
+    Exited(ExecOutcome),
+    /// In-thread synthetic unit reached its deadline.
+    TimerElapsed,
+    /// Cancellation requested: child killed and reaped / timer dropped.
+    Canceled,
+    /// The child became unwaitable (OS error).
+    Failed(Error),
+}
+
+#[derive(Debug)]
+enum Work {
+    Child(SpawnHandle),
+    Timer(Instant),
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    token: T,
+    work: Work,
+}
+
+/// The in-flight set: admits up to `max_inflight` units, reaps them via
+/// [`Reactor::sweep`].  Generic over the caller's unit handle the same
+/// way [`crate::agent::scheduler::WaitPool`] is.
+#[derive(Debug)]
+pub struct Reactor<T> {
+    max_inflight: usize,
+    entries: Vec<Entry<T>>,
+    backoff: f64,
+    started: u64,
+    reaped: u64,
+    peak: usize,
+}
+
+impl<T> Reactor<T> {
+    /// `max_inflight` is clamped to >= 1 (a zero window would wedge
+    /// admission forever).
+    pub fn new(max_inflight: usize) -> Self {
+        Reactor {
+            max_inflight: max_inflight.max(1),
+            entries: Vec::new(),
+            backoff: BACKOFF_MIN,
+            started: 0,
+            reaped: 0,
+            peak: 0,
+        }
+    }
+
+    /// Configured admission window.
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
+    }
+
+    /// Units currently in flight.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// May another unit be admitted right now?
+    pub fn has_capacity(&self) -> bool {
+        self.entries.len() < self.max_inflight
+    }
+
+    /// Lifetime counters: (started, reaped, peak in-flight).  Every
+    /// started unit is eventually reaped — by exit, kill, or drop.
+    pub fn counters(&self) -> (u64, u64, usize) {
+        (self.started, self.reaped, self.peak)
+    }
+
+    fn admit(&mut self, token: T, work: Work) {
+        debug_assert!(self.has_capacity(), "admit() beyond max_inflight");
+        self.entries.push(Entry { token, work });
+        self.started += 1;
+        self.peak = self.peak.max(self.entries.len());
+        self.backoff = BACKOFF_MIN;
+    }
+
+    /// Admit a running child (from [`super::Spawner::start`]).
+    pub fn admit_child(&mut self, token: T, handle: SpawnHandle) {
+        self.admit(token, Work::Child(handle));
+    }
+
+    /// Admit an in-thread synthetic unit completing after `duration`
+    /// virtual-sleep seconds.
+    pub fn admit_timer(&mut self, token: T, duration: f64) {
+        let deadline = Instant::now() + Duration::from_secs_f64(duration.max(0.0));
+        self.admit(token, Work::Timer(deadline));
+    }
+
+    /// One reap sweep: polls every in-flight unit (draining child pipes
+    /// as a side effect) and returns the completions.  Units for which
+    /// `cancel` returns true are killed/dropped immediately and returned
+    /// as [`Completion::Canceled`].  Adjusts the adaptive backoff: reset
+    /// on any completion, doubled (up to the cap) on an idle sweep.
+    pub fn sweep(&mut self, mut cancel: impl FnMut(&T) -> bool) -> Vec<(T, Completion)> {
+        let now = Instant::now();
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if cancel(&self.entries[i].token) {
+                let e = self.entries.swap_remove(i);
+                // dropping a child handle kills and reaps it
+                self.reaped += 1;
+                done.push((e.token, Completion::Canceled));
+                continue;
+            }
+            let finished = match &mut self.entries[i].work {
+                Work::Timer(deadline) => {
+                    if now >= *deadline {
+                        Some(Completion::TimerElapsed)
+                    } else {
+                        None
+                    }
+                }
+                Work::Child(handle) => match handle.try_finish() {
+                    Ok(Some(outcome)) => Some(Completion::Exited(outcome)),
+                    Ok(None) => None,
+                    Err(e) => Some(Completion::Failed(e)),
+                },
+            };
+            match finished {
+                Some(completion) => {
+                    let e = self.entries.swap_remove(i);
+                    self.reaped += 1;
+                    done.push((e.token, completion));
+                }
+                None => i += 1,
+            }
+        }
+        if done.is_empty() {
+            self.backoff = (self.backoff * 2.0).min(BACKOFF_MAX);
+        } else {
+            self.backoff = BACKOFF_MIN;
+        }
+        done
+    }
+
+    /// How long the caller should wait for new work before the next
+    /// sweep: the adaptive backoff, shortened to the nearest timer
+    /// deadline so virtual sleeps complete on time.
+    pub fn poll_timeout(&self) -> f64 {
+        let now = Instant::now();
+        let mut t = self.backoff;
+        for e in &self.entries {
+            if let Work::Timer(deadline) = &e.work {
+                let left = deadline.saturating_duration_since(now).as_secs_f64();
+                t = t.min(left.max(BACKOFF_MIN));
+            }
+        }
+        t
+    }
+
+    /// Kill and reap everything still in flight (agent teardown),
+    /// returning the tokens as canceled.
+    pub fn kill_all(&mut self) -> Vec<(T, Completion)> {
+        let n = self.entries.len() as u64;
+        self.reaped += n;
+        self.entries
+            .drain(..)
+            .map(|e| (e.token, Completion::Canceled))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::executer::spawn::{PopenSpawner, Spawner};
+    use crate::testkit::prop;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("rp_reactor_test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sweep_until_done<T>(
+        r: &mut Reactor<T>,
+        timeout: f64,
+        mut cancel: impl FnMut(&T) -> bool,
+    ) -> Vec<(T, Completion)> {
+        let deadline = Instant::now() + Duration::from_secs_f64(timeout);
+        let mut all = Vec::new();
+        while !r.is_empty() {
+            assert!(Instant::now() < deadline, "reactor did not drain in {timeout}s");
+            all.extend(r.sweep(&mut cancel));
+            std::thread::sleep(Duration::from_secs_f64(r.poll_timeout()));
+        }
+        all
+    }
+
+    #[test]
+    fn window_clamped_and_capacity_tracked() {
+        let mut r: Reactor<u32> = Reactor::new(0);
+        assert_eq!(r.max_inflight(), 1);
+        assert!(r.has_capacity());
+        r.admit_timer(7, 0.0);
+        assert!(!r.has_capacity());
+        assert_eq!(r.len(), 1);
+        let done = r.sweep(|_| false);
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0], (7, Completion::TimerElapsed)));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn short_timer_not_blocked_by_long_head() {
+        let mut r: Reactor<u32> = Reactor::new(16);
+        r.admit_timer(0, 30.0);
+        r.admit_timer(1, 0.0);
+        // the zero-duration timer must not wait for the long head
+        let done = r.sweep(|_| false);
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0], (1, Completion::TimerElapsed)));
+        assert_eq!(r.len(), 1);
+        r.kill_all();
+        let (started, reaped, peak) = r.counters();
+        assert_eq!((started, reaped), (2, 2));
+        assert_eq!(peak, 2);
+    }
+
+    #[test]
+    fn children_reaped_and_output_captured() {
+        let mut r: Reactor<&str> = Reactor::new(8);
+        for tok in ["a", "b", "c"] {
+            let h = PopenSpawner
+                .start(&["/bin/echo".into(), tok.into()], &[], &tmp())
+                .unwrap();
+            r.admit_child(tok, h);
+        }
+        let done = sweep_until_done(&mut r, 10.0, |_| false);
+        assert_eq!(done.len(), 3);
+        for (tok, c) in done {
+            match c {
+                Completion::Exited(o) => assert_eq!(o.stdout.trim(), tok),
+                other => panic!("{tok}: wrong completion {other:?}"),
+            }
+        }
+        assert_eq!(r.counters().0, r.counters().1);
+    }
+
+    #[test]
+    fn cancel_kills_inflight_child_immediately() {
+        let mut r: Reactor<u32> = Reactor::new(4);
+        let h = PopenSpawner
+            .start(&["/bin/sleep".into(), "600".into()], &[], &tmp())
+            .unwrap();
+        let pid = h.pid();
+        r.admit_child(0, h);
+        let t0 = Instant::now();
+        let done = r.sweep(|_| true);
+        assert!(matches!(done[0], (0, Completion::Canceled)));
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "kill must not wait for the sleep");
+        let stat = std::fs::read_to_string(format!("/proc/{pid}/stat"));
+        assert!(
+            stat.map(|s| s.contains(") Z ")).unwrap_or(true),
+            "canceled child {pid} must be gone"
+        );
+    }
+
+    #[test]
+    fn backoff_adapts() {
+        let mut r: Reactor<u32> = Reactor::new(4);
+        r.admit_timer(0, 10.0);
+        let t1 = r.poll_timeout();
+        for _ in 0..10 {
+            assert!(r.sweep(|_| false).is_empty());
+        }
+        let t2 = r.poll_timeout();
+        assert!(t2 > t1, "idle sweeps must grow the backoff: {t1} -> {t2}");
+        assert!(t2 <= BACKOFF_MAX + 1e-9);
+        r.kill_all();
+    }
+
+    #[test]
+    fn kill_all_reaps_everything() {
+        let mut r: Reactor<u32> = Reactor::new(8);
+        r.admit_timer(0, 60.0);
+        let h = PopenSpawner
+            .start(&["/bin/sleep".into(), "600".into()], &[], &tmp())
+            .unwrap();
+        r.admit_child(1, h);
+        let done = r.kill_all();
+        assert_eq!(done.len(), 2);
+        assert!(r.is_empty());
+        let (started, reaped, _) = r.counters();
+        assert_eq!(started, reaped);
+    }
+
+    /// Property: for random mixes of timers and real children admitted
+    /// through a random window, the in-flight count never exceeds
+    /// `max_inflight` and every started unit is reaped exactly once.
+    #[test]
+    fn prop_window_respected_and_all_reaped() {
+        // window 1..=4; mix of unit kinds (1 = real child, 0 = timer)
+        let gen = prop::usizes(1, 4);
+        let mix = prop::vecs(prop::ints(0, 1), 1, 12);
+        prop::forall(&gen, 8, |window| {
+            let mut rng_mix = crate::util::rng::Pcg::seeded(*window as u64);
+            let kinds = mix.sample(&mut rng_mix);
+            let mut r: Reactor<usize> = Reactor::new(*window);
+            let mut pending: std::collections::VecDeque<(usize, bool)> =
+                kinds.iter().enumerate().map(|(i, k)| (i, *k == 1)).collect();
+            let total = pending.len();
+            let mut completed = 0usize;
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while completed < total {
+                assert!(Instant::now() < deadline, "property run wedged");
+                while r.has_capacity() {
+                    let Some((tok, is_child)) = pending.pop_front() else { break };
+                    if is_child {
+                        let h = PopenSpawner
+                            .start(&["/bin/sleep".into(), "0.01".into()], &[], &tmp())
+                            .unwrap();
+                        r.admit_child(tok, h);
+                    } else {
+                        r.admit_timer(tok, 0.005);
+                    }
+                    assert!(r.len() <= r.max_inflight(), "window violated");
+                }
+                completed += r.sweep(|_| false).len();
+                assert!(r.len() <= r.max_inflight(), "window violated after sweep");
+                std::thread::sleep(Duration::from_secs_f64(r.poll_timeout()));
+            }
+            let (started, reaped, peak) = r.counters();
+            started == total as u64 && reaped == total as u64 && peak <= *window
+        });
+    }
+}

@@ -1,7 +1,18 @@
 //! Spawning mechanisms: Popen (direct) and Shell (`/bin/sh -c`).
+//!
+//! Each mechanism derives a [`Command`] from the unit's argv; the
+//! Executer then runs it either **blocking** ([`Spawner::spawn`], wait
+//! for exit and capture output — the seed thread-per-slot path, still
+//! used by component tests) or **non-blocking** ([`Spawner::start`],
+//! which returns a [`SpawnHandle`] to the running child with its pipes
+//! attached — the handle is owned by the executer reactor, which reaps
+//! completions via `try_wait` sweeps and drains stdout/stderr
+//! incrementally so a chatty child can never fill the pipe and
+//! deadlock).
 
+use std::io::Read;
 use std::path::Path;
-use std::process::{Command, Stdio};
+use std::process::{Child, ChildStderr, ChildStdout, Command, Stdio};
 
 use crate::error::{Error, Result};
 
@@ -23,16 +34,37 @@ impl ExecOutcome {
 pub trait Spawner: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Run `argv` with `env` in `cwd`, capture output, wait for exit.
-    fn spawn(
-        &self,
-        argv: &[String],
-        env: &[(String, String)],
-        cwd: &Path,
-    ) -> Result<ExecOutcome>;
+    /// Derive the [`Command`] for `argv` with `env` in `cwd` (pipes for
+    /// stdout/stderr, stdin closed).  The single argv-to-process mapping
+    /// both execution styles share.
+    fn command(&self, argv: &[String], env: &[(String, String)], cwd: &Path) -> Result<Command>;
+
+    /// Run `argv` with `env` in `cwd`, capture output, wait for exit
+    /// (blocking: occupies the calling thread for the child's lifetime).
+    fn spawn(&self, argv: &[String], env: &[(String, String)], cwd: &Path) -> Result<ExecOutcome> {
+        let mut cmd = self.command(argv, env, cwd)?;
+        let out = cmd
+            .output()
+            .map_err(|e| Error::Exec(format!("spawn {:?}: {e}", cmd.get_program())))?;
+        Ok(ExecOutcome {
+            exit_code: out.status.code().unwrap_or(-1),
+            stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+            stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+        })
+    }
+
+    /// Start `argv` without waiting: returns a handle to the running
+    /// child for the reactor's in-flight set.
+    fn start(&self, argv: &[String], env: &[(String, String)], cwd: &Path) -> Result<SpawnHandle> {
+        let mut cmd = self.command(argv, env, cwd)?;
+        let child = cmd
+            .spawn()
+            .map_err(|e| Error::Exec(format!("spawn {:?}: {e}", cmd.get_program())))?;
+        SpawnHandle::new(child)
+    }
 }
 
-fn run(mut cmd: Command, cwd: &Path, env: &[(String, String)]) -> Result<ExecOutcome> {
+fn base_command(mut cmd: Command, cwd: &Path, env: &[(String, String)]) -> Command {
     cmd.current_dir(cwd)
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
@@ -40,14 +72,7 @@ fn run(mut cmd: Command, cwd: &Path, env: &[(String, String)]) -> Result<ExecOut
     for (k, v) in env {
         cmd.env(k, v);
     }
-    let out = cmd
-        .output()
-        .map_err(|e| Error::Exec(format!("spawn {:?}: {e}", cmd.get_program())))?;
-    Ok(ExecOutcome {
-        exit_code: out.status.code().unwrap_or(-1),
-        stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
-        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
-    })
+    cmd
 }
 
 /// Direct process creation (RP's Python `Popen` mechanism).
@@ -59,18 +84,13 @@ impl Spawner for PopenSpawner {
         "popen"
     }
 
-    fn spawn(
-        &self,
-        argv: &[String],
-        env: &[(String, String)],
-        cwd: &Path,
-    ) -> Result<ExecOutcome> {
+    fn command(&self, argv: &[String], env: &[(String, String)], cwd: &Path) -> Result<Command> {
         let (exe, args) = argv
             .split_first()
             .ok_or_else(|| Error::Exec("empty command".into()))?;
         let mut cmd = Command::new(exe);
         cmd.args(args);
-        run(cmd, cwd, env)
+        Ok(base_command(cmd, cwd, env))
     }
 }
 
@@ -85,12 +105,7 @@ impl Spawner for ShellSpawner {
         "shell"
     }
 
-    fn spawn(
-        &self,
-        argv: &[String],
-        env: &[(String, String)],
-        cwd: &Path,
-    ) -> Result<ExecOutcome> {
+    fn command(&self, argv: &[String], env: &[(String, String)], cwd: &Path) -> Result<Command> {
         if argv.is_empty() {
             return Err(Error::Exec("empty command".into()));
         }
@@ -101,7 +116,7 @@ impl Spawner for ShellSpawner {
             .join(" ");
         let mut cmd = Command::new("/bin/sh");
         cmd.arg("-c").arg(line);
-        run(cmd, cwd, env)
+        Ok(base_command(cmd, cwd, env))
     }
 }
 
@@ -122,6 +137,165 @@ pub fn make_spawner(kind: &str) -> Box<dyn Spawner> {
     match kind {
         "shell" => Box::new(ShellSpawner),
         _ => Box::new(PopenSpawner),
+    }
+}
+
+// ---------------------------------------------------------------- handle
+
+/// Put a pipe fd into non-blocking mode so the reactor can drain it
+/// incrementally without dedicating a thread per child.  Only the raw
+/// `fcntl` libc call is needed — std already links libc on unix — so the
+/// crate stays dependency-free.
+#[cfg(unix)]
+fn set_nonblocking(fd: std::os::unix::io::RawFd) -> std::io::Result<()> {
+    extern "C" {
+        fn fcntl(fd: i32, cmd: i32, ...) -> i32;
+    }
+    const F_GETFL: i32 = 3;
+    const F_SETFL: i32 = 4;
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: i32 = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: i32 = 0x0004;
+    // SAFETY: fcntl on a fd we own; F_GETFL/F_SETFL do not touch memory.
+    unsafe {
+        let flags = fcntl(fd, F_GETFL);
+        if flags < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+/// Read everything currently available from a non-blocking pipe into
+/// `buf`; clears the pipe slot on EOF or error so later drains skip it.
+fn drain_pipe<R: Read>(pipe: &mut Option<R>, buf: &mut Vec<u8>) {
+    let Some(r) = pipe.as_mut() else { return };
+    let mut chunk = [0u8; 8192];
+    loop {
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                *pipe = None;
+                return;
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                *pipe = None;
+                return;
+            }
+        }
+    }
+}
+
+/// A running child with its pipes attached: what [`Spawner::start`]
+/// hands to the executer reactor.
+///
+/// The handle owns the incremental stdout/stderr buffers; calling
+/// [`SpawnHandle::try_finish`] on every reactor sweep both polls for
+/// exit and drains whatever the child has written so far, so the child
+/// can never block on a full pipe.  Dropping a handle kills and reaps
+/// the child (no zombies, no orphaned sleepers on agent shutdown).
+#[derive(Debug)]
+pub struct SpawnHandle {
+    child: Child,
+    stdout: Option<ChildStdout>,
+    stderr: Option<ChildStderr>,
+    out_buf: Vec<u8>,
+    err_buf: Vec<u8>,
+    reaped: bool,
+}
+
+impl SpawnHandle {
+    fn new(mut child: Child) -> Result<SpawnHandle> {
+        let stdout = child.stdout.take();
+        let stderr = child.stderr.take();
+        // A blocking pipe would let one quiet child stall the whole
+        // reactor thread in drain(), so a failure to switch the fds to
+        // non-blocking fails the spawn instead of being ignored.
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let fds = stdout
+                .iter()
+                .map(|p| p.as_raw_fd())
+                .chain(stderr.iter().map(|p| p.as_raw_fd()));
+            for fd in fds {
+                if let Err(e) = set_nonblocking(fd) {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(Error::Exec(format!("set O_NONBLOCK on child pipe: {e}")));
+                }
+            }
+        }
+        Ok(SpawnHandle {
+            child,
+            stdout,
+            stderr,
+            out_buf: Vec::new(),
+            err_buf: Vec::new(),
+            reaped: false,
+        })
+    }
+
+    /// OS pid of the child.
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Drain whatever output is currently available (never blocks).
+    pub fn drain(&mut self) {
+        drain_pipe(&mut self.stdout, &mut self.out_buf);
+        drain_pipe(&mut self.stderr, &mut self.err_buf);
+    }
+
+    /// Poll the child: drains pipes, then `try_wait`s.  Returns
+    /// `Ok(Some(outcome))` once the child has exited (pipes read to
+    /// EOF), `Ok(None)` while it is still running.
+    pub fn try_finish(&mut self) -> Result<Option<ExecOutcome>> {
+        self.drain();
+        match self.child.try_wait() {
+            Ok(Some(status)) => {
+                // the write ends are closed now, so one more drain pass
+                // reads the remainder to EOF without blocking
+                self.drain();
+                self.reaped = true;
+                Ok(Some(ExecOutcome {
+                    exit_code: status.code().unwrap_or(-1),
+                    stdout: String::from_utf8_lossy(&std::mem::take(&mut self.out_buf))
+                        .into_owned(),
+                    stderr: String::from_utf8_lossy(&std::mem::take(&mut self.err_buf))
+                        .into_owned(),
+                }))
+            }
+            Ok(None) => Ok(None),
+            Err(e) => {
+                // unwaitable: kill so a live child cannot outlast its
+                // released cores, then reap the corpse (prompt after
+                // SIGKILL; errors out immediately if already gone)
+                let _ = self.child.kill();
+                let _ = self.child.wait();
+                self.reaped = true;
+                Err(Error::Exec(format!("wait pid {}: {e}", self.child.id())))
+            }
+        }
+    }
+
+    /// Kill the child and reap it (immediate cancellation of an
+    /// in-flight unit).  Consumes the handle; Drop performs the kill.
+    pub fn kill(self) {}
+}
+
+impl Drop for SpawnHandle {
+    fn drop(&mut self) {
+        if !self.reaped {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
     }
 }
 
@@ -183,6 +357,7 @@ mod tests {
             .spawn(&["/definitely/not/here".into()], &[], &tmp())
             .is_err());
         assert!(PopenSpawner.spawn(&[], &[], &tmp()).is_err());
+        assert!(PopenSpawner.start(&[], &[], &tmp()).is_err());
     }
 
     #[test]
@@ -190,5 +365,70 @@ mod tests {
         assert_eq!(make_spawner("popen").name(), "popen");
         assert_eq!(make_spawner("shell").name(), "shell");
         assert_eq!(make_spawner("unknown").name(), "popen");
+    }
+
+    #[test]
+    fn start_returns_before_exit_and_reaps() {
+        let t0 = std::time::Instant::now();
+        let mut h = PopenSpawner
+            .start(&["/bin/sleep".into(), "0.2".into()], &[], &tmp())
+            .unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.15, "start must not wait for exit");
+        assert!(h.try_finish().unwrap().is_none(), "child still running");
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let out = loop {
+            if let Some(out) = h.try_finish().unwrap() {
+                break out;
+            }
+            assert!(std::time::Instant::now() < deadline, "child never exited");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert_eq!(out.exit_code, 0);
+    }
+
+    #[test]
+    fn incremental_drain_beats_pipe_capacity() {
+        // write ~1 MiB to stdout: far beyond the 64 KiB pipe buffer, so
+        // a reaper that never drains would deadlock the child
+        let mut h = ShellSpawner
+            .start(
+                &[
+                    "sh".into(),
+                    "-c".into(),
+                    "i=0; while [ $i -lt 16384 ]; do echo \
+                     0123456789012345678901234567890123456789012345678901234567890123; \
+                     i=$((i+1)); done"
+                        .into(),
+                ],
+                &[],
+                &tmp(),
+            )
+            .unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let out = loop {
+            if let Some(out) = h.try_finish().unwrap() {
+                break out;
+            }
+            assert!(std::time::Instant::now() < deadline, "pipe deadlock?");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        };
+        assert_eq!(out.exit_code, 0);
+        assert_eq!(out.stdout.len(), 16384 * 65);
+    }
+
+    #[test]
+    fn dropped_handle_kills_child() {
+        let h = PopenSpawner
+            .start(&["/bin/sleep".into(), "600".into()], &[], &tmp())
+            .unwrap();
+        let pid = h.pid();
+        h.kill();
+        // the pid is reaped, so signal 0 must fail (process gone); probe
+        // via /proc to avoid racing pid reuse
+        let alive = std::path::Path::new(&format!("/proc/{pid}/stat")).exists()
+            && std::fs::read_to_string(format!("/proc/{pid}/stat"))
+                .map(|s| !s.contains(") Z "))
+                .unwrap_or(false);
+        assert!(!alive, "child {pid} must be killed and reaped");
     }
 }

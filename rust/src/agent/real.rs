@@ -9,19 +9,36 @@
 //! whether a blocked head stalls the queue (`fifo`, paper-faithful) or
 //! smaller units may overtake it (`backfill`).
 //!
+//! Execution is event-driven too: a single **executer reactor** thread
+//! owns the in-flight set ([`Reactor`]) — it starts children without
+//! blocking ([`Spawner::start`]), admits up to `agent.max_inflight`
+//! units (default: the pilot's cores) and reaps completions via
+//! `try_wait` sweeps with adaptive backoff, so concurrency is no longer
+//! capped at `agent.executers` threads the way the seed's
+//! thread-per-slot executer was.  The `agent.executers` pool now only
+//! hosts payloads that must block a thread (in-process PJRT compute);
+//! its size is decoupled from process concurrency.  Every completion —
+//! exit, timer, kill — becomes the same core-release + wake scheduling
+//! event the wait-pool consumes.  Cancellation of an in-flight unit is
+//! immediate: the reactor kills the child instead of waiting for it.
+//!
 //! Used by the Pilot API for local pilots (examples, the end-to-end MD
 //! driver) and by the profiler-overhead bench; the supercomputer-scale
 //! figure benches use the DES twin ([`crate::sim::AgentSim`]), which
-//! drives the same scheduler implementations *and the same wait-pool*
-//! and records the same profile events.
+//! drives the same scheduler implementations *and the same wait-pool*,
+//! models the same in-flight window, and records the same profile
+//! events.
 
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::agent::bridge::Bridge;
 use crate::agent::executer::spawn::make_spawner;
-use crate::agent::executer::{select_method, ExecOutcome, LaunchMethod, Spawner};
+use crate::agent::executer::{
+    select_method, Completion, ExecOutcome, LaunchMethod, Reactor, Spawner,
+};
 use crate::agent::nodelist::Allocation;
 use crate::agent::scheduler::{
     make_scheduler_with, CoreScheduler, SchedPolicy, SearchMode, WaitPool,
@@ -58,7 +75,9 @@ pub struct UnitRecord {
     /// Wake handle to the owning Agent's scheduler, set when the unit is
     /// admitted into the wait-pool: cancellation is a scheduling event
     /// too, so `Unit::cancel` can finalize a pooled unit promptly instead
-    /// of waiting for the next submit/release.
+    /// of waiting for the next submit/release.  (In-flight units need no
+    /// wake: the reactor's reap sweeps observe the flag within its
+    /// bounded backoff and kill the child.)
     pub(crate) sched_wake: Option<std::sync::Weak<SchedShared>>,
 }
 
@@ -117,6 +136,9 @@ pub struct RealAgentConfig {
     pub pilot_cores: usize,
     pub cores_per_node: usize,
     pub executers: usize,
+    /// Reactor admission window: max concurrently running units.
+    /// 0 = auto (the pilot's core count).
+    pub max_inflight: usize,
     pub spawner: String,
     pub mpi_method: String,
     pub task_method: String,
@@ -125,7 +147,7 @@ pub struct RealAgentConfig {
     pub scheduler_policy: SchedPolicy,
     pub sandbox: PathBuf,
     /// Run synthetic units as real `sleep` processes (true exercises the
-    /// spawn path; false sleeps in-thread).
+    /// spawn path; false models them as reactor timers).
     pub synthetic_as_process: bool,
 }
 
@@ -135,6 +157,7 @@ impl RealAgentConfig {
             pilot_cores,
             cores_per_node: cfg.cores_per_node,
             executers: cfg.agent.executers.max(1),
+            max_inflight: cfg.agent.max_inflight,
             spawner: cfg.agent.spawner.clone(),
             mpi_method: cfg.launch_methods.mpi.clone(),
             task_method: cfg.launch_methods.task.clone(),
@@ -144,6 +167,15 @@ impl RealAgentConfig {
                 .unwrap_or_default(),
             sandbox,
             synthetic_as_process: false,
+        }
+    }
+
+    /// Effective reactor window (0 = pilot cores).
+    pub fn effective_max_inflight(&self) -> usize {
+        if self.max_inflight == 0 {
+            self.pilot_cores.max(1)
+        } else {
+            self.max_inflight
         }
     }
 }
@@ -176,16 +208,24 @@ pub struct RealAgent {
     cfg: RealAgentConfig,
     input: Bridge<SharedUnit>,
     exec_bridge: Bridge<(SharedUnit, Allocation)>,
+    /// Blocking payloads (PJRT) routed from the reactor to the executer
+    /// thread pool.
+    pool_bridge: Bridge<(SharedUnit, Allocation)>,
     stage_bridge: Bridge<SharedUnit>,
     sched_shared: Arc<SchedShared>,
     profiler: Arc<Profiler>,
     threads: Mutex<Vec<JoinHandle<()>>>,
-    /// Live executer threads; the last one out closes the stage bridge.
+    /// Live executer-side threads (reactor + pool workers); the last one
+    /// out closes the stage bridge.
     exec_active: std::sync::atomic::AtomicUsize,
+    /// Memoized PATH lookups for wrapped launch methods: the stat-walk
+    /// runs once per (agent, executable) instead of once per unit.
+    which_cache: Mutex<HashMap<String, bool>>,
 }
 
 impl RealAgent {
-    /// Bootstrap the Agent: start scheduler, executer and stager threads.
+    /// Bootstrap the Agent: start scheduler, reactor, executer-pool and
+    /// stager threads.
     pub fn bootstrap(
         cfg: RealAgentConfig,
         profiler: Arc<Profiler>,
@@ -203,6 +243,7 @@ impl RealAgent {
             cfg,
             input: Bridge::new("agent-input"),
             exec_bridge: Bridge::new("sched-exec"),
+            pool_bridge: Bridge::new("reactor-pool"),
             stage_bridge: Bridge::new("exec-stageout"),
             sched_shared: Arc::new(SchedShared {
                 state: Mutex::new(SchedState { sched, wake_seq: 0, stopping: false }),
@@ -211,10 +252,11 @@ impl RealAgent {
             profiler,
             threads: Mutex::new(Vec::new()),
             exec_active: std::sync::atomic::AtomicUsize::new(0),
+            which_cache: Mutex::new(HashMap::new()),
         });
         agent
             .exec_active
-            .store(agent.cfg.executers, std::sync::atomic::Ordering::SeqCst);
+            .store(agent.cfg.executers + 1, std::sync::atomic::Ordering::SeqCst);
 
         let mut threads = vec![];
         // scheduler thread
@@ -227,14 +269,24 @@ impl RealAgent {
                     .map_err(|e| Error::other(format!("spawn scheduler: {e}")))?,
             );
         }
-        // executer threads
+        // executer reactor thread (owns every running child / timer)
+        {
+            let a = agent.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("agent-exec-reactor".into())
+                    .spawn(move || a.reactor_loop())
+                    .map_err(|e| Error::other(format!("spawn reactor: {e}")))?,
+            );
+        }
+        // executer pool threads: blocking (in-process) payloads only
         for i in 0..agent.cfg.executers {
             let a = agent.clone();
             let payloads = payloads.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("agent-executer-{i}"))
-                    .spawn(move || a.executer_loop(payloads))
+                    .spawn(move || a.executer_pool_loop(payloads))
                     .map_err(|e| Error::other(format!("spawn executer: {e}")))?,
             );
         }
@@ -276,8 +328,9 @@ impl RealAgent {
         }
         self.sched_shared.wake.notify_all();
         let threads = std::mem::take(&mut *self.threads.lock().unwrap());
-        // scheduler exits -> close exec bridge -> executers exit ->
-        // close stage bridge -> stager exits (ordering enforced below)
+        // scheduler exits -> close exec bridge -> reactor drains its
+        // in-flight set and closes the pool bridge -> pool workers exit
+        // -> close stage bridge -> stager exits (ordering enforced below)
         for t in threads {
             let _ = t.join();
         }
@@ -338,7 +391,7 @@ impl RealAgent {
             }
 
             // placement pass: allocate cores under the scheduler lock,
-            // hand the placed units to the executers outside of it
+            // hand the placed units to the reactor outside of it
             let mut placed = Vec::new();
             let stopping = {
                 let mut st = self.sched_shared.state.lock().unwrap();
@@ -387,82 +440,251 @@ impl RealAgent {
         self.exec_bridge.close();
     }
 
-    fn executer_loop(&self, payloads: Option<PayloadStore>) {
-        let spawner = make_spawner(&self.cfg.spawner);
-        loop {
-            let mut batch = self.exec_bridge.recv(1);
-            let Some((unit, alloc)) = batch.pop() else { break };
-            self.execute_one(&unit, &alloc, spawner.as_ref(), payloads.as_ref());
-            // release cores when the unit leaves AExecuting; every
-            // release is a scheduling event (re-place from the pool)
-            {
-                let mut st = self.sched_shared.state.lock().unwrap();
-                st.sched.release(&alloc);
-                st.wake_seq += 1;
-            }
-            self.sched_shared.wake.notify_all();
-            self.stage_bridge.send(unit);
+    /// Release a unit's cores; every release is a scheduling event
+    /// (re-place from the pool).
+    fn release_cores(&self, alloc: &Allocation) {
+        {
+            let mut st = self.sched_shared.state.lock().unwrap();
+            st.sched.release(alloc);
+            st.wake_seq += 1;
         }
-        // the last executer out closes the stage bridge
+        self.sched_shared.wake.notify_all();
+    }
+
+    /// The executer reactor: one thread multiplexing every running unit.
+    ///
+    /// Loop shape: wait for new placements (bounded by the reactor's
+    /// adaptive backoff while anything is in flight) -> finalize
+    /// cancellations among not-yet-started units -> admit up to the
+    /// `max_inflight` window -> reap one sweep of completions, turning
+    /// each into a core-release scheduling event plus a stage-out.
+    fn reactor_loop(&self) {
+        let spawner = make_spawner(&self.cfg.spawner);
+        let mut reactor: Reactor<(SharedUnit, Allocation)> =
+            Reactor::new(self.cfg.effective_max_inflight());
+        // placements accepted from the scheduler but not yet admitted
+        // (the window is full); they already hold cores, so admission
+        // order does not affect scheduling fairness
+        let mut pending: VecDeque<(SharedUnit, Allocation)> = VecDeque::new();
+        loop {
+            // intake: blocking payloads bypass the reactor window (they
+            // occupy an executer-pool thread, not an in-flight slot)
+            self.route_placed(self.exec_bridge.try_recv_all(), &mut pending);
+
+            // cancellations of not-yet-started units finalize without
+            // occupying a window slot
+            pending.retain(|(unit, alloc)| {
+                if unit.0.lock().unwrap().cancel_requested {
+                    cancel_unit(unit, &self.profiler);
+                    self.release_cores(alloc);
+                    false
+                } else {
+                    true
+                }
+            });
+
+            while reactor.has_capacity() {
+                let Some((unit, alloc)) = pending.pop_front() else { break };
+                self.start_unit(unit, alloc, spawner.as_ref(), &mut reactor);
+            }
+
+            for (token, completion) in
+                reactor.sweep(|(unit, _)| unit.0.lock().unwrap().cancel_requested)
+            {
+                self.complete_unit(token, completion);
+            }
+
+            if self.exec_bridge.is_drained() && pending.is_empty() && reactor.is_empty() {
+                break;
+            }
+
+            // wait for the next event: poll without blocking while
+            // admissible work is waiting; use the reactor's adaptive
+            // backoff while anything is in flight; block properly only
+            // when fully idle.  A closed bridge returns from recv
+            // immediately, so once drained the sweeps are paced by a
+            // plain sleep instead (no busy-spin while children finish).
+            let timeout = if !pending.is_empty() && reactor.has_capacity() {
+                0.0
+            } else if reactor.is_empty() {
+                0.5
+            } else {
+                reactor.poll_timeout()
+            };
+            if self.exec_bridge.is_drained() {
+                if timeout > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(timeout));
+                }
+            } else {
+                let got = self.exec_bridge.recv_timeout(usize::MAX, timeout);
+                self.route_placed(got, &mut pending);
+            }
+        }
+        self.pool_bridge.close();
         if self.exec_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
             self.stage_bridge.close();
         }
     }
 
-    fn execute_one(
+    /// Route freshly placed units: blocking payloads go straight to the
+    /// executer pool (no reactor window slot), the rest queue for
+    /// admission into the reactor.
+    fn route_placed(
         &self,
-        unit: &SharedUnit,
-        alloc: &Allocation,
-        spawner: &dyn Spawner,
-        payloads: Option<&PayloadStore>,
+        placed: Vec<(SharedUnit, Allocation)>,
+        pending: &mut VecDeque<(SharedUnit, Allocation)>,
     ) {
-        if advance(unit, S::AExecuting, &self.profiler).is_err() {
-            return;
+        for (unit, alloc) in placed {
+            if unit.0.lock().unwrap().cancel_requested {
+                // canceled between placement and intake: finalize now
+                // (the pool workers also re-check on pickup)
+                cancel_unit(&unit, &self.profiler);
+                self.release_cores(&alloc);
+            } else if is_blocking_payload(&unit) {
+                self.pool_bridge.send((unit, alloc));
+            } else {
+                pending.push_back((unit, alloc));
+            }
         }
+    }
+
+    /// Start one placed unit: route blocking payloads to the executer
+    /// pool, everything else into the reactor (child process or timer).
+    fn start_unit(
+        &self,
+        unit: SharedUnit,
+        alloc: Allocation,
+        spawner: &dyn Spawner,
+        reactor: &mut Reactor<(SharedUnit, Allocation)>,
+    ) {
         let descr = unit.0.lock().unwrap().descr.clone();
-        let result: Result<UnitOutcome> = match &descr.payload {
+        let argv: Vec<String> = match &descr.payload {
+            UnitPayload::Pjrt { .. } => {
+                // normally diverted at intake by `route_placed` (via
+                // `is_blocking_payload`, the routing source of truth);
+                // kept as a fallback so the reactor window can never
+                // gate a blocking payload
+                self.pool_bridge.send((unit, alloc));
+                return;
+            }
             UnitPayload::Synthetic { duration } => {
                 if self.cfg.synthetic_as_process {
-                    let argv = vec!["sleep".to_string(), format!("{duration}")];
-                    spawner
-                        .spawn(&argv, &descr.environment, &self.cfg.sandbox)
-                        .map(UnitOutcome::Exec)
+                    vec!["sleep".to_string(), format!("{duration}")]
                 } else {
-                    util::sleep(*duration);
-                    Ok(UnitOutcome::Exec(ExecOutcome {
-                        exit_code: 0,
-                        stdout: String::new(),
-                        stderr: String::new(),
-                    }))
+                    if advance(&unit, S::AExecuting, &self.profiler).is_err() {
+                        self.release_cores(&alloc);
+                        return;
+                    }
+                    reactor.admit_timer((unit, alloc), *duration);
+                    return;
                 }
             }
             UnitPayload::Executable { executable, args } => {
                 match select_method(&descr, &self.cfg.mpi_method, &self.cfg.task_method) {
                     Some(method) => {
                         // on the local resource every "host" is localhost
-                        let argv = method.build_command(executable, args, alloc, &|_| {
+                        let argv = method.build_command(executable, args, &alloc, &|_| {
                             "localhost".to_string()
                         });
                         // only FORK-style direct execution is actually
                         // runnable in this environment; wrapped methods
                         // degrade to direct execution with a note
-                        let argv = if method == LaunchMethod::Fork || which_exists(&argv[0]) {
+                        if method == LaunchMethod::Fork || self.which_cached(&argv[0]) {
                             argv
                         } else {
                             let mut direct = vec![executable.clone()];
                             direct.extend(args.iter().cloned());
                             direct
-                        };
-                        spawner
-                            .spawn(&argv, &descr.environment, &self.cfg.sandbox)
-                            .map(UnitOutcome::Exec)
+                        }
                     }
-                    None => Err(Error::Exec(format!(
-                        "no launch method for unit (mpi={}, task={})",
-                        self.cfg.mpi_method, self.cfg.task_method
-                    ))),
+                    None => {
+                        fail_unit(
+                            &unit,
+                            format!(
+                                "no launch method for unit (mpi={}, task={})",
+                                self.cfg.mpi_method, self.cfg.task_method
+                            ),
+                            &self.profiler,
+                        );
+                        self.release_cores(&alloc);
+                        return;
+                    }
                 }
             }
+        };
+        if advance(&unit, S::AExecuting, &self.profiler).is_err() {
+            self.release_cores(&alloc); // canceled upstream
+            return;
+        }
+        match spawner.start(&argv, &descr.environment, &self.cfg.sandbox) {
+            Ok(handle) => reactor.admit_child((unit, alloc), handle),
+            Err(e) => {
+                fail_unit(&unit, e.to_string(), &self.profiler);
+                self.release_cores(&alloc);
+            }
+        }
+    }
+
+    /// Turn a reactor completion into the pipeline's downstream events:
+    /// record the outcome, release cores (a scheduling event), stage out.
+    fn complete_unit(&self, token: (SharedUnit, Allocation), completion: Completion) {
+        let (unit, alloc) = token;
+        match completion {
+            Completion::Exited(outcome) => {
+                unit.0.lock().unwrap().outcome = Some(UnitOutcome::Exec(outcome));
+                let _ = advance(&unit, S::AStagingOutPending, &self.profiler);
+            }
+            Completion::TimerElapsed => {
+                unit.0.lock().unwrap().outcome = Some(UnitOutcome::Exec(ExecOutcome {
+                    exit_code: 0,
+                    stdout: String::new(),
+                    stderr: String::new(),
+                }));
+                let _ = advance(&unit, S::AStagingOutPending, &self.profiler);
+            }
+            Completion::Canceled => cancel_unit(&unit, &self.profiler),
+            Completion::Failed(e) => fail_unit(&unit, e.to_string(), &self.profiler),
+        }
+        self.release_cores(&alloc);
+        self.stage_bridge.send(unit);
+    }
+
+    /// Memoized `which` lookup (per agent + executable).
+    fn which_cached(&self, exe: &str) -> bool {
+        if let Some(&hit) = self.which_cache.lock().unwrap().get(exe) {
+            return hit;
+        }
+        let found = which_exists(exe);
+        self.which_cache.lock().unwrap().insert(exe.to_string(), found);
+        found
+    }
+
+    /// Executer pool: blocking payloads only (in-process PJRT compute).
+    /// Cancellation is not interruptible here — a compute chunk runs to
+    /// completion before the unit finalizes.
+    fn executer_pool_loop(&self, payloads: Option<PayloadStore>) {
+        loop {
+            let mut batch = self.pool_bridge.recv(1);
+            let Some((unit, alloc)) = batch.pop() else { break };
+            if unit.0.lock().unwrap().cancel_requested {
+                cancel_unit(&unit, &self.profiler);
+            } else {
+                self.execute_blocking(&unit, payloads.as_ref());
+            }
+            self.release_cores(&alloc);
+            self.stage_bridge.send(unit);
+        }
+        if self.exec_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
+            self.stage_bridge.close();
+        }
+    }
+
+    fn execute_blocking(&self, unit: &SharedUnit, payloads: Option<&PayloadStore>) {
+        if advance(unit, S::AExecuting, &self.profiler).is_err() {
+            return;
+        }
+        let descr = unit.0.lock().unwrap().descr.clone();
+        let result: Result<UnitOutcome> = match &descr.payload {
             UnitPayload::Pjrt { artifact, task_id, steps_chunks } => match payloads {
                 Some(store) => {
                     let mut last = Err(Error::Runtime("no chunks".into()));
@@ -478,6 +700,9 @@ impl RealAgent {
                     "pilot has no PJRT runtime (artifacts not loaded)".into(),
                 )),
             },
+            _ => Err(Error::Exec(
+                "non-blocking payload routed to the blocking pool".into(),
+            )),
         };
         match result {
             Ok(outcome) => {
@@ -498,22 +723,11 @@ impl RealAgent {
                 break;
             }
             for unit in batch {
-                let (name, stdout, stderr, result_json, failed, out_staging) = {
-                    let rec = unit.0.lock().unwrap();
-                    let (stdout, stderr, json) = match &rec.outcome {
-                        Some(UnitOutcome::Exec(o)) => {
-                            (o.stdout.clone(), o.stderr.clone(), None)
-                        }
-                        Some(UnitOutcome::Pjrt(r)) => (
-                            String::new(),
-                            String::new(),
-                            Some(format!(
-                                r#"{{"pe":{},"ke_or_rg":{},"total_steps":{}}}"#,
-                                r.pe, r.ke_or_rg, r.total_steps
-                            )),
-                        ),
-                        None => (String::new(), String::new(), None),
-                    };
+                // Move the outcome out of the record for staging (no
+                // clone of the bulk stdout/stderr text); it is restored
+                // below so the API handle keeps serving it after Done.
+                let (name, outcome, failed, out_staging) = {
+                    let mut rec = unit.0.lock().unwrap();
                     let name = if rec.descr.name.is_empty() {
                         rec.id.to_string()
                     } else {
@@ -521,24 +735,39 @@ impl RealAgent {
                     };
                     (
                         name,
-                        stdout,
-                        stderr,
-                        json,
+                        rec.outcome.take(),
                         rec.machine.is_final(),
                         rec.descr.output_staging.clone(),
                     )
                 };
+                let restore = |outcome: Option<UnitOutcome>| {
+                    unit.0.lock().unwrap().outcome = outcome;
+                };
                 if failed {
+                    restore(outcome);
                     continue;
                 }
                 if advance(&unit, S::AStagingOut, &self.profiler).is_err() {
+                    restore(outcome);
                     continue;
                 }
+                let (stdout, stderr, result_json) = match &outcome {
+                    Some(UnitOutcome::Exec(o)) => (o.stdout.as_str(), o.stderr.as_str(), None),
+                    Some(UnitOutcome::Pjrt(r)) => (
+                        "",
+                        "",
+                        Some(format!(
+                            r#"{{"pe":{},"ke_or_rg":{},"total_steps":{}}}"#,
+                            r.pe, r.ke_or_rg, r.total_steps
+                        )),
+                    ),
+                    None => ("", "", None),
+                };
                 let dir = stager::write_unit_outputs(
                     &self.cfg.sandbox,
                     &name,
-                    &stdout,
-                    &stderr,
+                    stdout,
+                    stderr,
                     result_json.as_deref(),
                 );
                 match dir {
@@ -546,14 +775,24 @@ impl RealAgent {
                         if !out_staging.is_empty() {
                             let _ = stager::stage(&out_staging, &dir, &self.cfg.sandbox);
                         }
+                        restore(outcome);
                         let _ = advance(&unit, S::UmStagingOutPending, &self.profiler);
                         let _ = advance(&unit, S::Done, &self.profiler);
                     }
-                    Err(e) => fail_unit(&unit, e.to_string(), &self.profiler),
+                    Err(e) => {
+                        restore(outcome);
+                        fail_unit(&unit, e.to_string(), &self.profiler);
+                    }
                 }
             }
         }
     }
+}
+
+/// Does this unit's payload block a thread for its full runtime (and so
+/// belong on the executer pool rather than in the reactor)?
+fn is_blocking_payload(unit: &SharedUnit) -> bool {
+    matches!(unit.0.lock().unwrap().descr.payload, UnitPayload::Pjrt { .. })
 }
 
 fn which_exists(exe: &str) -> bool {
@@ -582,6 +821,7 @@ mod tests {
             pilot_cores: cores,
             cores_per_node: 4,
             executers,
+            max_inflight: 0,
             spawner: "popen".into(),
             mpi_method: "FORK".into(),
             task_method: "FORK".into(),
@@ -591,6 +831,14 @@ mod tests {
             sandbox: sandbox(name),
             synthetic_as_process: false,
         }
+    }
+
+    fn ready_unit(i: u64, descr: UnitDescription, profiler: &Profiler) -> SharedUnit {
+        let u = new_unit(UnitId(i), descr);
+        advance(&u, S::UmSchedulingPending, profiler).unwrap();
+        advance(&u, S::UmScheduling, profiler).unwrap();
+        advance(&u, S::AStagingInPending, profiler).unwrap();
+        u
     }
 
     fn wait_final(unit: &SharedUnit, timeout: f64) -> S {
@@ -608,6 +856,19 @@ mod tests {
         rec.machine.state()
     }
 
+    fn wait_executing(unit: &SharedUnit, timeout: f64) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        let (m, cv) = &**unit;
+        let mut rec = m.lock().unwrap();
+        while rec.machine.entered(S::AExecuting).is_none() {
+            assert!(std::time::Instant::now() < deadline, "unit never started executing");
+            let (r, _) = cv
+                .wait_timeout(rec, std::time::Duration::from_millis(100))
+                .unwrap();
+            rec = r;
+        }
+    }
+
     #[test]
     fn synthetic_units_flow_through() {
         let profiler = Arc::new(Profiler::new(true));
@@ -615,11 +876,7 @@ mod tests {
             RealAgent::bootstrap(agent_cfg("synthetic", 8, 2), profiler.clone(), None).unwrap();
         let units: Vec<SharedUnit> = (0..16)
             .map(|i| {
-                let u = new_unit(UnitId(i), UnitDescription::sleep(0.01).name(format!("u{i}")));
-                advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-                advance(&u, S::UmScheduling, &profiler).unwrap();
-                advance(&u, S::AStagingInPending, &profiler).unwrap();
-                u
+                ready_unit(i, UnitDescription::sleep(0.01).name(format!("u{i}")), &profiler)
             })
             .collect();
         agent.submit(units.clone());
@@ -637,13 +894,11 @@ mod tests {
         let profiler = Arc::new(Profiler::new(true));
         let agent =
             RealAgent::bootstrap(agent_cfg("exe", 4, 1), profiler.clone(), None).unwrap();
-        let u = new_unit(
-            UnitId(0),
+        let u = ready_unit(
+            0,
             UnitDescription::executable("/bin/echo", vec!["hi".into()]).name("echo"),
+            &profiler,
         );
-        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-        advance(&u, S::UmScheduling, &profiler).unwrap();
-        advance(&u, S::AStagingInPending, &profiler).unwrap();
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Done);
         let rec = u.0.lock().unwrap();
@@ -666,10 +921,7 @@ mod tests {
         let profiler = Arc::new(Profiler::new(false));
         let agent =
             RealAgent::bootstrap(agent_cfg("oversize", 4, 1), profiler.clone(), None).unwrap();
-        let u = new_unit(UnitId(0), UnitDescription::sleep(0.01).cores(64));
-        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-        advance(&u, S::UmScheduling, &profiler).unwrap();
-        advance(&u, S::AStagingInPending, &profiler).unwrap();
+        let u = ready_unit(0, UnitDescription::sleep(0.01).cores(64), &profiler);
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Failed);
         assert!(u.0.lock().unwrap().error.as_ref().unwrap().contains("cores"));
@@ -681,10 +933,7 @@ mod tests {
         let profiler = Arc::new(Profiler::new(false));
         let agent =
             RealAgent::bootstrap(agent_cfg("nopjrt", 4, 1), profiler.clone(), None).unwrap();
-        let u = new_unit(UnitId(0), UnitDescription::pjrt("md_n64_s10", 0));
-        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-        advance(&u, S::UmScheduling, &profiler).unwrap();
-        advance(&u, S::AStagingInPending, &profiler).unwrap();
+        let u = ready_unit(0, UnitDescription::pjrt("md_n64_s10", 0), &profiler);
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Failed);
         agent.drain_and_stop();
@@ -697,11 +946,7 @@ mod tests {
         cfg.scheduler_policy = SchedPolicy::Backfill;
         let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
         let mk = |i: u64, cores: usize, dur: f64| {
-            let u = new_unit(UnitId(i), UnitDescription::sleep(dur).cores(cores));
-            advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-            advance(&u, S::UmScheduling, &profiler).unwrap();
-            advance(&u, S::AStagingInPending, &profiler).unwrap();
-            u
+            ready_unit(i, UnitDescription::sleep(dur).cores(cores), &profiler)
         };
         // the long unit occupies a core; the wide unit then blocks at
         // the head of the pool; the small unit backfills around it
@@ -710,18 +955,7 @@ mod tests {
         let small = mk(2, 1, 0.05);
         agent.submit(vec![long.clone()]);
         // make sure the long unit is placed before the wide one arrives
-        {
-            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
-            let (m, cv) = &*long;
-            let mut rec = m.lock().unwrap();
-            while rec.machine.entered(S::AExecuting).is_none() {
-                assert!(std::time::Instant::now() < deadline, "long unit never started");
-                let (r, _) = cv
-                    .wait_timeout(rec, std::time::Duration::from_millis(100))
-                    .unwrap();
-                rec = r;
-            }
-        }
+        wait_executing(&long, 5.0);
         agent.submit(vec![wide.clone(), small.clone()]);
         for u in [&long, &wide, &small] {
             assert_eq!(wait_final(u, 10.0), S::Done);
@@ -742,13 +976,7 @@ mod tests {
         let agent =
             RealAgent::bootstrap(agent_cfg("capacity", 4, 4), profiler.clone(), None).unwrap();
         let units: Vec<SharedUnit> = (0..12)
-            .map(|i| {
-                let u = new_unit(UnitId(i), UnitDescription::sleep(0.05));
-                advance(&u, S::UmSchedulingPending, &profiler).unwrap();
-                advance(&u, S::UmScheduling, &profiler).unwrap();
-                advance(&u, S::AStagingInPending, &profiler).unwrap();
-                u
-            })
+            .map(|i| ready_unit(i, UnitDescription::sleep(0.05), &profiler))
             .collect();
         agent.submit(units.clone());
         for u in &units {
@@ -758,5 +986,91 @@ mod tests {
         let prof = profiler.snapshot();
         let analysis = crate::profiler::Analysis::new(&prof);
         assert!(analysis.peak_concurrency() <= 4, "peak={}", analysis.peak_concurrency());
+    }
+
+    #[test]
+    fn reactor_lifts_thread_per_slot_cap() {
+        // 1 executer thread, 8 cores: the seed executer would serialize
+        // at 1 concurrent unit; the reactor must fill the pilot
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("lift", 8, 1);
+        cfg.synthetic_as_process = true; // real sleep children
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        let units: Vec<SharedUnit> = (0..8)
+            .map(|i| ready_unit(i, UnitDescription::sleep(0.3), &profiler))
+            .collect();
+        agent.submit(units.clone());
+        for u in &units {
+            assert_eq!(wait_final(u, 30.0), S::Done);
+        }
+        agent.drain_and_stop();
+        let prof = profiler.snapshot();
+        let analysis = crate::profiler::Analysis::new(&prof);
+        assert!(
+            analysis.peak_concurrency() >= 4,
+            "one reactor thread must run >= 4 children at once, peak={}",
+            analysis.peak_concurrency()
+        );
+    }
+
+    #[test]
+    fn max_inflight_window_respected() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("window", 8, 2);
+        cfg.max_inflight = 2;
+        cfg.synthetic_as_process = true;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        let units: Vec<SharedUnit> = (0..6)
+            .map(|i| ready_unit(i, UnitDescription::sleep(0.1), &profiler))
+            .collect();
+        agent.submit(units.clone());
+        for u in &units {
+            assert_eq!(wait_final(u, 30.0), S::Done);
+        }
+        agent.drain_and_stop();
+        let prof = profiler.snapshot();
+        let analysis = crate::profiler::Analysis::new(&prof);
+        assert!(
+            analysis.peak_concurrency() <= 2,
+            "window=2 must cap concurrency, peak={}",
+            analysis.peak_concurrency()
+        );
+    }
+
+    #[test]
+    fn cancel_during_execution_kills_child() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("cancel-child", 2, 1);
+        cfg.synthetic_as_process = true;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        let u = ready_unit(0, UnitDescription::sleep(30.0), &profiler);
+        agent.submit(vec![u.clone()]);
+        wait_executing(&u, 5.0);
+        let t0 = std::time::Instant::now();
+        u.0.lock().unwrap().cancel_requested = true;
+        assert_eq!(wait_final(&u, 5.0), S::Canceled);
+        assert!(
+            t0.elapsed().as_secs_f64() < 5.0,
+            "cancel must kill the child, not wait out the 30s sleep"
+        );
+        // the freed cores are immediately reusable
+        let v = ready_unit(1, UnitDescription::sleep(0.01).cores(2), &profiler);
+        agent.submit(vec![v.clone()]);
+        assert_eq!(wait_final(&v, 10.0), S::Done);
+        agent.drain_and_stop();
+    }
+
+    #[test]
+    fn cancel_during_execution_stops_timer_unit() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("cancel-timer", 2, 1), profiler.clone(), None)
+                .unwrap();
+        let u = ready_unit(0, UnitDescription::sleep(30.0), &profiler);
+        agent.submit(vec![u.clone()]);
+        wait_executing(&u, 5.0);
+        u.0.lock().unwrap().cancel_requested = true;
+        assert_eq!(wait_final(&u, 5.0), S::Canceled);
+        agent.drain_and_stop();
     }
 }

@@ -34,9 +34,14 @@ impl Unit {
         self.shared.0.lock().unwrap().error.clone()
     }
 
-    /// Request cancellation (effective while the unit is queued).  If
-    /// the unit is already waiting in an Agent's pool, the Agent's
-    /// scheduler is woken so the cancellation finalizes promptly.
+    /// Request cancellation.  A queued unit is finalized by the next
+    /// scheduling pass (the Agent's scheduler is woken so that happens
+    /// promptly); a unit already *executing* is killed by the executer
+    /// reactor's next reap sweep — its child process is terminated
+    /// immediately rather than running to completion.  In-process
+    /// (PJRT) payloads are the exception: once handed to the executer
+    /// pool they are uninterruptible, so their cancellation takes
+    /// effect when a pool thread picks the unit up.
     pub fn cancel(&self) {
         let wake = {
             let mut rec = self.shared.0.lock().unwrap();

@@ -23,7 +23,10 @@ USAGE:
 COMMANDS:
     run        execute a workload on a real local pilot
                  --cores N (4) --units N (16) --duration S (0.1)
-                 --executers N  --artifact NAME (run PJRT payloads)
+                 --executers N (blocking-payload threads)
+                 --max-inflight N (0 = pilot cores; executer-reactor
+                   admission window: max concurrently running units)
+                 --artifact NAME (run PJRT payloads)
                  --policy fifo|backfill  --search linear|freelist
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
@@ -31,6 +34,7 @@ COMMANDS:
                  --barrier agent|application|generation
                  --policy fifo|backfill  --search linear|freelist
                  --schedulers N (1, concurrent partitions)
+                 --max-inflight N (0 = unbounded reactor window)
     micro      component micro-benchmark (paper §IV-B)
                  --component scheduler|stager_in|stager_out|executer
                  --resource LABEL --instances N (1) --nodes N (1)
@@ -96,6 +100,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let n_units = args.get_usize("units", 16)?;
     let duration = args.get_f64("duration", 0.1)?;
     let executers = args.get_usize("executers", 2)?;
+    let max_inflight = args.get_usize("max-inflight", 0)?;
     let artifact = args.get("artifact");
     let (policy, search) = sched_flags(args)?;
 
@@ -106,7 +111,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let pmgr = session.pilot_manager();
     let umgr = session.unit_manager();
     let mut pd = PilotDescription::new("local.localhost", cores, 3600.0)
-        .with_override("agent.executers", executers.to_string());
+        .with_override("agent.executers", executers.to_string())
+        .with_override("agent.max_inflight", max_inflight.to_string());
     if let Some(p) = policy {
         pd = pd.with_override("agent.scheduler_policy", p.name());
     }
@@ -148,6 +154,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let generations = args.get_usize("generations", 3)?;
     let duration = args.get_f64("duration", 64.0)?;
     let schedulers = args.get_usize("schedulers", 1)?;
+    let max_inflight = args.get_usize("max-inflight", 0)?;
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
     let (policy, search) = sched_flags(args)?;
@@ -157,6 +164,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let mut sim_cfg = AgentSimConfig::paper_default(cores);
     sim_cfg.barrier = barrier;
     sim_cfg.schedulers = schedulers.max(1);
+    sim_cfg.max_inflight = max_inflight;
     if let Some(p) = policy {
         sim_cfg.policy = p;
     }
@@ -273,6 +281,29 @@ mod tests {
     fn run_real_small() {
         assert_eq!(
             run(&["run", "--cores", "2", "--units", "4", "--duration", "0.01"]),
+            0
+        );
+    }
+
+    #[test]
+    fn run_real_max_inflight() {
+        assert_eq!(
+            run(&[
+                "run", "--cores", "4", "--units", "6", "--duration", "0.01",
+                "--max-inflight", "2",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--max-inflight", "abc"]), 1);
+    }
+
+    #[test]
+    fn sim_max_inflight_window() {
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "2", "--duration", "10",
+                "--max-inflight", "16",
+            ]),
             0
         );
     }

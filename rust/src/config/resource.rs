@@ -19,6 +19,9 @@ pub struct LaunchMethods {
 pub struct AgentLayout {
     pub schedulers: usize,
     pub executers: usize,
+    /// Executer-reactor admission window: max concurrently running
+    /// units.  0 = auto (the pilot's core count).
+    pub max_inflight: usize,
     pub stagers_in: usize,
     pub stagers_out: usize,
     /// "popen" | "shell" spawning mechanism.
@@ -37,6 +40,7 @@ impl Default for AgentLayout {
         AgentLayout {
             schedulers: 1,
             executers: 1,
+            max_inflight: 0,
             stagers_in: 1,
             stagers_out: 1,
             spawner: "popen".into(),
@@ -195,6 +199,7 @@ impl ResourceConfig {
             agent: AgentLayout {
                 schedulers: ag.get_u64("schedulers", 1) as usize,
                 executers: ag.get_u64("executers", 1) as usize,
+                max_inflight: ag.get_u64("max_inflight", 0) as usize,
                 stagers_in: ag.get_u64("stagers_in", 1) as usize,
                 stagers_out: ag.get_u64("stagers_out", 1) as usize,
                 spawner: ag.get_str("spawner", "popen").to_string(),
@@ -278,6 +283,15 @@ impl ResourceConfig {
             "launch_methods.mpi" => self.launch_methods.mpi = value.to_string(),
             "agent.schedulers" => self.agent.schedulers = num()? as usize,
             "agent.executers" => self.agent.executers = num()? as usize,
+            "agent.max_inflight" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0 (0 = pilot cores)"
+                    )));
+                }
+                self.agent.max_inflight = v as usize;
+            }
             "agent.stagers_in" => self.agent.stagers_in = num()? as usize,
             "agent.stagers_out" => self.agent.stagers_out = num()? as usize,
             "agent.spawner" => self.agent.spawner = value.to_string(),
@@ -344,6 +358,7 @@ mod tests {
         assert_eq!(c.label, "x");
         assert_eq!(c.cores_per_node, 4);
         assert_eq!(c.agent.schedulers, 1);
+        assert_eq!(c.agent.max_inflight, 0, "max_inflight defaults to auto");
         assert_eq!(c.agent.scheduler_policy, "fifo");
         assert_eq!(c.agent.search_mode, "linear");
         assert_eq!(c.calib.sched_rate_mean, 158.0);
@@ -387,6 +402,9 @@ mod tests {
         let mut c = ResourceConfig::from_json(&v).unwrap();
         c.apply_override("agent.executers", "8").unwrap();
         assert_eq!(c.agent.executers, 8);
+        c.apply_override("agent.max_inflight", "4096").unwrap();
+        assert_eq!(c.agent.max_inflight, 4096);
+        assert!(c.apply_override("agent.max_inflight", "-1").is_err());
         c.apply_override("calib.exec_rate_mean", "99.5").unwrap();
         assert_eq!(c.calib.exec_rate_mean, 99.5);
         c.apply_override("launch_methods.task", "SSH").unwrap();

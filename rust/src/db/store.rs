@@ -1,19 +1,34 @@
 //! Document store: named collections of JSON documents.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use crate::error::{Error, Result};
 use crate::util::json::Value;
+
+/// One collection's documents behind its own lock.
+type Shard = RwLock<BTreeMap<String, Value>>;
 
 /// A concurrent, in-process document store.
 ///
 /// Documents are [`Value`] objects keyed by a string id within named
 /// collections — the subset of MongoDB semantics RP relies on (insert,
 /// lookup, field update, filtered scan, delete).
+///
+/// The store is sharded per collection: the outer map (collection name
+/// -> shard) is guarded by a read-mostly `RwLock` that is only
+/// write-locked when a collection is created or dropped, while every
+/// document operation takes the `RwLock` of its own collection.
+/// High-rate unit feeds ("units") and state watchers ("pilots")
+/// therefore never contend on one global mutex, and concurrent readers
+/// of one collection share its lock.  Document operations hold the
+/// outer *read* guard for their duration (readers never block each
+/// other), so `drop_collection` linearizes with in-flight writes — a
+/// write that completes after a drop returns is never silently lost
+/// into a detached shard.
 #[derive(Debug, Clone, Default)]
 pub struct Store {
-    inner: Arc<Mutex<BTreeMap<String, BTreeMap<String, Value>>>>,
+    shards: Arc<RwLock<BTreeMap<String, Shard>>>,
 }
 
 impl Store {
@@ -23,43 +38,61 @@ impl Store {
 
     /// Insert (or replace) a document.
     pub fn insert(&self, collection: &str, id: &str, doc: Value) {
-        self.inner
-            .lock()
-            .unwrap()
+        {
+            let outer = self.shards.read().unwrap();
+            if let Some(shard) = outer.get(collection) {
+                shard.write().unwrap().insert(id.to_string(), doc);
+                return;
+            }
+        }
+        // first write to this collection: create the shard
+        let mut outer = self.shards.write().unwrap();
+        outer
             .entry(collection.to_string())
             .or_default()
+            .write()
+            .unwrap()
             .insert(id.to_string(), doc);
     }
 
     /// Insert (or replace) many documents under one lock acquisition —
     /// the MongoDB `insert_many` analog the UnitManager uses to feed a
-    /// whole submission without serializing per-unit on the store lock.
+    /// whole submission without serializing per-unit on the shard lock.
     pub fn insert_bulk(&self, collection: &str, docs: impl IntoIterator<Item = (String, Value)>) {
-        let mut g = self.inner.lock().unwrap();
-        let coll = g.entry(collection.to_string()).or_default();
+        {
+            let outer = self.shards.read().unwrap();
+            if let Some(shard) = outer.get(collection) {
+                let mut g = shard.write().unwrap();
+                for (id, doc) in docs {
+                    g.insert(id, doc);
+                }
+                return;
+            }
+        }
+        let mut outer = self.shards.write().unwrap();
+        let mut g = outer.entry(collection.to_string()).or_default().write().unwrap();
         for (id, doc) in docs {
-            coll.insert(id, doc);
+            g.insert(id, doc);
         }
     }
 
     /// Fetch a document by id.
     pub fn find_one(&self, collection: &str, id: &str) -> Option<Value> {
-        self.inner
-            .lock()
-            .unwrap()
+        let outer = self.shards.read().unwrap();
+        outer
             .get(collection)
-            .and_then(|c| c.get(id))
-            .cloned()
+            .and_then(|s| s.read().unwrap().get(id).cloned())
     }
 
     /// All (id, doc) pairs matching a predicate.
     pub fn find(&self, collection: &str, pred: impl Fn(&Value) -> bool) -> Vec<(String, Value)> {
-        self.inner
-            .lock()
-            .unwrap()
+        let outer = self.shards.read().unwrap();
+        outer
             .get(collection)
-            .map(|c| {
-                c.iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .iter()
                     .filter(|(_, d)| pred(d))
                     .map(|(k, d)| (k.clone(), d.clone()))
                     .collect()
@@ -69,10 +102,13 @@ impl Store {
 
     /// Set one field of a document.  Errors if the document is missing.
     pub fn update_field(&self, collection: &str, id: &str, key: &str, value: Value) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let outer = self.shards.read().unwrap();
+        let shard = outer
+            .get(collection)
+            .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
+        let mut g = shard.write().unwrap();
         let doc = g
-            .get_mut(collection)
-            .and_then(|c| c.get_mut(id))
+            .get_mut(id)
             .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
         doc.set(key, value);
         Ok(())
@@ -80,26 +116,29 @@ impl Store {
 
     /// Remove a document; returns it if present.
     pub fn remove(&self, collection: &str, id: &str) -> Option<Value> {
-        self.inner
-            .lock()
-            .unwrap()
-            .get_mut(collection)
-            .and_then(|c| c.remove(id))
+        let outer = self.shards.read().unwrap();
+        outer
+            .get(collection)
+            .and_then(|s| s.write().unwrap().remove(id))
     }
 
     /// Document count in a collection.
     pub fn count(&self, collection: &str) -> usize {
-        self.inner.lock().unwrap().get(collection).map(|c| c.len()).unwrap_or(0)
+        let outer = self.shards.read().unwrap();
+        outer
+            .get(collection)
+            .map(|s| s.read().unwrap().len())
+            .unwrap_or(0)
     }
 
     /// Drop a whole collection.
     pub fn drop_collection(&self, collection: &str) {
-        self.inner.lock().unwrap().remove(collection);
+        self.shards.write().unwrap().remove(collection);
     }
 
     /// Names of existing collections.
     pub fn collections(&self) -> Vec<String> {
-        self.inner.lock().unwrap().keys().cloned().collect()
+        self.shards.read().unwrap().keys().cloned().collect()
     }
 }
 
@@ -134,6 +173,8 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].0, "u3");
         assert!(s.update_field("units", "zz", "state", "X".into()).is_err());
+        // missing collection errors the same way as a missing document
+        assert!(s.update_field("nope", "u1", "state", "X".into()).is_err());
     }
 
     #[test]
@@ -160,6 +201,20 @@ mod tests {
     }
 
     #[test]
+    fn drop_and_list_collections() {
+        let s = Store::new();
+        s.insert("a", "1", Value::Null);
+        s.insert("b", "1", Value::Null);
+        assert_eq!(s.collections(), vec!["a".to_string(), "b".to_string()]);
+        s.drop_collection("a");
+        assert_eq!(s.count("a"), 0);
+        assert_eq!(s.collections(), vec!["b".to_string()]);
+        // writes after a drop re-create the collection (linearized)
+        s.insert("a", "2", Value::Null);
+        assert_eq!(s.count("a"), 1);
+    }
+
+    #[test]
     fn concurrent_inserts() {
         let s = Store::new();
         let mut hs = vec![];
@@ -175,5 +230,30 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.count("c"), 400);
+    }
+
+    #[test]
+    fn cross_collection_writes_do_not_contend() {
+        // writers on distinct collections plus readers on both must all
+        // make progress; per-collection counts stay exact
+        let s = Store::new();
+        let mut hs = vec![];
+        for t in 0..4 {
+            let s = s.clone();
+            let coll = if t % 2 == 0 { "units" } else { "pilots" };
+            hs.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    s.insert(coll, &format!("{t}-{i}"), Value::Num(i as f64));
+                    if i % 16 == 0 {
+                        let _ = s.find(coll, |_| true);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count("units"), 400);
+        assert_eq!(s.count("pilots"), 400);
     }
 }

@@ -35,6 +35,10 @@ pub struct AgentSimConfig {
     /// Executer instances and the nodes they are spread over.
     pub executers: usize,
     pub executer_nodes: usize,
+    /// Executer-reactor admission window: max concurrently *running*
+    /// units, matching the real agent's `agent.max_inflight`.  0 = auto
+    /// (unbounded by the executer; the pilot's cores still bound it).
+    pub max_inflight: usize,
     /// Output/input stager instances and their node spread.
     pub stagers_out: usize,
     pub stager_nodes: usize,
@@ -76,6 +80,7 @@ impl AgentSimConfig {
             pilot_cores,
             executers: 1,
             executer_nodes: 1,
+            max_inflight: 0,
             stagers_out: 1,
             stager_nodes: 1,
             stage_in: false,
@@ -153,6 +158,9 @@ pub struct AgentSim {
     sched_busy: Vec<bool>,
     exec_queue: VecDeque<u32>,
     exec_busy: bool,
+    /// Units between `Spawned` and `ExecDone` — the reactor's in-flight
+    /// set; admission (the next spawn) stalls while it is full.
+    exec_inflight: usize,
     stage_in_queue: VecDeque<u32>,
     stage_in_busy: bool,
     stage_out_queue: VecDeque<u32>,
@@ -216,6 +224,7 @@ impl AgentSim {
             scheds,
             exec_queue: VecDeque::new(),
             exec_busy: false,
+            exec_inflight: 0,
             stage_in_queue: VecDeque::new(),
             stage_in_busy: false,
             stage_out_queue: VecDeque::new(),
@@ -293,8 +302,18 @@ impl AgentSim {
         self.q.after(service, Ev::SchedDone(u));
     }
 
+    /// Effective reactor window (0 = unbounded).
+    #[inline]
+    fn exec_window(&self) -> usize {
+        if self.cfg.max_inflight == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_inflight
+        }
+    }
+
     fn kick_executer(&mut self) {
-        if self.exec_busy {
+        if self.exec_busy || self.exec_inflight >= self.exec_window() {
             return;
         }
         let Some(u) = self.exec_queue.pop_front() else { return };
@@ -391,6 +410,7 @@ impl AgentSim {
             }
             Ev::Spawned(u) => {
                 self.exec_busy = false;
+                self.exec_inflight += 1;
                 self.spawned_count += 1;
                 let now = self.q.now();
                 self.prof(now, u, S::AExecuting);
@@ -399,6 +419,7 @@ impl AgentSim {
                 self.kick_executer();
             }
             Ev::ExecDone(u) => {
+                self.exec_inflight -= 1;
                 let now = self.q.now();
                 self.prof(now, u, S::AStagingOutPending);
                 // cores are released when the unit leaves AExecuting
@@ -414,6 +435,9 @@ impl AgentSim {
                 }
                 let p = self.partition(u);
                 self.kick_scheduler(p);
+                // a completion frees a window slot: the reactor admits
+                // the next spawn (no-op while the window is unbounded)
+                self.kick_executer();
             }
             Ev::StageOutDone(u) => {
                 self.stage_out_busy = false;
@@ -666,6 +690,38 @@ mod tests {
         let b = AgentSim::new(&stampede(), cfg, &wl).run();
         assert_eq!(a.ttc_a, b.ttc_a);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn inflight_window_caps_concurrency() {
+        // 64s units on a 1024-core pilot fill the pilot when the window
+        // is open; a 128-unit window must cap peak concurrency at 128
+        let wl = WorkloadSpec::generations(1024, 3, 64.0).build();
+        let mut cfg = AgentSimConfig::paper_default(1024);
+        cfg.max_inflight = 128;
+        let r = AgentSim::new(&stampede(), cfg, &wl).run();
+        assert!(
+            r.peak_concurrency <= 128,
+            "window=128 must cap concurrency, peak={}",
+            r.peak_concurrency
+        );
+        let open = run(1024, 3, 64.0, BarrierMode::Agent);
+        assert_eq!(open.peak_concurrency, 1024, "unbounded window fills the pilot");
+        assert!(r.ttc_a > open.ttc_a, "a tight window must stretch ttc_a");
+    }
+
+    #[test]
+    fn wide_open_window_matches_unbounded() {
+        // a window at pilot size is indistinguishable from unbounded:
+        // the cores bind first (the real agent's default shape)
+        let wl = WorkloadSpec::generations(256, 3, 16.0).build();
+        let mut windowed = AgentSimConfig::paper_default(256);
+        windowed.max_inflight = 256;
+        let unbounded = AgentSimConfig::paper_default(256);
+        let rw = AgentSim::new(&stampede(), windowed, &wl).run();
+        let ru = AgentSim::new(&stampede(), unbounded, &wl).run();
+        assert_eq!(rw.ttc_a, ru.ttc_a);
+        assert_eq!(rw.events, ru.events);
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Fig. 10 extension — UnitManager late-binding policies over
+//! heterogeneous pilots.
+//!
+//! The paper's Fig. 10 sweeps workload barriers through one pilot; with
+//! the UnitManager DES twin we can sweep the *UM policy* dimension the
+//! paper leaves to future work: the same workload late-bound over two
+//! pilots of unequal size (Comet-style nodes).  Round-robin splits the
+//! units half-and-half, so the small pilot becomes the straggler;
+//! load-aware feeds each pilot proportionally to its capacity and wins
+//! on makespan; locality keeps each ensemble of a bundled workload on
+//! one pilot without giving up the proportional split across
+//! ensembles.
+
+use rp::api::{UmPolicy, UnitDescription};
+use rp::bench_harness::{write_csv, Check, Report};
+use rp::config::ResourceConfig;
+use rp::sim::{UmSim, UmSimConfig, UmSimResult};
+use rp::workload::{Workload, WorkloadSpec};
+
+const PILOTS: [usize; 2] = [1536, 384];
+const GENERATIONS: usize = 3;
+const DURATION: f64 = 60.0;
+
+fn run(cfg: &ResourceConfig, policy: UmPolicy, wl: &Workload) -> UmSimResult {
+    UmSim::new(cfg, UmSimConfig::new(PILOTS.to_vec(), policy), wl).run()
+}
+
+fn main() {
+    let comet = ResourceConfig::load("comet").unwrap();
+    let total: usize = PILOTS.iter().sum();
+    let wl = WorkloadSpec::generations(total, GENERATIONS, DURATION).build();
+
+    let mut rows = vec![];
+    let mut results = vec![];
+    for policy in UmPolicy::ALL {
+        let r = run(&comet, policy, &wl);
+        println!(
+            "{:>12}: makespan {:>7.1}s  split {:?}  per-pilot done {:?}",
+            policy.name(),
+            r.makespan,
+            r.per_pilot_units,
+            r.per_pilot_makespan.iter().map(|t| format!("{t:.0}")).collect::<Vec<_>>()
+        );
+        rows.push(vec![
+            policy.name().to_string(),
+            format!("{:.1}", r.makespan),
+            r.per_pilot_units[0].to_string(),
+            r.per_pilot_units[1].to_string(),
+        ]);
+        results.push((policy, r));
+    }
+    write_csv(
+        "fig10_um_policy",
+        "policy,makespan,units_pilot0,units_pilot1",
+        &rows,
+    )
+    .unwrap();
+
+    // a bundled workload of 8 named ensembles for the locality check
+    let mut ens_units = vec![];
+    for e in 0..8 {
+        for i in 0..total / 8 {
+            ens_units.push(
+                UnitDescription::sleep(DURATION).name(format!("ens{e}-{i}")),
+            );
+        }
+    }
+    let ens = Workload { units: ens_units };
+    let loc = run(&comet, UmPolicy::Locality, &ens);
+
+    let rr = &results[0].1;
+    let la = &results[1].1;
+    let mut report = Report::new(format!(
+        "Fig 10 (UM policies): {GENERATIONS} generations x {DURATION}s over \
+         pilots {PILOTS:?} (Comet)"
+    ));
+    report.add(Check::shape(
+        "every unit binds",
+        "no policy leaves units unbound",
+        results.iter().all(|(_, r)| r.unbound == 0) && loc.unbound == 0,
+    ));
+    report.add(Check::shape(
+        "round-robin splits evenly",
+        "half the workload lands on the small pilot",
+        rr.per_pilot_units[0] == rr.per_pilot_units[1],
+    ));
+    report.add(Check::shape(
+        "load-aware splits proportionally",
+        "units split ~4:1 like the 1536:384 cores",
+        la.per_pilot_units[0] == 4 * la.per_pilot_units[1],
+    ));
+    report.add(Check::shape(
+        "load-aware beats round-robin makespan",
+        "proportional feed removes the small-pilot straggler",
+        la.makespan < 0.8 * rr.makespan,
+    ));
+    report.add(Check::shape(
+        "round-robin strands the small pilot",
+        "small pilot finishes long after the big one",
+        rr.per_pilot_makespan[1] > rr.per_pilot_makespan[0] + DURATION,
+    ));
+    report.add(Check::shape(
+        "locality keeps ensembles whole",
+        "each pilot's unit count is a multiple of one ensemble",
+        loc.per_pilot_units.iter().all(|&c| c % (total / 8) == 0),
+    ));
+    // optimal is GENERATIONS * DURATION; load-aware should be within 2x
+    report.add(Check::band(
+        "load-aware makespan (s)",
+        (GENERATIONS as f64 * DURATION, 2.0 * GENERATIONS as f64 * DURATION),
+        la.makespan,
+    ));
+
+    std::process::exit(report.print());
+}

@@ -72,6 +72,9 @@ pub struct UnitRecord {
     pub outcome: Option<UnitOutcome>,
     pub error: Option<String>,
     pub cancel_requested: bool,
+    /// Pilot this unit was late-bound to by the UnitManager scheduler
+    /// (`None` while the unit waits in the UM pool).
+    pub bound_pilot: Option<crate::ids::PilotId>,
     /// Wake handle to the owning Agent's scheduler, set when the unit is
     /// admitted into the wait-pool: cancellation is a scheduling event
     /// too, so `Unit::cancel` can finalize a pooled unit promptly instead
@@ -79,6 +82,53 @@ pub struct UnitRecord {
     /// wake: the reactor's reap sweeps observe the flag within its
     /// bounded backoff and kill the child.)
     pub(crate) sched_wake: Option<std::sync::Weak<SchedShared>>,
+    /// Wake handle to the owning UnitManager's state watcher, set on
+    /// submission: every state change bumps the watcher's sequence so it
+    /// can park on a condvar instead of polling unit states.
+    pub(crate) watch_wake: Option<std::sync::Weak<StateWatch>>,
+    /// Session profiler, set on UM submission so client-side
+    /// finalization (cancel of a still-unbound unit) records its
+    /// transition like every agent-side path does.
+    pub(crate) profiler: Option<Arc<Profiler>>,
+}
+
+/// A sequence-numbered state-change channel: every unit state change
+/// routed through [`advance`] / failure / cancellation bumps the
+/// sequence and wakes waiters.  The UnitManager's callback watcher
+/// parks on it instead of polling unit states at 5 ms.
+#[derive(Debug)]
+pub(crate) struct StateWatch {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl StateWatch {
+    pub(crate) fn new() -> Self {
+        StateWatch { seq: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Record a state event and wake parked watchers.
+    pub(crate) fn notify(&self) {
+        *self.seq.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Current sequence number (snapshot before scanning).
+    pub(crate) fn snapshot(&self) -> u64 {
+        *self.seq.lock().unwrap()
+    }
+
+    /// Park until the sequence advances past `seen` or `timeout`
+    /// elapses (the bounded tick lets the watcher notice session
+    /// close); returns the new snapshot.
+    pub(crate) fn wait_change(&self, seen: u64, timeout: std::time::Duration) -> u64 {
+        let seq = self.seq.lock().unwrap();
+        if *seq != seen {
+            return *seq;
+        }
+        let (seq, _) = self.cv.wait_timeout(seq, timeout).unwrap();
+        *seq
+    }
 }
 
 /// Shared handle to a unit record (condvar notifies state changes).
@@ -94,40 +144,63 @@ pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
             outcome: None,
             error: None,
             cancel_requested: false,
+            bound_pilot: None,
             sched_wake: None,
+            watch_wake: None,
+            profiler: None,
         }),
         Condvar::new(),
     ))
 }
 
+/// Notify the UnitManager watcher attached to a record, outside the
+/// record's lock (the watch channel takes its own lock).
+fn notify_watch(watch: Option<std::sync::Weak<StateWatch>>) {
+    if let Some(w) = watch.and_then(|w| w.upgrade()) {
+        w.notify();
+    }
+}
+
 /// Advance a unit's state (recording to the profiler) and notify waiters.
 pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
     let (m, cv) = &**unit;
-    let mut rec = m.lock().unwrap();
-    let t = util::now();
-    rec.machine.advance(to, t)?;
-    profiler.record(t, rec.id, to);
-    cv.notify_all();
+    let watch = {
+        let mut rec = m.lock().unwrap();
+        let t = util::now();
+        rec.machine.advance(to, t)?;
+        profiler.record(t, rec.id, to);
+        cv.notify_all();
+        rec.watch_wake.clone()
+    };
+    notify_watch(watch);
     Ok(())
 }
 
 fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
     let (m, cv) = &**unit;
-    let mut rec = m.lock().unwrap();
-    let t = util::now();
-    let _ = rec.machine.advance(S::Failed, t);
-    profiler.record(t, rec.id, S::Failed);
-    rec.error = Some(err);
-    cv.notify_all();
+    let watch = {
+        let mut rec = m.lock().unwrap();
+        let t = util::now();
+        let _ = rec.machine.advance(S::Failed, t);
+        profiler.record(t, rec.id, S::Failed);
+        rec.error = Some(err);
+        cv.notify_all();
+        rec.watch_wake.clone()
+    };
+    notify_watch(watch);
 }
 
 fn cancel_unit(unit: &SharedUnit, profiler: &Profiler) {
     let (m, cv) = &**unit;
-    let mut rec = m.lock().unwrap();
-    let t = util::now();
-    let _ = rec.machine.advance(S::Canceled, t);
-    profiler.record(t, rec.id, S::Canceled);
-    cv.notify_all();
+    let watch = {
+        let mut rec = m.lock().unwrap();
+        let t = util::now();
+        let _ = rec.machine.advance(S::Canceled, t);
+        profiler.record(t, rec.id, S::Canceled);
+        cv.notify_all();
+        rec.watch_wake.clone()
+    };
+    notify_watch(watch);
 }
 
 /// Real-agent configuration, derived from the resource config.
@@ -315,6 +388,12 @@ impl RealAgent {
     /// Pilot capacity in cores.
     pub fn capacity(&self) -> usize {
         self.sched_shared.state.lock().unwrap().sched.capacity()
+    }
+
+    /// Currently free cores (the UnitManager's load-aware scheduler
+    /// reads this gauge when ranking pilots).
+    pub fn free_cores(&self) -> usize {
+        self.sched_shared.state.lock().unwrap().sched.free_cores()
     }
 
     /// Drain all queued work and stop the component threads.

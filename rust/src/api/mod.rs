@@ -20,6 +20,7 @@ pub mod descriptions;
 mod pilot;
 mod pilot_manager;
 mod session;
+pub mod um_scheduler;
 mod unit;
 mod unit_manager;
 
@@ -27,5 +28,8 @@ pub use descriptions::{PilotDescription, StagingDirective, UnitDescription, Unit
 pub use pilot::Pilot;
 pub use pilot_manager::PilotManager;
 pub use session::Session;
+pub use um_scheduler::{
+    make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
+};
 pub use unit::Unit;
 pub use unit_manager::UnitManager;

@@ -1,6 +1,6 @@
 //! Pilot handle.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::agent::real::RealAgent;
 use crate::config::ResourceConfig;
@@ -11,13 +11,64 @@ use crate::states::machine::StateMachine;
 use crate::states::PilotState;
 use crate::util;
 
+/// The pilot's state machine behind a condvar: transitions notify
+/// waiters, so [`Pilot::wait_active`] blocks on the transition instead
+/// of polling at 5 ms (the same waiter pattern the agent side uses for
+/// units).
+#[derive(Debug)]
+pub(crate) struct PilotStateCell {
+    machine: Mutex<StateMachine<PilotState>>,
+    cv: Condvar,
+}
+
+impl PilotStateCell {
+    pub(crate) fn new(machine: StateMachine<PilotState>) -> Self {
+        PilotStateCell { machine: Mutex::new(machine), cv: Condvar::new() }
+    }
+
+    pub(crate) fn state(&self) -> PilotState {
+        self.machine.lock().unwrap().state()
+    }
+
+    /// Run `f` on the machine and wake every state waiter.
+    pub(crate) fn with<R>(&self, f: impl FnOnce(&mut StateMachine<PilotState>) -> R) -> R {
+        let mut m = self.machine.lock().unwrap();
+        let r = f(&mut m);
+        self.cv.notify_all();
+        r
+    }
+
+    /// Block until `pred(state)` holds, or `timeout` elapses.
+    fn wait_until(
+        &self,
+        timeout: f64,
+        pred: impl Fn(PilotState) -> bool,
+    ) -> Option<PilotState> {
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout.max(0.0));
+        let mut m = self.machine.lock().unwrap();
+        loop {
+            let s = m.state();
+            if pred(s) {
+                return Some(s);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.cv.wait_timeout(m, deadline - now).unwrap();
+            m = g;
+        }
+    }
+}
+
 /// A submitted pilot: the application's view of its resource placeholder.
 #[derive(Clone)]
 pub struct Pilot {
     pub(crate) id: PilotId,
     pub(crate) cfg: ResourceConfig,
     pub(crate) cores: usize,
-    pub(crate) machine: Arc<Mutex<StateMachine<PilotState>>>,
+    pub(crate) machine: Arc<PilotStateCell>,
     pub(crate) agent: Arc<RealAgent>,
     pub(crate) job: JobId,
     pub(crate) job_service: Arc<JobService>,
@@ -37,36 +88,29 @@ impl Pilot {
     }
 
     pub fn state(&self) -> PilotState {
-        self.machine.lock().unwrap().state()
+        self.machine.state()
     }
 
     pub(crate) fn agent(&self) -> Arc<RealAgent> {
         self.agent.clone()
     }
 
-    /// Block until the pilot is active (or final).
+    /// Block until the pilot is active (or final), waking on the state
+    /// transition itself rather than polling.
     pub fn wait_active(&self, timeout: f64) -> Result<PilotState> {
-        let t0 = util::now();
-        loop {
-            let s = self.state();
-            if s == PilotState::PActive || s.is_final() {
-                return Ok(s);
-            }
-            if util::now() - t0 > timeout {
-                return Err(crate::Error::Timeout(timeout, format!("pilot {}", self.id)));
-            }
-            util::sleep(0.005);
-        }
+        self.machine
+            .wait_until(timeout, |s| s == PilotState::PActive || s.is_final())
+            .ok_or_else(|| crate::Error::Timeout(timeout, format!("pilot {}", self.id)))
     }
 
     /// Cancel the pilot: cancel the placeholder job and stop the agent.
     pub fn cancel(&self) -> Result<()> {
         self.job_service.cancel(self.job)?;
-        let mut m = self.machine.lock().unwrap();
-        if !m.state().is_final() {
-            let _ = m.advance(PilotState::Canceled, util::now());
-        }
-        drop(m);
+        self.machine.with(|m| {
+            if !m.state().is_final() {
+                let _ = m.advance(PilotState::Canceled, util::now());
+            }
+        });
         self.agent.drain_and_stop();
         Ok(())
     }
@@ -74,10 +118,11 @@ impl Pilot {
     /// Drain queued units and mark the pilot done.
     pub fn drain(&self) -> Result<()> {
         self.agent.drain_and_stop();
-        let mut m = self.machine.lock().unwrap();
-        if m.state() == PilotState::PActive {
-            let _ = m.advance(PilotState::Done, util::now());
-        }
+        self.machine.with(|m| {
+            if m.state() == PilotState::PActive {
+                let _ = m.advance(PilotState::Done, util::now());
+            }
+        });
         Ok(())
     }
 }

@@ -14,7 +14,7 @@ use crate::util;
 use crate::util::json::Value;
 
 use super::descriptions::PilotDescription;
-use super::pilot::Pilot;
+use super::pilot::{Pilot, PilotStateCell};
 use super::session::Session;
 
 /// Launches and tracks pilots for one session.
@@ -50,11 +50,14 @@ impl PilotManager {
         }
 
         let id: PilotId = self.session.inner.pilot_ids.next();
-        let machine = Arc::new(Mutex::new(StateMachine::new(PilotState::New, util::now())));
+        let machine =
+            Arc::new(PilotStateCell::new(StateMachine::new(PilotState::New, util::now())));
 
         // Launcher: materialize the SAGA job description and submit.
-        let advance = |m: &Arc<Mutex<StateMachine<PilotState>>>, s: PilotState| {
-            let _ = m.lock().unwrap().advance(s, util::now());
+        let advance = |m: &Arc<PilotStateCell>, s: PilotState| {
+            m.with(|m| {
+                let _ = m.advance(s, util::now());
+            });
         };
         advance(&machine, PilotState::PmLaunchingPending);
         advance(&machine, PilotState::PmLaunching);

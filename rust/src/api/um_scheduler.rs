@@ -1,0 +1,437 @@
+//! UnitManager schedulers: exchangeable late-binding policies.
+//!
+//! The paper's central claim (§II, Fig. 1/3) is that pilot systems
+//! decouple workload specification from resource selection via *late
+//! binding*: a unit is bound to a pilot only when the binding can
+//! actually happen, not when the application submits it.  RP ships
+//! exchangeable UnitManager schedulers (round-robin, backfilling); this
+//! module provides the same extension point for our UnitManager.
+//!
+//! Three policies:
+//!
+//! * [`UmPolicy::RoundRobin`] — cycle over eligible pilots (RP's default
+//!   for homogeneous pilots);
+//! * [`UmPolicy::LoadAware`] — bind to the eligible pilot with the
+//!   fewest outstanding units *per core* (relative load), tie-broken by
+//!   most free cores; on heterogeneous pilots this feeds each pilot
+//!   proportionally to its capacity instead of half-and-half;
+//! * [`UmPolicy::Locality`] — sticky per-workload pilot affinity: the
+//!   first unit of a workload (grouped by [`workload_key`]) picks a
+//!   pilot load-aware, and every later unit of the same workload binds
+//!   to the same pilot while it stays eligible (data/cache locality, cf.
+//!   EnTK's resource-aware task binding).
+//!
+//! The policies are pure decision functions over [`PilotView`]
+//! snapshots, so the real [`crate::api::UnitManager`] and the DES twin
+//! ([`crate::sim::UmSim`]) drive the *same* code — policy behavior is
+//! identical in both substrates, which the `um_sim` tests assert.
+//!
+//! In front of the policies sits [`UmWaitPool`]: the UM-side wait queue
+//! holding units that currently have no eligible pilot.  Mirroring the
+//! Agent's event-driven [`crate::agent::scheduler::WaitPool`], every
+//! `submit` and every `add_pilot` triggers a placement pass; a unit
+//! submitted before any pilot exists simply waits in
+//! `UMGR_SCHEDULING_PENDING` and binds the moment a pilot lands —
+//! nothing fails fast.
+
+use std::collections::{HashMap, VecDeque};
+
+/// UnitManager placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UmPolicy {
+    /// Cycle over eligible pilots in submission order.
+    #[default]
+    RoundRobin,
+    /// Fewest outstanding units per core; ties go to most free cores.
+    LoadAware,
+    /// Sticky per-workload pilot affinity (load-aware first binding).
+    Locality,
+}
+
+impl UmPolicy {
+    /// All policies, for sweeps.
+    pub const ALL: [UmPolicy; 3] =
+        [UmPolicy::RoundRobin, UmPolicy::LoadAware, UmPolicy::Locality];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UmPolicy::RoundRobin => "round_robin",
+            UmPolicy::LoadAware => "load_aware",
+            UmPolicy::Locality => "locality",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UmPolicy> {
+        match s {
+            "round_robin" | "roundrobin" | "rr" => Some(UmPolicy::RoundRobin),
+            "load_aware" | "loadaware" => Some(UmPolicy::LoadAware),
+            "locality" => Some(UmPolicy::Locality),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler-facing snapshot of one pilot.
+///
+/// The UnitManager builds these from live [`crate::api::Pilot`] handles;
+/// the DES twin builds them from its simulated pilots.  Placement passes
+/// update `outstanding`/`free_cores` incrementally as units bind, so one
+/// bulk submission is balanced against its own in-pass placements too.
+#[derive(Debug, Clone, Copy)]
+pub struct PilotView {
+    /// Pilot size in cores.
+    pub cores: usize,
+    /// Currently free cores on the pilot (agent scheduler gauge).
+    pub free_cores: usize,
+    /// Units bound to this pilot that have not reached a final state.
+    pub outstanding: usize,
+    /// Is the pilot accepting units (`P_ACTIVE`)?
+    pub active: bool,
+}
+
+impl PilotView {
+    /// Can this pilot ever run a unit needing `cores`?
+    pub fn eligible(&self, cores: usize) -> bool {
+        self.active && self.cores >= cores.max(1)
+    }
+}
+
+/// The scheduler-relevant part of a unit: its core request and the
+/// workload it belongs to (the [`Locality`](UmPolicy::Locality) affinity
+/// key).
+#[derive(Debug, Clone)]
+pub struct UnitReq {
+    pub cores: usize,
+    pub workload: String,
+}
+
+/// Affinity key of a unit name: the prefix before the last `-`
+/// (`"md-0042"` → `"md"`), or the whole name when it has none.
+/// Generated workloads name units `unit-NNNNNN`, so an unnamed bulk
+/// counts as one workload.
+pub fn workload_key(name: &str) -> String {
+    match name.rfind('-') {
+        Some(i) => name[..i].to_string(),
+        None => name.to_string(),
+    }
+}
+
+/// A UnitManager scheduling policy: pick a pilot (index into `pilots`)
+/// for a unit, or `None` when no pilot is eligible right now — the unit
+/// then stays in the [`UmWaitPool`] until the pilot set changes.
+pub trait UmScheduler: Send {
+    /// The policy this scheduler implements.
+    fn policy(&self) -> UmPolicy;
+    /// Select a pilot for `unit`, or `None` (unit keeps waiting).
+    fn select(&mut self, unit: &UnitReq, pilots: &[PilotView]) -> Option<usize>;
+}
+
+/// Construct the scheduler for a policy.
+pub fn make_um_scheduler(policy: UmPolicy) -> Box<dyn UmScheduler> {
+    match policy {
+        UmPolicy::RoundRobin => Box::new(RoundRobin { next: 0 }),
+        UmPolicy::LoadAware => Box::new(LoadAware),
+        UmPolicy::Locality => Box::new(Locality { affinity: HashMap::new() }),
+    }
+}
+
+struct RoundRobin {
+    next: usize,
+}
+
+impl UmScheduler for RoundRobin {
+    fn policy(&self) -> UmPolicy {
+        UmPolicy::RoundRobin
+    }
+
+    fn select(&mut self, unit: &UnitReq, pilots: &[PilotView]) -> Option<usize> {
+        let n = pilots.len();
+        for k in 0..n {
+            let i = (self.next + k) % n;
+            if pilots[i].eligible(unit.cores) {
+                self.next = i + 1;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Relative-load comparison: is pilot `a` less loaded than `b`?
+/// `outstanding/cores` compared exactly via cross-multiplication; ties
+/// go to the pilot with more free cores, then the lower index (stable).
+fn less_loaded(a: &PilotView, b: &PilotView) -> bool {
+    let la = a.outstanding as u128 * b.cores.max(1) as u128;
+    let lb = b.outstanding as u128 * a.cores.max(1) as u128;
+    la < lb || (la == lb && a.free_cores > b.free_cores)
+}
+
+fn least_loaded(cores: usize, pilots: &[PilotView]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, p) in pilots.iter().enumerate() {
+        if !p.eligible(cores) {
+            continue;
+        }
+        best = match best {
+            Some(b) if !less_loaded(p, &pilots[b]) => Some(b),
+            _ => Some(i),
+        };
+    }
+    best
+}
+
+struct LoadAware;
+
+impl UmScheduler for LoadAware {
+    fn policy(&self) -> UmPolicy {
+        UmPolicy::LoadAware
+    }
+
+    fn select(&mut self, unit: &UnitReq, pilots: &[PilotView]) -> Option<usize> {
+        least_loaded(unit.cores, pilots)
+    }
+}
+
+struct Locality {
+    /// workload key -> pilot index the workload is stuck to.
+    affinity: HashMap<String, usize>,
+}
+
+impl UmScheduler for Locality {
+    fn policy(&self) -> UmPolicy {
+        UmPolicy::Locality
+    }
+
+    fn select(&mut self, unit: &UnitReq, pilots: &[PilotView]) -> Option<usize> {
+        if let Some(&i) = self.affinity.get(&unit.workload) {
+            if pilots.get(i).is_some_and(|p| p.eligible(unit.cores)) {
+                return Some(i);
+            }
+            // sticky pilot gone or too small: rebind the workload
+        }
+        let i = least_loaded(unit.cores, pilots)?;
+        self.affinity.insert(unit.workload.clone(), i);
+        Some(i)
+    }
+}
+
+/// The UnitManager's wait-pool: units waiting for an eligible pilot.
+///
+/// Generic over the caller's unit handle (the real UnitManager stores
+/// `SharedUnit`s, the DES twin stores unit indices), mirroring the
+/// Agent-side [`crate::agent::scheduler::WaitPool`].  Unlike the Agent
+/// pool there is no head-of-line policy question at this layer: a unit
+/// with no eligible pilot must never starve siblings that have one, so
+/// a placement pass always offers every waiting unit to the scheduler
+/// and retains only the ones it declines.
+#[derive(Debug)]
+pub struct UmWaitPool<T> {
+    queue: VecDeque<(T, UnitReq)>,
+    submitted: u64,
+    placed: u64,
+}
+
+impl<T> Default for UmWaitPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> UmWaitPool<T> {
+    pub fn new() -> Self {
+        UmWaitPool { queue: VecDeque::new(), submitted: 0, placed: 0 }
+    }
+
+    /// Units currently waiting for a pilot.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// (submitted, placed) lifetime counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.submitted, self.placed)
+    }
+
+    /// Enqueue a unit awaiting placement.
+    pub fn push(&mut self, item: T, req: UnitReq) {
+        self.submitted += 1;
+        self.queue.push_back((item, req));
+    }
+
+    /// Remove and return every waiting unit for which `pred` is false
+    /// (canceled units).  Retained units keep their order; the
+    /// nothing-to-remove case (by far the common one) is a pure scan.
+    pub fn retain_or_remove(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        if self.queue.iter().all(|(item, _)| pred(item)) {
+            return Vec::new();
+        }
+        let mut removed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for (item, req) in self.queue.drain(..) {
+            if pred(&item) {
+                kept.push_back((item, req));
+            } else {
+                removed.push(item);
+            }
+        }
+        self.queue = kept;
+        removed
+    }
+
+    /// One placement pass: offer every waiting unit (in submission
+    /// order) to the scheduler, calling `on_place(item, pilot_idx)` for
+    /// each placed unit.  `pilots` is updated in place (`outstanding`
+    /// up, `free_cores` down) so later decisions in the same pass see
+    /// the earlier ones.  Returns the number of units placed.
+    pub fn place_all(
+        &mut self,
+        sched: &mut dyn UmScheduler,
+        pilots: &mut [PilotView],
+        mut on_place: impl FnMut(T, usize),
+    ) -> usize {
+        let mut i = 0;
+        let mut n_placed = 0;
+        while i < self.queue.len() {
+            match sched.select(&self.queue[i].1, pilots) {
+                Some(k) => {
+                    let (item, req) = self.queue.remove(i).expect("index in bounds");
+                    pilots[k].outstanding += 1;
+                    pilots[k].free_cores = pilots[k].free_cores.saturating_sub(req.cores);
+                    self.placed += 1;
+                    n_placed += 1;
+                    on_place(item, k);
+                }
+                None => i += 1,
+            }
+        }
+        n_placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(cores: usize) -> PilotView {
+        PilotView { cores, free_cores: cores, outstanding: 0, active: true }
+    }
+
+    fn req(cores: usize, wl: &str) -> UnitReq {
+        UnitReq { cores, workload: wl.to_string() }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in UmPolicy::ALL {
+            assert_eq!(UmPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(UmPolicy::parse("rr"), Some(UmPolicy::RoundRobin));
+        assert_eq!(UmPolicy::parse("bogus"), None);
+        assert_eq!(UmPolicy::default(), UmPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn workload_key_strips_last_segment() {
+        assert_eq!(workload_key("md-0042"), "md");
+        assert_eq!(workload_key("exp-a-17"), "exp-a");
+        assert_eq!(workload_key("solo"), "solo");
+        assert_eq!(workload_key(""), "");
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_ineligible() {
+        let mut s = make_um_scheduler(UmPolicy::RoundRobin);
+        let pilots = vec![view(4), view(1), view(4)];
+        let picks: Vec<_> =
+            (0..4).map(|_| s.select(&req(2, ""), &pilots).unwrap()).collect();
+        // pilot 1 (1 core) is never eligible for 2-core units
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        assert_eq!(s.select(&req(8, ""), &pilots), None, "nothing fits 8 cores");
+    }
+
+    #[test]
+    fn load_aware_prefers_relative_headroom() {
+        let mut s = make_um_scheduler(UmPolicy::LoadAware);
+        let mut pilots = vec![view(8), view(2)];
+        pilots[0].outstanding = 2; // 2/8 load
+        pilots[1].outstanding = 1; // 1/2 load: relatively busier
+        assert_eq!(s.select(&req(1, ""), &pilots), Some(0));
+        pilots[0].outstanding = 8; // 8/8 vs 1/2
+        assert_eq!(s.select(&req(1, ""), &pilots), Some(1));
+    }
+
+    #[test]
+    fn load_aware_tiebreaks_on_free_cores() {
+        let mut s = make_um_scheduler(UmPolicy::LoadAware);
+        let mut pilots = vec![view(4), view(4)];
+        pilots[0].free_cores = 1;
+        pilots[1].free_cores = 3;
+        assert_eq!(s.select(&req(1, ""), &pilots), Some(1));
+    }
+
+    #[test]
+    fn locality_sticks_per_workload() {
+        let mut s = make_um_scheduler(UmPolicy::Locality);
+        let mut pilots = vec![view(4), view(4)];
+        let first = s.select(&req(1, "md"), &pilots).unwrap();
+        // load the other pilot less; the workload still sticks
+        pilots[1 - first].outstanding = 0;
+        pilots[first].outstanding = 10;
+        assert_eq!(s.select(&req(1, "md"), &pilots), Some(first));
+        // a different workload balances away from the loaded pilot
+        assert_eq!(s.select(&req(1, "other"), &pilots), Some(1 - first));
+    }
+
+    #[test]
+    fn locality_rebinds_when_sticky_pilot_ineligible() {
+        let mut s = make_um_scheduler(UmPolicy::Locality);
+        let mut pilots = vec![view(4), view(4)];
+        assert!(s.select(&req(1, "md"), &pilots).is_some());
+        pilots[0].active = false;
+        pilots[1].active = false;
+        assert_eq!(s.select(&req(1, "md"), &pilots), None);
+        pilots[1].active = true;
+        assert_eq!(s.select(&req(1, "md"), &pilots), Some(1), "rebinds to the live pilot");
+    }
+
+    #[test]
+    fn pool_pass_places_what_fits_and_keeps_the_rest() {
+        let mut pool: UmWaitPool<u32> = UmWaitPool::new();
+        pool.push(0, req(1, "a"));
+        pool.push(1, req(16, "a")); // no pilot that big yet
+        pool.push(2, req(1, "a"));
+        let mut sched = make_um_scheduler(UmPolicy::RoundRobin);
+        let mut pilots = vec![view(4), view(4)];
+        let mut placed = vec![];
+        let n = pool.place_all(sched.as_mut(), &mut pilots, |u, k| placed.push((u, k)));
+        assert_eq!(n, 2);
+        assert_eq!(placed, vec![(0, 0), (2, 1)], "oversize unit must not block siblings");
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.counters(), (3, 2));
+        // a big-enough pilot arrives: the waiting unit binds
+        pilots.push(view(16));
+        let n = pool.place_all(sched.as_mut(), &mut pilots, |u, k| placed.push((u, k)));
+        assert_eq!(n, 1);
+        assert_eq!(placed.last(), Some(&(1, 2)));
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn pass_updates_views_incrementally() {
+        // one bulk of 6 units over pilots of 4 and 2 cores: load-aware
+        // must split proportionally within the single pass (4:2)
+        let mut pool: UmWaitPool<u32> = UmWaitPool::new();
+        for u in 0..6 {
+            pool.push(u, req(1, ""));
+        }
+        let mut sched = make_um_scheduler(UmPolicy::LoadAware);
+        let mut pilots = vec![view(4), view(2)];
+        let mut counts = [0usize; 2];
+        pool.place_all(sched.as_mut(), &mut pilots, |_, k| counts[k] += 1);
+        assert_eq!(counts, [4, 2]);
+    }
+}

@@ -24,6 +24,12 @@ impl Unit {
         self.shared.0.lock().unwrap().machine.state()
     }
 
+    /// Pilot this unit was late-bound to, once the UnitManager
+    /// scheduler has placed it (`None` while it waits in the UM pool).
+    pub fn pilot(&self) -> Option<crate::ids::PilotId> {
+        self.shared.0.lock().unwrap().bound_pilot
+    }
+
     /// Execution outcome, if finished.
     pub fn outcome(&self) -> Option<UnitOutcome> {
         self.shared.0.lock().unwrap().outcome.clone()
@@ -34,22 +40,38 @@ impl Unit {
         self.shared.0.lock().unwrap().error.clone()
     }
 
-    /// Request cancellation.  A queued unit is finalized by the next
-    /// scheduling pass (the Agent's scheduler is woken so that happens
-    /// promptly); a unit already *executing* is killed by the executer
-    /// reactor's next reap sweep — its child process is terminated
-    /// immediately rather than running to completion.  In-process
-    /// (PJRT) payloads are the exception: once handed to the executer
-    /// pool they are uninterruptible, so their cancellation takes
-    /// effect when a pool thread picks the unit up.
+    /// Request cancellation.  A unit still waiting in the UnitManager
+    /// pool (no pilot bound yet) finalizes immediately — no component
+    /// will ever observe it otherwise, and the next UM placement pass
+    /// drops it from the pool.  A unit queued at the Agent is finalized
+    /// by the next scheduling pass (the Agent's scheduler is woken so
+    /// that happens promptly); a unit already *executing* is killed by
+    /// the executer reactor's next reap sweep — its child process is
+    /// terminated immediately rather than running to completion.
+    /// In-process (PJRT) payloads are the exception: once handed to the
+    /// executer pool they are uninterruptible, so their cancellation
+    /// takes effect when a pool thread picks the unit up.
     pub fn cancel(&self) {
-        let wake = {
+        let (wake, watch) = {
             let mut rec = self.shared.0.lock().unwrap();
             rec.cancel_requested = true;
-            rec.sched_wake.clone()
+            if rec.bound_pilot.is_none()
+                && rec.machine.state() == UnitState::UmSchedulingPending
+            {
+                let t = crate::util::now();
+                let _ = rec.machine.advance(UnitState::Canceled, t);
+                if let Some(p) = &rec.profiler {
+                    p.record(t, rec.id, UnitState::Canceled);
+                }
+                self.shared.1.notify_all();
+            }
+            (rec.sched_wake.clone(), rec.watch_wake.clone())
         };
         if let Some(shared) = wake.and_then(|w| w.upgrade()) {
             shared.notify_event();
+        }
+        if let Some(w) = watch.and_then(|w| w.upgrade()) {
+            w.notify();
         }
     }
 

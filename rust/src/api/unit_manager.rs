@@ -1,59 +1,149 @@
 //! UnitManager: late-binds units onto active pilots through the
 //! coordination store (paper Fig. 1/3).
+//!
+//! Binding is *truly* late: units are held in a UM-side
+//! [`UmWaitPool`](super::um_scheduler::UmWaitPool) and a placement pass
+//! runs on every scheduling event — a submission or a pilot arrival —
+//! under an exchangeable [`UmScheduler`] policy
+//! ([`UmPolicy::RoundRobin`] / [`UmPolicy::LoadAware`] /
+//! [`UmPolicy::Locality`]).  A unit submitted before any pilot exists
+//! (or whose core request no current pilot satisfies) simply stays in
+//! `UMGR_SCHEDULING_PENDING` and binds the moment an eligible pilot is
+//! added; nothing fails fast.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::agent::real::{advance, new_unit};
+use crate::agent::real::{advance, new_unit, SharedUnit, StateWatch};
 use crate::db::LatencyModel;
 use crate::error::{Error, Result};
 use crate::ids::UnitId;
-use crate::states::UnitState as S;
+use crate::states::{PilotState, UnitState as S};
 use crate::util;
 
 use super::descriptions::UnitDescription;
 use super::pilot::Pilot;
 use super::session::Session;
+use super::um_scheduler::{
+    make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
+};
 use super::unit::Unit;
 
 /// Callback invoked on every observed unit state change.
 pub type StateCallback = Box<dyn Fn(&Unit, crate::states::UnitState) + Send>;
 
-/// Schedules units over the pilots added to it (round-robin late
-/// binding; RP ships exchangeable UnitManager schedulers — round-robin
-/// is its default for homogeneous pilots).
+/// One pilot as the UM scheduler sees it: the handle plus the units
+/// bound to it (for the `outstanding` gauge).
+struct PilotSlot {
+    pilot: Pilot,
+    bound: Vec<SharedUnit>,
+}
+
+impl PilotSlot {
+    /// Snapshot for the scheduler.  Final units are pruned from `bound`
+    /// here, so the outstanding gauge costs O(live units) per pass
+    /// instead of O(every unit ever bound).
+    fn view(&mut self) -> PilotView {
+        self.bound.retain(|u| !u.0.lock().unwrap().machine.is_final());
+        PilotView {
+            cores: self.pilot.cores(),
+            free_cores: self.pilot.agent().free_cores(),
+            outstanding: self.bound.len(),
+            active: self.pilot.state() == PilotState::PActive,
+        }
+    }
+}
+
+/// Scheduling state guarded by one mutex: the critical section of a
+/// submission is exactly one placement pass — store writes and agent
+/// feeds happen outside it.
+struct UmSched {
+    scheduler: Box<dyn UmScheduler>,
+    /// Was the policy set explicitly (vs. adopted from the first
+    /// pilot's resource config)?
+    explicit_policy: bool,
+    pool: UmWaitPool<SharedUnit>,
+    pilots: Vec<PilotSlot>,
+}
+
+/// Schedules units over the pilots added to it through exchangeable
+/// late-binding policies (see [`super::um_scheduler`]).
 #[derive(Clone)]
 pub struct UnitManager {
     session: Session,
-    pilots: Arc<Mutex<Vec<Pilot>>>,
     units: Arc<Mutex<Vec<Unit>>>,
-    next_pilot: Arc<Mutex<usize>>,
+    sched: Arc<Mutex<UmSched>>,
     /// Communication model applied when feeding units (None = local).
     latency: Arc<Mutex<Option<LatencyModel>>>,
     callbacks: Arc<Mutex<Vec<StateCallback>>>,
     watcher_running: Arc<Mutex<bool>>,
+    /// State-change event channel the callback watcher parks on.
+    watch: Arc<StateWatch>,
+    /// Last state delivered per unit — persistent across watcher
+    /// respawns so a fresh watcher never re-delivers old transitions.
+    delivered: Arc<Mutex<HashMap<UnitId, crate::states::UnitState>>>,
 }
 
 impl UnitManager {
     pub(crate) fn new(session: Session) -> Self {
         UnitManager {
             session,
-            pilots: Arc::new(Mutex::new(Vec::new())),
             units: Arc::new(Mutex::new(Vec::new())),
-            next_pilot: Arc::new(Mutex::new(0)),
+            sched: Arc::new(Mutex::new(UmSched {
+                scheduler: make_um_scheduler(UmPolicy::default()),
+                explicit_policy: false,
+                pool: UmWaitPool::new(),
+                pilots: Vec::new(),
+            })),
             latency: Arc::new(Mutex::new(None)),
             callbacks: Arc::new(Mutex::new(Vec::new())),
             watcher_running: Arc::new(Mutex::new(false)),
+            watch: Arc::new(StateWatch::new()),
+            delivered: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
+    /// Select the UM scheduling policy.  Replaces the scheduler (and any
+    /// per-policy state such as locality affinities); units already
+    /// bound stay bound, units still waiting are placed by the new
+    /// policy on the next scheduling event.
+    pub fn set_policy(&self, policy: UmPolicy) {
+        let placed = {
+            let mut st = self.sched.lock().unwrap();
+            st.scheduler = make_um_scheduler(policy);
+            st.explicit_policy = true;
+            self.place(&mut st)
+        };
+        self.dispatch(placed);
+    }
+
+    /// The active UM scheduling policy.
+    pub fn policy(&self) -> UmPolicy {
+        self.sched.lock().unwrap().scheduler.policy()
+    }
+
+    /// Units waiting in the UM pool for an eligible pilot.
+    pub fn pending(&self) -> usize {
+        self.sched.lock().unwrap().pool.len()
+    }
+
     /// Register a state-change callback (the Pilot API's
-    /// `register_callback`).  As in RP, the client side observes state by
-    /// polling the coordination layer, so transitions faster than the
-    /// poll interval may be coalesced — final states are always
-    /// delivered.
+    /// `register_callback`).  The watcher thread parks on the state
+    /// event channel and wakes per transition, so callbacks are
+    /// delivered promptly; transitions faster than one wake-scan cycle
+    /// may be coalesced — final states are always delivered.
     pub fn register_callback(&self, cb: StateCallback) {
         self.callbacks.lock().unwrap().push(cb);
+        self.ensure_watcher();
+    }
+
+    /// Spawn the watcher thread if callbacks exist and none is running
+    /// (a watcher that exited after its units finished is respawned here
+    /// for late submissions / late-registered callbacks).
+    fn ensure_watcher(&self) {
+        if self.callbacks.lock().unwrap().is_empty() {
+            return;
+        }
         let mut running = self.watcher_running.lock().unwrap();
         if !*running {
             *running = true;
@@ -66,32 +156,70 @@ impl UnitManager {
     }
 
     fn watch_loop(&self) {
-        let mut last: HashMap<crate::ids::UnitId, crate::states::UnitState> = HashMap::new();
         loop {
-            if self.session.is_closed() {
-                return;
-            }
+            // Snapshot the event sequence *before* scanning: an event
+            // racing with the scan bumps it and the park below returns
+            // immediately, so no transition is missed.
+            let seen = self.watch.snapshot();
             let units = self.units();
             let mut all_final = !units.is_empty();
             for u in &units {
                 let s = u.state();
-                if last.get(&u.id()) != Some(&s) {
-                    last.insert(u.id(), s);
+                let fresh = {
+                    let mut delivered = self.delivered.lock().unwrap();
+                    if delivered.get(&u.id()) != Some(&s) {
+                        delivered.insert(u.id(), s);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if fresh {
                     for cb in self.callbacks.lock().unwrap().iter() {
                         cb(u, s);
                     }
                 }
                 all_final &= s.is_final();
             }
-            // keep watching (new submissions may arrive) unless closed
-            let _ = all_final;
-            crate::util::sleep(0.005);
+            if self.session.is_closed() {
+                *self.watcher_running.lock().unwrap() = false;
+                return;
+            }
+            if all_final {
+                // Every unit is final and delivered: exit and reset the
+                // flag so a later submit/register respawns a watcher.
+                // Re-check under the flag lock that no submission raced
+                // in between the scan and this exit.
+                let mut running = self.watcher_running.lock().unwrap();
+                if self.units.lock().unwrap().len() == units.len() {
+                    *running = false;
+                    return;
+                }
+                continue;
+            }
+            // Park until the next state event; the bounded tick only
+            // serves to notice session close, not to poll states.
+            self.watch.wait_change(seen, std::time::Duration::from_millis(250));
         }
     }
 
-    /// Make a pilot available for unit scheduling.
+    /// Make a pilot available for unit scheduling.  This is a
+    /// scheduling event: every unit waiting in the UM pool for which
+    /// the new pilot set is eligible binds immediately.
     pub fn add_pilot(&self, pilot: &Pilot) {
-        self.pilots.lock().unwrap().push(pilot.clone());
+        let placed = {
+            let mut st = self.sched.lock().unwrap();
+            // Adopt the resource config's policy with the first pilot
+            // unless the application chose one explicitly.
+            if !st.explicit_policy && st.pilots.is_empty() {
+                if let Some(p) = UmPolicy::parse(&pilot.resource().um_policy) {
+                    st.scheduler = make_um_scheduler(p);
+                }
+            }
+            st.pilots.push(PilotSlot { pilot: pilot.clone(), bound: Vec::new() });
+            self.place(&mut st)
+        };
+        self.dispatch(placed);
     }
 
     /// Inject a UM->Agent communication latency model (used by the
@@ -100,61 +228,122 @@ impl UnitManager {
         *self.latency.lock().unwrap() = Some(model);
     }
 
-    /// Submit unit descriptions; returns handles.  Units transit
-    /// NEW -> UMGR_SCHEDULING -> (store) -> AGENT_* on the bound pilot.
-    ///
-    /// The store sees the whole submission as one bulk insert
-    /// ([`crate::db::Store::insert_bulk`]) *after* the round-robin
-    /// assignment loop, so the store lock is taken once per submission
-    /// instead of once per unit.
-    pub fn submit(&self, descrs: Vec<UnitDescription>) -> Vec<Unit> {
+    /// One placement pass under the scheduler lock: finalize canceled
+    /// waiters, then offer every remaining unit to the policy over
+    /// fresh pilot views.  Returns the bindings grouped per pilot;
+    /// state advancement, store writes and agent feeds happen in
+    /// [`Self::dispatch`], outside the lock.
+    fn place(&self, st: &mut UmSched) -> Vec<(Pilot, Vec<SharedUnit>)> {
+        if st.pool.is_empty() {
+            return Vec::new();
+        }
+        // a unit canceled while waiting for a pilot finalizes at the
+        // next scheduling event instead of binding
         let profiler = self.session.profiler();
-        let pilots = self.pilots.lock().unwrap().clone();
-        let mut created = Vec::with_capacity(descrs.len());
-        let mut docs = Vec::with_capacity(descrs.len());
-        let mut per_pilot: Vec<Vec<_>> = vec![Vec::new(); pilots.len().max(1)];
+        for unit in st
+            .pool
+            .retain_or_remove(|u| !u.0.lock().unwrap().cancel_requested)
         {
-            let mut rr = self.next_pilot.lock().unwrap();
-            for d in descrs {
-                let id: UnitId = self.session.inner.unit_ids.next();
-                let shared = new_unit(id, d);
-                let unit = Unit { shared: shared.clone() };
-                // UM-side states
-                let _ = advance(&shared, S::UmSchedulingPending, &profiler);
-                if pilots.is_empty() {
-                    // no pilot yet: the unit fails immediately (the
-                    // application can resubmit) — RP would keep it
-                    // pending; failing fast keeps the API honest here.
-                    let _ = advance(&shared, S::Failed, &profiler);
-                    shared.0.lock().unwrap().error = Some("no pilot added".into());
-                } else {
-                    let _ = advance(&shared, S::UmScheduling, &profiler);
-                    let k = *rr % pilots.len();
-                    *rr += 1;
-                    docs.push((id.to_string(), shared.0.lock().unwrap().descr.to_json()));
-                    let _ = advance(&shared, S::AStagingInPending, &profiler);
-                    per_pilot[k].push(shared.clone());
+            let _ = advance(&unit, S::Canceled, &profiler);
+        }
+        if st.pool.is_empty() || st.pilots.is_empty() {
+            return Vec::new();
+        }
+        let mut views: Vec<PilotView> = st.pilots.iter_mut().map(|s| s.view()).collect();
+        let UmSched { scheduler, pool, pilots, .. } = st;
+        let mut batches: Vec<(usize, Vec<SharedUnit>)> = Vec::new();
+        pool.place_all(scheduler.as_mut(), &mut views, |unit, k| {
+            pilots[k].bound.push(unit.clone());
+            match batches.iter().position(|(i, _)| *i == k) {
+                Some(j) => batches[j].1.push(unit),
+                None => batches.push((k, vec![unit])),
+            }
+        });
+        // one Pilot clone per distinct pilot, not per unit (the handle
+        // drags a full ResourceConfig along)
+        batches
+            .into_iter()
+            .map(|(k, units)| (pilots[k].pilot.clone(), units))
+            .collect()
+    }
+
+    /// Bind placed units: advance UM states, record the binding, write
+    /// the submission to the coordination store as one bulk insert, and
+    /// feed each pilot's agent (optionally paying the modeled
+    /// communication latency, bulked as the store would).
+    fn dispatch(&self, placed: Vec<(Pilot, Vec<SharedUnit>)>) {
+        if placed.is_empty() {
+            return;
+        }
+        let profiler = self.session.profiler();
+        let mut docs = Vec::new();
+        let mut feeds: Vec<(Pilot, Vec<SharedUnit>)> = Vec::new();
+        for (pilot, units) in placed {
+            let mut batch = Vec::with_capacity(units.len());
+            for unit in units {
+                if advance(&unit, S::UmScheduling, &profiler).is_err() {
+                    // canceled in the place -> dispatch window: it never
+                    // binds (no doc, no feed, no bound_pilot)
+                    continue;
                 }
-                created.push(unit);
+                {
+                    let mut rec = unit.0.lock().unwrap();
+                    rec.bound_pilot = Some(pilot.id());
+                    docs.push((rec.id.to_string(), rec.descr.to_json()));
+                }
+                let _ = advance(&unit, S::AStagingInPending, &profiler);
+                batch.push(unit);
+            }
+            if !batch.is_empty() {
+                feeds.push((pilot, batch));
             }
         }
-        // one bulk write to the coordination store for the submission
-        if !docs.is_empty() {
-            self.session.store().insert_bulk("units", docs);
-        }
-        // feed each pilot's agent (optionally paying the modeled
-        // communication latency, bulked as the store would)
+        self.session.store().insert_bulk("units", docs);
         let latency = *self.latency.lock().unwrap();
-        for (k, batch) in per_pilot.into_iter().enumerate() {
-            if batch.is_empty() {
-                continue;
-            }
+        for (pilot, batch) in feeds {
             if let Some(model) = latency {
                 util::sleep(model.transfer_time(batch.len() as u64));
             }
-            pilots[k].agent().submit(batch);
+            pilot.agent().submit(batch);
         }
+    }
+
+    /// Submit unit descriptions; returns handles.  Units transit
+    /// NEW -> UMGR_SCHEDULING_PENDING, wait in the UM pool until an
+    /// eligible pilot exists, then -> UMGR_SCHEDULING -> (store) ->
+    /// AGENT_* on the bound pilot.
+    ///
+    /// The scheduler lock is held only for the placement pass; the
+    /// store sees the whole bound part of the submission as one bulk
+    /// insert ([`crate::db::Store::insert_bulk`]) after the pass.
+    pub fn submit(&self, descrs: Vec<UnitDescription>) -> Vec<Unit> {
+        let profiler = self.session.profiler();
+        let mut created = Vec::with_capacity(descrs.len());
+        let mut pending = Vec::with_capacity(descrs.len());
+        for d in descrs {
+            let id: UnitId = self.session.inner.unit_ids.next();
+            let req = UnitReq { cores: d.cores, workload: workload_key(&d.name) };
+            let shared = new_unit(id, d);
+            {
+                let mut rec = shared.0.lock().unwrap();
+                rec.watch_wake = Some(Arc::downgrade(&self.watch));
+                rec.profiler = Some(profiler.clone());
+            }
+            let _ = advance(&shared, S::UmSchedulingPending, &profiler);
+            created.push(Unit { shared: shared.clone() });
+            pending.push((shared, req));
+        }
+        let placed = {
+            let mut st = self.sched.lock().unwrap();
+            for (shared, req) in pending {
+                st.pool.push(shared, req);
+            }
+            self.place(&mut st)
+        };
+        self.dispatch(placed);
         self.units.lock().unwrap().extend(created.iter().cloned());
+        self.ensure_watcher();
+        self.watch.notify();
         created
     }
 
@@ -193,6 +382,19 @@ mod tests {
     use crate::api::descriptions::PilotDescription;
     use crate::states::UnitState;
 
+    /// Units bound to each given pilot, by recorded binding.
+    fn counts(um: &UnitManager, pilots: &[&Pilot]) -> Vec<usize> {
+        pilots
+            .iter()
+            .map(|p| {
+                um.units()
+                    .iter()
+                    .filter(|u| u.pilot() == Some(p.id()))
+                    .count()
+            })
+            .collect()
+    }
+
     #[test]
     fn roundtrip_sleep_units() {
         let s = Session::new("um-test");
@@ -206,6 +408,7 @@ mod tests {
         for u in units {
             assert_eq!(u.state(), UnitState::Done);
             assert!(u.entered(UnitState::AExecuting).is_some());
+            assert_eq!(u.pilot(), Some(pilot.id()));
         }
         assert_eq!(s.store().count("units"), 8);
         pilot.drain().unwrap();
@@ -231,7 +434,8 @@ mod tests {
         }));
         let _units = um.submit((0..4).map(|_| UnitDescription::sleep(0.05)).collect());
         um.wait_all(20.0).unwrap();
-        // polling coalesces fast transitions, but every final state lands
+        // event-driven scans coalesce fast transitions, but every final
+        // state lands
         let t0 = crate::util::now();
         while dones.load(Ordering::SeqCst) < 4 && crate::util::now() - t0 < 5.0 {
             crate::util::sleep(0.01);
@@ -243,12 +447,102 @@ mod tests {
     }
 
     #[test]
-    fn no_pilot_fails_fast() {
-        let s = Session::new("um-nopilot");
+    fn watcher_respawns_for_late_submissions() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let s = Session::new("um-respawn");
+        let pm = s.pilot_manager();
         let um = s.unit_manager();
-        let units = um.submit(vec![UnitDescription::sleep(0.01)]);
-        assert_eq!(units[0].state(), UnitState::Failed);
-        assert!(units[0].error().unwrap().contains("no pilot"));
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        let dones = Arc::new(AtomicUsize::new(0));
+        let d2 = dones.clone();
+        um.register_callback(Box::new(move |_, state| {
+            if state == UnitState::Done {
+                d2.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+        for round in 1..=2 {
+            um.submit(vec![UnitDescription::sleep(0.02)]);
+            um.wait_all(20.0).unwrap();
+            let t0 = crate::util::now();
+            while dones.load(Ordering::SeqCst) < round && crate::util::now() - t0 < 5.0 {
+                crate::util::sleep(0.01);
+            }
+            assert_eq!(
+                dones.load(Ordering::SeqCst),
+                round,
+                "round {round}: a fresh watcher must deliver late submissions"
+            );
+            // let the watcher observe the all-final state and exit
+            crate::util::sleep(0.05);
+        }
+        pilot.drain().unwrap();
+        s.close();
+    }
+
+    #[test]
+    fn submit_before_add_pilot_binds_late() {
+        // the paper's late binding (§II): workload specification is
+        // decoupled from resource selection — submitting before any
+        // pilot exists leaves units pending, and they bind (and run)
+        // the moment a pilot is added
+        let s = Session::new("um-latebind");
+        let um = s.unit_manager();
+        let units = um.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect());
+        assert_eq!(um.pending(), 4);
+        for u in &units {
+            assert_eq!(u.state(), UnitState::UmSchedulingPending);
+            assert_eq!(u.pilot(), None);
+        }
+        let pm = s.pilot_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        assert_eq!(um.pending(), 0, "add_pilot is a scheduling event");
+        um.wait_all(20.0).unwrap();
+        for u in &units {
+            assert_eq!(u.state(), UnitState::Done);
+            assert_eq!(u.pilot(), Some(pilot.id()));
+        }
+        pilot.drain().unwrap();
+    }
+
+    #[test]
+    fn unit_too_wide_for_all_pilots_stays_pending() {
+        let s = Session::new("um-wide-pending");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let small = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&small);
+        let units = um.submit(vec![UnitDescription::sleep(0.01).cores(8).mpi(true)]);
+        assert_eq!(um.pending(), 1, "no eligible pilot: the unit waits, not fails");
+        assert_eq!(units[0].state(), UnitState::UmSchedulingPending);
+        let big = pm.submit(PilotDescription::new("local.localhost", 8, 60.0)).unwrap();
+        um.add_pilot(&big);
+        um.wait_all(20.0).unwrap();
+        assert_eq!(units[0].state(), UnitState::Done);
+        assert_eq!(units[0].pilot(), Some(big.id()));
+        small.drain().unwrap();
+        big.drain().unwrap();
+    }
+
+    #[test]
+    fn cancel_while_waiting_for_a_pilot_finalizes_immediately() {
+        let s = Session::new("um-cancel-pending");
+        let um = s.unit_manager();
+        let units = um.submit(vec![UnitDescription::sleep(0.01), UnitDescription::sleep(0.01)]);
+        units[0].cancel();
+        // no component will ever observe an unbound unit: cancel is final
+        // right away, and the next placement pass drops it from the pool
+        assert_eq!(units[0].state(), UnitState::Canceled);
+        let pm = s.pilot_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        assert_eq!(um.pending(), 0, "the canceled unit left the pool");
+        um.wait_all(20.0).unwrap();
+        assert_eq!(units[0].state(), UnitState::Canceled);
+        assert_eq!(units[0].pilot(), None, "canceled before binding: never bound");
+        assert_eq!(units[1].state(), UnitState::Done);
+        pilot.drain().unwrap();
     }
 
     #[test]
@@ -260,10 +554,81 @@ mod tests {
         let p2 = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
         um.add_pilot(&p1);
         um.add_pilot(&p2);
+        assert_eq!(um.policy(), UmPolicy::RoundRobin);
         let _ = um.submit((0..6).map(|_| UnitDescription::sleep(0.01)).collect());
         um.wait_all(20.0).unwrap();
         assert_eq!(um.completed(), 6);
+        assert_eq!(counts(&um, &[&p1, &p2]), vec![3, 3], "round-robin splits evenly");
         p1.drain().unwrap();
         p2.drain().unwrap();
+    }
+
+    #[test]
+    fn load_aware_skews_to_the_bigger_pilot() {
+        let s = Session::new("um-loadaware");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        um.set_policy(UmPolicy::LoadAware);
+        let big = pm.submit(PilotDescription::new("local.localhost", 6, 60.0)).unwrap();
+        let small = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&big);
+        um.add_pilot(&small);
+        let _ = um.submit((0..16).map(|_| UnitDescription::sleep(0.01)).collect());
+        um.wait_all(20.0).unwrap();
+        let c = counts(&um, &[&big, &small]);
+        assert_eq!(c[0] + c[1], 16);
+        assert_eq!(c, vec![12, 4], "load-aware feeds pilots proportionally (6:2)");
+        big.drain().unwrap();
+        small.drain().unwrap();
+    }
+
+    #[test]
+    fn locality_keeps_workloads_sticky() {
+        let s = Session::new("um-locality");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        um.set_policy(UmPolicy::Locality);
+        let p1 = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        let p2 = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        um.add_pilot(&p1);
+        um.add_pilot(&p2);
+        let mut descrs = vec![];
+        for i in 0..6 {
+            descrs.push(UnitDescription::sleep(0.01).name(format!("wla-{i}")));
+            descrs.push(UnitDescription::sleep(0.01).name(format!("wlb-{i}")));
+        }
+        let units = um.submit(descrs);
+        um.wait_all(20.0).unwrap();
+        for wl in ["wla", "wlb"] {
+            let pilots: std::collections::HashSet<_> = units
+                .iter()
+                .filter(|u| u.name().starts_with(wl))
+                .map(|u| u.pilot().unwrap())
+                .collect();
+            assert_eq!(pilots.len(), 1, "workload {wl} must stick to one pilot");
+        }
+        // the two workloads balance over different pilots
+        assert_ne!(
+            units.iter().find(|u| u.name().starts_with("wla")).unwrap().pilot(),
+            units.iter().find(|u| u.name().starts_with("wlb")).unwrap().pilot(),
+        );
+        p1.drain().unwrap();
+        p2.drain().unwrap();
+    }
+
+    #[test]
+    fn first_pilot_config_policy_is_adopted() {
+        let s = Session::new("um-cfg-policy");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let pilot = pm
+            .submit(
+                PilotDescription::new("local.localhost", 2, 60.0)
+                    .with_override("um_policy", "load_aware"),
+            )
+            .unwrap();
+        um.add_pilot(&pilot);
+        assert_eq!(um.policy(), UmPolicy::LoadAware);
+        pilot.drain().unwrap();
     }
 }

@@ -6,12 +6,12 @@ mod args;
 pub use args::Args;
 
 use crate::agent::scheduler::{SchedPolicy, SearchMode};
-use crate::api::{PilotDescription, Session, UnitDescription};
+use crate::api::{PilotDescription, Session, UmPolicy, UnitDescription};
 use crate::config::{builtin_labels, ResourceConfig};
 use crate::error::Result;
 use crate::profiler::Analysis;
 use crate::sim::microbench::{Component, MicroBench};
-use crate::sim::{AgentSim, AgentSimConfig};
+use crate::sim::{AgentSim, AgentSimConfig, UmSim, UmSimConfig};
 use crate::workload::{BarrierMode, WorkloadSpec};
 
 pub const USAGE: &str = "\
@@ -28,6 +28,8 @@ COMMANDS:
                    admission window: max concurrently running units)
                  --artifact NAME (run PJRT payloads)
                  --policy fifo|backfill  --search linear|freelist
+                 --um-policy round_robin|load_aware|locality
+                   (UnitManager late-binding policy)
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
                  --generations N (3) --duration S (64)
@@ -35,6 +37,11 @@ COMMANDS:
                  --policy fifo|backfill  --search linear|freelist
                  --schedulers N (1, concurrent partitions)
                  --max-inflight N (0 = unbounded reactor window)
+                 --um-policy round_robin|load_aware|locality: run the
+                   UnitManager DES twin instead, binding the workload
+                   over multiple simulated pilots
+                 --pilots A,B,.. (pilot sizes for the UM twin;
+                   default: a 2:1 heterogeneous split of --cores)
     micro      component micro-benchmark (paper §IV-B)
                  --component scheduler|stager_in|stager_out|executer
                  --resource LABEL --instances N (1) --nodes N (1)
@@ -44,6 +51,7 @@ COMMANDS:
 EXAMPLES:
     rp run --cores 8 --units 64 --duration 0.05
     rp sim --resource bluewaters --cores 2048 --duration 64
+    rp sim --um-policy load_aware --pilots 1536,384 --duration 60
     rp micro --component executer --resource stampede --instances 4 --nodes 2
 ";
 
@@ -95,6 +103,17 @@ fn sched_flags(args: &Args) -> Result<(Option<SchedPolicy>, Option<SearchMode>)>
     Ok((policy, search))
 }
 
+/// Parse `--um-policy` when given, validating the name.
+fn um_policy_flag(args: &Args) -> Result<Option<UmPolicy>> {
+    args.get("um-policy")
+        .map(|s| {
+            UmPolicy::parse(s).ok_or_else(|| {
+                crate::Error::other("bad --um-policy (round_robin|load_aware|locality)")
+            })
+        })
+        .transpose()
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cores = args.get_usize("cores", 4)?;
     let n_units = args.get_usize("units", 16)?;
@@ -103,6 +122,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let max_inflight = args.get_usize("max-inflight", 0)?;
     let artifact = args.get("artifact");
     let (policy, search) = sched_flags(args)?;
+    let um_policy = um_policy_flag(args)?;
 
     let session = Session::new("cli-run");
     if artifact.is_some() {
@@ -110,6 +130,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let pmgr = session.pilot_manager();
     let umgr = session.unit_manager();
+    if let Some(p) = um_policy {
+        umgr.set_policy(p);
+    }
     let mut pd = PilotDescription::new("local.localhost", cores, 3600.0)
         .with_override("agent.executers", executers.to_string())
         .with_override("agent.max_inflight", max_inflight.to_string());
@@ -158,8 +181,44 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
     let (policy, search) = sched_flags(args)?;
+    let um_policy = um_policy_flag(args)?;
 
     let cfg = ResourceConfig::load(resource)?;
+    // --um-policy / --pilots select the UnitManager-level twin: the
+    // workload is late-bound over multiple simulated pilots
+    if um_policy.is_some() || args.get("pilots").is_some() {
+        // agent-level flags have no effect on the UM twin: reject them
+        // loudly instead of letting a sweep silently misconfigure
+        for flag in ["policy", "search", "barrier", "schedulers", "max-inflight"] {
+            if args.get(flag).is_some() {
+                return Err(crate::Error::other(format!(
+                    "--{flag} applies to the agent sim, not the UM twin \
+                     (--um-policy/--pilots)"
+                )));
+            }
+        }
+        let pilots: Vec<usize> = match args.get("pilots") {
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&c| c > 0)
+                        .ok_or_else(|| crate::Error::other("bad --pilots (e.g. 1536,384)"))
+                })
+                .collect::<Result<_>>()?,
+            // default: a 2:1 heterogeneous split of --cores
+            None => vec![(cores * 2 / 3).max(1), (cores - cores * 2 / 3).max(1)],
+        };
+        return cmd_sim_um(
+            &cfg,
+            pilots,
+            um_policy.unwrap_or_default(),
+            generations,
+            duration,
+        );
+    }
     let wl = WorkloadSpec::generations(cores, generations, duration).build();
     let mut sim_cfg = AgentSimConfig::paper_default(cores);
     sim_cfg.barrier = barrier;
@@ -184,6 +243,45 @@ fn cmd_sim(args: &Args) -> Result<()> {
     println!("ttc_a: {:.1}s", r.ttc_a);
     println!("core utilization: {:.1}%", 100.0 * r.utilization);
     println!("peak concurrency: {}", r.peak_concurrency);
+    println!(
+        "sim: {} events in {:.3}s wall ({:.0} ev/s)",
+        r.events,
+        r.wall_s,
+        r.events as f64 / r.wall_s.max(1e-9)
+    );
+    Ok(())
+}
+
+/// The UnitManager DES twin: late-bind `generations` waves of the
+/// pilots' aggregate core count over the given pilot set.
+fn cmd_sim_um(
+    cfg: &ResourceConfig,
+    pilots: Vec<usize>,
+    policy: UmPolicy,
+    generations: usize,
+    duration: f64,
+) -> Result<()> {
+    if pilots.is_empty() {
+        return Err(crate::Error::other("--pilots needs at least one pilot"));
+    }
+    let total: usize = pilots.iter().sum();
+    let wl = WorkloadSpec::generations(total, generations, duration).build();
+    let sim_cfg = UmSimConfig::new(pilots.clone(), policy);
+    let r = UmSim::new(cfg, sim_cfg, &wl).run();
+    println!("resource: {}  pilots: {pilots:?} ({total} cores)", cfg.label);
+    println!("um scheduler: policy={}", policy.name());
+    println!("workload: {} units x {duration}s", wl.len());
+    println!("optimal ttc: {:.1}s", wl.optimal_ttc(total));
+    for i in 0..pilots.len() {
+        println!(
+            "pilot {i}: {:>6} cores  {:>7} units  done at {:>8.1}s",
+            pilots[i], r.per_pilot_units[i], r.per_pilot_makespan[i]
+        );
+    }
+    if r.unbound > 0 {
+        println!("unbound: {} units had no eligible pilot", r.unbound);
+    }
+    println!("makespan: {:.1}s", r.makespan);
     println!(
         "sim: {} events in {:.3}s wall ({:.0} ev/s)",
         r.events,
@@ -306,6 +404,47 @@ mod tests {
             ]),
             0
         );
+    }
+
+    #[test]
+    fn sim_um_policy_twin() {
+        assert_eq!(
+            run(&[
+                "sim", "--um-policy", "load_aware", "--pilots", "96,24", "--generations",
+                "2", "--duration", "10",
+            ]),
+            0
+        );
+        // --pilots alone selects the twin (default round_robin)
+        assert_eq!(
+            run(&["sim", "--pilots", "32,32", "--generations", "1", "--duration", "5"]),
+            0
+        );
+        // default heterogeneous pilot split from --cores
+        assert_eq!(
+            run(&[
+                "sim", "--um-policy", "round_robin", "--cores", "96", "--generations",
+                "1", "--duration", "5",
+            ]),
+            0
+        );
+        assert_eq!(run(&["sim", "--um-policy", "best_fit"]), 1);
+        assert_eq!(run(&["sim", "--pilots", "abc"]), 1);
+        // agent-level flags are rejected on the UM-twin path
+        assert_eq!(run(&["sim", "--pilots", "32,32", "--policy", "backfill"]), 1);
+        assert_eq!(run(&["sim", "--um-policy", "rr", "--max-inflight", "8"]), 1);
+    }
+
+    #[test]
+    fn run_real_um_policy() {
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--um-policy", "locality",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--um-policy", "bogus"]), 1);
     }
 
     #[test]

@@ -149,6 +149,10 @@ pub struct ResourceConfig {
     /// Resource manager kind ("slurm", "torque", "pbspro", "sge", "lsf",
     /// "loadleveler", "ccm", "fork").
     pub resource_manager: String,
+    /// UnitManager late-binding policy adopted when the first pilot on
+    /// this resource is added ("round_robin" | "load_aware" |
+    /// "locality"); an explicit `UnitManager::set_policy` wins.
+    pub um_policy: String,
     pub launch_methods: LaunchMethods,
     pub agent: AgentLayout,
     pub calib: Calibration,
@@ -185,6 +189,12 @@ impl ResourceConfig {
                 "{label}: search_mode '{search_mode}': expected linear|freelist"
             )));
         }
+        let um_policy = v.get_str("um_policy", "round_robin").to_string();
+        if crate::api::um_scheduler::UmPolicy::parse(&um_policy).is_none() {
+            return Err(Error::Config(format!(
+                "{label}: um_policy '{um_policy}': expected round_robin|load_aware|locality"
+            )));
+        }
         Ok(ResourceConfig {
             label,
             description: v.get_str("description", "").to_string(),
@@ -192,6 +202,7 @@ impl ResourceConfig {
             nodes: v.get_u64("nodes", 1) as usize,
             nodes_per_router: v.get_u64("nodes_per_router", 0) as usize,
             resource_manager: v.get_str("resource_manager", "fork").to_string(),
+            um_policy,
             launch_methods: LaunchMethods {
                 mpi: lm.get_str("mpi", "MPIRUN").to_string(),
                 task: lm.get_str("task", "FORK").to_string(),
@@ -279,6 +290,14 @@ impl ResourceConfig {
             "nodes" => self.nodes = num()? as usize,
             "nodes_per_router" => self.nodes_per_router = num()? as usize,
             "resource_manager" => self.resource_manager = value.to_string(),
+            "um_policy" => {
+                crate::api::um_scheduler::UmPolicy::parse(value).ok_or_else(|| {
+                    Error::Config(format!(
+                        "override {key}={value}: expected round_robin|load_aware|locality"
+                    ))
+                })?;
+                self.um_policy = value.to_string();
+            }
             "launch_methods.task" => self.launch_methods.task = value.to_string(),
             "launch_methods.mpi" => self.launch_methods.mpi = value.to_string(),
             "agent.schedulers" => self.agent.schedulers = num()? as usize,
@@ -361,7 +380,22 @@ mod tests {
         assert_eq!(c.agent.max_inflight, 0, "max_inflight defaults to auto");
         assert_eq!(c.agent.scheduler_policy, "fifo");
         assert_eq!(c.agent.search_mode, "linear");
+        assert_eq!(c.um_policy, "round_robin", "um_policy defaults to round_robin");
         assert_eq!(c.calib.sched_rate_mean, 158.0);
+    }
+
+    #[test]
+    fn bad_um_policy_rejected() {
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "um_policy": "load_awre"}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "um_policy": "locality"}"#,
+        )
+        .unwrap();
+        assert_eq!(ResourceConfig::from_json(&v).unwrap().um_policy, "locality");
     }
 
     #[test]
@@ -413,6 +447,9 @@ mod tests {
         assert_eq!(c.agent.scheduler_policy, "backfill");
         c.apply_override("agent.search_mode", "freelist").unwrap();
         assert_eq!(c.agent.search_mode, "freelist");
+        c.apply_override("um_policy", "load_aware").unwrap();
+        assert_eq!(c.um_policy, "load_aware");
+        assert!(c.apply_override("um_policy", "best_fit").is_err());
         // typos are rejected rather than silently falling back to fifo
         assert!(c.apply_override("agent.scheduler_policy", "backfil").is_err());
         assert!(c.apply_override("agent.search_mode", "quadratic").is_err());

@@ -19,6 +19,12 @@
 //! smaller units overtake a blocked wide head).  The real thread-based
 //! Agent and the DES twin drive the same pool and the same scheduler
 //! implementations, so policies behave identically in both substrates.
+//! One layer up, the UnitManager late-binds units onto pilots the same
+//! way: a UM-side wait-pool plus exchangeable [`api::UmScheduler`]
+//! policies (`round_robin` / `load_aware` / `locality`), shared between
+//! the real [`api::UnitManager`] and its DES twin ([`sim::UmSim`]), so
+//! units submitted before any pilot exists wait and bind late instead
+//! of failing.
 //! * **L2** — the JAX MD payload model (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts.
 //! * **L1** — the Pallas Lennard-Jones kernel

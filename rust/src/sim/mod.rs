@@ -17,6 +17,10 @@
 //!   [`crate::agent::WaitPool`] the real Agent runs (fifo/backfill
 //!   policies included) and recording a real
 //!   [`crate::profiler::Profiler`] trace;
+//! * [`um_sim`] — the UnitManager layer above it: late binding over
+//!   multiple simulated pilots under the same exchangeable
+//!   [`crate::api::UmScheduler`] policies the real UnitManager runs,
+//!   with the calibrated UM→Agent feed latency in between;
 //! * [`microbench`] — the clone-10k-units-in-one-component micro-bench
 //!   harness of §IV-B.
 
@@ -24,7 +28,9 @@ pub mod agent_sim;
 pub mod engine;
 pub mod machine;
 pub mod microbench;
+pub mod um_sim;
 
 pub use agent_sim::{AgentSim, AgentSimConfig, AgentSimResult};
 pub use engine::EventQueue;
 pub use machine::MachineModel;
+pub use um_sim::{UmSim, UmSimConfig, UmSimResult};

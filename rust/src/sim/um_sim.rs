@@ -1,0 +1,485 @@
+//! UnitManager-layer DES twin: late binding over multiple simulated
+//! pilots.
+//!
+//! The agent twin ([`super::AgentSim`]) models one pilot's internals;
+//! this twin models the layer above it — the UnitManager binding a
+//! workload onto *several* pilots under an exchangeable
+//! [`UmScheduler`] policy and feeding each pilot's agent through the
+//! coordination store (paying the calibrated UM→Agent transfer
+//! latency, [`LatencyModel`]).  Each pilot is a compact agent model:
+//! FIFO core admission plus a single rate-limited launcher (the
+//! paper's agent-level effective launch rate, Fig. 7); intra-agent
+//! scheduler/stager service detail stays with the agent twin.
+//!
+//! Crucially the twin drives the *same* [`UmWaitPool`] and the same
+//! policy implementations as the real [`crate::api::UnitManager`], so
+//! binding distributions agree exactly between the two substrates (the
+//! tests below assert this against real local pilots).
+//!
+//! Workloads can be fed in waves ([`UmSimConfig::generation_size`]):
+//! wave *g+1* binds only after wave *g* completed, so dynamic policies
+//! (load-aware) see real completion feedback, which is how Fig. 10
+//! style integrated experiments sweep UM policies
+//! (`benches/fig10_um_policy.rs`).
+
+use std::collections::VecDeque;
+
+use super::engine::EventQueue;
+use super::machine::MachineModel;
+use crate::api::um_scheduler::{
+    make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
+};
+use crate::config::ResourceConfig;
+use crate::db::LatencyModel;
+use crate::ids::UnitId;
+use crate::profiler::{Profile, Profiler};
+use crate::states::UnitState as S;
+use crate::util::rng::Pcg;
+use crate::workload::Workload;
+
+/// Parameters of one UM-level experiment.
+#[derive(Debug, Clone)]
+pub struct UmSimConfig {
+    /// Pilot sizes in cores (≥1 pilot; heterogeneous sizes allowed).
+    pub pilots: Vec<usize>,
+    /// UnitManager late-binding policy.
+    pub policy: UmPolicy,
+    /// Units bound per wave; the next wave binds when the previous one
+    /// completed (0 = bind the whole workload at once).
+    pub generation_size: usize,
+    /// Profiler enabled?
+    pub profile: bool,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl UmSimConfig {
+    /// Single-wave setup over the given pilots.
+    pub fn new(pilots: Vec<usize>, policy: UmPolicy) -> Self {
+        UmSimConfig { pilots, policy, generation_size: 0, profile: true, seed: 0 }
+    }
+}
+
+/// Result of a UM-level simulation.
+#[derive(Debug)]
+pub struct UmSimResult {
+    pub profile: Profile,
+    /// Virtual completion time of every bound unit.
+    pub makespan: f64,
+    /// Units bound per pilot (binding distribution).
+    pub per_pilot_units: Vec<usize>,
+    /// Virtual time each pilot finished its last unit.
+    pub per_pilot_makespan: Vec<f64>,
+    /// Units never bound (no eligible pilot for their core request).
+    pub unbound: usize,
+    /// DES events processed.
+    pub events: u64,
+    /// Wall-clock seconds the simulation took.
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Bind wave `w` (a UM placement pass).
+    Bind(u32),
+    /// A feed bulk lands at pilot `p`: inbox range `[lo, hi)`.
+    Arrive(u16, u32, u32),
+    /// Pilot `p` finished spawning unit `u` (execution starts).
+    Spawned(u16, u32),
+    /// Unit `u` finished executing on pilot `p`.
+    ExecDone(u16, u32),
+}
+
+struct SimUnit {
+    duration: f64,
+    cores: usize,
+    workload: String,
+}
+
+struct SimPilot {
+    cores: usize,
+    free: usize,
+    /// Units fed by the UM, in arrival order (Arrive indexes into it).
+    inbox: Vec<u32>,
+    /// Arrived units waiting for cores + launcher (FIFO).
+    wait: VecDeque<u32>,
+    launch_busy: bool,
+    bound: usize,
+    done: usize,
+    last_done_t: f64,
+}
+
+/// The simulated UnitManager over its simulated pilots.
+pub struct UmSim {
+    machine: MachineModel,
+    db: LatencyModel,
+    q: EventQueue<Ev>,
+    rng: Pcg,
+    profiler: Profiler,
+
+    units: Vec<SimUnit>,
+    waves: Vec<(u32, u32)>,
+    /// Index of the next wave to bind.
+    next_wave: u32,
+    scheduler: Box<dyn UmScheduler>,
+    pool: UmWaitPool<u32>,
+    pilots: Vec<SimPilot>,
+    bound_total: usize,
+    done_total: usize,
+}
+
+impl UmSim {
+    pub fn new(resource: &ResourceConfig, cfg: UmSimConfig, workload: &Workload) -> Self {
+        assert!(!cfg.pilots.is_empty(), "UM sim needs at least one pilot");
+        let units: Vec<SimUnit> = workload
+            .units
+            .iter()
+            .map(|u| SimUnit {
+                duration: u.duration().unwrap_or(0.0),
+                cores: u.cores.max(1),
+                workload: workload_key(&u.name),
+            })
+            .collect();
+        let n = units.len();
+        let gen = if cfg.generation_size == 0 { n.max(1) } else { cfg.generation_size };
+        let waves: Vec<(u32, u32)> = (0..n)
+            .step_by(gen)
+            .map(|s| (s as u32, ((s + gen).min(n)) as u32))
+            .collect();
+        let pilots = cfg
+            .pilots
+            .iter()
+            .map(|&cores| SimPilot {
+                cores,
+                free: cores,
+                inbox: Vec::new(),
+                wait: VecDeque::new(),
+                launch_busy: false,
+                bound: 0,
+                done: 0,
+                last_done_t: 0.0,
+            })
+            .collect();
+        let (profile, seed, policy) = (cfg.profile, cfg.seed, cfg.policy);
+        UmSim {
+            machine: MachineModel::new(resource.clone()),
+            db: LatencyModel::from_calib(&resource.calib),
+            q: EventQueue::new(),
+            rng: Pcg::seeded(seed),
+            profiler: Profiler::new(profile),
+            units,
+            waves,
+            next_wave: 0,
+            scheduler: make_um_scheduler(policy),
+            pool: UmWaitPool::new(),
+            pilots,
+            bound_total: 0,
+            done_total: 0,
+        }
+    }
+
+    #[inline]
+    fn prof(&self, t: f64, unit: u32, state: S) {
+        self.profiler.record(t, UnitId(unit as u64), state);
+    }
+
+    /// One UM placement pass over the wave's units (plus anything still
+    /// waiting from earlier waves), then feed each pilot its newly
+    /// bound units through the store in calibrated bulks.
+    fn bind_wave(&mut self, w: u32) {
+        let now = self.q.now();
+        if let Some(&(s, e)) = self.waves.get(w as usize) {
+            self.next_wave = w + 1;
+            for u in s..e {
+                self.prof(now, u, S::UmSchedulingPending);
+                let unit = &self.units[u as usize];
+                self.pool.push(
+                    u,
+                    UnitReq { cores: unit.cores, workload: unit.workload.clone() },
+                );
+            }
+        }
+        let mut views: Vec<PilotView> = self
+            .pilots
+            .iter()
+            .map(|p| PilotView {
+                cores: p.cores,
+                free_cores: p.free,
+                outstanding: p.bound - p.done,
+                active: true,
+            })
+            .collect();
+        let mut newly: Vec<Vec<u32>> = vec![Vec::new(); self.pilots.len()];
+        let (pool, scheduler) = (&mut self.pool, &mut self.scheduler);
+        let placed = pool.place_all(scheduler.as_mut(), &mut views, |u, k| {
+            newly[k].push(u);
+        });
+        self.bound_total += placed;
+        for (k, batch) in newly.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            self.pilots[k].bound += batch.len();
+            for u in &batch {
+                self.prof(now, *u, S::UmScheduling);
+            }
+            // the batch travels UM -> store -> agent in calibrated bulks
+            let bulk = self.db.bulk_size.max(1) as usize;
+            let mut t = now + self.db.notice_delay();
+            let mut lo = self.pilots[k].inbox.len() as u32;
+            for chunk in batch.chunks(bulk) {
+                t += self.db.transfer_time(chunk.len() as u64);
+                self.pilots[k].inbox.extend_from_slice(chunk);
+                let hi = lo + chunk.len() as u32;
+                self.q.at(t, Ev::Arrive(k as u16, lo, hi));
+                lo = hi;
+            }
+        }
+        // a wave that binds nothing while nothing is in flight must not
+        // stall the feed: no ExecDone will ever fire, so push the next
+        // wave from here (its units queue in the pool and keep retrying)
+        if self.done_total == self.bound_total && (self.next_wave as usize) < self.waves.len()
+        {
+            self.q.after(0.0, Ev::Bind(self.next_wave));
+        }
+    }
+
+    /// Admit + launch on pilot `p`: the head unit takes its cores when
+    /// they are free and the (single, rate-limited) launcher is idle.
+    fn kick(&mut self, p: usize) {
+        let pilot = &mut self.pilots[p];
+        if pilot.launch_busy {
+            return;
+        }
+        let Some(&u) = pilot.wait.front() else { return };
+        let cores = self.units[u as usize].cores;
+        if pilot.free < cores {
+            return; // head-of-line waits for a release
+        }
+        pilot.wait.pop_front();
+        pilot.free -= cores;
+        pilot.launch_busy = true;
+        let service = self.machine.agent_launch_service(&mut self.rng, 1, 1, false);
+        self.q.after(service, Ev::Spawned(p as u16, u));
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Bind(w) => self.bind_wave(w),
+            Ev::Arrive(p, lo, hi) => {
+                let now = self.q.now();
+                for i in lo..hi {
+                    let u = self.pilots[p as usize].inbox[i as usize];
+                    self.prof(now, u, S::ASchedulingPending);
+                    self.pilots[p as usize].wait.push_back(u);
+                }
+                self.kick(p as usize);
+            }
+            Ev::Spawned(p, u) => {
+                let now = self.q.now();
+                self.pilots[p as usize].launch_busy = false;
+                self.prof(now, u, S::AExecuting);
+                let d = self.units[u as usize].duration;
+                self.q.after(d, Ev::ExecDone(p, u));
+                self.kick(p as usize);
+            }
+            Ev::ExecDone(p, u) => {
+                let now = self.q.now();
+                self.prof(now, u, S::AStagingOutPending);
+                self.prof(now, u, S::Done);
+                let pilot = &mut self.pilots[p as usize];
+                pilot.free += self.units[u as usize].cores;
+                pilot.done += 1;
+                pilot.last_done_t = now;
+                self.done_total += 1;
+                self.kick(p as usize);
+                // wave barrier: completion notices travel back to the
+                // UM before the next wave is bound
+                if self.done_total == self.bound_total
+                    && (self.next_wave as usize) < self.waves.len()
+                {
+                    self.q.after(2.0 * self.db.notice_delay(), Ev::Bind(self.next_wave));
+                }
+            }
+        }
+    }
+
+    /// Run to completion; returns the result bundle.
+    pub fn run(mut self) -> UmSimResult {
+        let wall0 = std::time::Instant::now();
+        self.q.at(0.0, Ev::Bind(0));
+        while let Some((_, ev)) = self.q.pop() {
+            self.handle(ev);
+        }
+        assert_eq!(
+            self.done_total, self.bound_total,
+            "every bound unit must complete (deadlock in a pilot model?)"
+        );
+        UmSimResult {
+            makespan: self.q.now(),
+            per_pilot_units: self.pilots.iter().map(|p| p.bound).collect(),
+            per_pilot_makespan: self.pilots.iter().map(|p| p.last_done_t).collect(),
+            unbound: self.pool.len(),
+            events: self.q.processed(),
+            wall_s: wall0.elapsed().as_secs_f64(),
+            profile: self.profiler.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::workload::WorkloadSpec;
+
+    fn comet() -> ResourceConfig {
+        builtin("comet").unwrap()
+    }
+
+    fn run(pilots: Vec<usize>, n_units: usize, dur: f64, policy: UmPolicy) -> UmSimResult {
+        let wl = WorkloadSpec::uniform(n_units, dur).build();
+        UmSim::new(&comet(), UmSimConfig::new(pilots, policy), &wl).run()
+    }
+
+    #[test]
+    fn all_units_complete_and_distribute() {
+        let r = run(vec![64, 64], 256, 10.0, UmPolicy::RoundRobin);
+        assert_eq!(r.per_pilot_units, vec![128, 128]);
+        assert_eq!(r.unbound, 0);
+        assert!(r.makespan >= 20.0, "2 waves of 10s units: {}", r.makespan);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(vec![48, 24], 144, 5.0, UmPolicy::LoadAware);
+        let b = run(vec![48, 24], 144, 5.0, UmPolicy::LoadAware);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.per_pilot_units, b.per_pilot_units);
+    }
+
+    #[test]
+    fn load_aware_feeds_heterogeneous_pilots_proportionally() {
+        let r = run(vec![96, 24], 240, 10.0, UmPolicy::LoadAware);
+        assert_eq!(r.per_pilot_units, vec![192, 48], "4:1 capacity -> 4:1 units");
+        let rr = run(vec![96, 24], 240, 10.0, UmPolicy::RoundRobin);
+        assert_eq!(rr.per_pilot_units, vec![120, 120]);
+        assert!(
+            r.makespan < rr.makespan,
+            "load-aware must beat round-robin on heterogeneous pilots: {} vs {}",
+            r.makespan,
+            rr.makespan
+        );
+    }
+
+    #[test]
+    fn oversize_units_stay_unbound() {
+        let wl = WorkloadSpec::uniform(8, 1.0).with_cores(64, true).build();
+        let r = UmSim::new(
+            &comet(),
+            UmSimConfig::new(vec![32, 16], UmPolicy::RoundRobin),
+            &wl,
+        )
+        .run();
+        assert_eq!(r.unbound, 8, "no eligible pilot: units wait rather than fail");
+        assert_eq!(r.per_pilot_units, vec![0, 0]);
+    }
+
+    #[test]
+    fn waves_give_load_aware_completion_feedback() {
+        let wl = WorkloadSpec::uniform(120, 5.0).build();
+        let mut cfg = UmSimConfig::new(vec![48, 24], UmPolicy::LoadAware);
+        cfg.generation_size = 24;
+        let r = UmSim::new(&comet(), cfg, &wl).run();
+        assert_eq!(r.per_pilot_units.iter().sum::<usize>(), 120);
+        // proportional split holds across waves too (2:1 capacity)
+        assert!(
+            r.per_pilot_units[0] > r.per_pilot_units[1],
+            "bigger pilot takes more: {:?}",
+            r.per_pilot_units
+        );
+    }
+
+    #[test]
+    fn ineligible_wave_does_not_stall_later_waves() {
+        use crate::api::UnitDescription;
+        // the whole first wave is too wide for the pilot, so it binds
+        // nothing with nothing in flight; the second wave must still be
+        // fed (regression: the next Bind used to come only from ExecDone)
+        let mut units = vec![];
+        for i in 0..4 {
+            units.push(UnitDescription::sleep(1.0).cores(64).mpi(true).name(format!("wide-{i}")));
+        }
+        for i in 0..4 {
+            units.push(UnitDescription::sleep(1.0).name(format!("small-{i}")));
+        }
+        let wl = Workload { units };
+        let mut cfg = UmSimConfig::new(vec![16], UmPolicy::RoundRobin);
+        cfg.generation_size = 4;
+        let r = UmSim::new(&comet(), cfg, &wl).run();
+        assert_eq!(r.unbound, 4, "the wide wave keeps waiting");
+        assert_eq!(r.per_pilot_units, vec![4], "the small wave still ran");
+        assert!(r.makespan >= 1.0);
+    }
+
+    #[test]
+    fn locality_keeps_each_workload_on_one_pilot() {
+        use crate::api::UnitDescription;
+        let mut units = vec![];
+        for i in 0..60 {
+            units.push(
+                UnitDescription::sleep(5.0).name(format!("ens{}-{}", i % 3, i)),
+            );
+        }
+        let wl = Workload { units };
+        let r = UmSim::new(
+            &comet(),
+            UmSimConfig::new(vec![48, 48], UmPolicy::Locality),
+            &wl,
+        )
+        .run();
+        assert_eq!(r.unbound, 0);
+        // 3 workloads over 2 pilots: each pilot count is a multiple of 20
+        for &c in &r.per_pilot_units {
+            assert_eq!(c % 20, 0, "ensembles must not split: {:?}", r.per_pilot_units);
+        }
+    }
+
+    /// The twin and the real UnitManager drive the same pool + policy
+    /// code, so their binding distributions agree exactly.
+    #[test]
+    fn um_sim_agrees_with_real_um_binding() {
+        use crate::api::{PilotDescription, Session, UnitDescription};
+        for policy in [UmPolicy::RoundRobin, UmPolicy::LoadAware] {
+            let sim = run(vec![4, 2], 12, 0.01, policy);
+
+            let s = Session::new(format!("um-sim-agree-{}", policy.name()));
+            let pm = s.pilot_manager();
+            let um = s.unit_manager();
+            um.set_policy(policy);
+            let p1 = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+            let p2 = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+            um.add_pilot(&p1);
+            um.add_pilot(&p2);
+            let units = um.submit(
+                (0..12)
+                    .map(|i| UnitDescription::sleep(0.01).name(format!("unit-{i:06}")))
+                    .collect(),
+            );
+            um.wait_all(20.0).unwrap();
+            let real: Vec<usize> = [&p1, &p2]
+                .iter()
+                .map(|p| units.iter().filter(|u| u.pilot() == Some(p.id())).count())
+                .collect();
+            assert_eq!(
+                real,
+                sim.per_pilot_units,
+                "{}: real UM and DES twin must bind identically",
+                policy.name()
+            );
+            p1.drain().unwrap();
+            p2.drain().unwrap();
+        }
+    }
+}

@@ -8,15 +8,27 @@
 //! * reactor-vs-threadpool ablation: sustained concurrent in-flight
 //!   children at a fixed thread count (the seed's thread-per-slot
 //!   executer capped concurrency at `executers`; the reactor must
-//!   sustain >= 4x that with the same threads);
+//!   sustain >= 4x that with the same threads) — plus the readiness
+//!   assertion: reactor wakeups scale with completions, not elapsed
+//!   time / backoff, and idle wakeups stay ~zero;
+//! * bitmap-allocator churn on a 4096-core pilot: real words touched
+//!   per allocation vs the modeled linear-list slot cost;
 //! * JSON substrate parse throughput.
+//!
+//! Writes `bench_out/perf_hotpath.csv` and refreshes the committed
+//! perf-trajectory record `BENCH_hotpath.json` at the repository root.
+//!
+//! `--quick` shrinks every workload for the CI smoke job: breakage
+//! (panics, API drift) still fails, but perf thresholds do not gate
+//! the exit code on shared runners.
 
 use std::sync::Arc;
 
+use rp::agent::executer::ReactorStatsSnapshot;
 use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig, SharedUnit};
-use rp::agent::scheduler::{SchedPolicy, SearchMode};
+use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode};
 use rp::api::{PilotDescription, Session, UnitDescription};
-use rp::bench_harness::{write_csv, Check, Report};
+use rp::bench_harness::{write_bench_json, write_csv, Check, Report};
 use rp::config::ResourceConfig;
 use rp::ids::UnitId;
 use rp::profiler::{Analysis, Profiler};
@@ -24,11 +36,11 @@ use rp::sim::{AgentSim, AgentSimConfig, EventQueue};
 use rp::states::UnitState as S;
 use rp::util;
 use rp::util::json::Value;
+use rp::util::rng::Pcg;
 use rp::workload::WorkloadSpec;
 
-fn bench_event_queue() -> f64 {
+fn bench_event_queue(n: u64) -> f64 {
     let mut q: EventQueue<u64> = EventQueue::new();
-    let n = 2_000_000u64;
     let t0 = util::now();
     // push/pop interleaved with a rolling horizon (realistic heap depth)
     for i in 0..n {
@@ -43,15 +55,15 @@ fn bench_event_queue() -> f64 {
     2.0 * n as f64 / (util::now() - t0) // ops = push + pop
 }
 
-fn bench_agent_sim() -> (f64, f64) {
+fn bench_agent_sim(pilot: usize, gens: usize) -> (f64, f64) {
     let st = ResourceConfig::load("stampede").unwrap();
-    let wl = WorkloadSpec::generations(8192, 3, 64.0).build();
-    let cfg = AgentSimConfig::paper_default(8192);
+    let wl = WorkloadSpec::generations(pilot, gens, 64.0).build();
+    let cfg = AgentSimConfig::paper_default(pilot);
     let r = AgentSim::new(&st, cfg, &wl).run();
     (r.events as f64 / r.wall_s, r.wall_s)
 }
 
-fn bench_real_agent() -> f64 {
+fn bench_real_agent(n: usize) -> f64 {
     let session = Session::with_options("perf-real", true);
     let pmgr = session.pilot_manager();
     let umgr = session.unit_manager();
@@ -62,7 +74,6 @@ fn bench_real_agent() -> f64 {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let n = 2000;
     let t0 = util::now();
     umgr.submit((0..n).map(|_| UnitDescription::sleep(0.0)).collect());
     umgr.wait_all(300.0).unwrap();
@@ -74,10 +85,16 @@ fn bench_real_agent() -> f64 {
 
 /// Reactor-vs-threadpool ablation: run `sleep`-as-process units through
 /// a RealAgent with `threads` executer threads and measure the peak
-/// number of concurrently running children.  The seed thread-per-slot
-/// executer pinned this at `threads`; the reactor's in-flight window
-/// (pilot cores here) is what bounds it now.
-fn bench_reactor_inflight(threads: usize) -> i64 {
+/// number of concurrently running children, plus the reactor's wakeup
+/// counters.  The seed thread-per-slot executer pinned concurrency at
+/// `threads`; the reactor's in-flight window (pilot cores here) is what
+/// bounds it now — and its wakeups must track the `units` completions,
+/// not elapsed time.
+fn bench_reactor_inflight(
+    threads: usize,
+    units: usize,
+    dur: f64,
+) -> (i64, ReactorStatsSnapshot) {
     let cores = 32;
     let profiler = Arc::new(Profiler::new(true));
     let cfg = RealAgentConfig {
@@ -95,9 +112,9 @@ fn bench_reactor_inflight(threads: usize) -> i64 {
         synthetic_as_process: true, // real children
     };
     let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
-    let units: Vec<SharedUnit> = (0..64)
+    let units: Vec<SharedUnit> = (0..units as u64)
         .map(|i| {
-            let u = new_unit(UnitId(i), UnitDescription::sleep(0.5));
+            let u = new_unit(UnitId(i), UnitDescription::sleep(dur));
             advance(&u, S::UmSchedulingPending, &profiler).unwrap();
             advance(&u, S::UmScheduling, &profiler).unwrap();
             advance(&u, S::AStagingInPending, &profiler).unwrap();
@@ -115,11 +132,42 @@ fn bench_reactor_inflight(threads: usize) -> i64 {
             rec = r;
         }
     }
+    let stats = agent.reactor_stats();
     agent.drain_and_stop();
-    Analysis::new(&profiler.snapshot()).peak_concurrency()
+    (Analysis::new(&profiler.snapshot()).peak_concurrency(), stats)
 }
 
-fn bench_json() -> f64 {
+/// Steady-state allocator churn on a large pilot: fill once, then
+/// release-a-random-allocation / allocate-a-fresh-one.  Returns
+/// (allocs/s, mean modeled slots per alloc, mean real words per alloc)
+/// — the last two are the Fig. 8 modeled-vs-real pair at the hot end.
+fn bench_alloc_churn(cores: usize, ops: usize) -> (f64, f64, f64) {
+    let mut s = ContinuousScheduler::for_cores(cores, 16, SearchMode::Linear);
+    let mut live = Vec::with_capacity(cores);
+    while let Some(a) = s.allocate(1) {
+        live.push(a);
+    }
+    let mut rng = Pcg::seeded(7);
+    let (mut slots, mut words) = (0u64, 0u64);
+    let t0 = util::now();
+    for _ in 0..ops {
+        let idx = rng.below(live.len() as u64) as usize;
+        let a = live.swap_remove(idx);
+        s.release(&a);
+        let b = s.allocate(1).unwrap();
+        slots += b.scanned as u64;
+        words += b.words as u64;
+        live.push(b);
+    }
+    let dt = util::now() - t0;
+    (
+        ops as f64 / dt.max(1e-9),
+        slots as f64 / ops as f64,
+        words as f64 / ops as f64,
+    )
+}
+
+fn bench_json(n: usize) -> f64 {
     let doc = Value::obj(vec![
         ("name", "unit-000123".into()),
         ("cores", 4u64.into()),
@@ -127,7 +175,6 @@ fn bench_json() -> f64 {
         ("tags", vec![1.0f64, 2.0, 3.0, 4.0].into()),
     ])
     .to_json();
-    let n = 200_000;
     let t0 = util::now();
     for _ in 0..n {
         let v = Value::parse(&doc).unwrap();
@@ -137,19 +184,44 @@ fn bench_json() -> f64 {
 }
 
 fn main() {
-    let ev = bench_event_queue();
-    let (sim_ev, sim_wall) = bench_agent_sim();
-    let real = bench_real_agent();
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    let ev = bench_event_queue(if quick { 200_000 } else { 2_000_000 });
+    let (sim_pilot, sim_gens) = if quick { (1024, 2) } else { (8192, 3) };
+    let (sim_ev, sim_wall) = bench_agent_sim(sim_pilot, sim_gens);
+    let real = bench_real_agent(if quick { 300 } else { 2000 });
     let threads = 2usize;
-    let peak_children = bench_reactor_inflight(threads);
-    let json = bench_json();
+    let (n_children, child_dur) = if quick { (24, 0.25) } else { (64, 0.5) };
+    let (peak_children, rstats) = bench_reactor_inflight(threads, n_children, child_dur);
+    let (alloc_rate, alloc_slots, alloc_words) =
+        bench_alloc_churn(4096, if quick { 20_000 } else { 200_000 });
+    let json = bench_json(if quick { 20_000 } else { 200_000 });
 
     println!("event queue     : {:>12.0} ops/s", ev);
-    println!("agent sim (8k)  : {:>12.0} events/s  (fig7 heavy config in {sim_wall:.2}s)", sim_ev);
+    println!(
+        "agent sim       : {:>12.0} events/s  ({sim_pilot}-core config in {sim_wall:.2}s)",
+        sim_ev
+    );
     println!("real agent      : {:>12.0} units/s (sleep-0, 8 cores)", real);
     println!(
         "reactor ablation: {:>12} concurrent children ({threads} threads; seed cap = {threads})",
         peak_children
+    );
+    println!(
+        "reactor wakeups : {:>12} for {n_children} completions \
+         (child {} / wake {} / timer {} / idle {}; sweeps {}, targeted {})",
+        rstats.total_wakeups(),
+        rstats.wakeups_child,
+        rstats.wakeups_wake,
+        rstats.wakeups_timer,
+        rstats.idle_wakeups,
+        rstats.sweeps,
+        rstats.targeted_reaps,
+    );
+    println!(
+        "alloc churn 4096: {:>12.0} allocs/s ({alloc_slots:.0} modeled slots vs \
+         {alloc_words:.1} real words per alloc)",
+        alloc_rate
     );
     println!("json parse      : {:>12.0} docs/s", json);
 
@@ -159,18 +231,49 @@ fn main() {
         &[
             vec!["event_queue_ops_per_s".into(), format!("{ev:.0}")],
             vec!["agent_sim_events_per_s".into(), format!("{sim_ev:.0}")],
-            vec!["agent_sim_fig7_wall_s".into(), format!("{sim_wall:.3}")],
+            vec!["agent_sim_wall_s".into(), format!("{sim_wall:.3}")],
             vec!["real_agent_units_per_s".into(), format!("{real:.0}")],
             vec!["reactor_peak_children".into(), format!("{peak_children}")],
             vec!["reactor_threadpool_equiv_cap".into(), format!("{threads}")],
+            vec!["reactor_wakeups_total".into(), rstats.total_wakeups().to_string()],
+            vec!["reactor_idle_wakeups".into(), rstats.idle_wakeups.to_string()],
+            vec!["alloc_churn_allocs_per_s".into(), format!("{alloc_rate:.0}")],
+            vec!["alloc_slots_modeled_per_op".into(), format!("{alloc_slots:.1}")],
+            vec!["alloc_words_real_per_op".into(), format!("{alloc_words:.2}")],
             vec!["json_docs_per_s".into(), format!("{json:.0}")],
+        ],
+    )
+    .unwrap();
+
+    // the committed perf trajectory: spawn rate, steady-state in-flight,
+    // allocator work, wakeup accounting
+    let completions = n_children as f64;
+    write_bench_json(
+        "hotpath",
+        &[
+            ("quick", f64::from(u8::from(quick))),
+            ("spawn_rate_units_per_s", real),
+            ("steady_state_inflight_children", peak_children as f64),
+            ("reactor_event_driven", f64::from(u8::from(rstats.event_driven))),
+            ("reactor_wakeups_per_completion", rstats.total_wakeups() as f64 / completions),
+            ("reactor_idle_wakeups", rstats.idle_wakeups as f64),
+            ("alloc_churn_allocs_per_s", alloc_rate),
+            ("alloc_slots_modeled_per_op", alloc_slots),
+            ("alloc_words_real_per_op", alloc_words),
+            ("event_queue_ops_per_s", ev),
+            ("agent_sim_events_per_s", sim_ev),
+            ("json_docs_per_s", json),
         ],
     )
     .unwrap();
 
     let mut report = Report::new("perf hot paths");
     report.add(Check::shape("event queue", ">= 1M ops/s", ev > 1e6));
-    report.add(Check::shape("fig7 heavy sim", "< 10s wall", sim_wall < 10.0));
+    report.add(Check::shape(
+        "heavy sim wall",
+        "< 10s wall",
+        sim_wall < 10.0,
+    ));
     report.add(Check::shape(
         "real agent faster than paper's python agent",
         "> 100 units/s spawn-to-done",
@@ -182,5 +285,38 @@ fn main() {
         measured: format!("{peak_children} concurrent children"),
         ok: peak_children >= 4 * threads as i64,
     });
-    std::process::exit(report.print());
+    if rstats.event_driven {
+        // the readiness claim: a backoff sweeper would wake O(time /
+        // 20ms) — hundreds over this run; the poll reactor wakes only
+        // for events, so wakeups track completions and idle stays ~0
+        report.add(Check {
+            label: "reactor wakeups O(completions)".into(),
+            paper: format!("<= 8x {n_children} completions + 64"),
+            measured: format!("{} wakeups", rstats.total_wakeups()),
+            ok: rstats.total_wakeups() <= 8 * n_children as u64 + 64,
+        });
+        report.add(Check {
+            label: "reactor idle wakeups ~zero".into(),
+            paper: "<= 8 (no time-paced polling)".into(),
+            measured: rstats.idle_wakeups.to_string(),
+            ok: rstats.idle_wakeups <= 8,
+        });
+    } else {
+        report.add(Check::shape(
+            "reactor wakeups O(completions)",
+            "skipped: sweep fallback active on this platform",
+            true,
+        ));
+    }
+    report.add(Check {
+        label: "bitmap allocator real work".into(),
+        paper: ">= 10x below modeled slots".into(),
+        measured: format!("{alloc_slots:.0} slots vs {alloc_words:.1} words"),
+        ok: alloc_words * 10.0 <= alloc_slots,
+    });
+
+    let code = report.print();
+    // quick mode is the CI smoke job: API/harness breakage panics above,
+    // but perf thresholds must not gate shared-runner noise
+    std::process::exit(if quick { 0 } else { code });
 }

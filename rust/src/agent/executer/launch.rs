@@ -130,7 +130,7 @@ mod tests {
     use super::*;
 
     fn alloc(n: usize) -> Allocation {
-        Allocation { cores: (0..n).map(|i| (0u32, i as u32)).collect(), scanned: n }
+        Allocation { cores: (0..n).map(|i| (0u32, i as u32)).collect(), scanned: n, words: 1 }
     }
 
     fn localhost(_: u32) -> String {

@@ -4,15 +4,20 @@
 //! **InProc** execution of PJRT payloads (the L2/L1 compute path — no
 //! Python, no process per task).
 //!
-//! Execution is event-driven: [`Spawner::start`] launches a child
-//! without blocking and the [`reactor`] owns the in-flight set, reaping
-//! completions via `try_wait` sweeps — so concurrency is bounded by the
-//! configurable `agent.max_inflight` window, not by a thread count.
+//! Execution is readiness-driven: [`Spawner::start`] launches a child
+//! without blocking and the [`reactor`] owns the in-flight set,
+//! sleeping in a `poll(2)` wait ([`crate::util::poll`]) over a SIGCHLD
+//! self-pipe, every child's nonblocking pipes, and an agent wake-pipe —
+//! so concurrency is bounded by the configurable `agent.max_inflight`
+//! window, not by a thread count, and the reaper wakes only when the
+//! kernel reports an event (completions, not elapsed time; see
+//! [`ReactorStats`]).  Targets without `poll(2)` keep the bounded
+//! `try_wait` sweep fallback.
 
 pub mod launch;
 pub mod reactor;
 pub mod spawn;
 
 pub use launch::{select_method, LaunchMethod};
-pub use reactor::{Completion, Reactor};
+pub use reactor::{Completion, Reactor, ReactorStats, ReactorStatsSnapshot};
 pub use spawn::{make_spawner, ExecOutcome, PopenSpawner, ShellSpawner, SpawnHandle, Spawner};

@@ -1,17 +1,32 @@
-//! Event-driven executer reactor: the in-flight set of running units.
+//! Readiness-driven executer reactor: the in-flight set of running
+//! units.
 //!
 //! The seed Executer dedicated one OS thread per slot, blocking in
-//! `Command::output()` for the full lifetime of each child — so real
-//! concurrency was capped at `agent.executers` threads (the bottleneck
-//! the RP follow-up papers identify as dominating agent performance).
-//! The reactor lifts that cap the same way the wait-pool lifted the
-//! scheduler's head-of-line block: one thread owns *all* in-flight
-//! units, admitting up to `max_inflight` at a time and reaping
-//! completions via non-blocking `try_wait` sweeps with adaptive
-//! backoff.  Each sweep also drains child stdout/stderr incrementally
-//! (see [`SpawnHandle`]), so pipes never deadlock, and kills units
-//! whose cancellation was requested — cancel is immediate for running
-//! children instead of "effective while queued".
+//! `Command::output()` for the full lifetime of each child.  The first
+//! reactor lifted that cap — one thread owning *all* in-flight units —
+//! but still paced itself with `try_wait` sweeps under an adaptive
+//! backoff, so an idle reactor woke every 20 ms forever and a
+//! cancellation could sit a full backoff before the kill.  This version
+//! removes the residual polling: the reactor **sleeps in
+//! [`crate::util::poll::Waiter`]** — a `poll(2)` wait over a SIGCHLD
+//! self-pipe, each in-flight child's already-nonblocking stdout/stderr
+//! fds, and a wake-pipe that admit/cancel/shutdown events write to —
+//! and wakes only when the kernel reports an event.  Timer deadlines
+//! fold in as the poll timeout.  Idle CPU at large in-flight counts is
+//! ~zero, wakeups scale with completions rather than elapsed time
+//! (`benches/perf_hotpath.rs` asserts this via [`ReactorStats`]), and
+//! cancel-to-kill latency is one wakeup instead of up-to-backoff.
+//!
+//! Reaping is targeted: a wakeup names the ready fds, so the reactor
+//! `try_wait`s only the children whose pipes signalled (plus the rare
+//! children whose pipes already hit EOF and are invisible to `poll` —
+//! those also cap the wait with a bounded timeout, so they complete
+//! even if an embedder replaced the SIGCHLD handler) — syscalls are
+//! O(ready + fd-less), not O(in-flight).
+//! The full [`Reactor::sweep`] remains as the portable fallback (non-
+//! unix targets, the `portable-sweep` feature, or a waiter that could
+//! not arm SIGCHLD), where the old adaptive backoff bounds the sweep
+//! cadence exactly as before.
 //!
 //! Two kinds of in-flight work:
 //! * **children** — real OS processes started by [`super::Spawner::start`];
@@ -25,14 +40,17 @@
 //! turns each completion into the core-release + wake scheduling event
 //! the wait-pool consumes.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::spawn::{ExecOutcome, SpawnHandle};
 use crate::error::Error;
+use crate::util::poll::{WaitSummary, Waiter, WakeHandle};
 
-/// Reap backoff bounds (seconds): reset to `MIN` after any activity,
-/// doubled per idle sweep up to `MAX`.  The cap also bounds how long a
-/// cancellation request can sit before the sweep that enforces it.
+/// Fallback reap backoff bounds (seconds): reset to `MIN` after any
+/// activity, doubled per idle sweep up to `MAX`.  Only paces the
+/// portable sweep path — the readiness path sleeps until a real event.
 const BACKOFF_MIN: f64 = 0.0005;
 const BACKOFF_MAX: f64 = 0.02;
 
@@ -61,30 +79,119 @@ struct Entry<T> {
     work: Work,
 }
 
-/// The in-flight set: admits up to `max_inflight` units, reaps them via
-/// [`Reactor::sweep`].  Generic over the caller's unit handle the same
+/// Live reactor counters, shared as an `Arc` so other threads (the
+/// profiler CLI, benches) can read them while the reactor runs.  The
+/// wakeup-cause split is what lets benches assert the readiness claim:
+/// wakeups ≈ O(completions + admissions), with `idle_wakeups` staying
+/// ~zero in event-driven mode instead of growing O(elapsed/backoff).
+#[derive(Debug, Default)]
+pub struct ReactorStats {
+    event_driven: AtomicBool,
+    started: AtomicU64,
+    reaped: AtomicU64,
+    peak: AtomicU64,
+    wakeups_child: AtomicU64,
+    wakeups_wake: AtomicU64,
+    wakeups_timer: AtomicU64,
+    idle_wakeups: AtomicU64,
+    sweeps: AtomicU64,
+    targeted_reaps: AtomicU64,
+}
+
+impl ReactorStats {
+    pub fn snapshot(&self) -> ReactorStatsSnapshot {
+        ReactorStatsSnapshot {
+            event_driven: self.event_driven.load(Ordering::Relaxed),
+            started: self.started.load(Ordering::Relaxed),
+            reaped: self.reaped.load(Ordering::Relaxed),
+            peak_inflight: self.peak.load(Ordering::Relaxed) as usize,
+            wakeups_child: self.wakeups_child.load(Ordering::Relaxed),
+            wakeups_wake: self.wakeups_wake.load(Ordering::Relaxed),
+            wakeups_timer: self.wakeups_timer.load(Ordering::Relaxed),
+            idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
+            sweeps: self.sweeps.load(Ordering::Relaxed),
+            targeted_reaps: self.targeted_reaps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`ReactorStats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReactorStatsSnapshot {
+    /// Child exits themselves wake the reactor (poll + SIGCHLD armed).
+    pub event_driven: bool,
+    pub started: u64,
+    pub reaped: u64,
+    pub peak_inflight: usize,
+    /// Wakeups caused by a SIGCHLD (a child of the process exited).
+    pub wakeups_child: u64,
+    /// Wakeups caused by the wake-pipe (admit / cancel / shutdown).
+    pub wakeups_wake: u64,
+    /// Timeouts that fired a due timer deadline.
+    pub wakeups_timer: u64,
+    /// Timeouts with nothing to do — the cost the readiness design
+    /// removes (the sweep fallback accrues these at the backoff rate).
+    pub idle_wakeups: u64,
+    /// Full O(in-flight) `try_wait` sweeps (fallback path).
+    pub sweeps: u64,
+    /// Targeted reaps touching only ready entries (readiness path).
+    pub targeted_reaps: u64,
+}
+
+impl ReactorStatsSnapshot {
+    /// Every `wait` return, regardless of cause.
+    pub fn total_wakeups(&self) -> u64 {
+        self.wakeups_child + self.wakeups_wake + self.wakeups_timer + self.idle_wakeups
+    }
+}
+
+/// What the last [`Reactor::wait`] learned about who needs attention.
+#[derive(Debug)]
+enum ReadySet {
+    /// Readiness unknown — check every entry (fallback path).
+    All,
+    /// Only these entries (by index, unsorted, possibly duplicated —
+    /// [`Reactor::reap`] canonicalizes), plus the flagged cheap passes.
+    Targeted {
+        entries: Vec<usize>,
+        /// Wake-pipe fired: also run the cancellation check.
+        woke: bool,
+    },
+}
+
+/// The in-flight set: admits up to `max_inflight` units, sleeps in
+/// [`Reactor::wait`] until the kernel reports an event, and reaps via
+/// [`Reactor::reap`].  Generic over the caller's unit handle the same
 /// way [`crate::agent::scheduler::WaitPool`] is.
 #[derive(Debug)]
 pub struct Reactor<T> {
     max_inflight: usize,
     entries: Vec<Entry<T>>,
     backoff: f64,
-    started: u64,
-    reaped: u64,
-    peak: usize,
+    waiter: Waiter,
+    stats: Arc<ReactorStats>,
+    /// Scratch: fds handed to the waiter and their entry indices.
+    fds: Vec<i32>,
+    fd_map: Vec<usize>,
+    ready: Option<ReadySet>,
 }
 
 impl<T> Reactor<T> {
     /// `max_inflight` is clamped to >= 1 (a zero window would wedge
     /// admission forever).
     pub fn new(max_inflight: usize) -> Self {
+        let waiter = Waiter::new();
+        let stats = Arc::new(ReactorStats::default());
+        stats.event_driven.store(waiter.event_driven(), Ordering::Relaxed);
         Reactor {
             max_inflight: max_inflight.max(1),
             entries: Vec::new(),
             backoff: BACKOFF_MIN,
-            started: 0,
-            reaped: 0,
-            peak: 0,
+            waiter,
+            stats,
+            fds: Vec::new(),
+            fd_map: Vec::new(),
+            ready: None,
         }
     }
 
@@ -110,14 +217,32 @@ impl<T> Reactor<T> {
     /// Lifetime counters: (started, reaped, peak in-flight).  Every
     /// started unit is eventually reaped — by exit, kill, or drop.
     pub fn counters(&self) -> (u64, u64, usize) {
-        (self.started, self.reaped, self.peak)
+        let s = self.stats.snapshot();
+        (s.started, s.reaped, s.peak_inflight)
+    }
+
+    /// Shared live counters (readable from other threads).
+    pub fn stats(&self) -> Arc<ReactorStats> {
+        self.stats.clone()
+    }
+
+    /// True when child exits wake the reactor by themselves (poll mode
+    /// with SIGCHLD armed); false on the sweep fallback.
+    pub fn event_driven(&self) -> bool {
+        self.waiter.event_driven()
+    }
+
+    /// Wake channel into [`Reactor::wait`] — the agent hands this to
+    /// whoever produces admit/cancel/shutdown events.
+    pub fn wake_handle(&self) -> WakeHandle {
+        self.waiter.wake_handle()
     }
 
     fn admit(&mut self, token: T, work: Work) {
         debug_assert!(self.has_capacity(), "admit() beyond max_inflight");
         self.entries.push(Entry { token, work });
-        self.started += 1;
-        self.peak = self.peak.max(self.entries.len());
+        self.stats.started.fetch_add(1, Ordering::Relaxed);
+        self.stats.peak.fetch_max(self.entries.len() as u64, Ordering::Relaxed);
         self.backoff = BACKOFF_MIN;
     }
 
@@ -133,12 +258,194 @@ impl<T> Reactor<T> {
         self.admit(token, Work::Timer(deadline));
     }
 
-    /// One reap sweep: polls every in-flight unit (draining child pipes
-    /// as a side effect) and returns the completions.  Units for which
-    /// `cancel` returns true are killed/dropped immediately and returned
-    /// as [`Completion::Canceled`].  Adjusts the adaptive backoff: reset
-    /// on any completion, doubled (up to the cap) on an idle sweep.
+    /// Remaining seconds to the nearest timer deadline, if any.
+    fn nearest_timer(&self, now: Instant) -> Option<f64> {
+        let mut nearest: Option<f64> = None;
+        for e in &self.entries {
+            if let Work::Timer(deadline) = &e.work {
+                let left = deadline.saturating_duration_since(now).as_secs_f64();
+                nearest = Some(nearest.map_or(left, |t: f64| t.min(left)));
+            }
+        }
+        nearest
+    }
+
+    /// Sleep until the next event: a wake, a child exit, readiness on a
+    /// child pipe, or the nearest timer deadline — capped by
+    /// `max_timeout` if given.  On the sweep fallback the cap also
+    /// folds in the adaptive backoff, so completions are still found.
+    /// The learned readiness is consumed by the next [`Reactor::reap`].
+    pub fn wait(&mut self, max_timeout: Option<f64>) {
+        let now = Instant::now();
+        let timer = self.nearest_timer(now);
+        let summary: WaitSummary;
+        if self.waiter.event_driven() {
+            self.fds.clear();
+            self.fd_map.clear();
+            let mut fdless = false;
+            for (i, e) in self.entries.iter().enumerate() {
+                if let Work::Child(h) = &e.work {
+                    if !h.has_live_fds() {
+                        // invisible to poll: exit is normally caught by
+                        // SIGCHLD, but a bounded timeout keeps such a
+                        // child discoverable even if some embedder
+                        // replaced the process-wide handler
+                        fdless = true;
+                        continue;
+                    }
+                    for fd in h.poll_fds() {
+                        if fd >= 0 {
+                            self.fds.push(fd);
+                            self.fd_map.push(i);
+                        }
+                    }
+                }
+            }
+            let cap = if fdless { Some(BACKOFF_MAX) } else { None };
+            let timeout = match (max_timeout, timer, cap) {
+                (None, None, None) => None,
+                (a, b, c) => Some(
+                    a.unwrap_or(f64::INFINITY)
+                        .min(b.unwrap_or(f64::INFINITY))
+                        .min(c.unwrap_or(f64::INFINITY)),
+                ),
+            };
+            summary = self.waiter.wait(&self.fds, timeout);
+            if summary.check_all {
+                self.ready = Some(ReadySet::All);
+            } else {
+                let entries: Vec<usize> =
+                    summary.ready.iter().map(|&i| self.fd_map[i]).collect();
+                self.ready = Some(ReadySet::Targeted { entries, woke: summary.woke });
+            }
+        } else {
+            // fallback: bounded sleep so sweeps still discover exits;
+            // poll_timeout folds the backoff and timer deadlines
+            let bounded = if self.entries.is_empty() {
+                max_timeout
+            } else {
+                Some(self.poll_timeout().min(max_timeout.unwrap_or(f64::INFINITY)))
+            };
+            summary = self.waiter.wait(&[], bounded);
+            self.ready = Some(ReadySet::All);
+        }
+        if summary.woke {
+            self.stats.wakeups_wake.fetch_add(1, Ordering::Relaxed);
+        }
+        if summary.child {
+            self.stats.wakeups_child.fetch_add(1, Ordering::Relaxed);
+        }
+        if summary.timed_out && !summary.woke && !summary.child {
+            let timer_due = timer.is_some()
+                && matches!(self.nearest_timer(Instant::now()), Some(left) if left <= 0.0);
+            if timer_due {
+                self.stats.wakeups_timer.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.stats.idle_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Reap whatever the last [`Reactor::wait`] flagged: ready children
+    /// are `try_wait`ed (draining their pipes), due timers complete,
+    /// and — only when the wake-pipe fired — `cancel` is consulted so a
+    /// cancellation becomes an immediate kill.  Without a preceding
+    /// `wait` (or on the fallback path) this degrades to a full
+    /// [`Reactor::sweep`].
+    pub fn reap(&mut self, cancel: impl FnMut(&T) -> bool) -> Vec<(T, Completion)> {
+        match self.ready.take() {
+            None | Some(ReadySet::All) => self.sweep(cancel),
+            Some(ReadySet::Targeted { entries, woke }) => {
+                self.reap_targeted(entries, woke, cancel)
+            }
+        }
+    }
+
+    fn reap_targeted(
+        &mut self,
+        mut idx: Vec<usize>,
+        woke: bool,
+        mut cancel: impl FnMut(&T) -> bool,
+    ) -> Vec<(T, Completion)> {
+        self.stats.targeted_reaps.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        // cheap O(in-flight) flag passes, no syscalls: due timers, and
+        // children whose pipes already hit EOF (invisible to poll, so
+        // their exit is only observable via try_wait — usually flagged
+        // by SIGCHLD, but re-checked on every reap so even a replaced
+        // signal handler cannot strand them)
+        for (i, e) in self.entries.iter().enumerate() {
+            match &e.work {
+                Work::Timer(deadline) => {
+                    if now >= *deadline {
+                        idx.push(i);
+                    }
+                }
+                Work::Child(h) => {
+                    if !h.has_live_fds() {
+                        idx.push(i);
+                    }
+                }
+            }
+        }
+        if woke {
+            // a wake is an admit/cancel/shutdown event: the only one
+            // needing per-entry attention is cancellation
+            for (i, e) in self.entries.iter().enumerate() {
+                if cancel(&e.token) {
+                    idx.push(i);
+                }
+            }
+        }
+        // process descending so swap_remove never disturbs a pending
+        // smaller index
+        idx.sort_unstable();
+        idx.dedup();
+        idx.reverse();
+        let mut done = Vec::new();
+        for i in idx {
+            if i >= self.entries.len() {
+                continue; // defensive: moved by an earlier swap_remove
+            }
+            if cancel(&self.entries[i].token) {
+                let e = self.entries.swap_remove(i);
+                // dropping a child handle kills and reaps it
+                self.stats.reaped.fetch_add(1, Ordering::Relaxed);
+                done.push((e.token, Completion::Canceled));
+                continue;
+            }
+            let finished = match &mut self.entries[i].work {
+                Work::Timer(deadline) => {
+                    if now >= *deadline {
+                        Some(Completion::TimerElapsed)
+                    } else {
+                        None
+                    }
+                }
+                Work::Child(handle) => match handle.try_finish() {
+                    Ok(Some(outcome)) => Some(Completion::Exited(outcome)),
+                    Ok(None) => None,
+                    Err(e) => Some(Completion::Failed(e)),
+                },
+            };
+            if let Some(completion) = finished {
+                let e = self.entries.swap_remove(i);
+                self.stats.reaped.fetch_add(1, Ordering::Relaxed);
+                done.push((e.token, completion));
+            }
+        }
+        done
+    }
+
+    /// One full reap sweep: polls every in-flight unit (draining child
+    /// pipes as a side effect) and returns the completions.  Units for
+    /// which `cancel` returns true are killed/dropped immediately and
+    /// returned as [`Completion::Canceled`].  Adjusts the adaptive
+    /// backoff: reset on any completion, doubled (up to the cap) on an
+    /// idle sweep.  The readiness path only needs this as its fallback;
+    /// it remains the portable engine and the test workhorse.
     pub fn sweep(&mut self, mut cancel: impl FnMut(&T) -> bool) -> Vec<(T, Completion)> {
+        self.stats.sweeps.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
         let mut done = Vec::new();
         let mut i = 0;
@@ -146,7 +453,7 @@ impl<T> Reactor<T> {
             if cancel(&self.entries[i].token) {
                 let e = self.entries.swap_remove(i);
                 // dropping a child handle kills and reaps it
-                self.reaped += 1;
+                self.stats.reaped.fetch_add(1, Ordering::Relaxed);
                 done.push((e.token, Completion::Canceled));
                 continue;
             }
@@ -167,7 +474,7 @@ impl<T> Reactor<T> {
             match finished {
                 Some(completion) => {
                     let e = self.entries.swap_remove(i);
-                    self.reaped += 1;
+                    self.stats.reaped.fetch_add(1, Ordering::Relaxed);
                     done.push((e.token, completion));
                 }
                 None => i += 1,
@@ -181,17 +488,14 @@ impl<T> Reactor<T> {
         done
     }
 
-    /// How long the caller should wait for new work before the next
-    /// sweep: the adaptive backoff, shortened to the nearest timer
-    /// deadline so virtual sleeps complete on time.
+    /// How long a fallback caller should wait before the next sweep:
+    /// the adaptive backoff, shortened to the nearest timer deadline so
+    /// virtual sleeps complete on time.
     pub fn poll_timeout(&self) -> f64 {
         let now = Instant::now();
         let mut t = self.backoff;
-        for e in &self.entries {
-            if let Work::Timer(deadline) = &e.work {
-                let left = deadline.saturating_duration_since(now).as_secs_f64();
-                t = t.min(left.max(BACKOFF_MIN));
-            }
+        if let Some(left) = self.nearest_timer(now) {
+            t = t.min(left.max(BACKOFF_MIN));
         }
         t
     }
@@ -200,7 +504,8 @@ impl<T> Reactor<T> {
     /// returning the tokens as canceled.
     pub fn kill_all(&mut self) -> Vec<(T, Completion)> {
         let n = self.entries.len() as u64;
-        self.reaped += n;
+        self.stats.reaped.fetch_add(n, Ordering::Relaxed);
+        self.ready = None;
         self.entries
             .drain(..)
             .map(|e| (e.token, Completion::Canceled))
@@ -231,6 +536,22 @@ mod tests {
             assert!(Instant::now() < deadline, "reactor did not drain in {timeout}s");
             all.extend(r.sweep(&mut cancel));
             std::thread::sleep(Duration::from_secs_f64(r.poll_timeout()));
+        }
+        all
+    }
+
+    /// Event-driven drain: wait + targeted reap until empty.
+    fn wait_until_done<T>(
+        r: &mut Reactor<T>,
+        timeout: f64,
+        mut cancel: impl FnMut(&T) -> bool,
+    ) -> Vec<(T, Completion)> {
+        let deadline = Instant::now() + Duration::from_secs_f64(timeout);
+        let mut all = Vec::new();
+        while !r.is_empty() {
+            assert!(Instant::now() < deadline, "reactor did not drain in {timeout}s");
+            r.wait(Some(0.25));
+            all.extend(r.reap(&mut cancel));
         }
         all
     }
@@ -274,7 +595,7 @@ mod tests {
                 .unwrap();
             r.admit_child(tok, h);
         }
-        let done = sweep_until_done(&mut r, 10.0, |_| false);
+        let done = wait_until_done(&mut r, 10.0, |_| false);
         assert_eq!(done.len(), 3);
         for (tok, c) in done {
             match c {
@@ -305,6 +626,26 @@ mod tests {
     }
 
     #[test]
+    fn wake_then_reap_kills_canceled_child() {
+        // the readiness path: cancellation arrives as a wake event and
+        // the targeted reap consults the cancel predicate
+        let mut r: Reactor<u32> = Reactor::new(4);
+        let h = PopenSpawner
+            .start(&["/bin/sleep".into(), "600".into()], &[], &tmp())
+            .unwrap();
+        r.admit_child(0, h);
+        let wake = r.wake_handle();
+        let t0 = Instant::now();
+        wake.wake();
+        r.wait(Some(5.0));
+        let done = r.reap(|_| true);
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0], (0, Completion::Canceled)));
+        assert!(t0.elapsed().as_secs_f64() < 5.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
     fn backoff_adapts() {
         let mut r: Reactor<u32> = Reactor::new(4);
         r.admit_timer(0, 10.0);
@@ -331,6 +672,48 @@ mod tests {
         assert!(r.is_empty());
         let (started, reaped, _) = r.counters();
         assert_eq!(started, reaped);
+    }
+
+    #[test]
+    fn timer_deadline_folds_into_wait_timeout() {
+        let mut r: Reactor<u32> = Reactor::new(4);
+        r.admit_timer(9, 0.05);
+        let t0 = Instant::now();
+        let done = wait_until_done(&mut r, 10.0, |_| false);
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0], (9, Completion::TimerElapsed)));
+        assert!(
+            t0.elapsed().as_secs_f64() < 5.0,
+            "a 50ms timer must complete promptly, not wait for a wake"
+        );
+    }
+
+    #[cfg(all(unix, not(feature = "portable-sweep")))]
+    #[test]
+    fn readiness_wakeups_scale_with_completions_not_time() {
+        let mut r: Reactor<usize> = Reactor::new(8);
+        assert!(r.event_driven(), "unix reactor must arm SIGCHLD");
+        let n = 6usize;
+        for i in 0..n {
+            let h = PopenSpawner
+                .start(&["/bin/sleep".into(), "0.3".into()], &[], &tmp())
+                .unwrap();
+            r.admit_child(i, h);
+        }
+        // children run 0.3s: a backoff sweeper would wake >= 15 times;
+        // the readiness reactor wakes ~once per SIGCHLD burst
+        let done = wait_until_done(&mut r, 30.0, |_| false);
+        assert_eq!(done.len(), n);
+        let s = r.stats().snapshot();
+        // other tests' children can add spurious SIGCHLD wakeups, so
+        // bound generously — far below any time-paced count
+        assert!(
+            s.total_wakeups() <= 8 * n as u64 + 16,
+            "wakeups must be O(completions): {s:?}"
+        );
+        // an EINTR racing the poll can force at most the odd full sweep
+        assert!(s.sweeps <= 1, "readiness path must not full-sweep: {s:?}");
+        assert!(s.targeted_reaps >= 1);
     }
 
     /// Property: for random mixes of timers and real children admitted
@@ -364,9 +747,9 @@ mod tests {
                     }
                     assert!(r.len() <= r.max_inflight(), "window violated");
                 }
-                completed += r.sweep(|_| false).len();
-                assert!(r.len() <= r.max_inflight(), "window violated after sweep");
-                std::thread::sleep(Duration::from_secs_f64(r.poll_timeout()));
+                r.wait(Some(0.1));
+                completed += r.reap(|_| false).len();
+                assert!(r.len() <= r.max_inflight(), "window violated after reap");
             }
             let (started, reaped, peak) = r.counters();
             started == total as u64 && reaped == total as u64 && peak <= *window

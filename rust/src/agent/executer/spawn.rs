@@ -5,10 +5,12 @@
 //! for exit and capture output — the seed thread-per-slot path, still
 //! used by component tests) or **non-blocking** ([`Spawner::start`],
 //! which returns a [`SpawnHandle`] to the running child with its pipes
-//! attached — the handle is owned by the executer reactor, which reaps
-//! completions via `try_wait` sweeps and drains stdout/stderr
-//! incrementally so a chatty child can never fill the pipe and
-//! deadlock).
+//! attached).  The handle is owned by the executer reactor: the pipes
+//! are switched to `O_NONBLOCK` so their fds join the reactor's
+//! `poll(2)` wait ([`SpawnHandle::poll_fds`]) and get drained
+//! incrementally on readiness — a chatty child can never fill the pipe
+//! and deadlock, and the `POLLHUP` at exit doubles as a completion
+//! signal alongside SIGCHLD.
 
 use std::io::Read;
 use std::path::Path;
@@ -142,34 +144,6 @@ pub fn make_spawner(kind: &str) -> Box<dyn Spawner> {
 
 // ---------------------------------------------------------------- handle
 
-/// Put a pipe fd into non-blocking mode so the reactor can drain it
-/// incrementally without dedicating a thread per child.  Only the raw
-/// `fcntl` libc call is needed — std already links libc on unix — so the
-/// crate stays dependency-free.
-#[cfg(unix)]
-fn set_nonblocking(fd: std::os::unix::io::RawFd) -> std::io::Result<()> {
-    extern "C" {
-        fn fcntl(fd: i32, cmd: i32, ...) -> i32;
-    }
-    const F_GETFL: i32 = 3;
-    const F_SETFL: i32 = 4;
-    #[cfg(target_os = "linux")]
-    const O_NONBLOCK: i32 = 0o4000;
-    #[cfg(not(target_os = "linux"))]
-    const O_NONBLOCK: i32 = 0x0004;
-    // SAFETY: fcntl on a fd we own; F_GETFL/F_SETFL do not touch memory.
-    unsafe {
-        let flags = fcntl(fd, F_GETFL);
-        if flags < 0 {
-            return Err(std::io::Error::last_os_error());
-        }
-        if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
-            return Err(std::io::Error::last_os_error());
-        }
-    }
-    Ok(())
-}
-
 /// Read everything currently available from a non-blocking pipe into
 /// `buf`; clears the pipe slot on EOF or error so later drains skip it.
 fn drain_pipe<R: Read>(pipe: &mut Option<R>, buf: &mut Vec<u8>) {
@@ -216,7 +190,8 @@ impl SpawnHandle {
         let stderr = child.stderr.take();
         // A blocking pipe would let one quiet child stall the whole
         // reactor thread in drain(), so a failure to switch the fds to
-        // non-blocking fails the spawn instead of being ignored.
+        // non-blocking (via the shared `util::poll::fdflags` helper)
+        // fails the spawn instead of being ignored.
         #[cfg(unix)]
         {
             use std::os::unix::io::AsRawFd;
@@ -225,7 +200,7 @@ impl SpawnHandle {
                 .map(|p| p.as_raw_fd())
                 .chain(stderr.iter().map(|p| p.as_raw_fd()));
             for fd in fds {
-                if let Err(e) = set_nonblocking(fd) {
+                if let Err(e) = crate::util::poll::fdflags::set_nonblocking(fd) {
                     let _ = child.kill();
                     let _ = child.wait();
                     return Err(Error::Exec(format!("set O_NONBLOCK on child pipe: {e}")));
@@ -245,6 +220,33 @@ impl SpawnHandle {
     /// OS pid of the child.
     pub fn pid(&self) -> u32 {
         self.child.id()
+    }
+
+    /// Raw fds of the still-open stdout/stderr pipes for readiness
+    /// polling (`-1` for a pipe already drained to EOF, and on
+    /// non-unix targets, where fd polling is unavailable).  The fds
+    /// are only valid while the handle lives.
+    pub fn poll_fds(&self) -> [i32; 2] {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            [
+                self.stdout.as_ref().map_or(-1, |p| p.as_raw_fd()),
+                self.stderr.as_ref().map_or(-1, |p| p.as_raw_fd()),
+            ]
+        }
+        #[cfg(not(unix))]
+        {
+            [-1, -1]
+        }
+    }
+
+    /// Does the child still hold an open stdout/stderr pipe?  Once both
+    /// are gone (drained to EOF), exit is only observable via SIGCHLD —
+    /// the reactor includes such children in its SIGCHLD-triggered
+    /// checks.
+    pub fn has_live_fds(&self) -> bool {
+        self.stdout.is_some() || self.stderr.is_some()
     }
 
     /// Drain whatever output is currently available (never blocks).

@@ -1,15 +1,38 @@
 //! Pilot core bookkeeping: the list of nodes/cores held by a pilot,
 //! with BUSY/FREE state per core (paper §III-B: the Scheduler gathers
 //! node/core partitioning from the RM and marks cores BUSY/FREE).
+//!
+//! Occupancy is stored as **packed `u64` word bitmaps** (bit set =
+//! BUSY), `cores_per_node.div_ceil(64)` words per node, with per-node
+//! free counts and a **rolling next-free cursor** (every node below
+//! [`NodeList::first_maybe_free`] is completely busy).  First-fit
+//! search is word-level — `trailing_zeros` over the negated word — so
+//! the real cost of an allocation is O(words touched), not O(core
+//! slots walked).
+//!
+//! Two costs per search, deliberately kept apart:
+//! * [`Allocation::scanned`] — the **modeled** slot cost: how many core
+//!   slots the paper's faithful linear-list walk would have examined.
+//!   It is computed bit-identically to the old `Vec<bool>` walk (the
+//!   property tests in `tests/properties.rs` pin this), so the DES
+//!   twin's calibrated `sched_service` and the Fig. 8 intra-generation
+//!   growth are unchanged by the bitmap rewrite.
+//! * [`Allocation::words`] — the **real** work: bitmap words read plus
+//!   per-node free-count summaries consulted.  `fig8_decomposition`
+//!   reports it next to `scanned` to make the bitmap win visible.
 
 /// A concrete assignment of cores to one unit.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Allocation {
     /// (node index, core index within node) pairs.
     pub cores: Vec<(u32, u32)>,
-    /// Number of core slots examined during the search (models the
-    /// paper's linear list operation cost, Fig. 8).
+    /// Modeled slot cost: the number of core slots the paper's linear
+    /// list operation would have examined (Fig. 8).  Unchanged by the
+    /// bitmap rewrite so figures stay comparable.
     pub scanned: usize,
+    /// Real allocator work: bitmap words read + node summaries
+    /// consulted during the search.
+    pub words: usize,
 }
 
 impl Allocation {
@@ -18,29 +41,49 @@ impl Allocation {
     }
 }
 
-/// Nodes and core occupancy of a pilot's allocation.
+/// Nodes and core occupancy of a pilot's allocation (packed bitmaps).
 #[derive(Debug, Clone)]
 pub struct NodeList {
     cores_per_node: usize,
-    /// busy[node][core]
-    busy: Vec<Vec<bool>>,
+    /// `u64` words per node (`cores_per_node.div_ceil(64)`).
+    words_per_node: usize,
+    /// busy bitmap, `words_per_node` words per node; bit set = BUSY.
+    /// Bits past `cores_per_node` in a node's last word are permanently
+    /// set so word-level search can never hand them out.
+    busy: Vec<u64>,
     free_per_node: Vec<usize>,
     free_total: usize,
     /// Schedulable capacity (<= nodes * cores_per_node when the pilot's
     /// core request is not node-aligned; the tail cores are permanently
     /// occupied).
     limit: usize,
+    /// Rolling cursor: every node with index < `next_free` is fully
+    /// BUSY.  Advanced on occupy, pulled back on release — O(1)
+    /// amortized — so searches skip the busy prefix without walking it.
+    next_free: usize,
 }
 
 impl NodeList {
     pub fn new(nodes: usize, cores_per_node: usize) -> Self {
         assert!(nodes > 0 && cores_per_node > 0);
+        let words_per_node = cores_per_node.div_ceil(64);
+        let mut busy = vec![0u64; nodes * words_per_node];
+        // permanently occupy the padding bits of each node's last word
+        let valid_in_last = cores_per_node - (words_per_node - 1) * 64;
+        if valid_in_last < 64 {
+            let pad = !0u64 << valid_in_last;
+            for n in 0..nodes {
+                busy[n * words_per_node + words_per_node - 1] |= pad;
+            }
+        }
         NodeList {
             cores_per_node,
-            busy: vec![vec![false; cores_per_node]; nodes],
+            words_per_node,
+            busy,
             free_per_node: vec![cores_per_node; nodes],
             free_total: nodes * cores_per_node,
             limit: nodes * cores_per_node,
+            next_free: 0,
         }
     }
 
@@ -54,33 +97,68 @@ impl NodeList {
         nl
     }
 
-    /// Permanently occupy trailing cores so only `cores` remain usable.
+    /// Permanently occupy trailing cores so only `cores` remain usable:
+    /// the highest free cores of the highest nodes are blocked first.
     pub fn restrict_to(&mut self, cores: usize) {
         let total = self.nodes() * self.cores_per_node;
         assert!(cores <= total && cores > 0);
         let mut to_block = total - cores;
-        'outer: for node in (0..self.nodes()).rev() {
-            for core in (0..self.cores_per_node).rev() {
-                if to_block == 0 {
-                    break 'outer;
-                }
-                if !self.busy[node][core] {
-                    self.busy[node][core] = true;
-                    self.free_per_node[node] -= 1;
-                    self.free_total -= 1;
-                    to_block -= 1;
-                }
+        for node in (0..self.nodes()).rev() {
+            if to_block == 0 {
+                break;
+            }
+            while to_block > 0 {
+                let Some(core) = self.highest_free(node) else { break };
+                self.busy[node * self.words_per_node + core / 64] |= 1u64 << (core % 64);
+                self.free_per_node[node] -= 1;
+                self.free_total -= 1;
+                to_block -= 1;
             }
         }
         self.limit = cores;
+        self.advance_cursor();
+    }
+
+    /// Highest free core index on `node` (word-level, scanning from the
+    /// top word down).
+    fn highest_free(&self, node: usize) -> Option<usize> {
+        let base = node * self.words_per_node;
+        for w in (0..self.words_per_node).rev() {
+            // pad bits are pre-set busy, so they never appear open
+            let open = !self.busy[base + w];
+            if open != 0 {
+                let bit = 63 - open.leading_zeros() as usize;
+                return Some(w * 64 + bit);
+            }
+        }
+        None
+    }
+
+    /// Slide the cursor past fully-busy nodes.  Exits immediately when
+    /// the cursor node still has free cores (the common case); the walk
+    /// only proceeds while filling the pilot front-to-back, where it is
+    /// O(1) amortized over the allocations that filled those nodes.
+    /// Worst case (churn that repeatedly frees and refills the lowest
+    /// node) is a bounded O(nodes) scalar scan — still free-count
+    /// summaries, never per-core slots.
+    fn advance_cursor(&mut self) {
+        while self.next_free < self.free_per_node.len() && self.free_per_node[self.next_free] == 0
+        {
+            self.next_free += 1;
+        }
     }
 
     pub fn nodes(&self) -> usize {
-        self.busy.len()
+        self.free_per_node.len()
     }
 
     pub fn cores_per_node(&self) -> usize {
         self.cores_per_node
+    }
+
+    /// Bitmap words per node (the unit of real search cost).
+    pub fn words_per_node(&self) -> usize {
+        self.words_per_node
     }
 
     pub fn capacity(&self) -> usize {
@@ -95,52 +173,106 @@ impl NodeList {
         self.free_per_node[node]
     }
 
+    /// Lowest node index that can have a free core: every node below it
+    /// is fully BUSY, so first-fit searches start here in O(1) instead
+    /// of re-walking the busy prefix (the Fig. 8 hot-path scan).
+    pub fn first_maybe_free(&self) -> usize {
+        self.next_free
+    }
+
     pub fn is_busy(&self, node: usize, core: usize) -> bool {
-        self.busy[node][core]
+        assert!(core < self.cores_per_node);
+        let word = self.busy[node * self.words_per_node + core / 64];
+        word & (1u64 << (core % 64)) != 0
     }
 
     /// Mark a set of cores BUSY.  Panics on double-allocation (an
-    /// invariant violation — callers own exclusive slots).
+    /// invariant violation — callers own exclusive slots).  Runs of
+    /// cores in the same word are applied as one mask operation.
     pub fn occupy(&mut self, cores: &[(u32, u32)]) {
-        for &(n, c) in cores {
-            let (n, c) = (n as usize, c as usize);
-            assert!(!self.busy[n][c], "double-allocation of node {n} core {c}");
-            self.busy[n][c] = true;
-            self.free_per_node[n] -= 1;
-            self.free_total -= 1;
-        }
+        each_word_run(cores, |n, w, mask, count, c| {
+            let idx = n * self.words_per_node + w;
+            assert!(
+                self.busy[idx] & mask == 0,
+                "double-allocation of node {n} core {c}"
+            );
+            self.busy[idx] |= mask;
+            self.free_per_node[n] -= count;
+            self.free_total -= count;
+        });
+        self.advance_cursor();
     }
 
     /// Mark a set of cores FREE.  Panics on double-free.
     pub fn release(&mut self, cores: &[(u32, u32)]) {
-        for &(n, c) in cores {
-            let (n, c) = (n as usize, c as usize);
-            assert!(self.busy[n][c], "double-free of node {n} core {c}");
-            self.busy[n][c] = false;
-            self.free_per_node[n] += 1;
-            self.free_total += 1;
-        }
+        each_word_run(cores, |n, w, mask, count, c| {
+            let idx = n * self.words_per_node + w;
+            assert!(
+                self.busy[idx] & mask == mask,
+                "double-free of node {n} core {c}"
+            );
+            self.busy[idx] &= !mask;
+            self.free_per_node[n] += count;
+            self.free_total += count;
+            self.next_free = self.next_free.min(n);
+        });
     }
 
     /// First-fit scan for `count` free cores on node `node`, starting at
-    /// core 0.  Returns the core indices (not yet occupied) and the
-    /// number of slots scanned.
-    pub fn scan_node(&self, node: usize, count: usize) -> Option<(Vec<u32>, usize)> {
+    /// core 0.  Returns the core indices (not yet occupied), the
+    /// *modeled* slot cost — the slots a linear walk would have
+    /// examined, i.e. `last found core + 1`, bit-identical to the old
+    /// `Vec<bool>` walk — and the *real* cost in bitmap words read.
+    pub fn scan_node(&self, node: usize, count: usize) -> Option<(Vec<u32>, usize, usize)> {
         if self.free_per_node[node] < count {
             return None;
         }
+        let base = node * self.words_per_node;
         let mut found = Vec::with_capacity(count);
-        let mut scanned = 0;
-        for (c, &b) in self.busy[node].iter().enumerate() {
-            scanned += 1;
-            if !b {
-                found.push(c as u32);
+        let mut words = 0usize;
+        for w in 0..self.words_per_node {
+            // pad bits are pre-set busy, so !busy has them closed
+            let mut open = !self.busy[base + w];
+            words += 1;
+            while open != 0 {
+                let bit = open.trailing_zeros() as usize;
+                found.push((w * 64 + bit) as u32);
                 if found.len() == count {
-                    return Some((found, scanned));
+                    let scanned = w * 64 + bit + 1;
+                    return Some((found, scanned, words));
                 }
+                open &= open - 1;
             }
         }
         None // unreachable given free_per_node check, but stay safe
+    }
+}
+
+/// Walk `cores` as word-level runs: consecutive pairs on the same node
+/// and bitmap word fold into one mask, so occupy/release touch each
+/// word once.  A repeated core splits its run, so the occupy/release
+/// asserts still fire on duplicates.  Calls
+/// `f(node, word, mask, count, first_core)` per run.
+fn each_word_run(cores: &[(u32, u32)], mut f: impl FnMut(usize, usize, u64, usize, usize)) {
+    let mut i = 0;
+    while i < cores.len() {
+        let (n, c) = (cores[i].0 as usize, cores[i].1 as usize);
+        let w = c / 64;
+        let mut mask = 1u64 << (c % 64);
+        let mut count = 1usize;
+        let mut j = i + 1;
+        while j < cores.len() {
+            let (n2, c2) = (cores[j].0 as usize, cores[j].1 as usize);
+            let bit = 1u64 << (c2 % 64);
+            if n2 != n || c2 / 64 != w || mask & bit != 0 {
+                break;
+            }
+            mask |= bit;
+            count += 1;
+            j += 1;
+        }
+        f(n, w, mask, count, c);
+        i = j;
     }
 }
 
@@ -170,6 +302,13 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "double-allocation")]
+    fn duplicate_pair_in_one_occupy_panics() {
+        let mut nl = NodeList::new(1, 4);
+        nl.occupy(&[(0, 1), (0, 1)]);
+    }
+
+    #[test]
     #[should_panic(expected = "double-free")]
     fn double_free_panics() {
         let mut nl = NodeList::new(1, 2);
@@ -180,10 +319,29 @@ mod tests {
     fn scan_node_first_fit() {
         let mut nl = NodeList::new(1, 8);
         nl.occupy(&[(0, 0), (0, 2)]);
-        let (cores, scanned) = nl.scan_node(0, 3).unwrap();
+        let (cores, scanned, words) = nl.scan_node(0, 3).unwrap();
         assert_eq!(cores, vec![1, 3, 4]);
-        assert_eq!(scanned, 5);
+        assert_eq!(scanned, 5, "modeled cost: slots 0..=4 examined");
+        assert_eq!(words, 1, "real cost: one bitmap word");
         assert!(nl.scan_node(0, 7).is_none());
+    }
+
+    #[test]
+    fn scan_crosses_word_boundary() {
+        // 100 cores per node = 2 words; occupy all of word 0 plus the
+        // first core of word 1, then ask for cores living in word 1
+        let mut nl = NodeList::new(1, 100);
+        assert_eq!(nl.words_per_node(), 2);
+        let first: Vec<(u32, u32)> = (0..65).map(|c| (0, c)).collect();
+        nl.occupy(&first);
+        let (cores, scanned, words) = nl.scan_node(0, 2).unwrap();
+        assert_eq!(cores, vec![65, 66]);
+        assert_eq!(scanned, 67);
+        assert_eq!(words, 2);
+        // padding bits (cores 100..128 of the word pair) are never free
+        let (all, _, _) = nl.scan_node(0, 35).unwrap();
+        assert_eq!(*all.last().unwrap(), 99);
+        assert!(nl.scan_node(0, 36).is_none());
     }
 
     #[test]
@@ -203,5 +361,23 @@ mod tests {
         let nl = NodeList::for_cores(32, 16);
         assert_eq!(nl.capacity(), 32);
         assert_eq!(nl.free_total(), 32);
+    }
+
+    #[test]
+    fn cursor_tracks_full_prefix() {
+        let mut nl = NodeList::new(3, 2);
+        assert_eq!(nl.first_maybe_free(), 0);
+        nl.occupy(&[(0, 0), (0, 1)]);
+        assert_eq!(nl.first_maybe_free(), 1, "node 0 full: cursor skips it");
+        nl.occupy(&[(1, 0), (1, 1)]);
+        assert_eq!(nl.first_maybe_free(), 2);
+        nl.release(&[(0, 1)]);
+        assert_eq!(nl.first_maybe_free(), 0, "release pulls the cursor back");
+        // every node below the cursor is fully busy, always
+        nl.occupy(&[(0, 1)]);
+        assert_eq!(nl.first_maybe_free(), 2);
+        for n in 0..nl.first_maybe_free() {
+            assert_eq!(nl.free_on(n), 0);
+        }
     }
 }

@@ -12,15 +12,20 @@
 //! Execution is event-driven too: a single **executer reactor** thread
 //! owns the in-flight set ([`Reactor`]) — it starts children without
 //! blocking ([`Spawner::start`]), admits up to `agent.max_inflight`
-//! units (default: the pilot's cores) and reaps completions via
-//! `try_wait` sweeps with adaptive backoff, so concurrency is no longer
-//! capped at `agent.executers` threads the way the seed's
-//! thread-per-slot executer was.  The `agent.executers` pool now only
-//! hosts payloads that must block a thread (in-process PJRT compute);
-//! its size is decoupled from process concurrency.  Every completion —
-//! exit, timer, kill — becomes the same core-release + wake scheduling
-//! event the wait-pool consumes.  Cancellation of an in-flight unit is
-//! immediate: the reactor kills the child instead of waiting for it.
+//! units (default: the pilot's cores) and then *sleeps in the kernel*:
+//! a `poll(2)` wait over a SIGCHLD self-pipe, every in-flight child's
+//! nonblocking stdout/stderr fds, and a wake-pipe that the scheduler
+//! (new placements), [`crate::api::Unit::cancel`] and shutdown write
+//! to (`crate::util::poll`).  Concurrency is not capped at
+//! `agent.executers` threads the way the seed's thread-per-slot
+//! executer was, and there is no residual polling either: wakeups
+//! scale with completions, not elapsed time.  The `agent.executers`
+//! pool only hosts payloads that must block a thread (in-process PJRT
+//! compute); its size is decoupled from process concurrency.  Every
+//! completion — exit, timer, kill — becomes the same core-release +
+//! wake scheduling event the wait-pool consumes.  Cancellation of an
+//! in-flight unit is one wakeup: the wake-pipe rouses the reactor,
+//! which kills the child instead of waiting for it.
 //!
 //! Used by the Pilot API for local pilots (examples, the end-to-end MD
 //! driver) and by the profiler-overhead bench; the supercomputer-scale
@@ -37,7 +42,8 @@ use std::thread::JoinHandle;
 use crate::agent::bridge::Bridge;
 use crate::agent::executer::spawn::make_spawner;
 use crate::agent::executer::{
-    select_method, Completion, ExecOutcome, LaunchMethod, Reactor, Spawner,
+    select_method, Completion, ExecOutcome, LaunchMethod, Reactor, ReactorStats,
+    ReactorStatsSnapshot, Spawner,
 };
 use crate::agent::nodelist::Allocation;
 use crate::agent::scheduler::{
@@ -78,10 +84,18 @@ pub struct UnitRecord {
     /// Wake handle to the owning Agent's scheduler, set when the unit is
     /// admitted into the wait-pool: cancellation is a scheduling event
     /// too, so `Unit::cancel` can finalize a pooled unit promptly instead
-    /// of waiting for the next submit/release.  (In-flight units need no
-    /// wake: the reactor's reap sweeps observe the flag within its
-    /// bounded backoff and kill the child.)
+    /// of waiting for the next submit/release.
     pub(crate) sched_wake: Option<std::sync::Weak<SchedShared>>,
+    /// Wake handle to the owning Agent's executer reactor, set alongside
+    /// `sched_wake`: the reactor sleeps in `poll(2)` until an event, so
+    /// cancellation of an in-flight unit must write its wake-pipe — the
+    /// cancel-to-kill latency is one wakeup, not a reap-sweep backoff.
+    pub(crate) exec_wake: Option<crate::util::poll::WakeHandle>,
+    /// Set (before the wake) by `Unit::cancel` so the reactor runs its
+    /// per-entry cancellation check only on wakeups that actually carry
+    /// a cancel — an admission wake does not pay an O(in-flight) pass
+    /// of unit-mutex locks.
+    pub(crate) exec_cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
     /// Wake handle to the owning UnitManager's state watcher, set on
     /// submission: every state change bumps the watcher's sequence so it
     /// can park on a condvar instead of polling unit states.
@@ -146,6 +160,8 @@ pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
             cancel_requested: false,
             bound_pilot: None,
             sched_wake: None,
+            exec_wake: None,
+            exec_cancel: None,
             watch_wake: None,
             profiler: None,
         }),
@@ -286,6 +302,15 @@ pub struct RealAgent {
     pool_bridge: Bridge<(SharedUnit, Allocation)>,
     stage_bridge: Bridge<SharedUnit>,
     sched_shared: Arc<SchedShared>,
+    /// Wake-pipe into the executer reactor's `poll(2)` wait: written on
+    /// every new placement, cancellation, and shutdown.
+    exec_wake: crate::util::poll::WakeHandle,
+    /// Companion to `exec_wake` for cancellations: `Unit::cancel` sets
+    /// it before waking, and the reactor consumes it (`swap(false)`) to
+    /// decide whether a wakeup needs the per-entry cancel scan.
+    exec_cancel_pending: Arc<std::sync::atomic::AtomicBool>,
+    /// Live reactor counters (wakeup causes, sweeps vs targeted reaps).
+    reactor_stats: Arc<ReactorStats>,
     profiler: Arc<Profiler>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     /// Live executer-side threads (reactor + pool workers); the last one
@@ -312,6 +337,13 @@ impl RealAgent {
             cfg.pilot_cores,
             cfg.cores_per_node,
         );
+        // the reactor is built here (not in its thread) so the agent can
+        // keep its wake handle and stats before the move
+        let reactor: Reactor<(SharedUnit, Allocation)> =
+            Reactor::new(cfg.effective_max_inflight());
+        let exec_wake = reactor.wake_handle();
+        let reactor_stats = reactor.stats();
+        let exec_cancel_pending = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let agent = Arc::new(RealAgent {
             cfg,
             input: Bridge::new("agent-input"),
@@ -322,6 +354,9 @@ impl RealAgent {
                 state: Mutex::new(SchedState { sched, wake_seq: 0, stopping: false }),
                 wake: Condvar::new(),
             }),
+            exec_wake,
+            exec_cancel_pending,
+            reactor_stats,
             profiler,
             threads: Mutex::new(Vec::new()),
             exec_active: std::sync::atomic::AtomicUsize::new(0),
@@ -348,7 +383,7 @@ impl RealAgent {
             threads.push(
                 std::thread::Builder::new()
                     .name("agent-exec-reactor".into())
-                    .spawn(move || a.reactor_loop())
+                    .spawn(move || a.reactor_loop(reactor))
                     .map_err(|e| Error::other(format!("spawn reactor: {e}")))?,
             );
         }
@@ -396,6 +431,13 @@ impl RealAgent {
         self.sched_shared.state.lock().unwrap().sched.free_cores()
     }
 
+    /// Live executer-reactor counters: wakeup causes, targeted reaps vs
+    /// full sweeps, peak in-flight.  Benches assert from these that
+    /// wakeups scale with completions rather than elapsed time.
+    pub fn reactor_stats(&self) -> ReactorStatsSnapshot {
+        self.reactor_stats.snapshot()
+    }
+
     /// Drain all queued work and stop the component threads.
     pub fn drain_and_stop(&self) {
         self.input.close();
@@ -438,8 +480,11 @@ impl RealAgent {
                 }
                 let (canceled, cores) = {
                     let mut rec = unit.0.lock().unwrap();
-                    // cancellation must be able to wake this loop
+                    // cancellation must be able to wake this loop — and,
+                    // once the unit is in flight, the reactor's poll
                     rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
+                    rec.exec_wake = Some(self.exec_wake.clone());
+                    rec.exec_cancel = Some(self.exec_cancel_pending.clone());
                     (rec.cancel_requested, rec.descr.cores)
                 };
                 // cancellation wins over the oversize check, matching
@@ -477,10 +522,15 @@ impl RealAgent {
                 pool.place_all(&mut *st.sched, |unit, alloc| placed.push((unit, alloc)));
                 st.stopping
             };
+            let any_placed = !placed.is_empty();
             for (unit, alloc) in placed {
                 let _ = advance(&unit, S::AScheduling, &self.profiler);
                 let _ = advance(&unit, S::AExecutingPending, &self.profiler);
                 self.exec_bridge.send((unit, alloc));
+            }
+            if any_placed {
+                // new placements are an executer event: wake its poll
+                self.exec_wake.wake();
             }
 
             if stopping || (self.input.is_drained() && pool.is_empty()) {
@@ -517,6 +567,9 @@ impl RealAgent {
             }
         }
         self.exec_bridge.close();
+        // the reactor may be asleep in poll with nothing in flight:
+        // shutdown is an event too
+        self.exec_wake.wake();
     }
 
     /// Release a unit's cores; every release is a scheduling event
@@ -532,15 +585,20 @@ impl RealAgent {
 
     /// The executer reactor: one thread multiplexing every running unit.
     ///
-    /// Loop shape: wait for new placements (bounded by the reactor's
-    /// adaptive backoff while anything is in flight) -> finalize
-    /// cancellations among not-yet-started units -> admit up to the
-    /// `max_inflight` window -> reap one sweep of completions, turning
-    /// each into a core-release scheduling event plus a stage-out.
-    fn reactor_loop(&self) {
+    /// Loop shape: drain new placements -> finalize cancellations among
+    /// not-yet-started units -> admit up to the `max_inflight` window ->
+    /// **sleep in the kernel** ([`Reactor::wait`]: `poll(2)` over the
+    /// wake-pipe, the SIGCHLD self-pipe, every child's pipes, and the
+    /// nearest timer deadline) -> reap exactly what the wakeup named,
+    /// turning each completion into a core-release scheduling event
+    /// plus a stage-out.  No step polls: the scheduler wakes the pipe
+    /// on placement, `Unit::cancel` wakes it for kills, and shutdown
+    /// wakes it after closing the bridge — so wakeups scale with
+    /// events, and an idle reactor costs ~zero CPU at any in-flight
+    /// count.  (On targets without `poll(2)` the same loop runs with
+    /// the reactor's bounded-backoff sweep fallback.)
+    fn reactor_loop(&self, mut reactor: Reactor<(SharedUnit, Allocation)>) {
         let spawner = make_spawner(&self.cfg.spawner);
-        let mut reactor: Reactor<(SharedUnit, Allocation)> =
-            Reactor::new(self.cfg.effective_max_inflight());
         // placements accepted from the scheduler but not yet admitted
         // (the window is full); they already hold cores, so admission
         // order does not affect scheduling fairness
@@ -567,36 +625,22 @@ impl RealAgent {
                 self.start_unit(unit, alloc, spawner.as_ref(), &mut reactor);
             }
 
-            for (token, completion) in
-                reactor.sweep(|(unit, _)| unit.0.lock().unwrap().cancel_requested)
-            {
-                self.complete_unit(token, completion);
-            }
-
             if self.exec_bridge.is_drained() && pending.is_empty() && reactor.is_empty() {
                 break;
             }
 
-            // wait for the next event: poll without blocking while
-            // admissible work is waiting; use the reactor's adaptive
-            // backoff while anything is in flight; block properly only
-            // when fully idle.  A closed bridge returns from recv
-            // immediately, so once drained the sweeps are paced by a
-            // plain sleep instead (no busy-spin while children finish).
-            let timeout = if !pending.is_empty() && reactor.has_capacity() {
-                0.0
-            } else if reactor.is_empty() {
-                0.5
-            } else {
-                reactor.poll_timeout()
-            };
-            if self.exec_bridge.is_drained() {
-                if timeout > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(timeout));
-                }
-            } else {
-                let got = self.exec_bridge.recv_timeout(usize::MAX, timeout);
-                self.route_placed(got, &mut pending);
+            reactor.wait(None);
+            // consume the cancel signal *after* the wait: a wakeup that
+            // carries no cancel skips the per-entry flag checks (an
+            // admission wake stays O(ready), not O(in-flight) mutex
+            // locks); a cancel raced past this snapshot re-wakes us
+            let scan_cancels = self
+                .exec_cancel_pending
+                .swap(false, std::sync::atomic::Ordering::AcqRel);
+            for (token, completion) in reactor
+                .reap(|(unit, _)| scan_cancels && unit.0.lock().unwrap().cancel_requested)
+            {
+                self.complete_unit(token, completion);
             }
         }
         self.pool_bridge.close();
@@ -1116,6 +1160,12 @@ mod tests {
         );
     }
 
+    /// Cancel through the API handle: sets the flag *and* wakes the
+    /// reactor's poll — the path `Unit::cancel` takes.
+    fn cancel_via_api(u: &SharedUnit) {
+        crate::api::Unit { shared: u.clone() }.cancel();
+    }
+
     #[test]
     fn cancel_during_execution_kills_child() {
         let profiler = Arc::new(Profiler::new(true));
@@ -1126,7 +1176,7 @@ mod tests {
         agent.submit(vec![u.clone()]);
         wait_executing(&u, 5.0);
         let t0 = std::time::Instant::now();
-        u.0.lock().unwrap().cancel_requested = true;
+        cancel_via_api(&u);
         assert_eq!(wait_final(&u, 5.0), S::Canceled);
         assert!(
             t0.elapsed().as_secs_f64() < 5.0,
@@ -1148,8 +1198,40 @@ mod tests {
         let u = ready_unit(0, UnitDescription::sleep(30.0), &profiler);
         agent.submit(vec![u.clone()]);
         wait_executing(&u, 5.0);
-        u.0.lock().unwrap().cancel_requested = true;
+        cancel_via_api(&u);
         assert_eq!(wait_final(&u, 5.0), S::Canceled);
         agent.drain_and_stop();
+    }
+
+    /// Regression for the readiness tentpole: cancel-to-kill latency is
+    /// bounded by one wake-pipe wakeup, not a reap-sweep backoff.  Only
+    /// asserted when the reactor actually runs event-driven (poll +
+    /// SIGCHLD armed); the min over a few trials shields CI jitter.
+    #[cfg(all(unix, not(feature = "portable-sweep")))]
+    #[test]
+    fn cancel_to_kill_latency_is_one_wakeup() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("cancel-latency", 2, 1);
+        cfg.synthetic_as_process = true;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        if !agent.reactor_stats().event_driven {
+            agent.drain_and_stop();
+            return; // SIGCHLD registry exhausted: nothing to assert
+        }
+        let mut best = f64::INFINITY;
+        for i in 0..3 {
+            let u = ready_unit(i, UnitDescription::sleep(600.0), &profiler);
+            agent.submit(vec![u.clone()]);
+            wait_executing(&u, 10.0);
+            let t0 = std::time::Instant::now();
+            cancel_via_api(&u);
+            assert_eq!(wait_final(&u, 10.0), S::Canceled);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        agent.drain_and_stop();
+        assert!(
+            best < 0.005,
+            "cancel-to-kill must be one wakeup (<5ms), best of 3 was {best:.4}s"
+        );
     }
 }

@@ -13,12 +13,19 @@ use crate::agent::nodelist::{Allocation, NodeList};
 /// * larger (MPI) requests get whole consecutive node spans plus a
 ///   remainder, i.e. topologically close nodes.
 ///
-/// Search modes: [`SearchMode::Linear`] walks the full core list from
-/// index 0 on every allocation (faithful to the paper's implementation —
-/// the Fig. 8 intra-generation scheduling growth); the optimized
+/// Search modes: [`SearchMode::Linear`] *models* the paper's full list
+/// walk from core 0 on every allocation (`Allocation::scanned` — the
+/// Fig. 8 intra-generation scheduling growth); the optimized
 /// [`SearchMode::FreeList`] keeps an ordered index of nodes with free
 /// cores, so allocation under churn is O(log n) instead of O(n)
 /// (`benches/ablation_sched.rs` quantifies the gap).
+///
+/// In both modes the *real* search is word-level over the bitmap
+/// [`NodeList`]: the rolling next-free cursor skips the fully-busy
+/// prefix in O(1) (first-fit picks the same cores — a full node can
+/// satisfy nothing), and per-node scans are `trailing_zeros` over
+/// packed words.  `Allocation::words` records that real cost next to
+/// the unchanged modeled `scanned`.
 #[derive(Debug)]
 pub struct ContinuousScheduler {
     nodes: NodeList,
@@ -62,39 +69,50 @@ impl ContinuousScheduler {
         let cpn = self.nodes.cores_per_node();
         match self.mode {
             SearchMode::Linear => {
-                let mut scanned = 0usize;
-                for node in 0..self.nodes.nodes() {
-                    // Linear mode scans every core slot of every node it
-                    // passes — the paper's list walk.
-                    if let Some((found, s)) = self.nodes.scan_node(node, cores) {
+                // The cursor skips the fully-busy prefix in O(1); a
+                // full node can satisfy nothing, so first-fit picks
+                // the same cores.  The *modeled* cost still charges
+                // the paper's walk over every skipped slot.
+                let start = self.nodes.first_maybe_free();
+                let mut scanned = start * cpn;
+                let mut words = 0usize;
+                for node in start..self.nodes.nodes() {
+                    words += 1; // the node's free-count summary
+                    if let Some((found, s, w)) = self.nodes.scan_node(node, cores) {
                         scanned += s;
+                        words += w;
                         let pairs: Vec<(u32, u32)> =
                             found.into_iter().map(|c| (node as u32, c)).collect();
                         self.nodes.occupy(&pairs);
-                        return Some(Allocation { cores: pairs, scanned });
+                        return Some(Allocation { cores: pairs, scanned, words });
                     }
+                    // modeled: Linear mode walks every core slot of
+                    // every node it passes — the paper's list walk
                     scanned += cpn;
                 }
                 None
             }
             SearchMode::FreeList => {
                 let mut scanned = 0usize;
+                let mut words = 0usize;
                 let mut chosen = None;
                 for &node in self.free_nodes.iter() {
                     scanned += 1;
+                    words += 1;
                     if self.nodes.free_on(node) >= cores {
                         chosen = Some(node);
                         break;
                     }
                 }
                 let node = chosen?;
-                let (found, s) = self.nodes.scan_node(node, cores).unwrap();
+                let (found, s, w) = self.nodes.scan_node(node, cores).unwrap();
                 scanned += s;
+                words += w;
                 let pairs: Vec<(u32, u32)> =
                     found.into_iter().map(|c| (node as u32, c)).collect();
                 self.nodes.occupy(&pairs);
                 self.note_occupied(std::iter::once(node));
-                Some(Allocation { cores: pairs, scanned })
+                Some(Allocation { cores: pairs, scanned, words })
             }
         }
     }
@@ -110,16 +128,29 @@ impl ContinuousScheduler {
         if span > n_nodes {
             return None;
         }
-        let mut scanned = 0usize;
-        'outer: for start in 0..=(n_nodes - span) {
+        // every start below the cursor begins on a fully-busy node and
+        // cannot host a whole-node span (full_nodes >= 1 here, since
+        // cores > cpn); the modeled cost still charges one probe per
+        // skipped start, exactly as the faithful walk did
+        let first_start = self.nodes.first_maybe_free();
+        if first_start > n_nodes - span {
+            return None;
+        }
+        let mut scanned = first_start;
+        let mut words = 0usize;
+        'outer: for start in first_start..=(n_nodes - span) {
             scanned += 1;
             for k in 0..full_nodes {
+                words += 1;
                 if self.nodes.free_on(start + k) != cpn {
                     continue 'outer;
                 }
             }
-            if remainder > 0 && self.nodes.free_on(start + full_nodes) < remainder {
-                continue;
+            if remainder > 0 {
+                words += 1;
+                if self.nodes.free_on(start + full_nodes) < remainder {
+                    continue;
+                }
             }
             let mut pairs = Vec::with_capacity(cores);
             for k in 0..full_nodes {
@@ -128,13 +159,15 @@ impl ContinuousScheduler {
                 }
             }
             if remainder > 0 {
-                let (found, s) = self.nodes.scan_node(start + full_nodes, remainder).unwrap();
+                let (found, s, w) =
+                    self.nodes.scan_node(start + full_nodes, remainder).unwrap();
                 scanned += s;
+                words += w;
                 pairs.extend(found.into_iter().map(|c| ((start + full_nodes) as u32, c)));
             }
             self.nodes.occupy(&pairs);
             self.note_occupied((start..start + span).collect::<Vec<_>>().into_iter());
-            return Some(Allocation { cores: pairs, scanned });
+            return Some(Allocation { cores: pairs, scanned, words });
         }
         None
     }

@@ -8,10 +8,16 @@
 //!
 //! The paper's implementation searches a linear list of cores on every
 //! allocation — visible as intra-generation scheduling-time growth in
-//! Fig. 8.  We implement that faithful [`SearchMode::Linear`] plus an
-//! optimized [`SearchMode::FreeList`] (cursor + per-node free counters)
-//! used in the §Perf pass; `benches/ablation_sched.rs` quantifies the
-//! difference.
+//! Fig. 8.  We keep that cost as the *model* ([`SearchMode::Linear`]
+//! charges `Allocation::scanned` exactly as the faithful walk would)
+//! while the *real* search runs word-level over the bitmap
+//! [`super::nodelist::NodeList`] (popcount free counts,
+//! `trailing_zeros` first-fit, rolling next-free cursor) and reports
+//! its true cost in `Allocation::words`.  [`SearchMode::FreeList`]
+//! additionally drops the modeled full walk (an ordered index of nodes
+//! with free cores); `benches/ablation_sched.rs` quantifies the
+//! difference and `benches/fig8_decomposition.rs` shows modeled vs
+//! real cost side by side.
 //!
 //! In front of the core search sits the event-driven [`WaitPool`]
 //! (`waitpool`): pending units wait there, and each submit/core-release

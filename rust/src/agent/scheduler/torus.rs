@@ -57,27 +57,34 @@ impl TorusScheduler {
         &self.dims
     }
 
-    /// Wraparound run of `span` consecutive fully-free nodes.
-    fn find_run(&self, span: usize) -> Option<(usize, usize)> {
+    /// Wraparound run of `span` consecutive fully-free nodes.  Returns
+    /// (start node, modeled nodes scanned, real node summaries read) —
+    /// the rolling cursor skips the fully-busy prefix for free (no run
+    /// can include a busy node), while the modeled cost still charges
+    /// the faithful walk one probe per skipped node.
+    fn find_run(&self, span: usize) -> Option<(usize, usize, usize)> {
         let n = self.nodes.nodes();
         if span > n {
             return None;
         }
         let cpn = self.nodes.cores_per_node();
-        let mut scanned = 0;
+        let skip = self.nodes.first_maybe_free().min(n);
+        let mut scanned = skip;
+        let mut words = 0;
         let mut run = 0;
         let mut start = 0;
-        // scan 2n-1 to allow wraparound runs
-        for i in 0..(2 * n - 1) {
+        // scan up to 2n-1 positions to allow wraparound runs
+        for i in skip..(2 * n - 1) {
             let node = i % n;
             scanned += 1;
+            words += 1;
             if self.nodes.free_on(node) == cpn {
                 if run == 0 {
                     start = i;
                 }
                 run += 1;
                 if run == span {
-                    return Some((start % n, scanned));
+                    return Some((start % n, scanned, words));
                 }
             } else {
                 run = 0;
@@ -105,15 +112,21 @@ impl CoreScheduler for TorusScheduler {
         }
         let cpn = self.nodes.cores_per_node();
         if cores <= cpn {
-            // single-node placement, first fit
-            let mut scanned = 0;
-            for node in 0..self.nodes.nodes() {
-                if let Some((found, s)) = self.nodes.scan_node(node, cores) {
+            // single-node placement, first fit; the cursor skips the
+            // fully-busy prefix while the modeled cost still charges
+            // the faithful full walk over it
+            let first = self.nodes.first_maybe_free();
+            let mut scanned = first * cpn;
+            let mut words = 0;
+            for node in first..self.nodes.nodes() {
+                words += 1;
+                if let Some((found, s, w)) = self.nodes.scan_node(node, cores) {
                     scanned += s;
+                    words += w;
                     let pairs: Vec<(u32, u32)> =
                         found.into_iter().map(|c| (node as u32, c)).collect();
                     self.nodes.occupy(&pairs);
-                    return Some(Allocation { cores: pairs, scanned });
+                    return Some(Allocation { cores: pairs, scanned, words });
                 }
                 scanned += cpn;
             }
@@ -122,7 +135,7 @@ impl CoreScheduler for TorusScheduler {
         // whole-node blocks, wraparound-contiguous (BG/Q-style: requests
         // are rounded up to whole nodes)
         let span = cores.div_ceil(cpn);
-        let (start, scanned) = self.find_run(span)?;
+        let (start, scanned, words) = self.find_run(span)?;
         let mut pairs = Vec::with_capacity(cores);
         let mut remaining = cores;
         for k in 0..span {
@@ -134,7 +147,7 @@ impl CoreScheduler for TorusScheduler {
             remaining -= take;
         }
         self.nodes.occupy(&pairs);
-        Some(Allocation { cores: pairs, scanned })
+        Some(Allocation { cores: pairs, scanned, words })
     }
 
     fn release(&mut self, alloc: &Allocation) {

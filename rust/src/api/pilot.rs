@@ -95,6 +95,14 @@ impl Pilot {
         self.agent.clone()
     }
 
+    /// Live executer-reactor counters of this pilot's agent: wakeup
+    /// causes (child/wake/timer/idle), targeted reaps vs full sweeps,
+    /// and peak in-flight — the observability the readiness design is
+    /// asserted with (`rp run` prints them; benches gate on them).
+    pub fn reactor_stats(&self) -> crate::agent::executer::ReactorStatsSnapshot {
+        self.agent.reactor_stats()
+    }
+
     /// Block until the pilot is active (or final), waking on the state
     /// transition itself rather than polling.
     pub fn wait_active(&self, timeout: f64) -> Result<PilotState> {

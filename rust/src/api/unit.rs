@@ -46,13 +46,15 @@ impl Unit {
     /// drops it from the pool.  A unit queued at the Agent is finalized
     /// by the next scheduling pass (the Agent's scheduler is woken so
     /// that happens promptly); a unit already *executing* is killed by
-    /// the executer reactor's next reap sweep — its child process is
-    /// terminated immediately rather than running to completion.
-    /// In-process (PJRT) payloads are the exception: once handed to the
-    /// executer pool they are uninterruptible, so their cancellation
-    /// takes effect when a pool thread picks the unit up.
+    /// the executer reactor on the wakeup this call triggers through
+    /// its wake-pipe — its child process is terminated within one
+    /// reactor wakeup rather than running to completion (or waiting
+    /// out a reap-sweep backoff).  In-process (PJRT) payloads are the
+    /// exception: once handed to the executer pool they are
+    /// uninterruptible, so their cancellation takes effect when a pool
+    /// thread picks the unit up.
     pub fn cancel(&self) {
-        let (wake, watch) = {
+        let (wake, exec_wake, exec_cancel, watch) = {
             let mut rec = self.shared.0.lock().unwrap();
             rec.cancel_requested = true;
             if rec.bound_pilot.is_none()
@@ -65,10 +67,23 @@ impl Unit {
                 }
                 self.shared.1.notify_all();
             }
-            (rec.sched_wake.clone(), rec.watch_wake.clone())
+            (
+                rec.sched_wake.clone(),
+                rec.exec_wake.clone(),
+                rec.exec_cancel.clone(),
+                rec.watch_wake.clone(),
+            )
         };
         if let Some(shared) = wake.and_then(|w| w.upgrade()) {
             shared.notify_event();
+        }
+        // flag before wake: the reactor consumes the flag only after a
+        // wakeup, so this order can never lose a cancellation
+        if let Some(flag) = exec_cancel {
+            flag.store(true, std::sync::atomic::Ordering::Release);
+        }
+        if let Some(w) = exec_wake {
+            w.wake();
         }
         if let Some(w) = watch.and_then(|w| w.upgrade()) {
             w.notify();

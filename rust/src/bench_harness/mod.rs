@@ -2,10 +2,12 @@
 //! (`rust/benches/*.rs`, one per paper table/figure — DESIGN.md §4).
 //!
 //! Each bench prints a paper-vs-measured table and writes the figure's
-//! raw series as CSV under `bench_out/`.
+//! raw series as CSV under `bench_out/`; perf-trajectory benches also
+//! refresh a committed machine-readable `BENCH_<name>.json` at the
+//! repository root ([`write_bench_json`]).
 
 pub mod policy;
 pub mod report;
 
 pub use policy::policy_probe;
-pub use report::{csv_path, write_csv, Check, Report};
+pub use report::{bench_json_path, csv_path, write_bench_json, write_csv, Check, Report};

@@ -94,6 +94,34 @@ pub fn csv_path(name: &str) -> PathBuf {
     dir.join(format!("{name}.csv"))
 }
 
+/// `BENCH_<name>.json` at the repository root — the machine-readable
+/// perf-trajectory record a bench refreshes on every run.  Committed so
+/// the trajectory (spawn rate, steady-state in-flight, allocator work)
+/// is visible in review diffs, unlike the uncommitted `bench_out/` CSVs.
+pub fn bench_json_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(format!("BENCH_{name}.json"))
+}
+
+/// Write the metric map as `BENCH_<name>.json` (values rounded to 3
+/// decimals to keep diffs readable), using the crate's own JSON
+/// substrate.
+pub fn write_bench_json(name: &str, metrics: &[(&str, f64)]) -> std::io::Result<PathBuf> {
+    use crate::util::json::Value;
+    let path = bench_json_path(name);
+    let rounded: Vec<(&str, Value)> = metrics
+        .iter()
+        .map(|&(k, v)| (k, Value::from((v * 1000.0).round() / 1000.0)))
+        .collect();
+    let doc = Value::obj(vec![
+        ("bench", name.into()),
+        ("schema", "rp-bench-v1".into()),
+        ("metrics", Value::obj(rounded)),
+    ]);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "{}", doc.to_json())?;
+    Ok(path)
+}
+
 /// Write rows as CSV.
 pub fn write_csv(name: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<PathBuf> {
     let path = csv_path(name);
@@ -133,5 +161,18 @@ mod tests {
         let p = write_csv("unit_test", "a,b", &[vec!["1".into(), "2".into()]]).unwrap();
         let text = std::fs::read_to_string(p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn bench_json_roundtrip() {
+        let p = write_bench_json("harness_selftest", &[("rate", 123.4567), ("peak", 32.0)])
+            .unwrap();
+        let v = crate::util::json::Value::parse_file(&p).unwrap();
+        assert_eq!(v.get_str("bench", ""), "harness_selftest");
+        assert_eq!(v.get_str("schema", ""), "rp-bench-v1");
+        let m = v.get("metrics");
+        assert!((m.get_f64("rate", 0.0) - 123.457).abs() < 1e-9, "rounded to 3 decimals");
+        assert_eq!(m.get_f64("peak", 0.0), 32.0);
+        std::fs::remove_file(p).unwrap();
     }
 }

@@ -37,6 +37,8 @@ COMMANDS:
                  --policy fifo|backfill  --search linear|freelist
                  --schedulers N (1, concurrent partitions)
                  --max-inflight N (0 = unbounded reactor window)
+                 --reap-latency S (0 = readiness reactor; >0 models a
+                   sweep-based reaper holding completions up to 2S)
                  --um-policy round_robin|load_aware|locality: run the
                    UnitManager DES twin instead, binding the workload
                    over multiple simulated pilots
@@ -166,6 +168,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         analysis.peak_concurrency(),
         100.0 * analysis.utilization(cores, 1)
     );
+    let rs = pilot.reactor_stats();
+    println!(
+        "reactor: {} wakeups (child {} / wake {} / timer {} / idle {}), \
+         {} targeted reaps, {} sweeps{}",
+        rs.total_wakeups(),
+        rs.wakeups_child,
+        rs.wakeups_wake,
+        rs.wakeups_timer,
+        rs.idle_wakeups,
+        rs.targeted_reaps,
+        rs.sweeps,
+        if rs.event_driven { "" } else { " (sweep fallback)" },
+    );
     pilot.drain()?;
     session.close();
     Ok(())
@@ -178,6 +193,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let duration = args.get_f64("duration", 64.0)?;
     let schedulers = args.get_usize("schedulers", 1)?;
     let max_inflight = args.get_usize("max-inflight", 0)?;
+    let reap_latency = args.get_f64("reap-latency", 0.0)?;
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
     let (policy, search) = sched_flags(args)?;
@@ -189,7 +205,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if um_policy.is_some() || args.get("pilots").is_some() {
         // agent-level flags have no effect on the UM twin: reject them
         // loudly instead of letting a sweep silently misconfigure
-        for flag in ["policy", "search", "barrier", "schedulers", "max-inflight"] {
+        for flag in ["policy", "search", "barrier", "schedulers", "max-inflight", "reap-latency"]
+        {
             if args.get(flag).is_some() {
                 return Err(crate::Error::other(format!(
                     "--{flag} applies to the agent sim, not the UM twin \
@@ -224,6 +241,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     sim_cfg.barrier = barrier;
     sim_cfg.schedulers = schedulers.max(1);
     sim_cfg.max_inflight = max_inflight;
+    sim_cfg.reap_latency = reap_latency.max(0.0);
     if let Some(p) = policy {
         sim_cfg.policy = p;
     }
@@ -404,6 +422,20 @@ mod tests {
             ]),
             0
         );
+    }
+
+    #[test]
+    fn sim_reap_latency_flag() {
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "1", "--duration", "10",
+                "--reap-latency", "0.02",
+            ]),
+            0
+        );
+        assert_eq!(run(&["sim", "--reap-latency", "abc"]), 1);
+        // agent-level flag: rejected on the UM-twin path
+        assert_eq!(run(&["sim", "--pilots", "32,32", "--reap-latency", "0.02"]), 1);
     }
 
     #[test]

@@ -24,7 +24,14 @@
 //! policies (`round_robin` / `load_aware` / `locality`), shared between
 //! the real [`api::UnitManager`] and its DES twin ([`sim::UmSim`]), so
 //! units submitted before any pilot exists wait and bind late instead
-//! of failing.
+//! of failing.  Execution is readiness-driven: the executer reactor
+//! sleeps in a `poll(2)` wait ([`util::poll`]) over a SIGCHLD
+//! self-pipe, every child's pipes, and an agent wake-pipe, and the
+//! core allocator ([`agent::nodelist::NodeList`]) is packed `u64`
+//! bitmaps with a rolling next-free cursor — the paper's linear-list
+//! cost survives only as the *modeled* `Allocation::scanned`, so the
+//! calibrated figures are unchanged while the real hot path is
+//! O(words) and O(events).
 //! * **L2** — the JAX MD payload model (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts.
 //! * **L1** — the Pallas Lennard-Jones kernel

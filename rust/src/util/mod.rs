@@ -1,10 +1,12 @@
-//! Small self-built substrates: JSON, PRNG + distributions, statistics.
+//! Small self-built substrates: JSON, readiness waiting ([`poll`]),
+//! PRNG + distributions, statistics.
 //!
 //! The offline vendor set has no `serde`/`rand`/`criterion`, so the pieces
 //! the coordinator needs are implemented (and tested) here — the crate is
 //! zero-dependency (std only; see `Cargo.toml`).
 
 pub mod json;
+pub mod poll;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,705 @@
+//! Readiness waiting for the executer reactor: `poll(2)` over a SIGCHLD
+//! self-pipe, a wake-pipe, and the caller's fds — with a portable
+//! condvar fallback.
+//!
+//! The reactor used to *pace* itself: `try_wait` sweeps with adaptive
+//! backoff, so an idle reactor still woke every `BACKOFF_MAX` and a
+//! cancellation could sit for up to that long.  This module gives it a
+//! real event source instead:
+//!
+//! * a **SIGCHLD self-pipe** — the process-wide `SIGCHLD` handler
+//!   writes one byte to every registered reactor's pipe, so a child
+//!   exit wakes the `poll` immediately (the classic self-pipe trick;
+//!   the handler is async-signal-safe — atomic loads + `write(2)` with
+//!   errno preserved — but process-wide and exclusive: it replaces any
+//!   previous SIGCHLD disposition, and an embedder installing its own
+//!   handler afterwards silences this wakeup source.  The reactor
+//!   tolerates either case: exits are then discovered via `POLLHUP` on
+//!   the child pipes, plus a bounded re-check for children whose pipes
+//!   are gone);
+//! * a **wake-pipe** — [`WakeHandle::wake`] writes a byte; the agent
+//!   uses it for admit / cancel / shutdown events;
+//! * the caller's **child pipe fds** — already `O_NONBLOCK` (see
+//!   [`crate::agent::executer::SpawnHandle`]), so stdout/stderr
+//!   readiness (and the `POLLHUP` at child exit) is part of the same
+//!   wait, and timers fold in as the `poll` timeout.
+//!
+//! Everything raw lives here behind [`Waiter`] / [`WakeHandle`]; the
+//! libc calls are declared directly (std links libc on unix) so the
+//! crate stays zero-dependency.  On non-unix targets — or with the
+//! `portable-sweep` cargo feature, which CI builds to keep the fallback
+//! compiling — [`Waiter`] degrades to a wakeable condvar park: wakes
+//! are still prompt, but child completions are discovered by the
+//! reactor's bounded sweeps ([`WaitSummary::check_all`]).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// What ended a [`Waiter::wait`] call.  Several causes can coincide.
+#[derive(Debug, Default)]
+pub struct WaitSummary {
+    /// The wake-pipe was written ([`WakeHandle::wake`]): an admit,
+    /// cancel or shutdown event is pending.
+    pub woke: bool,
+    /// SIGCHLD arrived — some child of the process exited.
+    pub child: bool,
+    /// The timeout elapsed.
+    pub timed_out: bool,
+    /// Readiness is unknown (portable fallback, poll error, or a waiter
+    /// without a SIGCHLD slot): the caller must sweep everything.
+    pub check_all: bool,
+    /// Indices into the caller's `fds` slice with pending input/hangup.
+    pub ready: Vec<usize>,
+}
+
+/// One-way wake channel into a [`Waiter`]; cheap to clone, safe to call
+/// from any thread, and harmless after the waiter is gone (the pipe
+/// pair outlives every handle, so a wake can never hit a closed pipe).
+#[derive(Debug, Clone)]
+pub struct WakeHandle(WakeInner);
+
+#[derive(Debug, Clone)]
+enum WakeInner {
+    #[cfg(all(unix, not(feature = "portable-sweep")))]
+    Pipe(Arc<imp::Pipe>),
+    Park(Arc<ParkState>),
+}
+
+impl WakeHandle {
+    /// Wake the waiter (idempotent while a wake is already pending).
+    pub fn wake(&self) {
+        match &self.0 {
+            #[cfg(all(unix, not(feature = "portable-sweep")))]
+            WakeInner::Pipe(p) => p.write_byte(),
+            WakeInner::Park(s) => s.wake(),
+        }
+    }
+}
+
+/// The reactor's event source: `poll(2)` over the self-pipes and the
+/// caller's fds on unix, a wakeable condvar park otherwise.
+#[derive(Debug)]
+pub struct Waiter(WaiterInner);
+
+#[derive(Debug)]
+enum WaiterInner {
+    #[cfg(all(unix, not(feature = "portable-sweep")))]
+    Poll(imp::PollWaiter),
+    Park(ParkWaiter),
+}
+
+impl Waiter {
+    /// Build the best waiter the platform offers, degrading silently
+    /// (fd exhaustion, full SIGCHLD registry) to the condvar park.
+    pub fn new() -> Waiter {
+        #[cfg(all(unix, not(feature = "portable-sweep")))]
+        {
+            if let Some(w) = imp::PollWaiter::new() {
+                return Waiter(WaiterInner::Poll(w));
+            }
+        }
+        Waiter(WaiterInner::Park(ParkWaiter::new()))
+    }
+
+    /// Fully event-driven?  True only when child exits themselves wake
+    /// the waiter (poll mode with a SIGCHLD slot); otherwise the caller
+    /// must keep a bounded timeout so sweeps still discover completions.
+    pub fn event_driven(&self) -> bool {
+        match &self.0 {
+            #[cfg(all(unix, not(feature = "portable-sweep")))]
+            WaiterInner::Poll(w) => w.sigchld_armed(),
+            WaiterInner::Park(_) => false,
+        }
+    }
+
+    /// A handle other threads use to wake this waiter.
+    pub fn wake_handle(&self) -> WakeHandle {
+        match &self.0 {
+            #[cfg(all(unix, not(feature = "portable-sweep")))]
+            WaiterInner::Poll(w) => WakeHandle(WakeInner::Pipe(w.wake_pipe())),
+            WaiterInner::Park(w) => WakeHandle(WakeInner::Park(w.state())),
+        }
+    }
+
+    /// Block until a wake, a SIGCHLD, readiness on one of `fds`, or the
+    /// timeout (`None` = no timeout).  Negative fds are ignored (their
+    /// `ready` index simply never fires), matching `poll(2)` semantics.
+    pub fn wait(&mut self, fds: &[i32], timeout: Option<f64>) -> WaitSummary {
+        match &mut self.0 {
+            #[cfg(all(unix, not(feature = "portable-sweep")))]
+            WaiterInner::Poll(w) => w.wait(fds, timeout),
+            WaiterInner::Park(w) => w.wait(timeout),
+        }
+    }
+
+    /// A park-mode waiter regardless of platform (tests exercise the
+    /// portable fallback on every target through this).
+    pub fn park_fallback() -> Waiter {
+        Waiter(WaiterInner::Park(ParkWaiter::new()))
+    }
+}
+
+impl Default for Waiter {
+    fn default() -> Self {
+        Waiter::new()
+    }
+}
+
+// --------------------------------------------------- portable fallback
+
+/// Sequence-numbered park state shared between a `ParkWaiter` and its
+/// wake handles (the same seq/condvar pattern the UM state watcher
+/// uses).
+#[derive(Debug, Default)]
+struct ParkState {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl ParkState {
+    fn wake(&self) {
+        *self.seq.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// Condvar-based waiter: wakes are prompt, fd readiness is unavailable
+/// (every return carries `check_all`).
+#[derive(Debug)]
+struct ParkWaiter {
+    state: Arc<ParkState>,
+    seen: u64,
+}
+
+impl ParkWaiter {
+    fn new() -> ParkWaiter {
+        ParkWaiter { state: Arc::new(ParkState::default()), seen: 0 }
+    }
+
+    fn state(&self) -> Arc<ParkState> {
+        self.state.clone()
+    }
+
+    fn wait(&mut self, timeout: Option<f64>) -> WaitSummary {
+        let mut summary = WaitSummary { check_all: true, ..WaitSummary::default() };
+        let mut seq = self.state.seq.lock().unwrap();
+        match timeout {
+            Some(t) => {
+                // re-arm across spurious condvar wakeups until a real
+                // wake or the full deadline passes
+                let deadline = std::time::Instant::now()
+                    + std::time::Duration::from_secs_f64(t.max(0.0));
+                while *seq == self.seen {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, _) =
+                        self.state.cv.wait_timeout(seq, deadline - now).unwrap();
+                    seq = guard;
+                }
+                if *seq != self.seen {
+                    self.seen = *seq;
+                    summary.woke = true;
+                } else {
+                    summary.timed_out = true;
+                }
+            }
+            None => {
+                while *seq == self.seen {
+                    seq = self.state.cv.wait(seq).unwrap();
+                }
+                self.seen = *seq;
+                summary.woke = true;
+            }
+        }
+        summary
+    }
+}
+
+// ------------------------------------------------------ fd flags
+
+/// Raw `fcntl` helpers shared by the child-pipe setup
+/// ([`crate::agent::executer::SpawnHandle`]) and the self-pipes below —
+/// one home for the platform-dependent `O_NONBLOCK` constant.  Only the
+/// raw libc call is declared (std already links libc on unix), so the
+/// crate stays dependency-free.
+#[cfg(unix)]
+pub(crate) mod fdflags {
+    use std::os::raw::c_int;
+
+    extern "C" {
+        fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+    }
+
+    const F_SETFD: c_int = 2;
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    const FD_CLOEXEC: c_int = 1;
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: c_int = 0x0004;
+
+    /// Switch `fd` to non-blocking mode.
+    pub(crate) fn set_nonblocking(fd: c_int) -> std::io::Result<()> {
+        // SAFETY: fcntl on an fd the caller owns; F_GETFL/F_SETFL do
+        // not touch memory.
+        unsafe {
+            let flags = fcntl(fd, F_GETFL);
+            if flags < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+
+    /// Mark `fd` close-on-exec so children never inherit it.
+    pub(crate) fn set_cloexec(fd: c_int) -> std::io::Result<()> {
+        // SAFETY: fcntl on an fd the caller owns.
+        unsafe {
+            if fcntl(fd, F_SETFD, FD_CLOEXEC) < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ unix poll(2)
+
+#[cfg(all(unix, not(feature = "portable-sweep")))]
+mod imp {
+    use std::os::raw::{c_int, c_short, c_ulong};
+    use std::sync::atomic::{AtomicI32, Ordering};
+    use std::sync::{Arc, Mutex, Once, OnceLock};
+
+    use super::WaitSummary;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    const POLLIN: c_short = 0x001;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    #[cfg(target_os = "linux")]
+    const SIGCHLD: c_int = 17;
+    #[cfg(not(target_os = "linux"))]
+    const SIGCHLD: c_int = 20;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+        fn signal(signum: c_int, handler: usize) -> usize;
+    }
+
+    fn set_nonblocking_cloexec(fd: c_int) -> bool {
+        super::fdflags::set_nonblocking(fd).is_ok() && super::fdflags::set_cloexec(fd).is_ok()
+    }
+
+    /// A nonblocking, close-on-exec self-pipe.  Both ends live as long
+    /// as the pair does, so writers never race a closed read end (no
+    /// SIGPIPE) and readers never see EBADF.
+    #[derive(Debug)]
+    pub(super) struct Pipe {
+        rx: c_int,
+        tx: c_int,
+    }
+
+    impl Pipe {
+        fn new() -> Option<Pipe> {
+            let mut fds: [c_int; 2] = [-1, -1];
+            // SAFETY: fds points at two writable c_ints.
+            if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+                return None;
+            }
+            let p = Pipe { rx: fds[0], tx: fds[1] };
+            if !set_nonblocking_cloexec(p.rx) || !set_nonblocking_cloexec(p.tx) {
+                return None; // Drop closes both ends
+            }
+            Some(p)
+        }
+
+        /// Write one byte (a pending wakeup).  A full pipe means a
+        /// wakeup is already pending — EAGAIN is success.
+        pub(super) fn write_byte(&self) {
+            let byte = 1u8;
+            // SAFETY: write to an fd this pair owns; the read end is
+            // open for the pair's whole life, so no SIGPIPE.
+            let _ = unsafe { write(self.tx, &byte, 1) };
+        }
+
+        /// Drain pending wakeup bytes; returns whether any were read.
+        fn drain(&self) -> bool {
+            let mut buf = [0u8; 64];
+            let mut any = false;
+            loop {
+                // SAFETY: read into a local buffer from an owned fd.
+                let n = unsafe { read(self.rx, buf.as_mut_ptr(), buf.len()) };
+                if n > 0 {
+                    any = true;
+                    if (n as usize) == buf.len() {
+                        continue;
+                    }
+                }
+                return any;
+            }
+        }
+    }
+
+    impl Drop for Pipe {
+        fn drop(&mut self) {
+            // SAFETY: closing fds this pair owns exclusively.
+            unsafe {
+                let _ = close(self.rx);
+                let _ = close(self.tx);
+            }
+        }
+    }
+
+    // ------------------------------------------- SIGCHLD self-pipes
+    //
+    // One process-wide handler fans a child-exit notification out to
+    // every live reactor: a fixed registry of write fds the handler
+    // walks (async-signal-safe: atomic loads + `write(2)`).  Slots are
+    // never unregistered — a retired pipe is *parked* for reuse by the
+    // next waiter instead of closed, so the handler can never write to
+    // a recycled fd.  Parked pipes at worst fill up and take EAGAIN.
+
+    const SIGCHLD_SLOTS: usize = 128;
+    static SIGCHLD_FDS: [AtomicI32; SIGCHLD_SLOTS] =
+        [const { AtomicI32::new(-1) }; SIGCHLD_SLOTS];
+    static INSTALL_HANDLER: Once = Once::new();
+    static PARKED: OnceLock<Mutex<Vec<SigPipe>>> = OnceLock::new();
+
+    /// Address of this thread's `errno` (async-signal-safe TLS lookup).
+    #[cfg(target_os = "linux")]
+    unsafe fn errno_ptr() -> *mut c_int {
+        extern "C" {
+            fn __errno_location() -> *mut c_int;
+        }
+        __errno_location()
+    }
+    #[cfg(not(target_os = "linux"))]
+    unsafe fn errno_ptr() -> *mut c_int {
+        extern "C" {
+            fn __error() -> *mut c_int;
+        }
+        __error()
+    }
+
+    extern "C" fn on_sigchld(_sig: c_int) {
+        // NOTE: this replaces any previously-installed SIGCHLD
+        // disposition (chaining a `signal(2)` return value is undefined
+        // for SA_SIGINFO handlers, so we deliberately do not).  An
+        // embedder that needs its own SIGCHLD handler can install it
+        // after the first `Waiter`; the reactor tolerates losing this
+        // wakeup source — exits are then found via POLLHUP on the
+        // child pipes plus the bounded fd-less re-check.
+        // A handler runs between arbitrary instructions of some thread —
+        // possibly between that thread's failing syscall and its errno
+        // read — so errno must be preserved around our own syscalls.
+        // SAFETY: errno_ptr is a TLS address lookup; async-signal-safe.
+        let errno = unsafe { errno_ptr() };
+        let saved = unsafe { *errno };
+        let byte = 1u8;
+        for slot in &SIGCHLD_FDS {
+            let fd = slot.load(Ordering::Relaxed);
+            if fd >= 0 {
+                // SAFETY: async-signal-safe write to a registered pipe
+                // whose read end is kept open (registered pipes are
+                // parked, never closed).  EAGAIN when full is fine.
+                let _ = unsafe { write(fd, &byte, 1) };
+            }
+        }
+        unsafe { *errno = saved };
+    }
+
+    /// A pipe occupying a SIGCHLD registry slot for its whole life.
+    #[derive(Debug)]
+    struct SigPipe {
+        pipe: Pipe,
+    }
+
+    fn parked() -> &'static Mutex<Vec<SigPipe>> {
+        PARKED.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    /// Reuse a parked SIGCHLD pipe or claim a fresh registry slot.
+    /// `None` when the registry is full (the waiter then reports
+    /// `event_driven() == false` and the reactor keeps bounded sweeps).
+    fn acquire_sig_pipe() -> Option<SigPipe> {
+        if let Some(p) = parked().lock().unwrap().pop() {
+            p.pipe.drain(); // stale wakeups from its parked life
+            return Some(p);
+        }
+        let pipe = Pipe::new()?;
+        for slot in &SIGCHLD_FDS {
+            if slot
+                .compare_exchange(-1, pipe.tx, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                INSTALL_HANDLER.call_once(|| {
+                    let handler: extern "C" fn(c_int) = on_sigchld;
+                    // SAFETY: installing an async-signal-safe handler;
+                    // glibc `signal` gives BSD semantics (SA_RESTART,
+                    // no reinstall), and std installs no SIGCHLD
+                    // handler of its own.
+                    unsafe {
+                        let _ = signal(SIGCHLD, handler as usize);
+                    }
+                });
+                return Some(SigPipe { pipe });
+            }
+        }
+        None // registry full; the unregistered pipe just drops
+    }
+
+    /// `poll(2)`-backed waiter: wake-pipe + optional SIGCHLD pipe +
+    /// caller fds.
+    #[derive(Debug)]
+    pub(super) struct PollWaiter {
+        wake: Arc<Pipe>,
+        sig: Option<SigPipe>,
+        /// Reused scratch buffer for the pollfd array.
+        pollfds: Vec<PollFd>,
+    }
+
+    impl Drop for PollWaiter {
+        fn drop(&mut self) {
+            if let Some(sig) = self.sig.take() {
+                parked().lock().unwrap().push(sig);
+            }
+        }
+    }
+
+    impl PollWaiter {
+        pub(super) fn new() -> Option<PollWaiter> {
+            let wake = Arc::new(Pipe::new()?);
+            Some(PollWaiter { wake, sig: acquire_sig_pipe(), pollfds: Vec::new() })
+        }
+
+        pub(super) fn sigchld_armed(&self) -> bool {
+            self.sig.is_some()
+        }
+
+        pub(super) fn wake_pipe(&self) -> Arc<Pipe> {
+            self.wake.clone()
+        }
+
+        pub(super) fn wait(&mut self, fds: &[i32], timeout: Option<f64>) -> WaitSummary {
+            self.pollfds.clear();
+            self.pollfds.push(PollFd { fd: self.wake.rx, events: POLLIN, revents: 0 });
+            let has_sig = self.sig.is_some();
+            if let Some(s) = &self.sig {
+                self.pollfds.push(PollFd { fd: s.pipe.rx, events: POLLIN, revents: 0 });
+            }
+            let base = self.pollfds.len();
+            for &fd in fds {
+                self.pollfds.push(PollFd { fd, events: POLLIN, revents: 0 });
+            }
+            let mut ms: c_int = match timeout {
+                None => -1,
+                Some(t) => {
+                    ((t.max(0.0) * 1000.0).ceil() as i64).min(c_int::MAX as i64) as c_int
+                }
+            };
+            // An EINTR here is almost certainly our own SIGCHLD landing
+            // on this thread — the handler has already written to the
+            // self-pipe, so an immediate zero-timeout retry reports the
+            // cause through the normal readiness path.
+            let mut retried = false;
+            let rc = loop {
+                // SAFETY: pollfds is a live, correctly-sized repr(C)
+                // array.
+                let rc = unsafe {
+                    poll(self.pollfds.as_mut_ptr(), self.pollfds.len() as c_ulong, ms)
+                };
+                if rc >= 0 || retried {
+                    break rc;
+                }
+                retried = true;
+                ms = 0;
+            };
+            let mut summary = WaitSummary::default();
+            if rc < 0 {
+                // repeated signal/error: have the caller check
+                // everything so no completion can be missed
+                summary.child = true;
+                summary.check_all = true;
+                return summary;
+            }
+            if rc == 0 {
+                summary.timed_out = true;
+                return summary;
+            }
+            if self.pollfds[0].revents != 0 {
+                summary.woke = true;
+                self.wake.drain();
+            }
+            if has_sig && self.pollfds[1].revents != 0 {
+                summary.child = true;
+                if let Some(s) = &self.sig {
+                    s.pipe.drain();
+                }
+            }
+            for (i, pf) in self.pollfds[base..].iter().enumerate() {
+                if pf.revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                    summary.ready.push(i);
+                }
+            }
+            summary
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn park_wait_times_out() {
+        let mut w = Waiter::park_fallback();
+        assert!(!w.event_driven());
+        let t0 = Instant::now();
+        let s = w.wait(&[], Some(0.05));
+        assert!(s.timed_out && !s.woke);
+        assert!(s.check_all);
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn park_wake_is_prompt() {
+        let mut w = Waiter::park_fallback();
+        let h = w.wake_handle();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            h.wake();
+        });
+        let t0 = Instant::now();
+        let s = w.wait(&[], Some(10.0));
+        assert!(s.woke && !s.timed_out);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn park_wake_before_wait_returns_immediately() {
+        let mut w = Waiter::park_fallback();
+        w.wake_handle().wake();
+        let s = w.wait(&[], None);
+        assert!(s.woke);
+    }
+
+    #[cfg(all(unix, not(feature = "portable-sweep")))]
+    mod unix {
+        use super::super::*;
+        use std::time::{Duration, Instant};
+
+        #[test]
+        fn poll_waiter_selected_and_event_driven() {
+            let w = Waiter::new();
+            assert!(w.event_driven(), "SIGCHLD slot must be claimable");
+        }
+
+        #[test]
+        fn wake_interrupts_infinite_wait() {
+            let mut w = Waiter::new();
+            let h = w.wake_handle();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                h.wake();
+            });
+            let t0 = Instant::now();
+            let s = w.wait(&[], None);
+            assert!(s.woke);
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            t.join().unwrap();
+        }
+
+        #[test]
+        fn wakes_coalesce() {
+            let mut w = Waiter::new();
+            let h = w.wake_handle();
+            for _ in 0..100 {
+                h.wake();
+            }
+            let s = w.wait(&[], Some(1.0));
+            assert!(s.woke);
+            // fully drained: the next wait must not report a wake again
+            // (another test's SIGCHLD may still end it early)
+            let s = w.wait(&[], Some(0.02));
+            assert!(!s.woke);
+        }
+
+        #[test]
+        fn child_exit_wakes_the_wait() {
+            let mut w = Waiter::new();
+            assert!(w.event_driven());
+            let mut child = std::process::Command::new("/bin/sleep")
+                .arg("0.05")
+                .spawn()
+                .unwrap();
+            let t0 = Instant::now();
+            // wait far longer than the child runs: SIGCHLD must end it
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                let s = w.wait(&[], Some(10.0));
+                if s.child {
+                    break;
+                }
+                // another test's child may wake us spuriously; keep
+                // waiting for ours within the deadline
+                assert!(Instant::now() < deadline, "SIGCHLD never arrived");
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            child.wait().unwrap();
+        }
+
+        #[test]
+        fn fd_readiness_reported_with_negative_fds_ignored() {
+            extern "C" {
+                fn pipe(fds: *mut i32) -> i32;
+                fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+                fn close(fd: i32) -> i32;
+            }
+            let mut w = Waiter::new();
+            // a pipe with a pending byte: its slot must be ready
+            let mut fds = [-1i32; 2];
+            // SAFETY: plain pipe syscalls on fds local to this test.
+            unsafe {
+                assert_eq!(pipe(fds.as_mut_ptr()), 0);
+                let b = 7u8;
+                assert_eq!(write(fds[1], &b, 1), 1);
+            }
+            let s = w.wait(&[-1, fds[0], -1], Some(1.0));
+            assert_eq!(s.ready, vec![1], "only the real fd is ready");
+            // SAFETY: closing the fds opened above.
+            unsafe {
+                let _ = close(fds[0]);
+                let _ = close(fds[1]);
+            }
+        }
+
+        #[test]
+        fn waiters_recycle_sigchld_slots() {
+            // far more waiters than registry slots, sequentially:
+            // parking must recycle slots so every one stays event-driven
+            for _ in 0..300 {
+                let w = Waiter::new();
+                assert!(w.event_driven());
+            }
+        }
+    }
+}

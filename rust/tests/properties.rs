@@ -429,3 +429,407 @@ fn prop_unit_queue_preserves_all_items() {
         out == *items
     });
 }
+
+// ------------------------------------------------- bitmap nodelist
+
+/// The seed's `Vec<bool>` NodeList, kept verbatim as the reference
+/// model: the packed-bitmap implementation must match it bit-for-bit —
+/// free counts, first-fit scan results, and (critically for Fig. 8 and
+/// the DES twin) the *modeled* `scanned` slot cost.
+struct RefNodeList {
+    cores_per_node: usize,
+    busy: Vec<Vec<bool>>,
+    free_per_node: Vec<usize>,
+    free_total: usize,
+    limit: usize,
+}
+
+impl RefNodeList {
+    fn new(nodes: usize, cores_per_node: usize) -> Self {
+        RefNodeList {
+            cores_per_node,
+            busy: vec![vec![false; cores_per_node]; nodes],
+            free_per_node: vec![cores_per_node; nodes],
+            free_total: nodes * cores_per_node,
+            limit: nodes * cores_per_node,
+        }
+    }
+
+    fn for_cores(cores: usize, cores_per_node: usize) -> Self {
+        let mut nl = Self::new(cores.div_ceil(cores_per_node), cores_per_node);
+        nl.restrict_to(cores);
+        nl
+    }
+
+    fn restrict_to(&mut self, cores: usize) {
+        let total = self.nodes() * self.cores_per_node;
+        assert!(cores <= total && cores > 0);
+        let mut to_block = total - cores;
+        'outer: for node in (0..self.nodes()).rev() {
+            for core in (0..self.cores_per_node).rev() {
+                if to_block == 0 {
+                    break 'outer;
+                }
+                if !self.busy[node][core] {
+                    self.busy[node][core] = true;
+                    self.free_per_node[node] -= 1;
+                    self.free_total -= 1;
+                    to_block -= 1;
+                }
+            }
+        }
+        self.limit = cores;
+    }
+
+    fn nodes(&self) -> usize {
+        self.busy.len()
+    }
+
+    fn free_on(&self, node: usize) -> usize {
+        self.free_per_node[node]
+    }
+
+    fn occupy(&mut self, cores: &[(u32, u32)]) {
+        for &(n, c) in cores {
+            let (n, c) = (n as usize, c as usize);
+            assert!(!self.busy[n][c], "ref double-allocation");
+            self.busy[n][c] = true;
+            self.free_per_node[n] -= 1;
+            self.free_total -= 1;
+        }
+    }
+
+    fn release(&mut self, cores: &[(u32, u32)]) {
+        for &(n, c) in cores {
+            let (n, c) = (n as usize, c as usize);
+            assert!(self.busy[n][c], "ref double-free");
+            self.busy[n][c] = false;
+            self.free_per_node[n] += 1;
+            self.free_total += 1;
+        }
+    }
+
+    fn scan_node(&self, node: usize, count: usize) -> Option<(Vec<u32>, usize)> {
+        if self.free_per_node[node] < count {
+            return None;
+        }
+        let mut found = Vec::with_capacity(count);
+        let mut scanned = 0;
+        for (c, &b) in self.busy[node].iter().enumerate() {
+            scanned += 1;
+            if !b {
+                found.push(c as u32);
+                if found.len() == count {
+                    return Some((found, scanned));
+                }
+            }
+        }
+        None
+    }
+
+    /// The seed's faithful Linear-mode allocation (single-node first
+    /// fit / consecutive whole nodes + remainder), verbatim, including
+    /// the modeled `scanned` accounting.
+    fn linear_allocate(&mut self, cores: usize) -> Option<(Vec<(u32, u32)>, usize)> {
+        if cores == 0 || cores > self.limit || cores > self.free_total {
+            return None;
+        }
+        let cpn = self.cores_per_node;
+        if cores <= cpn {
+            let mut scanned = 0usize;
+            for node in 0..self.nodes() {
+                if let Some((found, s)) = self.scan_node(node, cores) {
+                    scanned += s;
+                    let pairs: Vec<(u32, u32)> =
+                        found.into_iter().map(|c| (node as u32, c)).collect();
+                    self.occupy(&pairs);
+                    return Some((pairs, scanned));
+                }
+                scanned += cpn;
+            }
+            return None;
+        }
+        let full_nodes = cores / cpn;
+        let remainder = cores % cpn;
+        let span = full_nodes + usize::from(remainder > 0);
+        let n_nodes = self.nodes();
+        if span > n_nodes {
+            return None;
+        }
+        let mut scanned = 0usize;
+        'outer: for start in 0..=(n_nodes - span) {
+            scanned += 1;
+            for k in 0..full_nodes {
+                if self.free_on(start + k) != cpn {
+                    continue 'outer;
+                }
+            }
+            if remainder > 0 && self.free_on(start + full_nodes) < remainder {
+                continue;
+            }
+            let mut pairs = Vec::with_capacity(cores);
+            for k in 0..full_nodes {
+                for c in 0..cpn {
+                    pairs.push(((start + k) as u32, c as u32));
+                }
+            }
+            if remainder > 0 {
+                let (found, s) = self.scan_node(start + full_nodes, remainder).unwrap();
+                scanned += s;
+                pairs.extend(found.into_iter().map(|c| ((start + full_nodes) as u32, c)));
+            }
+            self.occupy(&pairs);
+            return Some((pairs, scanned));
+        }
+        None
+    }
+}
+
+/// (op, node-ish, count-ish) scripts for nodelist-level comparison.
+fn nodelist_scripts() -> prop::Gen<Vec<(u8, u8, u8)>> {
+    prop::vecs(
+        prop::Gen::new(|rng: &mut Pcg| {
+            (rng.below(100) as u8, rng.below(64) as u8, rng.below(120) as u8)
+        }),
+        1,
+        300,
+    )
+}
+
+/// Random occupy/release/scan sequences leave the bitmap NodeList and
+/// the reference model in identical states, with identical scan
+/// results and modeled costs.  Exercised on a single-word geometry, a
+/// multi-word geometry (cpn > 64), and a tail-restricted one.
+#[test]
+fn prop_bitmap_nodelist_matches_reference() {
+    use rp::agent::NodeList;
+    for (nodes, cpn, restrict) in [(8usize, 16usize, 0usize), (3, 100, 0), (4, 16, 53)] {
+        forall(&nodelist_scripts(), 25, |script| {
+            let (mut a, mut b) = if restrict > 0 {
+                (NodeList::for_cores(restrict, cpn), RefNodeList::for_cores(restrict, cpn))
+            } else {
+                (NodeList::new(nodes, cpn), RefNodeList::new(nodes, cpn))
+            };
+            let mut live: Vec<Vec<(u32, u32)>> = Vec::new();
+            for &(op, node_pick, count_pick) in script {
+                if op < 55 {
+                    // scan + occupy on a random node
+                    let node = node_pick as usize % a.nodes();
+                    let count = 1 + count_pick as usize % cpn;
+                    let got = a.scan_node(node, count);
+                    let want = b.scan_node(node, count);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((cores, scanned, _words)), Some((ref_cores, ref_scanned))) => {
+                            if cores != ref_cores || scanned != ref_scanned {
+                                return false;
+                            }
+                            let pairs: Vec<(u32, u32)> =
+                                cores.into_iter().map(|c| (node as u32, c)).collect();
+                            a.occupy(&pairs);
+                            b.occupy(&pairs);
+                            live.push(pairs);
+                        }
+                        _ => return false, // feasibility must agree
+                    }
+                } else if op < 80 {
+                    if !live.is_empty() {
+                        let idx = (node_pick as usize * 13 + count_pick as usize)
+                            % live.len();
+                        let pairs = live.swap_remove(idx);
+                        a.release(&pairs);
+                        b.release(&pairs);
+                    }
+                } else {
+                    // scan-only probe must not disturb state
+                    let node = node_pick as usize % a.nodes();
+                    let count = 1 + count_pick as usize % cpn;
+                    let got = a.scan_node(node, count).map(|(c, s, _)| (c, s));
+                    if got != b.scan_node(node, count) {
+                        return false;
+                    }
+                }
+                if a.free_total() != b.free_total {
+                    return false;
+                }
+                for n in 0..a.nodes() {
+                    if a.free_on(n) != b.free_on(n) {
+                        return false;
+                    }
+                }
+                // the cursor invariant: every node below it fully busy
+                for n in 0..a.first_maybe_free() {
+                    if a.free_on(n) != 0 {
+                        return false;
+                    }
+                }
+            }
+            a.capacity() == b.limit
+        });
+    }
+}
+
+/// The Linear-mode ContinuousScheduler over the bitmap must produce the
+/// same allocations with the same modeled `scanned` cost as the seed's
+/// Vec<bool> walk — this is what keeps Fig. 8 and the calibrated DES
+/// `sched_service` unchanged across the allocator rewrite.
+#[test]
+fn prop_linear_scheduler_modeled_cost_matches_reference() {
+    for capacity in [100usize, 128] {
+        forall(&scripts(), 40, |script| {
+            let mut sched = ContinuousScheduler::for_cores(capacity, 16, SearchMode::Linear);
+            let mut reference = RefNodeList::for_cores(capacity, 16);
+            let mut live: Vec<rp::agent::Allocation> = Vec::new();
+            for &(op, size) in script {
+                if op < 60 {
+                    let want = size as usize;
+                    let got = sched.allocate(want);
+                    let expect = reference.linear_allocate(want);
+                    match (got, expect) {
+                        (None, None) => {}
+                        (Some(a), Some((ref_cores, ref_scanned))) => {
+                            if a.cores != ref_cores || a.scanned != ref_scanned {
+                                return false;
+                            }
+                            live.push(a);
+                        }
+                        _ => return false,
+                    }
+                } else if !live.is_empty() {
+                    let idx = (op as usize * 7 + size as usize) % live.len();
+                    let a = live.swap_remove(idx);
+                    reference.release(&a.cores);
+                    sched.release(&a);
+                }
+                if sched.free_cores() != reference.free_total {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}
+
+/// Double-allocation / double-free panic behavior survives the bitmap
+/// rewrite (the word-batched occupy/release keep the same asserts).
+#[test]
+fn bitmap_nodelist_panics_on_invalid_transitions() {
+    use rp::agent::NodeList;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    for cpn in [4usize, 100] {
+        let double_alloc = catch_unwind(AssertUnwindSafe(|| {
+            let mut nl = NodeList::new(2, cpn);
+            nl.occupy(&[(0, 1)]);
+            nl.occupy(&[(0, 1)]);
+        }));
+        assert!(double_alloc.is_err(), "double-allocation must panic (cpn={cpn})");
+        let double_free = catch_unwind(AssertUnwindSafe(|| {
+            let mut nl = NodeList::new(2, cpn);
+            nl.release(&[(1, 0)]);
+        }));
+        assert!(double_free.is_err(), "double-free must panic (cpn={cpn})");
+    }
+}
+
+/// The seed's Torus allocation (single-node first fit / wraparound
+/// whole-node runs), verbatim over the reference model, including its
+/// modeled `scanned` accounting.
+fn ref_torus_allocate(nl: &mut RefNodeList, cores: usize) -> Option<(Vec<(u32, u32)>, usize)> {
+    if cores == 0 || cores > nl.free_total {
+        return None;
+    }
+    let cpn = nl.cores_per_node;
+    if cores <= cpn {
+        let mut scanned = 0usize;
+        for node in 0..nl.nodes() {
+            if let Some((found, s)) = nl.scan_node(node, cores) {
+                scanned += s;
+                let pairs: Vec<(u32, u32)> =
+                    found.into_iter().map(|c| (node as u32, c)).collect();
+                nl.occupy(&pairs);
+                return Some((pairs, scanned));
+            }
+            scanned += cpn;
+        }
+        return None;
+    }
+    let n = nl.nodes();
+    let span = cores.div_ceil(cpn);
+    if span > n {
+        return None;
+    }
+    let mut scanned = 0usize;
+    let mut run = 0usize;
+    let mut run_start = 0usize;
+    let mut chosen = None;
+    for i in 0..(2 * n - 1) {
+        let node = i % n;
+        scanned += 1;
+        if nl.free_on(node) == cpn {
+            if run == 0 {
+                run_start = i;
+            }
+            run += 1;
+            if run == span {
+                chosen = Some(run_start % n);
+                break;
+            }
+        } else {
+            run = 0;
+            if i >= n {
+                break; // second pass only extends a run crossing the seam
+            }
+        }
+    }
+    let start = chosen?;
+    let mut pairs = Vec::with_capacity(cores);
+    let mut remaining = cores;
+    for k in 0..span {
+        let node = (start + k) % n;
+        let take = remaining.min(cpn);
+        for c in 0..take {
+            pairs.push((node as u32, c as u32));
+        }
+        remaining -= take;
+    }
+    nl.occupy(&pairs);
+    Some((pairs, scanned))
+}
+
+/// The Torus scheduler's cursor-skip rewrite must keep allocations and
+/// modeled costs bit-identical to the seed walk, like Continuous does —
+/// including wraparound runs over a churned node list.
+#[test]
+fn prop_torus_modeled_cost_matches_reference() {
+    forall(&scripts(), 40, |script| {
+        let mut sched = TorusScheduler::new(vec![2, 2, 2], 16);
+        let mut reference = RefNodeList::new(8, 16);
+        let mut live: Vec<rp::agent::Allocation> = Vec::new();
+        for &(op, size) in script {
+            if op < 60 {
+                let want = size as usize;
+                let got = sched.allocate(want);
+                let expect = ref_torus_allocate(&mut reference, want);
+                match (got, expect) {
+                    (None, None) => {}
+                    (Some(a), Some((ref_cores, ref_scanned))) => {
+                        if a.cores != ref_cores || a.scanned != ref_scanned {
+                            return false;
+                        }
+                        live.push(a);
+                    }
+                    _ => return false,
+                }
+            } else if !live.is_empty() {
+                let idx = (op as usize * 7 + size as usize) % live.len();
+                let a = live.swap_remove(idx);
+                reference.release(&a.cores);
+                sched.release(&a);
+            }
+            if sched.free_cores() != reference.free_total {
+                return false;
+            }
+        }
+        true
+    });
+}

@@ -37,7 +37,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .name(format!("screen-{i:02}"))
             })
             .collect(),
-    );
+    )?;
     umgr.wait_all(60.0)?;
 
     // steering: parse real outputs, generate follow-ups at runtime
@@ -64,7 +64,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("screening promoted {}/{} candidates", refine.len(), screen.len());
     assert!(!refine.is_empty());
-    let refined = umgr.submit(refine);
+    let refined = umgr.submit(refine)?;
     umgr.wait_all(60.0)?;
 
     // phase 3 — a final aggregation task, submitted only now that the
@@ -73,7 +73,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "/bin/sh",
         vec!["-c".into(), "echo aggregate done".into()],
     )
-    .name("aggregate")]);
+    .name("aggregate")])?;
     umgr.wait_all(60.0)?;
 
     let all: Vec<&Unit> = screen.iter().chain(refined.iter()).chain(agg.iter()).collect();

@@ -65,7 +65,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     .name(format!("md-c{chunk}-m{member:02}")),
             );
         }
-        let md_units = umgr.submit(descrs);
+        let md_units = umgr.submit(descrs)?;
         umgr.wait_all(600.0)?;
         // analysis generation on the evolved trajectories
         let rg_units = umgr.submit(
@@ -74,7 +74,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     UnitDescription::pjrt("rg_n256", m).name(format!("rg-c{chunk}-m{m:02}"))
                 })
                 .collect(),
-        );
+        )?;
         umgr.wait_all(600.0)?;
 
         // report ensemble state after this chunk

@@ -29,7 +29,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .name(format!("echo-{i}")),
         );
     }
-    let units = umgr.submit(descrs);
+    let units = umgr.submit(descrs)?;
     umgr.wait_all(60.0)?;
 
     let done = units.iter().filter(|u| u.state() == UnitState::Done).count();

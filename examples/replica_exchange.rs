@@ -51,7 +51,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         .name(format!("r{round}-replica{i}"))
                 })
                 .collect(),
-        );
+        )?;
         umgr.wait_all(600.0)?; // generation barrier
 
         let pe: Vec<f64> = units

@@ -1,18 +1,25 @@
 //! A3 (ablation) — wait-pool scheduling policy under workload
-//! heterogeneity.
+//! heterogeneity, plus the anti-starvation reservation window.
 //!
 //! The paper's Agent Scheduler places units in submission order; a wide
 //! (multi-node MPI) unit that does not currently fit blocks everything
 //! behind it (head-of-line).  RP's follow-on characterizations at scale
 //! restructured scheduling around a wait-pool so smaller units can
 //! overtake a blocked head.  This bench sweeps the fraction of wide
-//! units and quantifies what the `backfill` policy buys over the
-//! faithful `fifo` policy on the same calibrated Stampede model, for
-//! both search modes.
+//! units and quantifies what the overtaking policies (`backfill`,
+//! `priority`, `fair_share`) buy over the faithful `fifo` policy on the
+//! same calibrated Stampede model, shows `priority` strictly reordering
+//! a mixed-priority workload and `fair_share` protecting a minority
+//! submitter, and ablates the reservation window on a workload built to
+//! starve a wide unit.
 
 use rp::agent::scheduler::{SchedPolicy, SearchMode};
-use rp::bench_harness::{policy_probe, write_csv, Check, Report};
+use rp::api::UnitDescription;
+use rp::bench_harness::{policy_probe, policy_probe_with, write_csv, Check, Report};
 use rp::config::ResourceConfig;
+use rp::ids::UnitId;
+use rp::sim::{AgentSim, AgentSimConfig, AgentSimResult};
+use rp::states::UnitState;
 use rp::workload::Workload;
 
 const PILOT: usize = 256;
@@ -22,11 +29,13 @@ fn run(st: &ResourceConfig, wl: &Workload, policy: SchedPolicy, mode: SearchMode
     policy_probe(st, wl, PILOT, policy, mode)
 }
 
-fn main() {
-    let st = ResourceConfig::load("stampede").unwrap();
-    let mut report = Report::new("A3: wait-pool policy (fifo vs backfill) x heterogeneity");
-    let mut rows = vec![];
+/// Virtual time unit `u` entered `state` in a finished sim.
+fn entered_at(r: &AgentSimResult, u: u64, state: UnitState) -> f64 {
+    r.profile.time_of(UnitId(u), state).expect("state recorded")
+}
 
+fn heterogeneity_sweep(st: &ResourceConfig, report: &mut Report) {
+    let mut rows = vec![];
     for (label, frac_wide) in
         [("homogeneous", 0.0), ("10% wide", 0.10), ("25% wide", 0.25), ("50% wide", 0.50)]
     {
@@ -39,42 +48,230 @@ fn main() {
                 7,
             )
         };
-        let (t_fifo, u_fifo) = run(&st, &wl, SchedPolicy::Fifo, SearchMode::Linear);
-        let (t_bf, u_bf) = run(&st, &wl, SchedPolicy::Backfill, SearchMode::Linear);
-        rows.push(vec![
-            label.to_string(),
-            format!("{t_fifo:.1}"),
-            format!("{t_bf:.1}"),
-            format!("{u_fifo:.4}"),
-            format!("{u_bf:.4}"),
-            format!("{:.2}", t_fifo / t_bf),
-        ]);
+        let mut row = vec![label.to_string()];
+        let mut ttcs = vec![];
+        let mut utils = vec![];
+        for policy in SchedPolicy::ALL {
+            let (ttc, util) = run(st, &wl, policy, SearchMode::Linear);
+            row.push(format!("{ttc:.1}"));
+            row.push(format!("{util:.4}"));
+            ttcs.push(ttc);
+            utils.push(util);
+        }
+        row.push(format!("{:.2}", ttcs[0] / ttcs[1]));
         println!(
-            "{label:>12}: fifo {t_fifo:>7.1}s ({:>4.1}%)  backfill {t_bf:>7.1}s ({:>4.1}%)  \
-             speedup {:.2}x",
-            100.0 * u_fifo,
-            100.0 * u_bf,
-            t_fifo / t_bf
+            "{label:>12}: fifo {:>7.1}s  backfill {:>7.1}s  priority {:>7.1}s  \
+             fair_share {:>7.1}s  (backfill speedup {:.2}x)",
+            ttcs[0],
+            ttcs[1],
+            ttcs[2],
+            ttcs[3],
+            ttcs[0] / ttcs[1]
         );
-        report.add(Check::shape(
-            format!("{label}: backfill never hurts"),
-            "backfill ttc <= fifo ttc",
-            t_bf <= t_fifo * 1.001,
-        ));
+        rows.push(row);
+        // every overtaking policy must recover the blocked-head loss
+        for (i, name) in [(1, "backfill"), (2, "priority"), (3, "fair_share")] {
+            report.add(Check::shape(
+                format!("{label}: {name} never hurts"),
+                "ttc <= fifo ttc",
+                ttcs[i] <= ttcs[0] * 1.001,
+            ));
+        }
         if frac_wide >= 0.25 {
+            // the gain must stay real even with the default reservation
+            // window active (the seed's stranded-cores regression check)
             report.add(Check::shape(
                 format!("{label}: backfill recovers stranded cores"),
                 "utilization gain > 2%",
-                u_bf > u_fifo + 0.02,
+                utils[1] > utils[0] + 0.02,
             ));
         }
+        // without explicit priorities / distinct tags, the new policies
+        // order exactly like backfill (seq tie-break) — same placements,
+        // same RNG draws, bit-identical result
+        report.add(Check::shape(
+            format!("{label}: priority degenerates to backfill"),
+            "identical ttc without priorities",
+            (ttcs[2] - ttcs[1]).abs() < 1e-9,
+        ));
+        report.add(Check::shape(
+            format!("{label}: fair_share degenerates to backfill"),
+            "identical ttc with one tag",
+            (ttcs[3] - ttcs[1]).abs() < 1e-9,
+        ));
     }
     write_csv(
         "ablation_policy",
-        "workload,fifo_ttc,backfill_ttc,fifo_util,backfill_util,speedup",
+        "workload,fifo_ttc,fifo_util,backfill_ttc,backfill_util,priority_ttc,priority_util,\
+         fair_share_ttc,fair_share_util,backfill_speedup",
         &rows,
     )
     .unwrap();
+}
+
+/// `priority` must strictly reorder completion of a mixed-priority
+/// workload: every high-priority unit completes before every low one.
+fn priority_reorder(st: &ResourceConfig, report: &mut Report) {
+    let pilot = 64usize;
+    let mut units = vec![];
+    for (prio, tag) in [(-1i32, "low"), (0, "mid"), (9, "high")] {
+        for i in 0..pilot {
+            units.push(UnitDescription::sleep(60.0).name(format!("{tag}-{i:04}")).priority(prio));
+        }
+    }
+    let wl = Workload { units };
+    let mut cfg = AgentSimConfig::paper_default(pilot);
+    cfg.policy = SchedPolicy::Priority;
+    cfg.generation_size = pilot;
+    let r = AgentSim::new(st, cfg, &wl).run();
+    let n = pilot as u64;
+    let done = |lo: u64, hi: u64| -> Vec<f64> {
+        (lo..hi).map(|u| entered_at(&r, u, UnitState::UmStagingOutPending)).collect()
+    };
+    let (lows, mids, highs) = (done(0, n), done(n, 2 * n), done(2 * n, 3 * n));
+    let max_high = highs.iter().cloned().fold(f64::MIN, f64::max);
+    let min_mid = mids.iter().cloned().fold(f64::MAX, f64::min);
+    let max_mid = mids.iter().cloned().fold(f64::MIN, f64::max);
+    let min_low = lows.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "priority reorder: high done by {max_high:.1}s, mid [{min_mid:.1}..{max_mid:.1}]s, \
+         low from {min_low:.1}s"
+    );
+    let min_high = highs.iter().cloned().fold(f64::MAX, f64::min);
+    let max_low = lows.iter().cloned().fold(f64::MIN, f64::max);
+    write_csv(
+        "ablation_policy_priority",
+        "class,first_done,last_done",
+        &[
+            vec!["high".into(), format!("{min_high:.1}"), format!("{max_high:.1}")],
+            vec!["mid".into(), format!("{min_mid:.1}"), format!("{max_mid:.1}")],
+            vec!["low".into(), format!("{min_low:.1}"), format!("{max_low:.1}")],
+        ],
+    )
+    .unwrap();
+    report.add(Check::shape(
+        "priority strictly reorders completion",
+        "all high < all mid < all low",
+        max_high < min_mid && max_mid < min_low,
+    ));
+}
+
+/// `fair_share` pulls a minority submitter's completions forward out of
+/// a greedy submitter's flood.
+fn fair_share_protects(st: &ResourceConfig, report: &mut Report) {
+    let pilot = 64usize;
+    let mut units = vec![];
+    for i in 0..960 {
+        units.push(UnitDescription::sleep(30.0).name(format!("greedy-{i:04}")));
+    }
+    for i in 0..64 {
+        units.push(UnitDescription::sleep(30.0).name(format!("minor-{i:04}")));
+    }
+    let wl = Workload { units };
+    let mean_minor = |policy: SchedPolicy| -> f64 {
+        let mut cfg = AgentSimConfig::paper_default(pilot);
+        cfg.policy = policy;
+        cfg.generation_size = pilot;
+        let r = AgentSim::new(st, cfg, &wl).run();
+        let total: f64 = (960..1024)
+            .map(|u| entered_at(&r, u, UnitState::UmStagingOutPending))
+            .sum();
+        total / 64.0
+    };
+    let fair = mean_minor(SchedPolicy::FairShare);
+    let backfill = mean_minor(SchedPolicy::Backfill);
+    println!(
+        "fair share: minority tag mean completion {fair:.1}s (fair_share) vs \
+         {backfill:.1}s (backfill)"
+    );
+    write_csv(
+        "ablation_policy_fairshare",
+        "policy,minor_mean_done",
+        &[
+            vec!["fair_share".into(), format!("{fair:.1}")],
+            vec!["backfill".into(), format!("{backfill:.1}")],
+        ],
+    )
+    .unwrap();
+    report.add(Check::shape(
+        "fair_share protects the minority tag",
+        "minority mean completion < 0.5x backfill's",
+        fair < backfill * 0.5,
+    ));
+}
+
+/// Starvation ablation: a 32-core unit behind a steady 1-core stream.
+/// Without the reservation window the stream starves it until dry; the
+/// window bounds the overtakes, at negligible total-throughput cost.
+fn starvation_ablation(st: &ResourceConfig, report: &mut Report) {
+    let pilot = 32usize;
+    let mut units = vec![];
+    for i in 0..pilot {
+        units.push(UnitDescription::sleep(10.0).name(format!("occ-{i:04}")));
+    }
+    units.push(UnitDescription::sleep(1.0).name("wide-0000").cores(pilot).mpi(true));
+    for i in 0..400 {
+        units.push(UnitDescription::sleep(1.0).name(format!("small-{i:04}")));
+    }
+    let wl = Workload { units };
+    let wide = pilot as u64;
+    let mut rows = vec![];
+    let mut results = vec![];
+    for window in [0usize, 8, 64] {
+        let mut cfg = AgentSimConfig::paper_default(pilot);
+        cfg.policy = SchedPolicy::Backfill;
+        cfg.reserve_window = window;
+        cfg.generation_size = pilot;
+        let r = AgentSim::new(st, cfg, &wl).run();
+        let wide_started = entered_at(&r, wide, UnitState::AExecuting);
+        let overtaken = ((wide + 1)..(wide + 1 + 400))
+            .filter(|&u| entered_at(&r, u, UnitState::AExecuting) < wide_started)
+            .count();
+        println!(
+            "reserve_window {window:>3}: wide starts at {wide_started:>6.1}s after \
+             {overtaken:>3} overtakes (ttc {:.1}s)",
+            r.ttc_a
+        );
+        rows.push(vec![
+            window.to_string(),
+            format!("{wide_started:.1}"),
+            overtaken.to_string(),
+            format!("{:.1}", r.ttc_a),
+        ]);
+        results.push((window, wide_started, overtaken, r.ttc_a));
+    }
+    write_csv(
+        "ablation_policy_starvation",
+        "reserve_window,wide_start,overtaken_by,ttc_a",
+        &rows,
+    )
+    .unwrap();
+    report.add(Check::shape(
+        "window=0 starves the wide unit",
+        "wide overtaken by >= 350 smalls",
+        results[0].2 >= 350,
+    ));
+    report.add(Check::shape(
+        "window=8 bounds the overtaking",
+        "wide overtaken by <= 8 + pilot smalls",
+        results[1].2 <= 8 + pilot,
+    ));
+    report.add(Check::shape(
+        "reservation is cheap",
+        "window=8 ttc within 5% of unreserved",
+        results[1].3 <= results[0].3 * 1.05,
+    ));
+}
+
+fn main() {
+    let st = ResourceConfig::load("stampede").unwrap();
+    let mut report =
+        Report::new("A3: wait-pool policy (fifo/backfill/priority/fair_share) x heterogeneity");
+
+    heterogeneity_sweep(&st, &mut report);
+    priority_reorder(&st, &mut report);
+    fair_share_protects(&st, &mut report);
+    starvation_ablation(&st, &mut report);
 
     // policy x search mode: the two axes compose (search mode changes
     // the per-allocation cost model, policy changes the placement order)
@@ -85,7 +282,7 @@ fn main() {
     );
     let mut grid_rows = vec![];
     for mode in [SearchMode::Linear, SearchMode::FreeList] {
-        for policy in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
+        for policy in SchedPolicy::ALL {
             let (ttc, util) = run(&st, &wl, policy, mode);
             grid_rows.push(vec![
                 mode.name().to_string(),
@@ -94,7 +291,7 @@ fn main() {
                 format!("{util:.4}"),
             ]);
             println!(
-                "search {:>8} x policy {:>8}: ttc_a {ttc:>7.1}s  util {:>4.1}%",
+                "search {:>8} x policy {:>10}: ttc_a {ttc:>7.1}s  util {:>4.1}%",
                 mode.name(),
                 policy.name(),
                 100.0 * util
@@ -103,6 +300,18 @@ fn main() {
     }
     write_csv("ablation_policy_grid", "search,policy,ttc_a,core_utilization", &grid_rows)
         .unwrap();
+
+    // the reservation window must not tax ordinary mixed workloads:
+    // default window vs disabled on the 25%-wide mix, within 5%
+    let (_, u_reserved) =
+        policy_probe_with(&st, &wl, PILOT, SchedPolicy::Backfill, SearchMode::Linear, 64);
+    let (_, u_open) =
+        policy_probe_with(&st, &wl, PILOT, SchedPolicy::Backfill, SearchMode::Linear, 0);
+    report.add(Check::shape(
+        "reservation window utilization cost",
+        "default window within 5% of unreserved backfill",
+        u_reserved >= u_open - 0.05,
+    ));
 
     std::process::exit(report.print());
 }

@@ -28,7 +28,7 @@ use rp::agent::executer::ReactorStatsSnapshot;
 use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig, SharedUnit};
 use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode};
 use rp::api::{PilotDescription, Session, UnitDescription};
-use rp::bench_harness::{write_bench_json, write_csv, Check, Report};
+use rp::bench_harness::{validate_repo_bench_json, write_bench_json, write_csv, Check, Report};
 use rp::config::ResourceConfig;
 use rp::ids::UnitId;
 use rp::profiler::{Analysis, Profiler};
@@ -75,7 +75,7 @@ fn bench_real_agent(n: usize) -> f64 {
         .unwrap();
     umgr.add_pilot(&pilot);
     let t0 = util::now();
-    umgr.submit((0..n).map(|_| UnitDescription::sleep(0.0)).collect());
+    umgr.submit((0..n).map(|_| UnitDescription::sleep(0.0)).collect()).unwrap();
     umgr.wait_all(300.0).unwrap();
     let rate = n as f64 / (util::now() - t0);
     pilot.drain().unwrap();
@@ -108,6 +108,7 @@ fn bench_reactor_inflight(
         scheduler_algorithm: "continuous".into(),
         search_mode: SearchMode::FreeList,
         scheduler_policy: SchedPolicy::Fifo,
+        reserve_window: 64,
         sandbox: std::env::temp_dir().join("rp_perf_reactor"),
         synthetic_as_process: true, // real children
     };
@@ -267,7 +268,18 @@ fn main() {
     )
     .unwrap();
 
+    // schema-check every committed BENCH_*.json at the repository root
+    // (including the two refreshed above).  This gates even --quick:
+    // a malformed trajectory record is breakage, not runner noise.
+    let n_bench_docs = validate_repo_bench_json()
+        .unwrap_or_else(|e| panic!("BENCH_*.json schema check failed: {e}"));
+
     let mut report = Report::new("perf hot paths");
+    report.add(Check::shape(
+        "bench trajectory records",
+        "every BENCH_*.json matches rp-bench-v1",
+        n_bench_docs >= 2,
+    ));
     report.add(Check::shape("event queue", ">= 1M ops/s", ev > 1e6));
     report.add(Check::shape(
         "heavy sim wall",

@@ -27,7 +27,7 @@ fn one_run(profile: bool, rep: usize) -> f64 {
         .unwrap();
     umgr.add_pilot(&pilot);
     let t0 = util::now();
-    umgr.submit((0..UNITS).map(|_| UnitDescription::sleep(0.002)).collect());
+    umgr.submit((0..UNITS).map(|_| UnitDescription::sleep(0.002)).collect()).unwrap();
     umgr.wait_all(120.0).unwrap();
     let wall = util::now() - t0;
     pilot.drain().unwrap();

@@ -7,7 +7,10 @@
 //! pass on every submit and every core-release event (no polling, no
 //! head-of-line blocking of the thread).  The pool's policy decides
 //! whether a blocked head stalls the queue (`fifo`, paper-faithful) or
-//! smaller units may overtake it (`backfill`).
+//! later units may overtake it (`backfill`, `priority`, `fair_share`);
+//! the overtaking policies are bounded by the reservation window
+//! (`agent.reserve_window`) so a wide head is never starved (see
+//! [`WaitPool`]).
 //!
 //! Execution is event-driven too: a single **executer reactor** thread
 //! owns the in-flight set ([`Reactor`]) — it starts children without
@@ -234,6 +237,10 @@ pub struct RealAgentConfig {
     pub scheduler_algorithm: String,
     pub search_mode: SearchMode,
     pub scheduler_policy: SchedPolicy,
+    /// Wait-pool reservation window: a blocked head overtaken this many
+    /// times gets its core demand reserved (0 disables the guard).  See
+    /// [`WaitPool`] for the starvation semantics.
+    pub reserve_window: usize,
     pub sandbox: PathBuf,
     /// Run synthetic units as real `sleep` processes (true exercises the
     /// spawn path; false models them as reactor timers).
@@ -254,6 +261,7 @@ impl RealAgentConfig {
             search_mode: SearchMode::parse(&cfg.agent.search_mode).unwrap_or_default(),
             scheduler_policy: SchedPolicy::parse(&cfg.agent.scheduler_policy)
                 .unwrap_or_default(),
+            reserve_window: cfg.agent.reserve_window,
             sandbox,
             synthetic_as_process: false,
         }
@@ -277,6 +285,11 @@ struct SchedState {
     sched: Box<dyn CoreScheduler>,
     wake_seq: u64,
     stopping: bool,
+    /// Core releases of fair-share-tagged units, buffered for the
+    /// scheduler thread: the wait-pool's outstanding-cores gauge lives
+    /// on that thread, while releases happen on the reactor / pool
+    /// threads.  Drained into the pool before every placement pass.
+    released_shares: Vec<(String, usize)>,
 }
 
 pub(crate) struct SchedShared {
@@ -351,7 +364,12 @@ impl RealAgent {
             pool_bridge: Bridge::new("reactor-pool"),
             stage_bridge: Bridge::new("exec-stageout"),
             sched_shared: Arc::new(SchedShared {
-                state: Mutex::new(SchedState { sched, wake_seq: 0, stopping: false }),
+                state: Mutex::new(SchedState {
+                    sched,
+                    wake_seq: 0,
+                    stopping: false,
+                    released_shares: Vec::new(),
+                }),
                 wake: Condvar::new(),
             }),
             exec_wake,
@@ -465,7 +483,9 @@ impl RealAgent {
     /// never stalls unit intake, and under the backfill policy it does
     /// not stall placement of smaller units either.
     fn scheduler_loop(&self) {
-        let mut pool: WaitPool<SharedUnit> = WaitPool::new(self.cfg.scheduler_policy);
+        let fair_share = self.cfg.scheduler_policy == SchedPolicy::FairShare;
+        let mut pool: WaitPool<SharedUnit> = WaitPool::new(self.cfg.scheduler_policy)
+            .with_reserve_window(self.cfg.reserve_window);
         loop {
             // Snapshot the wake sequence *before* draining input: any
             // event racing with this pass bumps it and the sleep below
@@ -478,14 +498,19 @@ impl RealAgent {
                 if advance(&unit, S::ASchedulingPending, &self.profiler).is_err() {
                     continue; // canceled/failed upstream
                 }
-                let (canceled, cores) = {
+                let (canceled, cores, priority, share) = {
                     let mut rec = unit.0.lock().unwrap();
                     // cancellation must be able to wake this loop — and,
                     // once the unit is in flight, the reactor's poll
                     rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
                     rec.exec_wake = Some(self.exec_wake.clone());
                     rec.exec_cancel = Some(self.exec_cancel_pending.clone());
-                    (rec.cancel_requested, rec.descr.cores)
+                    (
+                        rec.cancel_requested,
+                        rec.descr.cores,
+                        rec.descr.priority,
+                        if fair_share { share_tag(&rec.descr) } else { String::new() },
+                    )
                 };
                 // cancellation wins over the oversize check, matching
                 // the shutdown path below
@@ -504,7 +529,7 @@ impl RealAgent {
                     );
                     continue;
                 }
-                pool.push(unit, cores);
+                pool.push_req(unit, cores, priority, share);
             }
 
             // finalize cancellations before attempting placement
@@ -519,6 +544,11 @@ impl RealAgent {
             let mut placed = Vec::new();
             let stopping = {
                 let mut st = self.sched_shared.state.lock().unwrap();
+                // fair-share bookkeeping: completions recorded on other
+                // threads land in the pool's outstanding gauge here
+                for (tag, cores) in std::mem::take(&mut st.released_shares) {
+                    pool.release_share(&tag, cores);
+                }
                 pool.place_all(&mut *st.sched, |unit, alloc| placed.push((unit, alloc)));
                 st.stopping
             };
@@ -573,11 +603,21 @@ impl RealAgent {
     }
 
     /// Release a unit's cores; every release is a scheduling event
-    /// (re-place from the pool).
-    fn release_cores(&self, alloc: &Allocation) {
+    /// (re-place from the pool).  Under the fair-share policy the
+    /// release also retires the unit's submitter-tag share, routed to
+    /// the scheduler thread through the buffered `released_shares`.
+    fn release_cores(&self, unit: &SharedUnit, alloc: &Allocation) {
+        let share = if self.cfg.scheduler_policy == SchedPolicy::FairShare {
+            Some(share_tag(&unit.0.lock().unwrap().descr))
+        } else {
+            None
+        };
         {
             let mut st = self.sched_shared.state.lock().unwrap();
             st.sched.release(alloc);
+            if let Some(tag) = share {
+                st.released_shares.push((tag, alloc.n_cores()));
+            }
             st.wake_seq += 1;
         }
         self.sched_shared.wake.notify_all();
@@ -613,7 +653,7 @@ impl RealAgent {
             pending.retain(|(unit, alloc)| {
                 if unit.0.lock().unwrap().cancel_requested {
                     cancel_unit(unit, &self.profiler);
-                    self.release_cores(alloc);
+                    self.release_cores(unit, alloc);
                     false
                 } else {
                     true
@@ -662,7 +702,7 @@ impl RealAgent {
                 // canceled between placement and intake: finalize now
                 // (the pool workers also re-check on pickup)
                 cancel_unit(&unit, &self.profiler);
-                self.release_cores(&alloc);
+                self.release_cores(&unit, &alloc);
             } else if is_blocking_payload(&unit) {
                 self.pool_bridge.send((unit, alloc));
             } else {
@@ -695,7 +735,7 @@ impl RealAgent {
                     vec!["sleep".to_string(), format!("{duration}")]
                 } else {
                     if advance(&unit, S::AExecuting, &self.profiler).is_err() {
-                        self.release_cores(&alloc);
+                        self.release_cores(&unit, &alloc);
                         return;
                     }
                     reactor.admit_timer((unit, alloc), *duration);
@@ -729,21 +769,21 @@ impl RealAgent {
                             ),
                             &self.profiler,
                         );
-                        self.release_cores(&alloc);
+                        self.release_cores(&unit, &alloc);
                         return;
                     }
                 }
             }
         };
         if advance(&unit, S::AExecuting, &self.profiler).is_err() {
-            self.release_cores(&alloc); // canceled upstream
+            self.release_cores(&unit, &alloc); // canceled upstream
             return;
         }
         match spawner.start(&argv, &descr.environment, &self.cfg.sandbox) {
             Ok(handle) => reactor.admit_child((unit, alloc), handle),
             Err(e) => {
                 fail_unit(&unit, e.to_string(), &self.profiler);
-                self.release_cores(&alloc);
+                self.release_cores(&unit, &alloc);
             }
         }
     }
@@ -768,7 +808,7 @@ impl RealAgent {
             Completion::Canceled => cancel_unit(&unit, &self.profiler),
             Completion::Failed(e) => fail_unit(&unit, e.to_string(), &self.profiler),
         }
-        self.release_cores(&alloc);
+        self.release_cores(&unit, &alloc);
         self.stage_bridge.send(unit);
     }
 
@@ -794,7 +834,7 @@ impl RealAgent {
             } else {
                 self.execute_blocking(&unit, payloads.as_ref());
             }
-            self.release_cores(&alloc);
+            self.release_cores(&unit, &alloc);
             self.stage_bridge.send(unit);
         }
         if self.exec_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
@@ -918,6 +958,14 @@ fn is_blocking_payload(unit: &SharedUnit) -> bool {
     matches!(unit.0.lock().unwrap().descr.payload, UnitPayload::Pjrt { .. })
 }
 
+/// Submitter tag of a unit under the fair-share policy: its workload
+/// key (the name prefix before the trailing `-NNN` segment), the same
+/// grouping the UnitManager's locality policy binds by.  Unnamed units
+/// all share the empty tag.
+fn share_tag(descr: &UnitDescription) -> String {
+    crate::api::um_scheduler::workload_key(&descr.name)
+}
+
 fn which_exists(exe: &str) -> bool {
     if exe.contains('/') {
         return std::path::Path::new(exe).exists();
@@ -951,6 +999,7 @@ mod tests {
             scheduler_algorithm: "continuous".into(),
             search_mode: SearchMode::FreeList,
             scheduler_policy: SchedPolicy::Fifo,
+            reserve_window: 64,
             sandbox: sandbox(name),
             synthetic_as_process: false,
         }
@@ -1232,6 +1281,87 @@ mod tests {
         assert!(
             best < 0.005,
             "cancel-to-kill must be one wakeup (<5ms), best of 3 was {best:.4}s"
+        );
+    }
+
+    /// Starvation regression (reservation window): under backfill a
+    /// blocked wide head must place after at most `reserve_window`
+    /// overtakes, while with the window disabled a steady small-unit
+    /// stream starves it until the stream runs dry.
+    #[test]
+    fn backfill_reservation_window_prevents_starvation() {
+        // returns how many small units started executing before the
+        // wide unit did
+        let run = |name: &str, window: usize| -> usize {
+            let profiler = Arc::new(Profiler::new(true));
+            let mut cfg = agent_cfg(name, 2, 1);
+            cfg.scheduler_policy = SchedPolicy::Backfill;
+            cfg.reserve_window = window;
+            let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+            // a long 1-core blocker pins one core for the whole stream,
+            // so the 2-core wide unit can never fit while smalls flow
+            // (durations deliberately non-commensurable so the blocker
+            // and a small never release in the same reactor wakeup)
+            let blocker = ready_unit(0, UnitDescription::sleep(0.683).cores(1), &profiler);
+            agent.submit(vec![blocker.clone()]);
+            wait_executing(&blocker, 5.0);
+            let wide = ready_unit(1, UnitDescription::sleep(0.05).cores(2), &profiler);
+            let smalls: Vec<SharedUnit> = (0..12)
+                .map(|i| ready_unit(2 + i, UnitDescription::sleep(0.037).cores(1), &profiler))
+                .collect();
+            let mut batch = vec![wide.clone()];
+            batch.extend(smalls.iter().cloned());
+            agent.submit(batch);
+            for u in std::iter::once(&blocker).chain(std::iter::once(&wide)).chain(&smalls) {
+                assert_eq!(wait_final(u, 30.0), S::Done);
+            }
+            agent.drain_and_stop();
+            let wide_started = wide.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+            smalls
+                .iter()
+                .filter(|u| {
+                    u.0.lock().unwrap().machine.entered(S::AExecuting).unwrap() < wide_started
+                })
+                .count()
+        };
+        let overtakes = run("starve-window", 3);
+        assert!(
+            overtakes <= 5,
+            "window=3: the wide head must place after ~3 overtakes, saw {overtakes}"
+        );
+        let overtakes = run("starve-nowindow", 0);
+        // >= 10 (not == 12) only to shield a rare scheduling coincidence
+        // where the blocker and a small release in the same pass
+        assert!(
+            overtakes >= 10,
+            "window disabled: the small stream must starve the wide head, \
+             saw only {overtakes} of 12 smalls overtake it"
+        );
+    }
+
+    #[test]
+    fn priority_policy_reorders_pooled_units() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("priority", 1, 1);
+        cfg.scheduler_policy = SchedPolicy::Priority;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        // pin the single core so the pool holds both waiters at once
+        let blocker = ready_unit(0, UnitDescription::sleep(0.2), &profiler);
+        agent.submit(vec![blocker.clone()]);
+        wait_executing(&blocker, 5.0);
+        let low = ready_unit(1, UnitDescription::sleep(0.02).priority(-1), &profiler);
+        let high = ready_unit(2, UnitDescription::sleep(0.02).priority(7), &profiler);
+        agent.submit(vec![low.clone(), high.clone()]);
+        for u in [&blocker, &low, &high] {
+            assert_eq!(wait_final(u, 10.0), S::Done);
+        }
+        agent.drain_and_stop();
+        let high_started = high.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+        let low_started = low.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+        assert!(
+            high_started < low_started,
+            "priority 7 ({high_started:.3}s) must start before priority -1 \
+             ({low_started:.3}s) despite submission order"
         );
     }
 }

@@ -22,9 +22,12 @@
 //! In front of the core search sits the event-driven [`WaitPool`]
 //! (`waitpool`): pending units wait there, and each submit/core-release
 //! event triggers a placement pass under [`SchedPolicy::Fifo`]
-//! (paper-faithful head-of-line) or [`SchedPolicy::Backfill`]; both the
-//! real Agent and the DES twin schedule through it
-//! (`benches/ablation_policy.rs` quantifies the policies).
+//! (paper-faithful head-of-line), [`SchedPolicy::Backfill`],
+//! [`SchedPolicy::Priority`] or [`SchedPolicy::FairShare`] — the
+//! overtaking policies bounded by an anti-starvation reservation window
+//! (`agent.reserve_window`); both the real Agent and the DES twin
+//! schedule through it (`benches/ablation_policy.rs` quantifies the
+//! policies and the window).
 
 mod continuous;
 mod torus;
@@ -32,7 +35,7 @@ mod waitpool;
 
 pub use continuous::ContinuousScheduler;
 pub use torus::TorusScheduler;
-pub use waitpool::{SchedPolicy, WaitPool};
+pub use waitpool::{DEFAULT_RESERVE_WINDOW, SchedPolicy, WaitPool};
 
 use super::nodelist::Allocation;
 use crate::config::ResourceConfig;

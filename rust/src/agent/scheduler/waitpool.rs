@@ -8,22 +8,57 @@
 //! pipeline) and [`crate::sim::AgentSim`] (DES twin) place through the
 //! same pass logic, so policy behavior is identical in both modes.
 //!
-//! Two policies:
+//! Four policies:
 //!
 //! * [`SchedPolicy::Fifo`] — faithful to the paper: the head unit blocks
 //!   the queue until it can be placed (head-of-line);
 //! * [`SchedPolicy::Backfill`] — smaller units may overtake a blocked
 //!   head (EASY-style backfilling), which keeps cores busy under
-//!   heterogeneous (mixed 1-core / wide-MPI) workloads.
+//!   heterogeneous (mixed 1-core / wide-MPI) workloads;
+//! * [`SchedPolicy::Priority`] — units are tried in descending
+//!   [`UnitDescription::priority`](crate::api::UnitDescription) order
+//!   (ties broken by submission order); blocked units may be overtaken,
+//!   like backfill over a priority ordering;
+//! * [`SchedPolicy::FairShare`] — units are tried in ascending order of
+//!   their submitter tag's *outstanding* cores (cores currently
+//!   allocated to units of the same tag, ties broken by submission
+//!   order), so one greedy workload cannot monopolize the pilot.  The
+//!   caller supplies the tag at [`WaitPool::push_req`] time and reports
+//!   completions through [`WaitPool::release_share`]; both agents use
+//!   the unit's workload key
+//!   ([`crate::api::um_scheduler::workload_key`]) as the tag.
+//!
+//! # Reservation window (anti-starvation)
+//!
+//! Every policy except FIFO lets later units overtake a blocked head,
+//! which can starve a wide unit forever under a steady stream of small
+//! ones: each release re-fills the freed cores with a small unit before
+//! the wide head ever fits.  The **reservation window** bounds that:
+//! once the policy-order head has been overtaken
+//! [`WaitPool::reserve_window`] times, its core demand is *reserved* —
+//! from then on only units that fit in the cores left over *beside* the
+//! reservation (`free - head.cores`) may be placed.  Nothing can eat
+//! into the reserved pool anymore, so as running units finish the head
+//! is guaranteed to accumulate its demand and place.  `reserve_window
+//! == 0` disables the guard (the pre-reservation behavior, which can
+//! starve); the config key is `agent.reserve_window`, default
+//! [`DEFAULT_RESERVE_WINDOW`].
 //!
 //! Within one placement pass free cores only shrink, so a single ordered
 //! sweep is complete: a unit that did not fit earlier in the pass cannot
-//! fit later in the same pass.
+//! fit later in the same pass.  The backfill sweep exploits the converse
+//! too: while no cores have been released, a unit found blocked *stays*
+//! blocked, so the scan resumes past the known-blocked prefix instead of
+//! re-testing it on every call (O(n) per drain wave instead of O(n²)).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::CoreScheduler;
 use crate::agent::nodelist::Allocation;
+
+/// Default [`WaitPool::reserve_window`]: a blocked head is overtaken at
+/// most this many times before its core demand is reserved.
+pub const DEFAULT_RESERVE_WINDOW: usize = 64;
 
 /// Placement policy of the wait-pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -34,13 +69,29 @@ pub enum SchedPolicy {
     Fifo,
     /// Units behind a blocked head may be placed if they fit.
     Backfill,
+    /// Highest `priority` first (ties: submission order); blocked units
+    /// may be overtaken by lower-priority ones that fit.
+    Priority,
+    /// Least outstanding cores per submitter tag first (ties:
+    /// submission order); blocked units may be overtaken.
+    FairShare,
 }
 
 impl SchedPolicy {
+    /// All policies, for sweeps.
+    pub const ALL: [SchedPolicy; 4] = [
+        SchedPolicy::Fifo,
+        SchedPolicy::Backfill,
+        SchedPolicy::Priority,
+        SchedPolicy::FairShare,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             SchedPolicy::Fifo => "fifo",
             SchedPolicy::Backfill => "backfill",
+            SchedPolicy::Priority => "priority",
+            SchedPolicy::FairShare => "fair_share",
         }
     }
 
@@ -48,16 +99,30 @@ impl SchedPolicy {
         match s {
             "fifo" => Some(SchedPolicy::Fifo),
             "backfill" => Some(SchedPolicy::Backfill),
+            "priority" => Some(SchedPolicy::Priority),
+            "fair_share" | "fair-share" | "fairshare" => Some(SchedPolicy::FairShare),
             _ => None,
         }
     }
 }
 
-/// A unit waiting for cores: caller payload plus its core request.
+/// A unit waiting for cores: caller payload plus its core request and
+/// the scheduling attributes the non-FIFO policies order by.
 #[derive(Debug, Clone)]
 struct Waiting<T> {
     item: T,
     cores: usize,
+    /// Placement preference under [`SchedPolicy::Priority`] (higher
+    /// places first; 0 for every unit degenerates to backfill order).
+    priority: i32,
+    /// Submitter tag under [`SchedPolicy::FairShare`] (empty when the
+    /// policy does not track shares).
+    share: String,
+    /// Submission sequence number: the tie-breaker of every ordering.
+    seq: u64,
+    /// How many times a later unit was placed while this unit was the
+    /// blocked policy-order head (the reservation-window counter).
+    overtakes: u32,
 }
 
 /// The pool of units awaiting placement onto pilot cores.
@@ -67,18 +132,57 @@ struct Waiting<T> {
 #[derive(Debug)]
 pub struct WaitPool<T> {
     policy: SchedPolicy,
+    /// Overtakes a blocked head tolerates before its demand is reserved
+    /// (0 = never reserve; see the module docs).
+    reserve_window: usize,
     queue: VecDeque<Waiting<T>>,
     submitted: u64,
     placed: u64,
+    next_seq: u64,
+    /// Backfill scan cursor: the first queue index *not* known to be
+    /// blocked in the current drain wave.  Valid while no cores have
+    /// been released (free cores only shrink, so blocked stays
+    /// blocked); any removal or free-core growth resets it.
+    scan_from: usize,
+    /// Free-core count observed at the end of the previous pass; a
+    /// higher count at the next pass means a release happened and the
+    /// scan cursor must be invalidated.
+    free_watermark: usize,
+    /// Outstanding (allocated but not yet released) cores per submitter
+    /// tag — the FairShare ordering key.  Maintained only under that
+    /// policy.
+    shares: HashMap<String, usize>,
 }
 
 impl<T> WaitPool<T> {
     pub fn new(policy: SchedPolicy) -> Self {
-        WaitPool { policy, queue: VecDeque::new(), submitted: 0, placed: 0 }
+        WaitPool {
+            policy,
+            reserve_window: DEFAULT_RESERVE_WINDOW,
+            queue: VecDeque::new(),
+            submitted: 0,
+            placed: 0,
+            next_seq: 0,
+            scan_from: 0,
+            free_watermark: usize::MAX,
+            shares: HashMap::new(),
+        }
+    }
+
+    /// Set the reservation window (0 disables the anti-starvation
+    /// guard).
+    pub fn with_reserve_window(mut self, window: usize) -> Self {
+        self.reserve_window = window;
+        self
     }
 
     pub fn policy(&self) -> SchedPolicy {
         self.policy
+    }
+
+    /// The configured reservation window (0 = disabled).
+    pub fn reserve_window(&self) -> usize {
+        self.reserve_window
     }
 
     /// Units currently waiting.
@@ -100,15 +204,61 @@ impl<T> WaitPool<T> {
         (self.submitted, self.placed)
     }
 
-    /// Enqueue a unit requesting `cores` (0 is clamped to 1 so a bogus
-    /// request cannot wedge the FIFO head forever).
+    /// Overtake count of the queue head (the starvation gauge asserted
+    /// by the reservation-window regression tests; 0 when empty).
+    pub fn head_overtakes(&self) -> u32 {
+        self.queue.front().map_or(0, |w| w.overtakes)
+    }
+
+    /// Enqueue a unit requesting `cores` with default attributes
+    /// (priority 0, no submitter tag).
     pub fn push(&mut self, item: T, cores: usize) {
+        self.push_req(item, cores, 0, String::new());
+    }
+
+    /// Enqueue a unit requesting `cores` with its scheduling attributes
+    /// (`cores == 0` is clamped to 1 as a last-resort guard — the API
+    /// layer rejects such descriptions at submission — so a bogus
+    /// request that slips through cannot wedge the FIFO head forever).
+    pub fn push_req(&mut self, item: T, cores: usize, priority: i32, share: String) {
         self.submitted += 1;
-        self.queue.push_back(Waiting { item, cores: cores.max(1) });
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Waiting {
+            item,
+            cores: cores.max(1),
+            priority,
+            share,
+            seq,
+            overtakes: 0,
+        });
+    }
+
+    /// Report that `cores` previously allocated to a unit of submitter
+    /// tag `share` were released (FairShare bookkeeping; no-op under
+    /// every other policy).  The real Agent routes completion releases
+    /// here through its scheduler loop, the DES twin calls it directly.
+    pub fn release_share(&mut self, share: &str, cores: usize) {
+        if self.policy != SchedPolicy::FairShare {
+            return;
+        }
+        if let Some(n) = self.shares.get_mut(share) {
+            *n = n.saturating_sub(cores);
+            if *n == 0 {
+                self.shares.remove(share);
+            }
+        }
+    }
+
+    /// Outstanding cores of a submitter tag (FairShare ordering key).
+    fn share_of(&self, share: &str) -> usize {
+        self.shares.get(share).copied().unwrap_or(0)
     }
 
     /// Remove and return every waiting unit for which `pred` is false
-    /// (canceled units, shutdown).  Retained units keep their order.
+    /// (canceled units, shutdown).  Retained units keep their order and
+    /// `pred` is evaluated exactly once per unit, so a non-idempotent
+    /// predicate (e.g. one that records the cancellation) is safe.
     /// Runs on every scheduling event, so the nothing-to-remove case
     /// (by far the common one) is a pure scan with no allocation.
     pub fn retain_or_remove(
@@ -118,24 +268,155 @@ impl<T> WaitPool<T> {
         let Some(start) = self.queue.iter().position(|w| !pred(&w.item, w.cores)) else {
             return Vec::new();
         };
-        // rebuild only the tail from the first removal on; `pred` may be
-        // re-evaluated for that element (removal predicates — canceled,
-        // shutdown — are monotone, so the answer cannot flip back)
-        let mut removed = Vec::new();
+        // rebuild only the tail from the first removal on; the element
+        // at `start` already answered false above and goes straight to
+        // `removed` without a second evaluation
         let tail: Vec<Waiting<T>> = self.queue.drain(start..).collect();
-        for w in tail {
+        let mut removed = Vec::new();
+        let mut it = tail.into_iter();
+        let first = it.next().expect("start < len");
+        removed.push((first.item, first.cores));
+        for w in it {
             if pred(&w.item, w.cores) {
                 self.queue.push_back(w);
             } else {
                 removed.push((w.item, w.cores));
             }
         }
+        // indices shifted: only the untouched prefix stays known-blocked
+        self.scan_from = self.scan_from.min(start);
         removed
     }
 
     /// Drain the whole pool (agent shutdown), in queue order.
     pub fn drain_all(&mut self) -> Vec<(T, usize)> {
+        self.scan_from = 0;
         self.queue.drain(..).map(|w| (w.item, w.cores)).collect()
+    }
+
+    /// Invalidate the backfill scan cursor if cores were released since
+    /// the previous pass (free grew, so known-blocked no longer holds).
+    fn refresh_scan(&mut self, sched: &dyn CoreScheduler) {
+        if sched.free_cores() > self.free_watermark {
+            self.scan_from = 0;
+        }
+    }
+
+    /// Record a placement and remove the unit at queue index `i`.
+    fn take_at(&mut self, i: usize) -> Waiting<T> {
+        let w = self.queue.remove(i).expect("index in bounds");
+        self.placed += 1;
+        if self.policy == SchedPolicy::FairShare {
+            *self.shares.entry(w.share.clone()).or_insert(0) += w.cores;
+        }
+        w
+    }
+
+    /// Is the (blocked) queue head's demand reserved?
+    fn head_reserved(&self) -> bool {
+        self.reserve_window > 0
+            && self.queue.front().is_some_and(|w| w.overtakes as usize >= self.reserve_window)
+    }
+
+    /// One backfill step: place the first unit (in queue order, resuming
+    /// past the known-blocked prefix) that fits, honoring the head's
+    /// reservation once it matures.
+    fn pop_backfill(&mut self, sched: &mut dyn CoreScheduler) -> Option<(T, Allocation)> {
+        let mut i = self.scan_from;
+        while i < self.queue.len() {
+            let need = self.queue[i].cores;
+            // `i > 0` implies the head was found blocked (either at
+            // i == 0 this call, or earlier in the wave: scan_from > 0)
+            if i > 0 && self.head_reserved() {
+                let budget = sched.free_cores().saturating_sub(self.queue[0].cores);
+                if need > budget {
+                    // would eat into the reservation: skip for the wave
+                    i += 1;
+                    self.scan_from = i;
+                    continue;
+                }
+            }
+            match sched.allocate(need) {
+                Some(alloc) => {
+                    if i > 0 {
+                        self.queue[0].overtakes += 1;
+                    }
+                    let w = self.take_at(i);
+                    // the element previously at i+1 shifted into i and
+                    // has not been tested yet
+                    self.scan_from = i;
+                    return Some((w.item, alloc));
+                }
+                None => {
+                    i += 1;
+                    self.scan_from = i;
+                }
+            }
+        }
+        None
+    }
+
+    /// Candidate order under the Priority / FairShare policies: most
+    /// preferred first, submission order as the tie-breaker.
+    fn ordered_indices(&self) -> Vec<usize> {
+        let mut idxs: Vec<usize> = (0..self.queue.len()).collect();
+        match self.policy {
+            SchedPolicy::Priority => {
+                idxs.sort_by_key(|&i| (-(self.queue[i].priority as i64), self.queue[i].seq));
+            }
+            SchedPolicy::FairShare => {
+                idxs.sort_by_key(|&i| {
+                    let w = &self.queue[i];
+                    (self.share_of(&w.share) as u64, w.seq)
+                });
+            }
+            _ => {}
+        }
+        idxs
+    }
+
+    /// One Priority / FairShare step: try units in policy order, place
+    /// the first that fits; a blocked order-head accrues overtakes and,
+    /// once its reservation matures, caps what later candidates may use.
+    ///
+    /// Each step re-derives the order (O(n log n)) because FairShare
+    /// keys change with every placement; the zero-free fast path below
+    /// keeps the common drained-kick case O(1).  A backfill-style
+    /// known-blocked memo for the static Priority order is a possible
+    /// follow-up if ordered backlogs grow past ~10k units.
+    fn pop_ordered(&mut self, sched: &mut dyn CoreScheduler) -> Option<(T, Allocation)> {
+        // no free cores -> nothing can place (requests are >= 1): skip
+        // the O(n log n) ordering on the common drained-kick path, so a
+        // busy pilot's event stream does not re-sort the backlog
+        if self.queue.is_empty() || sched.free_cores() == 0 {
+            return None;
+        }
+        let idxs = self.ordered_indices();
+        let head = idxs[0];
+        let mut reserved = 0usize;
+        for (rank, &i) in idxs.iter().enumerate() {
+            let need = self.queue[i].cores;
+            if rank > 0 && reserved > 0 && need > sched.free_cores().saturating_sub(reserved) {
+                continue; // would eat into the head's reservation
+            }
+            match sched.allocate(need) {
+                Some(alloc) => {
+                    if rank > 0 {
+                        self.queue[head].overtakes += 1;
+                    }
+                    let w = self.take_at(i);
+                    return Some((w.item, alloc));
+                }
+                None if rank == 0 => {
+                    let w = &self.queue[i];
+                    if self.reserve_window > 0 && w.overtakes as usize >= self.reserve_window {
+                        reserved = need;
+                    }
+                }
+                None => {}
+            }
+        }
+        None
     }
 
     /// Take the next placeable unit under the policy, allocating its
@@ -143,45 +424,62 @@ impl<T> WaitPool<T> {
     /// placed right now.  Used by the DES twin, whose scheduler is a
     /// service station placing one unit per service completion.
     pub fn pop_placeable(&mut self, sched: &mut dyn CoreScheduler) -> Option<(T, Allocation)> {
-        let limit = match self.policy {
-            SchedPolicy::Fifo => 1.min(self.queue.len()),
-            SchedPolicy::Backfill => self.queue.len(),
+        self.refresh_scan(sched);
+        let out = match self.policy {
+            SchedPolicy::Fifo => match self.queue.front().map(|w| w.cores) {
+                Some(cores) => sched.allocate(cores).map(|alloc| {
+                    let w = self.take_at(0);
+                    (w.item, alloc)
+                }),
+                None => None,
+            },
+            SchedPolicy::Backfill => self.pop_backfill(sched),
+            SchedPolicy::Priority | SchedPolicy::FairShare => self.pop_ordered(sched),
         };
-        for i in 0..limit {
-            if let Some(alloc) = sched.allocate(self.queue[i].cores) {
-                let w = self.queue.remove(i).expect("index in bounds");
-                self.placed += 1;
-                return Some((w.item, alloc));
-            }
-        }
-        None
+        self.free_watermark = sched.free_cores();
+        out
     }
 
     /// One full placement pass: place every unit that fits, calling
     /// `on_place` for each.  Under FIFO the pass stops at the first unit
-    /// that does not fit; under Backfill blocked units are skipped.
-    /// Returns the number of units placed.  Used by the real Agent on
-    /// every submit and core-release event.
+    /// that does not fit; under the other policies blocked units are
+    /// skipped (subject to the reservation window).  Returns the number
+    /// of units placed.  Used by the real Agent on every submit and
+    /// core-release event.
     pub fn place_all(
         &mut self,
         sched: &mut dyn CoreScheduler,
         mut on_place: impl FnMut(T, Allocation),
     ) -> usize {
+        self.refresh_scan(sched);
         let mut n_placed = 0;
-        let mut i = 0;
-        while i < self.queue.len() {
-            match sched.allocate(self.queue[i].cores) {
-                Some(alloc) => {
-                    let w = self.queue.remove(i).expect("index in bounds");
-                    self.placed += 1;
-                    n_placed += 1;
-                    on_place(w.item, alloc);
-                    // the next candidate shifted into slot `i`
+        match self.policy {
+            SchedPolicy::Fifo => {
+                while let Some(cores) = self.queue.front().map(|w| w.cores) {
+                    match sched.allocate(cores) {
+                        Some(alloc) => {
+                            let w = self.take_at(0);
+                            n_placed += 1;
+                            on_place(w.item, alloc);
+                        }
+                        None => break,
+                    }
                 }
-                None if self.policy == SchedPolicy::Fifo => break,
-                None => i += 1,
+            }
+            SchedPolicy::Backfill => {
+                while let Some((item, alloc)) = self.pop_backfill(sched) {
+                    n_placed += 1;
+                    on_place(item, alloc);
+                }
+            }
+            SchedPolicy::Priority | SchedPolicy::FairShare => {
+                while let Some((item, alloc)) = self.pop_ordered(sched) {
+                    n_placed += 1;
+                    on_place(item, alloc);
+                }
             }
         }
+        self.free_watermark = sched.free_cores();
         n_placed
     }
 }
@@ -197,9 +495,11 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
+        for p in SchedPolicy::ALL {
             assert_eq!(SchedPolicy::parse(p.name()), Some(p));
         }
+        assert_eq!(SchedPolicy::parse("fair-share"), Some(SchedPolicy::FairShare));
+        assert_eq!(SchedPolicy::parse("fairshare"), Some(SchedPolicy::FairShare));
         assert_eq!(SchedPolicy::parse("lifo"), None);
         assert_eq!(SchedPolicy::default(), SchedPolicy::Fifo);
     }
@@ -235,7 +535,122 @@ mod tests {
         pool.place_all(&mut s, |u, _| placed.push(u));
         assert_eq!(placed, vec![1, 2], "small units overtake the wide head");
         assert_eq!(pool.len(), 1, "the wide head keeps waiting");
+        assert_eq!(pool.head_overtakes(), 2);
         assert_eq!(s.free_cores(), 0);
+    }
+
+    #[test]
+    fn priority_orders_placement() {
+        let mut s = sched(1, 2);
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Priority);
+        pool.push_req(0, 1, 0, String::new());
+        pool.push_req(1, 1, 5, String::new());
+        pool.push_req(2, 1, 5, String::new()); // tie with 1: submission order
+        pool.push_req(3, 1, -3, String::new());
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        assert_eq!(placed, vec![1, 2], "highest priority first, ties by submission");
+        let mut s2 = sched(1, 4);
+        let mut placed = vec![];
+        let mut pool2: WaitPool<u32> = WaitPool::new(SchedPolicy::Priority);
+        pool2.push_req(0, 1, 0, String::new());
+        pool2.push_req(1, 1, 5, String::new());
+        pool2.push_req(2, 1, -1, String::new());
+        pool2.place_all(&mut s2, |u, _| placed.push(u));
+        assert_eq!(placed, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn priority_lets_smaller_fill_around_blocked_head() {
+        let mut s = sched(1, 4);
+        let _blocker = s.allocate(2).unwrap();
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Priority);
+        pool.push_req(0, 4, 9, String::new()); // top priority, does not fit
+        pool.push_req(1, 1, 1, String::new());
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        assert_eq!(placed, vec![1], "lower priority may backfill a blocked head");
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn fair_share_balances_tags() {
+        let mut s = sched(2, 4);
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::FairShare);
+        // greedy tag submits 6 units first, minor tag 2 units after
+        for u in 0..6 {
+            pool.push_req(u, 1, 0, "greedy".into());
+        }
+        for u in 6..8 {
+            pool.push_req(u, 1, 0, "minor".into());
+        }
+        let mut placed = vec![];
+        pool.place_all(&mut s, |u, _| placed.push(u));
+        // shares start equal -> greedy-0 (seq order); after that the
+        // minor tag is always the less-loaded one until it catches up
+        assert_eq!(placed.len(), 8);
+        let minor_ranks: Vec<usize> = placed
+            .iter()
+            .enumerate()
+            .filter(|(_, &u)| u >= 6)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(
+            minor_ranks.iter().all(|&r| r <= 4),
+            "minor units must interleave early, got ranks {minor_ranks:?} in {placed:?}"
+        );
+        // releases drain the outstanding gauge
+        pool.release_share("greedy", 6);
+        pool.release_share("minor", 2);
+        assert_eq!(pool.share_of("greedy"), 0);
+        assert_eq!(pool.share_of("minor"), 0);
+    }
+
+    #[test]
+    fn reservation_window_bounds_overtakes() {
+        // 4-core node: a held 1-core blocker + a continuous stream of
+        // 1-core units around a blocked 4-core head
+        let run = |window: usize| -> (u32, bool, usize) {
+            let mut s = sched(1, 4);
+            let blocker = s.allocate(1).unwrap();
+            let mut pool: WaitPool<u32> =
+                WaitPool::new(SchedPolicy::Backfill).with_reserve_window(window);
+            pool.push(0, 4); // the wide head
+            let mut prev: Option<Allocation> = None;
+            let mut overtaken = 0u32;
+            let mut smalls_placed = 0usize;
+            for u in 1..=20u32 {
+                if let Some(a) = prev.take() {
+                    s.release(&a); // the previous small finishes
+                }
+                pool.push(u, 1); // ... and a fresh small arrives
+                pool.place_all(&mut s, |placed_u, a| {
+                    assert_ne!(placed_u, 0, "head cannot fit while the blocker runs");
+                    prev = Some(a);
+                    smalls_placed += 1;
+                });
+                overtaken = pool.head_overtakes();
+            }
+            // the stream ends: release everything, the head must place
+            if let Some(a) = prev.take() {
+                s.release(&a);
+            }
+            s.release(&blocker);
+            let mut head_placed = false;
+            pool.place_all(&mut s, |u, _| head_placed |= u == 0);
+            (overtaken, head_placed, smalls_placed)
+        };
+        let (overtaken, head_placed, smalls) = run(0); // window disabled
+        assert_eq!(overtaken, 20, "without a window every small overtakes the head");
+        assert_eq!(smalls, 20);
+        assert!(head_placed);
+        let (overtaken, head_placed, smalls) = run(3);
+        assert_eq!(
+            overtaken, 3,
+            "reservation must stop the overtaking at the window"
+        );
+        assert_eq!(smalls, 3, "no small may eat into the reserved cores");
+        assert!(head_placed, "the reserved head places once cores free up");
     }
 
     #[test]
@@ -255,6 +670,70 @@ mod tests {
         assert!(bf.pop_placeable(&mut s).is_none());
     }
 
+    /// The real Agent drains via `place_all`, the DES twin via repeated
+    /// `pop_placeable`: both must produce the same placement order for
+    /// every policy (the real-vs-twin agreement at the pool level).
+    #[test]
+    fn pop_and_place_agree_for_every_policy() {
+        for policy in SchedPolicy::ALL {
+            let mk = || {
+                let mut s = sched(2, 4);
+                // keep 3 cores busy (release is explicit, so dropping
+                // the allocation leaves them allocated)
+                let _hold = s.allocate(3).unwrap();
+                let mut pool: WaitPool<u32> = WaitPool::new(policy).with_reserve_window(2);
+                let tags = ["a", "b", "a", "b", "a", "b"];
+                for u in 0..6u32 {
+                    pool.push_req(
+                        u,
+                        1 + (u as usize % 3),
+                        (u as i32 * 7) % 5,
+                        tags[u as usize].to_string(),
+                    );
+                }
+                (s, pool)
+            };
+            let (mut s1, mut pool1) = mk();
+            let mut order1 = vec![];
+            pool1.place_all(&mut s1, |u, _| order1.push(u));
+            let (mut s2, mut pool2) = mk();
+            let mut order2 = vec![];
+            while let Some((u, _)) = pool2.pop_placeable(&mut s2) {
+                order2.push(u);
+            }
+            assert_eq!(order1, order2, "{}: place_all vs pop_placeable", policy.name());
+        }
+    }
+
+    #[test]
+    fn backfill_scan_cursor_resumes_and_resets() {
+        let mut s = sched(1, 4);
+        let blocker = s.allocate(3).unwrap();
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Backfill);
+        pool.push(0, 4); // blocked
+        pool.push(1, 2); // blocked (1 free)
+        pool.push(2, 1); // fits
+        pool.push(3, 1); // blocked once 2 takes the last core
+        let (u, a2) = pool.pop_placeable(&mut s).unwrap();
+        assert_eq!(u, 2);
+        // nothing placeable now; the blocked prefix must not be lost
+        assert!(pool.pop_placeable(&mut s).is_none());
+        assert_eq!(pool.len(), 3);
+        // a release invalidates the cursor: earlier entries are retried
+        s.release(&a2);
+        let (u, a3) = pool.pop_placeable(&mut s).unwrap();
+        assert_eq!(u, 3, "1 core free again: unit 1 still blocked, unit 3 fits");
+        s.release(&blocker);
+        // return unit 3's core too so the wide head can finally place
+        s.release(&a3);
+        let (u, a_head) = pool.pop_placeable(&mut s).unwrap();
+        assert_eq!(u, 0, "after releases the wide head places");
+        s.release(&a_head);
+        let (u, _) = pool.pop_placeable(&mut s).unwrap();
+        assert_eq!(u, 1);
+        assert!(pool.is_empty());
+    }
+
     #[test]
     fn retain_or_remove_splits() {
         let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Fifo);
@@ -267,6 +746,25 @@ mod tests {
         let rest = pool.drain_all();
         assert_eq!(rest.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![0, 2, 4]);
         assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn retain_or_remove_evaluates_pred_once_per_unit() {
+        let mut pool: WaitPool<u32> = WaitPool::new(SchedPolicy::Backfill);
+        for u in 0..5 {
+            pool.push(u, 1);
+        }
+        let mut evals: HashMap<u32, u32> = HashMap::new();
+        let removed = pool.retain_or_remove(|u, _| {
+            *evals.entry(*u).or_insert(0) += 1;
+            *u != 1 && *u != 3
+        });
+        assert_eq!(removed.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(
+            evals.values().all(|&n| n == 1),
+            "a non-idempotent predicate must run exactly once per unit: {evals:?}"
+        );
+        assert_eq!(evals.len(), 5);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Pilot API entity descriptions (paper Fig. 1: the application describes
 //! pilots and units through the Pilot API).
 
+use crate::error::{Error, Result};
 use crate::util::json::Value;
 
 /// Description of a pilot to be launched on a resource.
@@ -77,6 +78,10 @@ pub struct UnitDescription {
     /// Cores required (1 = scalar; >1 with `is_mpi` = MPI-coupled).
     pub cores: usize,
     pub is_mpi: bool,
+    /// Placement preference under the agent's `priority` wait-pool
+    /// policy: higher places first, ties break by submission order.
+    /// Ignored by the other policies.  Default 0.
+    pub priority: i32,
     pub input_staging: Vec<StagingDirective>,
     pub output_staging: Vec<StagingDirective>,
     pub environment: Vec<(String, String)>,
@@ -90,6 +95,7 @@ impl UnitDescription {
             payload: UnitPayload::Executable { executable: exe.into(), args },
             cores: 1,
             is_mpi: false,
+            priority: 0,
             input_staging: vec![],
             output_staging: vec![],
             environment: vec![],
@@ -103,6 +109,7 @@ impl UnitDescription {
             payload: UnitPayload::Synthetic { duration },
             cores: 1,
             is_mpi: false,
+            priority: 0,
             input_staging: vec![],
             output_staging: vec![],
             environment: vec![],
@@ -120,6 +127,7 @@ impl UnitDescription {
             },
             cores: 1,
             is_mpi: false,
+            priority: 0,
             input_staging: vec![],
             output_staging: vec![],
             environment: vec![],
@@ -138,6 +146,13 @@ impl UnitDescription {
 
     pub fn mpi(mut self, yes: bool) -> Self {
         self.is_mpi = yes;
+        self
+    }
+
+    /// Placement priority (only meaningful under the agent's `priority`
+    /// wait-pool policy; higher places first).
+    pub fn priority(mut self, p: i32) -> Self {
+        self.priority = p;
         self
     }
 
@@ -166,6 +181,19 @@ impl UnitDescription {
         }
     }
 
+    /// Check the description is schedulable.  `cores == 0` is rejected
+    /// here (at the API boundary, [`crate::api::UnitManager::submit`])
+    /// with a clear error instead of being silently clamped downstream —
+    /// the agent-side wait-pool keeps a clamp only as a last-resort
+    /// guard for units that bypass the API.
+    pub fn validate(&self) -> Result<()> {
+        if self.cores == 0 {
+            let name = if self.name.is_empty() { "<unnamed>" } else { self.name.as_str() };
+            return Err(Error::Config(format!("unit '{name}': cores must be >= 1 (got 0)")));
+        }
+        Ok(())
+    }
+
     /// Serialize for the coordination store.
     pub fn to_json(&self) -> Value {
         let payload = match &self.payload {
@@ -190,9 +218,52 @@ impl UnitDescription {
             ("payload", payload),
             ("cores", self.cores.into()),
             ("is_mpi", self.is_mpi.into()),
+            ("priority", (self.priority as i64).into()),
             ("n_stage_in", self.input_staging.len().into()),
             ("n_stage_out", self.output_staging.len().into()),
         ])
+    }
+
+    /// Deserialize a description from its coordination-store document
+    /// (the inverse of [`Self::to_json`]).  Staging directives and the
+    /// environment are not part of the store schema (only their counts
+    /// travel), so they come back empty; executable args are stored
+    /// `\u{1f}`-joined, so an empty-string-only arg list and args that
+    /// themselves contain `U+001F` are not representable.
+    pub fn from_json(v: &Value) -> Result<UnitDescription> {
+        let p = v.get("payload");
+        let payload = match p.get_str("kind", "") {
+            "exe" => {
+                let joined = p.get_str("args", "");
+                UnitPayload::Executable {
+                    executable: p.get_str("executable", "").to_string(),
+                    args: if joined.is_empty() {
+                        vec![]
+                    } else {
+                        joined.split('\u{1f}').map(|s| s.to_string()).collect()
+                    },
+                }
+            }
+            "synthetic" => UnitPayload::Synthetic { duration: p.get_f64("duration", 0.0) },
+            "pjrt" => UnitPayload::Pjrt {
+                artifact: p.get_str("artifact", "").to_string(),
+                task_id: p.get_u64("task_id", 0),
+                steps_chunks: p.get_u64("steps_chunks", 1) as u32,
+            },
+            other => {
+                return Err(Error::Json(format!("unknown unit payload kind '{other}'")))
+            }
+        };
+        Ok(UnitDescription {
+            name: v.get_str("name", "").to_string(),
+            payload,
+            cores: v.get_u64("cores", 1) as usize,
+            is_mpi: v.get_bool("is_mpi", false),
+            priority: v.get("priority").as_i64().unwrap_or(0) as i32,
+            input_staging: vec![],
+            output_staging: vec![],
+            environment: vec![],
+        })
     }
 }
 
@@ -232,5 +303,42 @@ mod tests {
         assert_eq!(v.get("payload").get_str("kind", ""), "pjrt");
         assert_eq!(v.get("payload").get_u64("task_id", 0), 7);
         assert_eq!(v.get_str("name", ""), "md-7");
+        assert_eq!(v.get("priority").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_priority_and_payload() {
+        let descrs = vec![
+            UnitDescription::sleep(64.0).name("syn-1").cores(4).mpi(true).priority(-3),
+            UnitDescription::executable("/bin/echo", vec!["a b".into(), "c".into()])
+                .name("exe-1")
+                .priority(7),
+            UnitDescription::executable("/bin/true", vec![]),
+            UnitDescription::pjrt("md_n64_s10", 9).priority(2),
+        ];
+        for d in descrs {
+            let back = UnitDescription::from_json(&d.to_json()).unwrap();
+            // lossless for every store-schema field (staging/env counts
+            // excepted by design; see the from_json docs)
+            assert_eq!(back, d);
+        }
+        // unknown payload kinds are rejected, missing priority defaults
+        let v = Value::parse(r#"{"name": "x", "payload": {"kind": "warp"}}"#).unwrap();
+        assert!(UnitDescription::from_json(&v).is_err());
+        let v = Value::parse(
+            r#"{"name": "x", "cores": 2, "payload": {"kind": "synthetic", "duration": 1.0}}"#,
+        )
+        .unwrap();
+        let d = UnitDescription::from_json(&v).unwrap();
+        assert_eq!(d.priority, 0);
+        assert_eq!(d.cores, 2);
+    }
+
+    #[test]
+    fn zero_cores_rejected_by_validate() {
+        assert!(UnitDescription::sleep(1.0).validate().is_ok());
+        let err = UnitDescription::sleep(1.0).name("bad").cores(0).validate().unwrap_err();
+        assert!(err.to_string().contains("bad"), "error names the unit: {err}");
+        assert!(err.to_string().contains("cores"), "error names the field: {err}");
     }
 }

@@ -11,7 +11,7 @@
 //! let umgr = session.unit_manager();
 //! let pilot = pmgr.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
 //! umgr.add_pilot(&pilot);
-//! umgr.submit((0..8).map(|_| UnitDescription::sleep(0.1)).collect());
+//! umgr.submit((0..8).map(|_| UnitDescription::sleep(0.1)).collect()).unwrap();
 //! umgr.wait_all(30.0).unwrap();
 //! session.close();
 //! ```

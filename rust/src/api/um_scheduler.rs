@@ -263,22 +263,30 @@ impl<T> UmWaitPool<T> {
     }
 
     /// Remove and return every waiting unit for which `pred` is false
-    /// (canceled units).  Retained units keep their order; the
-    /// nothing-to-remove case (by far the common one) is a pure scan.
+    /// (canceled units).  Retained units keep their order, `pred` runs
+    /// exactly once per unit (like the Agent pool's
+    /// [`crate::agent::scheduler::WaitPool::retain_or_remove`], so a
+    /// non-idempotent predicate is safe), and the nothing-to-remove
+    /// case (by far the common one) is a pure scan.
     pub fn retain_or_remove(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
-        if self.queue.iter().all(|(item, _)| pred(item)) {
+        let Some(start) = self.queue.iter().position(|(item, _)| !pred(item)) else {
             return Vec::new();
-        }
+        };
+        // rebuild only the tail from the first removal on; the element
+        // at `start` already answered false above and goes straight to
+        // `removed` without a second evaluation
+        let tail: Vec<(T, UnitReq)> = self.queue.drain(start..).collect();
         let mut removed = Vec::new();
-        let mut kept = VecDeque::with_capacity(self.queue.len());
-        for (item, req) in self.queue.drain(..) {
+        let mut it = tail.into_iter();
+        let (first, _) = it.next().expect("start < len");
+        removed.push(first);
+        for (item, req) in it {
             if pred(&item) {
-                kept.push_back((item, req));
+                self.queue.push_back((item, req));
             } else {
                 removed.push(item);
             }
         }
-        self.queue = kept;
         removed
     }
 
@@ -418,6 +426,25 @@ mod tests {
         assert_eq!(n, 1);
         assert_eq!(placed.last(), Some(&(1, 2)));
         assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn retain_or_remove_evaluates_pred_once_per_unit() {
+        let mut pool: UmWaitPool<u32> = UmWaitPool::new();
+        for u in 0..5 {
+            pool.push(u, req(1, ""));
+        }
+        let mut evals = std::collections::HashMap::new();
+        let removed = pool.retain_or_remove(|u| {
+            *evals.entry(*u).or_insert(0u32) += 1;
+            *u != 2
+        });
+        assert_eq!(removed, vec![2]);
+        assert_eq!(pool.len(), 4);
+        assert!(
+            evals.values().all(|&n| n == 1),
+            "a non-idempotent predicate must run exactly once per unit: {evals:?}"
+        );
     }
 
     #[test]

@@ -313,10 +313,19 @@ impl UnitManager {
     /// eligible pilot exists, then -> UMGR_SCHEDULING -> (store) ->
     /// AGENT_* on the bound pilot.
     ///
+    /// Every description is validated first
+    /// ([`UnitDescription::validate`]); an invalid one — e.g. a
+    /// `cores == 0` request, which would otherwise wedge or be silently
+    /// clamped downstream — fails the whole submission with `Err` and
+    /// nothing is created.
+    ///
     /// The scheduler lock is held only for the placement pass; the
     /// store sees the whole bound part of the submission as one bulk
     /// insert ([`crate::db::Store::insert_bulk`]) after the pass.
-    pub fn submit(&self, descrs: Vec<UnitDescription>) -> Vec<Unit> {
+    pub fn submit(&self, descrs: Vec<UnitDescription>) -> Result<Vec<Unit>> {
+        for d in &descrs {
+            d.validate()?;
+        }
         let profiler = self.session.profiler();
         let mut created = Vec::with_capacity(descrs.len());
         let mut pending = Vec::with_capacity(descrs.len());
@@ -344,7 +353,7 @@ impl UnitManager {
         self.units.lock().unwrap().extend(created.iter().cloned());
         self.ensure_watcher();
         self.watch.notify();
-        created
+        Ok(created)
     }
 
     /// All units submitted through this manager.
@@ -402,7 +411,7 @@ mod tests {
         let um = s.unit_manager();
         let pilot = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
         um.add_pilot(&pilot);
-        let units = um.submit((0..8).map(|_| UnitDescription::sleep(0.01)).collect());
+        let units = um.submit((0..8).map(|_| UnitDescription::sleep(0.01)).collect()).unwrap();
         um.wait_all(20.0).unwrap();
         assert_eq!(um.completed(), 8);
         for u in units {
@@ -411,6 +420,23 @@ mod tests {
             assert_eq!(u.pilot(), Some(pilot.id()));
         }
         assert_eq!(s.store().count("units"), 8);
+        pilot.drain().unwrap();
+    }
+
+    #[test]
+    fn zero_core_submission_rejected() {
+        let s = Session::new("um-zero-cores");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        // one bad description fails the whole submission atomically
+        let err = um
+            .submit(vec![UnitDescription::sleep(0.01), UnitDescription::sleep(0.01).cores(0)])
+            .unwrap_err();
+        assert!(err.to_string().contains("cores"), "clear error: {err}");
+        assert!(um.units().is_empty(), "a rejected submission creates no units");
+        assert_eq!(um.pending(), 0);
         pilot.drain().unwrap();
     }
 
@@ -432,7 +458,7 @@ mod tests {
                 d2.fetch_add(1, Ordering::SeqCst);
             }
         }));
-        let _units = um.submit((0..4).map(|_| UnitDescription::sleep(0.05)).collect());
+        let _units = um.submit((0..4).map(|_| UnitDescription::sleep(0.05)).collect()).unwrap();
         um.wait_all(20.0).unwrap();
         // event-driven scans coalesce fast transitions, but every final
         // state lands
@@ -462,7 +488,7 @@ mod tests {
             }
         }));
         for round in 1..=2 {
-            um.submit(vec![UnitDescription::sleep(0.02)]);
+            um.submit(vec![UnitDescription::sleep(0.02)]).unwrap();
             um.wait_all(20.0).unwrap();
             let t0 = crate::util::now();
             while dones.load(Ordering::SeqCst) < round && crate::util::now() - t0 < 5.0 {
@@ -488,7 +514,7 @@ mod tests {
         // the moment a pilot is added
         let s = Session::new("um-latebind");
         let um = s.unit_manager();
-        let units = um.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect());
+        let units = um.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect()).unwrap();
         assert_eq!(um.pending(), 4);
         for u in &units {
             assert_eq!(u.state(), UnitState::UmSchedulingPending);
@@ -513,7 +539,7 @@ mod tests {
         let um = s.unit_manager();
         let small = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
         um.add_pilot(&small);
-        let units = um.submit(vec![UnitDescription::sleep(0.01).cores(8).mpi(true)]);
+        let units = um.submit(vec![UnitDescription::sleep(0.01).cores(8).mpi(true)]).unwrap();
         assert_eq!(um.pending(), 1, "no eligible pilot: the unit waits, not fails");
         assert_eq!(units[0].state(), UnitState::UmSchedulingPending);
         let big = pm.submit(PilotDescription::new("local.localhost", 8, 60.0)).unwrap();
@@ -529,7 +555,9 @@ mod tests {
     fn cancel_while_waiting_for_a_pilot_finalizes_immediately() {
         let s = Session::new("um-cancel-pending");
         let um = s.unit_manager();
-        let units = um.submit(vec![UnitDescription::sleep(0.01), UnitDescription::sleep(0.01)]);
+        let units = um
+            .submit(vec![UnitDescription::sleep(0.01), UnitDescription::sleep(0.01)])
+            .unwrap();
         units[0].cancel();
         // no component will ever observe an unbound unit: cancel is final
         // right away, and the next placement pass drops it from the pool
@@ -555,7 +583,7 @@ mod tests {
         um.add_pilot(&p1);
         um.add_pilot(&p2);
         assert_eq!(um.policy(), UmPolicy::RoundRobin);
-        let _ = um.submit((0..6).map(|_| UnitDescription::sleep(0.01)).collect());
+        let _ = um.submit((0..6).map(|_| UnitDescription::sleep(0.01)).collect()).unwrap();
         um.wait_all(20.0).unwrap();
         assert_eq!(um.completed(), 6);
         assert_eq!(counts(&um, &[&p1, &p2]), vec![3, 3], "round-robin splits evenly");
@@ -573,7 +601,7 @@ mod tests {
         let small = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
         um.add_pilot(&big);
         um.add_pilot(&small);
-        let _ = um.submit((0..16).map(|_| UnitDescription::sleep(0.01)).collect());
+        let _ = um.submit((0..16).map(|_| UnitDescription::sleep(0.01)).collect()).unwrap();
         um.wait_all(20.0).unwrap();
         let c = counts(&um, &[&big, &small]);
         assert_eq!(c[0] + c[1], 16);
@@ -597,7 +625,7 @@ mod tests {
             descrs.push(UnitDescription::sleep(0.01).name(format!("wla-{i}")));
             descrs.push(UnitDescription::sleep(0.01).name(format!("wlb-{i}")));
         }
-        let units = um.submit(descrs);
+        let units = um.submit(descrs).unwrap();
         um.wait_all(20.0).unwrap();
         for wl in ["wla", "wlb"] {
             let pilots: std::collections::HashSet<_> = units

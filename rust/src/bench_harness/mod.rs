@@ -9,5 +9,8 @@
 pub mod policy;
 pub mod report;
 
-pub use policy::policy_probe;
-pub use report::{bench_json_path, csv_path, write_bench_json, write_csv, Check, Report};
+pub use policy::{policy_probe, policy_probe_with};
+pub use report::{
+    bench_json_path, csv_path, validate_bench_json, validate_repo_bench_json, write_bench_json,
+    write_csv, Check, Report,
+};

@@ -2,7 +2,7 @@
 //! (`ablation_policy`, `ablation_sched` §d, `fig9_utilization`
 //! extension), so the three report the same quantity the same way.
 
-use crate::agent::scheduler::{SchedPolicy, SearchMode};
+use crate::agent::scheduler::{DEFAULT_RESERVE_WINDOW, SchedPolicy, SearchMode};
 use crate::config::ResourceConfig;
 use crate::sim::{AgentSim, AgentSimConfig};
 use crate::workload::Workload;
@@ -11,7 +11,8 @@ use crate::workload::Workload;
 /// `(ttc_a, core-weighted utilization)`.  Utilization is computed from
 /// the workload's total core-seconds over `pilot_cores * ttc_a`, which
 /// stays meaningful when units have mixed widths (unlike the per-unit
-/// metric in [`crate::profiler::Analysis::utilization`]).
+/// metric in [`crate::profiler::Analysis::utilization`]).  Uses the
+/// default reservation window; see [`policy_probe_with`] to sweep it.
 pub fn policy_probe(
     resource: &ResourceConfig,
     wl: &Workload,
@@ -19,10 +20,24 @@ pub fn policy_probe(
     policy: SchedPolicy,
     search: SearchMode,
 ) -> (f64, f64) {
+    policy_probe_with(resource, wl, pilot_cores, policy, search, DEFAULT_RESERVE_WINDOW)
+}
+
+/// [`policy_probe`] with an explicit anti-starvation reservation window
+/// (0 disables it — the starvation ablations compare against that).
+pub fn policy_probe_with(
+    resource: &ResourceConfig,
+    wl: &Workload,
+    pilot_cores: usize,
+    policy: SchedPolicy,
+    search: SearchMode,
+    reserve_window: usize,
+) -> (f64, f64) {
     let mut cfg = AgentSimConfig::paper_default(pilot_cores);
     cfg.policy = policy;
     cfg.search_mode = search;
     cfg.generation_size = pilot_cores;
+    cfg.reserve_window = reserve_window;
     let r = AgentSim::new(resource, cfg, wl).run();
     let util = wl.core_seconds() / (pilot_cores as f64 * r.ttc_a);
     (r.ttc_a, util)

@@ -122,6 +122,59 @@ pub fn write_bench_json(name: &str, metrics: &[(&str, f64)]) -> std::io::Result<
     Ok(path)
 }
 
+/// Validate one `BENCH_*.json` document against the `rp-bench-v1`
+/// schema: top-level `bench` (non-empty string), `schema` (exactly
+/// `"rp-bench-v1"`), and `metrics` (an object whose values are all
+/// numbers; empty is legal — seed placeholders start that way).  Extra
+/// top-level keys (e.g. a `note`) are allowed.
+pub fn validate_bench_json(path: &std::path::Path) -> std::result::Result<(), String> {
+    use crate::util::json::Value;
+    let v = Value::parse_file(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let at = |msg: &str| format!("{}: {msg}", path.display());
+    if v.as_obj().is_none() {
+        return Err(at("top level is not an object"));
+    }
+    if v.get_str("bench", "").is_empty() {
+        return Err(at("missing/empty 'bench' name"));
+    }
+    let schema = v.get_str("schema", "");
+    if schema != "rp-bench-v1" {
+        return Err(at(&format!("schema '{schema}' != 'rp-bench-v1'")));
+    }
+    let Some(metrics) = v.get("metrics").as_obj() else {
+        return Err(at("'metrics' missing or not an object"));
+    };
+    for (k, m) in metrics {
+        if m.as_f64().is_none() {
+            return Err(at(&format!("metric '{k}' is not a number")));
+        }
+    }
+    Ok(())
+}
+
+/// Schema-check every committed `BENCH_*.json` at the repository root
+/// (the perf trajectory [`write_bench_json`] maintains); returns how
+/// many documents were checked.  Run by `perf_hotpath` on every
+/// invocation — including the CI `--quick` smoke — so a malformed or
+/// hand-edited trajectory record fails the lint job.
+pub fn validate_repo_bench_json() -> std::result::Result<usize, String> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut n = 0;
+    let entries = std::fs::read_dir(&root).map_err(|e| format!("{}: {e}", root.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            validate_bench_json(&path)?;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return Err("no BENCH_*.json found at the repository root".into());
+    }
+    Ok(n)
+}
+
 /// Write rows as CSV.
 pub fn write_csv(name: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<PathBuf> {
     let path = csv_path(name);
@@ -173,6 +226,46 @@ mod tests {
         let m = v.get("metrics");
         assert!((m.get_f64("rate", 0.0) - 123.457).abs() < 1e-9, "rounded to 3 decimals");
         assert_eq!(m.get_f64("peak", 0.0), 32.0);
+        // what write_bench_json emits always passes the schema check
+        validate_bench_json(&p).unwrap();
         std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn bench_json_schema_check_catches_drift() {
+        let dir = std::env::temp_dir().join("rp_bench_schema_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, text: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            p
+        };
+        // seed placeholder shape (empty metrics + note) is legal
+        let ok = write(
+            "BENCH_ok.json",
+            r#"{"bench": "ok", "schema": "rp-bench-v1", "metrics": {}, "note": "seed"}"#,
+        );
+        validate_bench_json(&ok).unwrap();
+        let bad_schema = write(
+            "BENCH_bad1.json",
+            r#"{"bench": "x", "schema": "rp-bench-v2", "metrics": {}}"#,
+        );
+        assert!(validate_bench_json(&bad_schema).unwrap_err().contains("rp-bench-v1"));
+        let bad_metric = write(
+            "BENCH_bad2.json",
+            r#"{"bench": "x", "schema": "rp-bench-v1", "metrics": {"rate": "fast"}}"#,
+        );
+        assert!(validate_bench_json(&bad_metric).unwrap_err().contains("rate"));
+        let no_name = write("BENCH_bad3.json", r#"{"schema": "rp-bench-v1", "metrics": {}}"#);
+        assert!(validate_bench_json(&no_name).unwrap_err().contains("bench"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn committed_bench_trajectory_validates() {
+        // the repo root must always carry schema-clean BENCH_*.json
+        // (hotpath + fig6 at minimum)
+        let n = validate_repo_bench_json().unwrap();
+        assert!(n >= 2, "expected >= 2 committed BENCH_*.json, found {n}");
     }
 }

@@ -5,7 +5,7 @@ mod args;
 
 pub use args::Args;
 
-use crate::agent::scheduler::{SchedPolicy, SearchMode};
+use crate::agent::scheduler::{DEFAULT_RESERVE_WINDOW, SchedPolicy, SearchMode};
 use crate::api::{PilotDescription, Session, UmPolicy, UnitDescription};
 use crate::config::{builtin_labels, ResourceConfig};
 use crate::error::Result;
@@ -27,14 +27,22 @@ COMMANDS:
                  --max-inflight N (0 = pilot cores; executer-reactor
                    admission window: max concurrently running units)
                  --artifact NAME (run PJRT payloads)
-                 --policy fifo|backfill  --search linear|freelist
+                 --policy fifo|backfill|priority|fair-share
+                   (wait-pool placement policy)
+                 --reserve-window N (64; a head blocked under an
+                   overtaking policy is reserved after N overtakes so
+                   wide units cannot starve; 0 disables)
+                 --search linear|freelist
                  --um-policy round_robin|load_aware|locality
                    (UnitManager late-binding policy)
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
                  --generations N (3) --duration S (64)
                  --barrier agent|application|generation
-                 --policy fifo|backfill  --search linear|freelist
+                 --policy fifo|backfill|priority|fair-share
+                 --reserve-window N (64; 0 disables the
+                   anti-starvation reservation)
+                 --search linear|freelist
                  --schedulers N (1, concurrent partitions)
                  --max-inflight N (0 = unbounded reactor window)
                  --reap-latency S (0 = readiness reactor; >0 models a
@@ -91,8 +99,9 @@ fn sched_flags(args: &Args) -> Result<(Option<SchedPolicy>, Option<SearchMode>)>
     let policy = args
         .get("policy")
         .map(|s| {
-            SchedPolicy::parse(s)
-                .ok_or_else(|| crate::Error::other("bad --policy (fifo|backfill)"))
+            SchedPolicy::parse(s).ok_or_else(|| {
+                crate::Error::other("bad --policy (fifo|backfill|priority|fair-share)")
+            })
         })
         .transpose()?;
     let search = args
@@ -122,6 +131,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let duration = args.get_f64("duration", 0.1)?;
     let executers = args.get_usize("executers", 2)?;
     let max_inflight = args.get_usize("max-inflight", 0)?;
+    let reserve_window = args.get_usize("reserve-window", DEFAULT_RESERVE_WINDOW)?;
     let artifact = args.get("artifact");
     let (policy, search) = sched_flags(args)?;
     let um_policy = um_policy_flag(args)?;
@@ -137,7 +147,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let mut pd = PilotDescription::new("local.localhost", cores, 3600.0)
         .with_override("agent.executers", executers.to_string())
-        .with_override("agent.max_inflight", max_inflight.to_string());
+        .with_override("agent.max_inflight", max_inflight.to_string())
+        .with_override("agent.reserve_window", reserve_window.to_string());
     if let Some(p) = policy {
         pd = pd.with_override("agent.scheduler_policy", p.name());
     }
@@ -154,7 +165,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         })
         .collect();
     let t0 = crate::util::now();
-    let units = umgr.submit(descrs);
+    let units = umgr.submit(descrs)?;
     umgr.wait_all(3600.0)?;
     let wall = crate::util::now() - t0;
 
@@ -193,6 +204,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let duration = args.get_f64("duration", 64.0)?;
     let schedulers = args.get_usize("schedulers", 1)?;
     let max_inflight = args.get_usize("max-inflight", 0)?;
+    let reserve_window = args.get_usize("reserve-window", DEFAULT_RESERVE_WINDOW)?;
     let reap_latency = args.get_f64("reap-latency", 0.0)?;
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
@@ -205,8 +217,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if um_policy.is_some() || args.get("pilots").is_some() {
         // agent-level flags have no effect on the UM twin: reject them
         // loudly instead of letting a sweep silently misconfigure
-        for flag in ["policy", "search", "barrier", "schedulers", "max-inflight", "reap-latency"]
-        {
+        for flag in [
+            "policy",
+            "search",
+            "barrier",
+            "schedulers",
+            "max-inflight",
+            "reserve-window",
+            "reap-latency",
+        ] {
             if args.get(flag).is_some() {
                 return Err(crate::Error::other(format!(
                     "--{flag} applies to the agent sim, not the UM twin \
@@ -241,6 +260,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     sim_cfg.barrier = barrier;
     sim_cfg.schedulers = schedulers.max(1);
     sim_cfg.max_inflight = max_inflight;
+    sim_cfg.reserve_window = reserve_window;
     sim_cfg.reap_latency = reap_latency.max(0.0);
     if let Some(p) = policy {
         sim_cfg.policy = p;
@@ -489,5 +509,47 @@ mod tests {
             0
         );
         assert_eq!(run(&["run", "--policy", "bogus"]), 1);
+    }
+
+    #[test]
+    fn run_real_priority_and_fair_share_policies() {
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--policy", "priority",
+            ]),
+            0
+        );
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--policy", "fair-share", "--reserve-window", "8",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--reserve-window", "abc"]), 1);
+    }
+
+    #[test]
+    fn sim_new_policies_and_reserve_window() {
+        for policy in ["priority", "fair_share", "fair-share"] {
+            assert_eq!(
+                run(&[
+                    "sim", "--cores", "64", "--generations", "2", "--duration", "10",
+                    "--policy", policy,
+                ]),
+                0
+            );
+        }
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "2", "--duration", "10",
+                "--policy", "backfill", "--reserve-window", "0",
+            ]),
+            0
+        );
+        assert_eq!(run(&["sim", "--reserve-window", "-5"]), 1);
+        // agent-level flag: rejected on the UM-twin path
+        assert_eq!(run(&["sim", "--pilots", "32,32", "--reserve-window", "8"]), 1);
     }
 }

@@ -28,9 +28,13 @@ pub struct AgentLayout {
     pub spawner: String,
     /// "continuous" | "torus" scheduling algorithm.
     pub scheduler_algorithm: String,
-    /// "fifo" (paper-faithful head-of-line) | "backfill" wait-pool
-    /// placement policy.
+    /// "fifo" (paper-faithful head-of-line) | "backfill" | "priority" |
+    /// "fair_share" wait-pool placement policy.
     pub scheduler_policy: String,
+    /// Wait-pool reservation window for the overtaking policies: a
+    /// blocked head overtaken this many times gets its core demand
+    /// reserved so it cannot starve (0 disables the guard).
+    pub reserve_window: usize,
     /// "linear" (paper-faithful full scan) | "freelist" core search.
     pub search_mode: String,
 }
@@ -46,6 +50,7 @@ impl Default for AgentLayout {
             spawner: "popen".into(),
             scheduler_algorithm: "continuous".into(),
             scheduler_policy: "fifo".into(),
+            reserve_window: crate::agent::scheduler::DEFAULT_RESERVE_WINDOW,
             search_mode: "linear".into(),
         }
     }
@@ -180,7 +185,8 @@ impl ResourceConfig {
         let scheduler_policy = ag.get_str("scheduler_policy", "fifo").to_string();
         if crate::agent::scheduler::SchedPolicy::parse(&scheduler_policy).is_none() {
             return Err(Error::Config(format!(
-                "{label}: scheduler_policy '{scheduler_policy}': expected fifo|backfill"
+                "{label}: scheduler_policy '{scheduler_policy}': expected \
+                 fifo|backfill|priority|fair_share"
             )));
         }
         let search_mode = ag.get_str("search_mode", "linear").to_string();
@@ -218,6 +224,10 @@ impl ResourceConfig {
                     .get_str("scheduler_algorithm", "continuous")
                     .to_string(),
                 scheduler_policy,
+                reserve_window: ag.get_u64(
+                    "reserve_window",
+                    crate::agent::scheduler::DEFAULT_RESERVE_WINDOW as u64,
+                ) as usize,
                 search_mode,
             },
             calib: Calibration {
@@ -319,9 +329,20 @@ impl ResourceConfig {
             }
             "agent.scheduler_policy" => {
                 crate::agent::scheduler::SchedPolicy::parse(value).ok_or_else(|| {
-                    Error::Config(format!("override {key}={value}: expected fifo|backfill"))
+                    Error::Config(format!(
+                        "override {key}={value}: expected fifo|backfill|priority|fair_share"
+                    ))
                 })?;
                 self.agent.scheduler_policy = value.to_string();
+            }
+            "agent.reserve_window" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0 (0 disables the window)"
+                    )));
+                }
+                self.agent.reserve_window = v as usize;
             }
             "agent.search_mode" => {
                 crate::agent::scheduler::SearchMode::parse(value).ok_or_else(|| {
@@ -379,6 +400,7 @@ mod tests {
         assert_eq!(c.agent.schedulers, 1);
         assert_eq!(c.agent.max_inflight, 0, "max_inflight defaults to auto");
         assert_eq!(c.agent.scheduler_policy, "fifo");
+        assert_eq!(c.agent.reserve_window, 64, "reservation window defaults on");
         assert_eq!(c.agent.search_mode, "linear");
         assert_eq!(c.um_policy, "round_robin", "um_policy defaults to round_robin");
         assert_eq!(c.calib.sched_rate_mean, 158.0);
@@ -428,6 +450,21 @@ mod tests {
         )
         .unwrap();
         assert!(ResourceConfig::from_json(&v).is_ok());
+        // the new policies parse, with the window alongside
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4,
+                "agent": {"scheduler_policy": "fair_share", "reserve_window": 16}}"#,
+        )
+        .unwrap();
+        let c = ResourceConfig::from_json(&v).unwrap();
+        assert_eq!(c.agent.scheduler_policy, "fair_share");
+        assert_eq!(c.agent.reserve_window, 16);
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4,
+                "agent": {"scheduler_policy": "priority"}}"#,
+        )
+        .unwrap();
+        assert_eq!(ResourceConfig::from_json(&v).unwrap().agent.scheduler_policy, "priority");
     }
 
     #[test]
@@ -445,6 +482,15 @@ mod tests {
         assert_eq!(c.launch_methods.task, "SSH");
         c.apply_override("agent.scheduler_policy", "backfill").unwrap();
         assert_eq!(c.agent.scheduler_policy, "backfill");
+        c.apply_override("agent.scheduler_policy", "priority").unwrap();
+        assert_eq!(c.agent.scheduler_policy, "priority");
+        c.apply_override("agent.scheduler_policy", "fair_share").unwrap();
+        assert_eq!(c.agent.scheduler_policy, "fair_share");
+        c.apply_override("agent.reserve_window", "128").unwrap();
+        assert_eq!(c.agent.reserve_window, 128);
+        c.apply_override("agent.reserve_window", "0").unwrap();
+        assert_eq!(c.agent.reserve_window, 0, "0 disables the window");
+        assert!(c.apply_override("agent.reserve_window", "-1").is_err());
         c.apply_override("agent.search_mode", "freelist").unwrap();
         assert_eq!(c.agent.search_mode, "freelist");
         c.apply_override("um_policy", "load_aware").unwrap();

@@ -14,11 +14,14 @@
 //!
 //! Agent scheduling is event-driven: units wait in a shared
 //! [`agent::scheduler::WaitPool`], and every submit and core-release
-//! event triggers a placement pass under a configurable policy (`fifo`,
-//! the paper-faithful head-of-line default, or `backfill`, which lets
-//! smaller units overtake a blocked wide head).  The real thread-based
-//! Agent and the DES twin drive the same pool and the same scheduler
-//! implementations, so policies behave identically in both substrates.
+//! event triggers a placement pass under a configurable policy —
+//! `fifo` (the paper-faithful head-of-line default), `backfill`,
+//! `priority`, or `fair_share` — with the overtaking policies bounded
+//! by an anti-starvation reservation window (`agent.reserve_window`)
+//! so a steady stream of small units can never starve a blocked wide
+//! head.  The real thread-based Agent and the DES twin drive the same
+//! pool and the same scheduler implementations, so policies behave
+//! identically in both substrates.
 //! One layer up, the UnitManager late-binds units onto pilots the same
 //! way: a UM-side wait-pool plus exchangeable [`api::UmScheduler`]
 //! policies (`round_robin` / `load_aware` / `locality`), shared between

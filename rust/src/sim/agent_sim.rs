@@ -8,7 +8,10 @@
 //! code in both modes.  The scheduler remains a service station (one
 //! placement per calibrated service time); the pool decides *which*
 //! waiting unit is placed next: the head only under the paper-faithful
-//! `fifo` policy, or the first unit that fits under `backfill`.
+//! `fifo` policy, the first fit under `backfill`, the highest-priority
+//! fit under `priority`, or the least-served submitter tag under
+//! `fair_share` — the overtaking policies bounded by the
+//! anti-starvation reservation window (see [`WaitPool`]).
 //! Component timings come from the calibrated [`MachineModel`].
 
 use std::collections::{HashMap, VecDeque};
@@ -17,7 +20,8 @@ use super::engine::EventQueue;
 use super::machine::MachineModel;
 use crate::agent::nodelist::Allocation;
 use crate::agent::scheduler::{
-    ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode, TorusScheduler, WaitPool,
+    ContinuousScheduler, CoreScheduler, DEFAULT_RESERVE_WINDOW, SchedPolicy, SearchMode,
+    TorusScheduler, WaitPool,
 };
 use crate::config::ResourceConfig;
 use crate::db::LatencyModel;
@@ -65,8 +69,14 @@ pub struct AgentSimConfig {
     /// Scheduler search mode (Linear = faithful; FreeList = optimized).
     pub search_mode: SearchMode,
     /// Wait-pool placement policy (Fifo = faithful head-of-line;
-    /// Backfill = smaller units may overtake a blocked head).
+    /// Backfill / Priority / FairShare = later units may overtake a
+    /// blocked head, bounded by `reserve_window`).
     pub policy: SchedPolicy,
+    /// Wait-pool reservation window: a blocked head overtaken this many
+    /// times gets its core demand reserved so it cannot starve (0
+    /// disables the guard; matches the real agent's
+    /// `agent.reserve_window`).
+    pub reserve_window: usize,
     /// Concurrent Scheduler instances, each owning an equal partition of
     /// the pilot's cores (the paper's §VI future-work item (i): "a
     /// concurrent Scheduler to support partitioning of the pilot
@@ -98,6 +108,7 @@ impl AgentSimConfig {
             agent_level_launch: true,
             search_mode: SearchMode::Linear,
             policy: SchedPolicy::Fifo,
+            reserve_window: DEFAULT_RESERVE_WINDOW,
             schedulers: 1,
             torus: false,
             profile: true,
@@ -151,6 +162,10 @@ enum Ev {
 struct SimUnit {
     duration: f64,
     cores: usize,
+    /// Placement preference under the `priority` policy.
+    priority: i32,
+    /// Submitter tag under the `fair_share` policy (workload key).
+    share: String,
     alloc: Option<Allocation>,
     /// (modeled slots scanned, real words touched) of this unit's
     /// allocation.
@@ -216,6 +231,8 @@ impl AgentSim {
             .map(|u| SimUnit {
                 duration: u.duration().unwrap_or(0.0),
                 cores: u.cores,
+                priority: u.priority,
+                share: crate::api::um_scheduler::workload_key(&u.name),
                 alloc: None,
                 alloc_cost: (0, 0),
             })
@@ -229,6 +246,7 @@ impl AgentSim {
         let profile = cfg.profile;
         let seed = cfg.seed;
         let policy = cfg.policy;
+        let reserve_window = cfg.reserve_window;
         AgentSim {
             cfg,
             machine: MachineModel::new(resource.clone()),
@@ -237,7 +255,9 @@ impl AgentSim {
             rng: Pcg::seeded(seed),
             profiler: Profiler::new(profile),
             units,
-            pools: (0..scheds.len()).map(|_| WaitPool::new(policy)).collect(),
+            pools: (0..scheds.len())
+                .map(|_| WaitPool::new(policy).with_reserve_window(reserve_window))
+                .collect(),
             sched_busy: vec![false; scheds.len()],
             scheds,
             exec_queue: VecDeque::new(),
@@ -395,8 +415,9 @@ impl AgentSim {
         let now = self.q.now();
         self.prof(now, u, S::ASchedulingPending);
         let p = self.partition(u);
-        let cores = self.units[u as usize].cores;
-        self.pools[p].push(u, cores);
+        let unit = &self.units[u as usize];
+        let (cores, priority, share) = (unit.cores, unit.priority, unit.share.clone());
+        self.pools[p].push_req(u, cores, priority, share);
         self.kick_scheduler(p);
     }
 
@@ -454,6 +475,14 @@ impl AgentSim {
                 if let Some(alloc) = self.units[u as usize].alloc.take() {
                     let p = self.partition(u);
                     self.scheds[p].release(&alloc);
+                    // fair-share: the tag's outstanding cores shrink
+                    // (no-op under the other policies; max(1) mirrors
+                    // the pool's push clamp so the gauge stays balanced
+                    // even for a clamped zero-core request)
+                    self.pools[p].release_share(
+                        &self.units[u as usize].share,
+                        self.units[u as usize].cores.max(1),
+                    );
                 }
                 if self.cfg.stage_out {
                     self.stage_out_queue.push_back(u);
@@ -713,6 +742,138 @@ mod tests {
         // run() asserts completion internally, so reaching this point
         // also proves neither policy starves the wide head units
         assert!(rb.peak_concurrency <= 32);
+    }
+
+    /// Virtual time a unit entered a state, from the profile trace.
+    fn entered_at(r: &AgentSimResult, unit: u64, state: S) -> f64 {
+        r.profile.time_of(UnitId(unit), state).expect("state recorded")
+    }
+
+    /// Starvation regression (reservation window), DES side: a blocked
+    /// 32-core head under a steady 1-core stream must place within the
+    /// window, and demonstrably never places while the stream lasts
+    /// when the window is disabled.
+    #[test]
+    fn backfill_reservation_window_prevents_starvation_in_sim() {
+        use crate::api::descriptions::UnitDescription;
+        let pilot = 32;
+        let mk_workload = || {
+            let mut units = vec![];
+            // occupy the pilot first so the wide unit blocks at arrival
+            for i in 0..pilot {
+                units.push(UnitDescription::sleep(10.0).name(format!("occ-{i:04}")));
+            }
+            units.push(UnitDescription::sleep(1.0).name("wide-0000").cores(pilot).mpi(true));
+            // the starving stream: enough smalls to refill every release
+            for i in 0..400 {
+                units.push(UnitDescription::sleep(1.0).name(format!("small-{i:04}")));
+            }
+            Workload { units }
+        };
+        let run = |window: usize| {
+            let mut cfg = AgentSimConfig::paper_default(pilot);
+            cfg.policy = SchedPolicy::Backfill;
+            cfg.reserve_window = window;
+            cfg.generation_size = pilot;
+            AgentSim::new(&stampede(), cfg, &mk_workload()).run()
+        };
+        let wide_idx = pilot as u64;
+        let smalls_before_wide = |r: &AgentSimResult| {
+            let wide_started = entered_at(r, wide_idx, S::AExecuting);
+            ((pilot as u64 + 1)..(pilot as u64 + 1 + 400))
+                .filter(|&u| entered_at(r, u, S::AExecuting) < wide_started)
+                .count()
+        };
+        let reserved = run(16);
+        let overtakes = smalls_before_wide(&reserved);
+        assert!(
+            overtakes <= 16 + pilot,
+            "window=16: the wide head must place within the window \
+             (+ the in-service slack), saw {overtakes} smalls first"
+        );
+        let starved = run(0);
+        let overtakes = smalls_before_wide(&starved);
+        assert!(
+            overtakes >= 350,
+            "window disabled: the stream must starve the wide head until \
+             it runs dry, saw only {overtakes} smalls first"
+        );
+        // the guard costs little: total makespan within 10%
+        assert!(
+            reserved.ttc_a < starved.ttc_a * 1.10,
+            "reservation must not wreck throughput: {} vs {}",
+            reserved.ttc_a,
+            starved.ttc_a
+        );
+    }
+
+    #[test]
+    fn priority_policy_strictly_reorders_completions() {
+        use crate::api::descriptions::UnitDescription;
+        let pilot = 16;
+        let mut units = vec![];
+        // submission order low -> mid -> high; placement must invert it
+        for (prio, tag) in [(-1i32, "low"), (0, "mid"), (9, "high")] {
+            for i in 0..pilot {
+                units.push(
+                    UnitDescription::sleep(30.0).name(format!("{tag}-{i:04}")).priority(prio),
+                );
+            }
+        }
+        let wl = Workload { units };
+        let mut cfg = AgentSimConfig::paper_default(pilot);
+        cfg.policy = SchedPolicy::Priority;
+        cfg.generation_size = pilot;
+        let r = AgentSim::new(&stampede(), cfg, &wl).run();
+        let done = |lo: u64, hi: u64| -> Vec<f64> {
+            (lo..hi).map(|u| entered_at(&r, u, S::UmStagingOutPending)).collect()
+        };
+        let (n, lows, mids, highs) = (
+            pilot as u64,
+            done(0, pilot as u64),
+            done(pilot as u64, 2 * pilot as u64),
+            done(2 * pilot as u64, 3 * pilot as u64),
+        );
+        assert_eq!(lows.len() as u64, n);
+        let max_high = highs.iter().cloned().fold(f64::MIN, f64::max);
+        let min_mid = mids.iter().cloned().fold(f64::MAX, f64::min);
+        let max_mid = mids.iter().cloned().fold(f64::MIN, f64::max);
+        let min_low = lows.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            max_high < min_mid && max_mid < min_low,
+            "priority must strictly reorder completion: high [..{max_high:.1}] \
+             mid [{min_mid:.1}..{max_mid:.1}] low [{min_low:.1}..]"
+        );
+    }
+
+    #[test]
+    fn fair_share_protects_minority_tag() {
+        use crate::api::descriptions::UnitDescription;
+        let pilot = 8;
+        let mut units = vec![];
+        // a greedy tag floods the pilot before a small tag arrives
+        for i in 0..120 {
+            units.push(UnitDescription::sleep(4.0).name(format!("greedy-{i:04}")));
+        }
+        for i in 0..8 {
+            units.push(UnitDescription::sleep(4.0).name(format!("minor-{i:04}")));
+        }
+        let wl = Workload { units };
+        let mean_minor_done = |policy: SchedPolicy| -> f64 {
+            let mut cfg = AgentSimConfig::paper_default(pilot);
+            cfg.policy = policy;
+            cfg.generation_size = pilot;
+            let r = AgentSim::new(&stampede(), cfg, &wl).run();
+            let total: f64 = (120..128).map(|u| entered_at(&r, u, S::UmStagingOutPending)).sum();
+            total / 8.0
+        };
+        let fair = mean_minor_done(SchedPolicy::FairShare);
+        let backfill = mean_minor_done(SchedPolicy::Backfill);
+        assert!(
+            fair < backfill * 0.5,
+            "fair-share must pull the minority tag forward: fair_share \
+             {fair:.1}s vs backfill {backfill:.1}s mean completion"
+        );
     }
 
     #[test]

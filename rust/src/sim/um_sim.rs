@@ -462,11 +462,13 @@ mod tests {
             let p2 = pm.submit(PilotDescription::new("local.localhost", 2, 60.0)).unwrap();
             um.add_pilot(&p1);
             um.add_pilot(&p2);
-            let units = um.submit(
-                (0..12)
-                    .map(|i| UnitDescription::sleep(0.01).name(format!("unit-{i:06}")))
-                    .collect(),
-            );
+            let units = um
+                .submit(
+                    (0..12)
+                        .map(|i| UnitDescription::sleep(0.01).name(format!("unit-{i:06}")))
+                        .collect(),
+                )
+                .unwrap();
             um.wait_all(20.0).unwrap();
             let real: Vec<usize> = [&p1, &p2]
                 .iter()

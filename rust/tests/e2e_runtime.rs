@@ -160,11 +160,13 @@ fn full_stack_pjrt_units_through_pilot() {
         .submit(PilotDescription::new("local.localhost", 4, 600.0))
         .unwrap();
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(
-        (0..6)
-            .map(|i| UnitDescription::pjrt("md_n64_s10", i).name(format!("md-{i}")))
-            .collect(),
-    );
+    let units = umgr
+        .submit(
+            (0..6)
+                .map(|i| UnitDescription::pjrt("md_n64_s10", i).name(format!("md-{i}")))
+                .collect(),
+        )
+        .unwrap();
     umgr.wait_all(120.0).unwrap();
     for u in &units {
         assert_eq!(u.state(), rp::states::UnitState::Done, "unit {:?}", u.error());

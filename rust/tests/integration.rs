@@ -31,11 +31,13 @@ fn full_lifecycle_with_staging() {
     let input = sandbox.join("input.txt");
     std::fs::write(&input, "payload-data").unwrap();
 
-    let units = umgr.submit(vec![UnitDescription::executable(
-        "/bin/cat",
-        vec![input.to_str().unwrap().to_string()],
-    )
-    .name("cat-unit")]);
+    let units = umgr
+        .submit(vec![UnitDescription::executable(
+            "/bin/cat",
+            vec![input.to_str().unwrap().to_string()],
+        )
+        .name("cat-unit")])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     assert_eq!(units[0].state(), UnitState::Done);
     match units[0].outcome().unwrap() {
@@ -58,11 +60,14 @@ fn failing_executable_marks_unit_failed() {
     let umgr = session.unit_manager();
     let pilot = local_pilot(&session, 2);
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(vec![
-        UnitDescription::executable("/bin/sh", vec!["-c".into(), "exit 7".into()]).name("rc7"),
-        UnitDescription::executable("/definitely/not/a/binary", vec![]).name("noexe"),
-        UnitDescription::sleep(0.01).name("ok"),
-    ]);
+    let units = umgr
+        .submit(vec![
+            UnitDescription::executable("/bin/sh", vec!["-c".into(), "exit 7".into()])
+                .name("rc7"),
+            UnitDescription::executable("/definitely/not/a/binary", vec![]).name("noexe"),
+            UnitDescription::sleep(0.01).name("ok"),
+        ])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     // non-zero exit: RP reports the exit code; the unit still completed
     assert_eq!(units[0].state(), UnitState::Done);
@@ -91,11 +96,13 @@ fn cancel_queued_units() {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(
-        (0..6)
-            .map(|i| UnitDescription::sleep(0.15).name(format!("u{i}")))
-            .collect(),
-    );
+    let units = umgr
+        .submit(
+            (0..6)
+                .map(|i| UnitDescription::sleep(0.15).name(format!("u{i}")))
+                .collect(),
+        )
+        .unwrap();
     // cancel the tail while the head still runs
     for u in &units[3..] {
         u.cancel();
@@ -123,10 +130,12 @@ fn cancel_of_pooled_unit_finalizes_without_a_release() {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(vec![
-        UnitDescription::sleep(1.0).name("head"),
-        UnitDescription::sleep(1.0).name("queued"),
-    ]);
+    let units = umgr
+        .submit(vec![
+            UnitDescription::sleep(1.0).name("head"),
+            UnitDescription::sleep(1.0).name("queued"),
+        ])
+        .unwrap();
     let t0 = rp::util::now();
     while units[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
         rp::util::sleep(0.005);
@@ -150,13 +159,15 @@ fn heterogeneous_unit_sizes_share_pilot() {
     let umgr = session.unit_manager();
     let pilot = local_pilot(&session, 8);
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(vec![
-        UnitDescription::sleep(0.05).cores(4).mpi(true).name("mpi4"),
-        UnitDescription::sleep(0.05).cores(2).name("smp2"),
-        UnitDescription::sleep(0.05).name("serial-a"),
-        UnitDescription::sleep(0.05).name("serial-b"),
-        UnitDescription::sleep(0.05).cores(8).mpi(true).name("mpi8"),
-    ]);
+    let units = umgr
+        .submit(vec![
+            UnitDescription::sleep(0.05).cores(4).mpi(true).name("mpi4"),
+            UnitDescription::sleep(0.05).cores(2).name("smp2"),
+            UnitDescription::sleep(0.05).name("serial-a"),
+            UnitDescription::sleep(0.05).name("serial-b"),
+            UnitDescription::sleep(0.05).cores(8).mpi(true).name("mpi8"),
+        ])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     assert!(units.iter().all(|u| u.state() == UnitState::Done));
     // profiled concurrency respected the 8-core capacity
@@ -183,17 +194,19 @@ fn backfill_small_unit_finishes_while_wide_head_waits() {
     umgr.add_pilot(&pilot);
 
     // a long 1-core unit occupies the pilot so the wide unit cannot fit
-    let long = umgr.submit(vec![UnitDescription::sleep(0.5).name("long")]);
+    let long = umgr.submit(vec![UnitDescription::sleep(0.5).name("long")]).unwrap();
     let t0 = rp::util::now();
     while long[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
         rp::util::sleep(0.005);
     }
     assert!(long[0].entered(UnitState::AExecuting).is_some(), "long unit must start");
 
-    let rest = umgr.submit(vec![
-        UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
-        UnitDescription::sleep(0.05).name("small"),
-    ]);
+    let rest = umgr
+        .submit(vec![
+            UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
+            UnitDescription::sleep(0.05).name("small"),
+        ])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     for u in umgr.units() {
         assert_eq!(u.state(), UnitState::Done, "unit {} ({:?})", u.name(), u.error());
@@ -222,15 +235,17 @@ fn fifo_policy_preserves_submission_order() {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let long = umgr.submit(vec![UnitDescription::sleep(0.3).name("long")]);
+    let long = umgr.submit(vec![UnitDescription::sleep(0.3).name("long")]).unwrap();
     let t0 = rp::util::now();
     while long[0].entered(UnitState::AExecuting).is_none() && rp::util::now() - t0 < 5.0 {
         rp::util::sleep(0.005);
     }
-    let rest = umgr.submit(vec![
-        UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
-        UnitDescription::sleep(0.05).name("small"),
-    ]);
+    let rest = umgr
+        .submit(vec![
+            UnitDescription::sleep(0.05).cores(4).mpi(true).name("wide"),
+            UnitDescription::sleep(0.05).name("small"),
+        ])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     let wide_started = rest[0].entered(UnitState::AExecuting).unwrap();
     let small_started = rest[1].entered(UnitState::AExecuting).unwrap();
@@ -250,7 +265,7 @@ fn multi_pilot_round_robin_and_drain() {
     let p2 = local_pilot(&session, 2);
     umgr.add_pilot(&p1);
     umgr.add_pilot(&p2);
-    let units = umgr.submit((0..10).map(|_| UnitDescription::sleep(0.02)).collect());
+    let units = umgr.submit((0..10).map(|_| UnitDescription::sleep(0.02)).collect()).unwrap();
     umgr.wait_all(30.0).unwrap();
     assert!(units.iter().all(|u| u.state() == UnitState::Done));
     // both pilot sandboxes saw units
@@ -278,7 +293,8 @@ fn store_reflects_workload() {
     let umgr = session.unit_manager();
     let pilot = local_pilot(&session, 2);
     umgr.add_pilot(&pilot);
-    umgr.submit((0..5).map(|i| UnitDescription::sleep(0.01).name(format!("u{i}"))).collect());
+    umgr.submit((0..5).map(|i| UnitDescription::sleep(0.01).name(format!("u{i}"))).collect())
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     assert_eq!(session.store().count("units"), 5);
     assert_eq!(session.store().count("pilots"), 1);
@@ -295,7 +311,7 @@ fn profiler_csv_export() {
     let umgr = session.unit_manager();
     let pilot = local_pilot(&session, 2);
     umgr.add_pilot(&pilot);
-    umgr.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect());
+    umgr.submit((0..4).map(|_| UnitDescription::sleep(0.01)).collect()).unwrap();
     umgr.wait_all(30.0).unwrap();
     let path = session.write_profile().unwrap();
     let text = std::fs::read_to_string(path).unwrap();
@@ -318,11 +334,13 @@ fn drain_with_queued_units_fails_them_cleanly() {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let units = umgr.submit(
-        (0..8)
-            .map(|i| UnitDescription::sleep(0.2).name(format!("u{i}")))
-            .collect(),
-    );
+    let units = umgr
+        .submit(
+            (0..8)
+                .map(|i| UnitDescription::sleep(0.2).name(format!("u{i}")))
+                .collect(),
+        )
+        .unwrap();
     rp::util::sleep(0.05); // let the head start executing
     pilot.drain().unwrap(); // shut the agent down under load
     umgr.wait_all(30.0).unwrap();
@@ -412,8 +430,9 @@ fn launch_method_fallback_on_missing_wrapper() {
         )
         .unwrap();
     umgr.add_pilot(&pilot);
-    let units =
-        umgr.submit(vec![UnitDescription::executable("/bin/echo", vec!["ok".into()])]);
+    let units = umgr
+        .submit(vec![UnitDescription::executable("/bin/echo", vec!["ok".into()])])
+        .unwrap();
     umgr.wait_all(30.0).unwrap();
     assert_eq!(units[0].state(), UnitState::Done);
     pilot.drain().unwrap();

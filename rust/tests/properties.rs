@@ -115,15 +115,23 @@ fn prop_no_core_double_assignment() {
     });
 }
 
+/// Submitter tag a scripted unit carries (exercises fair-share).
+fn script_tag(id: u64) -> String {
+    ["wla", "wlb", "wlc"][(id % 3) as usize].to_string()
+}
+
 /// Drive a wait-pool with a random submit/release script, running a
 /// placement pass after every event exactly as the Agent does.  Checks:
 /// no (node, core) slot is ever double-allocated, free + busy always
 /// equals capacity, FIFO places in submission order, and after releasing
-/// everything the pool drains completely (no unit is lost or starved).
+/// everything the pool drains completely (no unit is lost or starved —
+/// which exercises the reservation window under the overtaking
+/// policies).  Units carry varied priorities and submitter tags so the
+/// `priority` / `fair_share` orderings actually reorder.
 fn pool_script_holds(policy: SchedPolicy, script: &[(u8, u8)]) -> bool {
     let mut sched = ContinuousScheduler::new(4, 8, SearchMode::FreeList);
     let capacity = sched.capacity();
-    let mut pool: WaitPool<u64> = WaitPool::new(policy);
+    let mut pool: WaitPool<u64> = WaitPool::new(policy).with_reserve_window(4);
     let mut next_id = 0u64;
     let mut fifo_expect = 0u64;
     let mut live: Vec<(u64, rp::agent::Allocation)> = Vec::new();
@@ -159,16 +167,18 @@ fn pool_script_holds(policy: SchedPolicy, script: &[(u8, u8)]) -> bool {
 
     for &(op, size) in script {
         if op < 50 {
-            pool.push(next_id, 1 + (size as usize % 12));
+            let prio = (size as i32 % 5) - 2;
+            pool.push_req(next_id, 1 + (size as usize % 12), prio, script_tag(next_id));
             next_id += 1;
         } else if op < 80 && !live.is_empty() {
             let idx = (op as usize * 31 + size as usize) % live.len();
-            let (_, a) = live.swap_remove(idx);
+            let (id, a) = live.swap_remove(idx);
             for c in &a.cores {
                 slots.remove(c);
             }
             busy -= a.n_cores();
             sched.release(&a);
+            pool.release_share(&script_tag(id), a.n_cores());
         }
         if !pass(&mut pool, &mut sched, &mut live, &mut slots, &mut busy, &mut fifo_expect) {
             return false;
@@ -180,12 +190,13 @@ fn pool_script_holds(policy: SchedPolicy, script: &[(u8, u8)]) -> bool {
     // drain: with everything released, repeated passes must empty the
     // pool (every request <= capacity, so progress is guaranteed)
     loop {
-        for (_, a) in live.drain(..) {
+        for (id, a) in live.drain(..) {
             for c in &a.cores {
                 slots.remove(c);
             }
             busy -= a.n_cores();
             sched.release(&a);
+            pool.release_share(&script_tag(id), a.n_cores());
         }
         if pool.is_empty() {
             break;
@@ -208,6 +219,59 @@ fn prop_waitpool_fifo_conserves_and_orders() {
 #[test]
 fn prop_waitpool_backfill_conserves_capacity() {
     forall(&scripts(), 60, |script| pool_script_holds(SchedPolicy::Backfill, script));
+}
+
+#[test]
+fn prop_waitpool_priority_conserves_capacity() {
+    forall(&scripts(), 60, |script| pool_script_holds(SchedPolicy::Priority, script));
+}
+
+#[test]
+fn prop_waitpool_fair_share_conserves_capacity() {
+    forall(&scripts(), 60, |script| pool_script_holds(SchedPolicy::FairShare, script));
+}
+
+/// The real Agent drains the pool with `place_all`, the DES twin with
+/// repeated `pop_placeable`.  Given identical scheduler states the two
+/// drain paths must place the same units in the same order under every
+/// policy — the pool-level half of real-vs-twin agreement.
+#[test]
+fn prop_waitpool_place_all_matches_pop_placeable() {
+    for policy in SchedPolicy::ALL {
+        forall(&scripts(), 30, |script| {
+            let build = || {
+                let mut sched = ContinuousScheduler::new(4, 8, SearchMode::FreeList);
+                let mut pool: WaitPool<u64> = WaitPool::new(policy).with_reserve_window(4);
+                let mut held = Vec::new();
+                let mut id = 0u64;
+                for &(op, size) in script {
+                    if op < 50 {
+                        let prio = (size as i32 % 5) - 2;
+                        pool.push_req(id, 1 + (size as usize % 12), prio, script_tag(id));
+                        id += 1;
+                    } else if op < 70 {
+                        // fragment the scheduler so heads block
+                        if let Some(a) = sched.allocate(1 + (size as usize % 6)) {
+                            held.push(a);
+                        }
+                    } else if !held.is_empty() {
+                        let a = held.swap_remove((op as usize) % held.len());
+                        sched.release(&a);
+                    }
+                }
+                (sched, pool)
+            };
+            let (mut s1, mut p1) = build();
+            let mut via_place = Vec::new();
+            p1.place_all(&mut s1, |u, _| via_place.push(u));
+            let (mut s2, mut p2) = build();
+            let mut via_pop = Vec::new();
+            while let Some((u, _)) = p2.pop_placeable(&mut s2) {
+                via_pop.push(u);
+            }
+            via_place == via_pop
+        });
+    }
 }
 
 #[test]

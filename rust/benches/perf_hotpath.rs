@@ -4,7 +4,16 @@
 //! * DES engine event throughput (target >= 1M events/s so 8k-core
 //!   figures regenerate in seconds);
 //! * full agent-sim events/s on the Fig. 7 heavy configuration;
-//! * real-agent end-to-end unit throughput (sleep-0 units);
+//! * real-agent end-to-end unit throughput (sleep-0 units) — the
+//!   real-agent-backed leg of the 100K-concurrency scenario, at the
+//!   scale one local agent can host;
+//! * 100K-concurrency control-plane scenario on the UM DES twin: the
+//!   whole workload resident in flight at once, per-event cost must
+//!   stay flat from 1K to 100K units (sharded state + batched bus —
+//!   no O(live-units) pass anywhere on the hot path);
+//! * UM submit→feed ablation: the batched control plane
+//!   (`rp::bench_harness::um_feed`) vs the seed's per-unit-lock path
+//!   at 16K units — the PR's >= 4x throughput claim;
 //! * reactor-vs-threadpool ablation: sustained concurrent in-flight
 //!   children at a fixed thread count (the seed's thread-per-slot
 //!   executer capped concurrency at `executers`; the reactor must
@@ -15,24 +24,34 @@
 //!   per allocation vs the modeled linear-list slot cost;
 //! * JSON substrate parse throughput.
 //!
-//! Writes `bench_out/perf_hotpath.csv` and refreshes the committed
-//! perf-trajectory record `BENCH_hotpath.json` at the repository root.
+//! Writes `bench_out/perf_hotpath.csv` and (full runs only) refreshes
+//! the committed perf-trajectory record `BENCH_hotpath.json` at the
+//! repository root.
 //!
 //! `--quick` shrinks every workload for the CI smoke job: breakage
-//! (panics, API drift) still fails, but perf thresholds do not gate
-//! the exit code on shared runners.
+//! (panics, API drift) still fails and the **perf-regression gate**
+//! still gates — fresh intensive metrics (spawn rate, per-event cost,
+//! feed speedup) are compared against the committed trajectory and a
+//! >30% regression fails the run even in quick mode
+//! (`rp::bench_harness::report::REGRESSION_TOLERANCE` documents the
+//! tolerance).  Other perf thresholds do not gate the exit code on
+//! shared runners.  Quick runs never overwrite `BENCH_hotpath.json`,
+//! so the committed baseline always comes from a full run.
 
 use std::sync::Arc;
 
 use rp::agent::executer::ReactorStatsSnapshot;
 use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig, SharedUnit};
 use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode};
-use rp::api::{PilotDescription, Session, UnitDescription};
-use rp::bench_harness::{validate_repo_bench_json, write_bench_json, write_csv, Check, Report};
+use rp::api::{PilotDescription, Session, UmPolicy, UnitDescription, DEFAULT_UM_SHARDS};
+use rp::bench_harness::{
+    batched_throughput, per_unit_baseline_throughput, regression_gate, validate_repo_bench_json,
+    write_bench_json, write_csv, Check, Direction, Report,
+};
 use rp::config::ResourceConfig;
 use rp::ids::UnitId;
 use rp::profiler::{Analysis, Profiler};
-use rp::sim::{AgentSim, AgentSimConfig, EventQueue};
+use rp::sim::{AgentSim, AgentSimConfig, EventQueue, UmSim, UmSimConfig};
 use rp::states::UnitState as S;
 use rp::util;
 use rp::util::json::Value;
@@ -81,6 +100,38 @@ fn bench_real_agent(n: usize) -> f64 {
     pilot.drain().unwrap();
     session.close();
     rate
+}
+
+/// One run of the 100K-concurrency control-plane scenario on the UM DES
+/// twin: `n` single-core units whose duration (1e9 virtual seconds) is
+/// far past every spawn, so the whole workload is resident in flight at
+/// once — the steady-state the sharded UM must hold.  128 pilots sized
+/// to admit everything, round-robin binding (O(1) amortized placement),
+/// profiler off so only control-plane cost is measured.  Returns
+/// (per-event wall µs, spawn rate units/s, peak in-flight, DES events).
+fn bench_um_sim_scale(n: usize) -> (f64, f64, usize, u64) {
+    let comet = ResourceConfig::load("comet").unwrap();
+    let pilots = 128usize;
+    let mut cfg = UmSimConfig::new(vec![n.div_ceil(pilots); pilots], UmPolicy::RoundRobin);
+    cfg.profile = false;
+    let wl = WorkloadSpec::uniform(n, 1e9).build();
+    let r = UmSim::new(&comet, cfg, &wl).run();
+    let per_event_us = r.wall_s * 1e6 / r.events.max(1) as f64;
+    let spawn_rate = n as f64 / r.wall_s.max(1e-9);
+    (per_event_us, spawn_rate, r.peak_inflight, r.events)
+}
+
+/// Best-of-`reps` per-event cost at scale `n` (min over repetitions —
+/// the flatness check compares costs, so take the least-noisy sample).
+fn bench_um_sim_scale_best(n: usize, reps: usize) -> (f64, f64, usize, u64) {
+    let mut best = bench_um_sim_scale(n);
+    for _ in 1..reps {
+        let r = bench_um_sim_scale(n);
+        if r.0 < best.0 {
+            best = r;
+        }
+    }
+    best
 }
 
 /// Reactor-vs-threadpool ablation: run `sleep`-as-process units through
@@ -191,6 +242,19 @@ fn main() {
     let (sim_pilot, sim_gens) = if quick { (1024, 2) } else { (8192, 3) };
     let (sim_ev, sim_wall) = bench_agent_sim(sim_pilot, sim_gens);
     let real = bench_real_agent(if quick { 300 } else { 2000 });
+
+    // 100K-concurrency scenario: small anchor (best-of-3) vs big run
+    let (n_small, n_big) = if quick { (1_000, 16_384) } else { (1_000, 100_000) };
+    let (per_ev_small, _, peak_small, _) = bench_um_sim_scale_best(n_small, 3);
+    let (per_ev_big, um_spawn_rate, peak_big, um_events) = bench_um_sim_scale(n_big);
+
+    // submit→feed ablation: batched control plane vs seed per-unit path
+    let feed_n = if quick { 4_096 } else { 16_384 };
+    let feed_threads = 4;
+    let feed_batched = batched_throughput(feed_n, feed_threads, DEFAULT_UM_SHARDS);
+    let feed_baseline = per_unit_baseline_throughput(feed_n, feed_threads);
+    let feed_speedup = feed_batched / feed_baseline.max(1e-9);
+
     let threads = 2usize;
     let (n_children, child_dur) = if quick { (24, 0.25) } else { (64, 0.5) };
     let (peak_children, rstats) = bench_reactor_inflight(threads, n_children, child_dur);
@@ -204,6 +268,18 @@ fn main() {
         sim_ev
     );
     println!("real agent      : {:>12.0} units/s (sleep-0, 8 cores)", real);
+    println!(
+        "um sim {n_big:>7}  : {per_ev_big:>12.3} us/event  (peak in-flight {peak_big}, \
+         {um_events} events, spawn {um_spawn_rate:.0} units/s)"
+    );
+    println!(
+        "um sim {n_small:>7}  : {per_ev_small:>12.3} us/event  (peak in-flight {peak_small})"
+    );
+    println!(
+        "um feed ablation: {:>12.1}x batched vs per-unit ({feed_n} units, {feed_threads} \
+         producers; {feed_batched:.0} vs {feed_baseline:.0} transitions/s)",
+        feed_speedup
+    );
     println!(
         "reactor ablation: {:>12} concurrent children ({threads} threads; seed cap = {threads})",
         peak_children
@@ -234,6 +310,15 @@ fn main() {
             vec!["agent_sim_events_per_s".into(), format!("{sim_ev:.0}")],
             vec!["agent_sim_wall_s".into(), format!("{sim_wall:.3}")],
             vec!["real_agent_units_per_s".into(), format!("{real:.0}")],
+            vec!["um_sim_scale_units".into(), format!("{n_big}")],
+            vec!["um_sim_per_event_us_small".into(), format!("{per_ev_small:.4}")],
+            vec!["um_sim_per_event_us_big".into(), format!("{per_ev_big:.4}")],
+            vec!["um_sim_peak_inflight".into(), format!("{peak_big}")],
+            vec!["um_sim_spawn_rate_units_per_s".into(), format!("{um_spawn_rate:.0}")],
+            vec!["um_feed_units".into(), format!("{feed_n}")],
+            vec!["um_feed_batched_trans_per_s".into(), format!("{feed_batched:.0}")],
+            vec!["um_feed_baseline_trans_per_s".into(), format!("{feed_baseline:.0}")],
+            vec!["um_feed_speedup_x".into(), format!("{feed_speedup:.2}")],
             vec!["reactor_peak_children".into(), format!("{peak_children}")],
             vec!["reactor_threadpool_equiv_cap".into(), format!("{threads}")],
             vec!["reactor_wakeups_total".into(), rstats.total_wakeups().to_string()],
@@ -246,35 +331,65 @@ fn main() {
     )
     .unwrap();
 
-    // the committed perf trajectory: spawn rate, steady-state in-flight,
-    // allocator work, wakeup accounting
-    let completions = n_children as f64;
-    write_bench_json(
+    // perf-regression gate: compare fresh *intensive* metrics (rates,
+    // ratios, per-event costs — robust to --quick's smaller workloads)
+    // against the committed trajectory BEFORE it is rewritten below.
+    // An unseeded baseline (placeholder record) passes vacuously; once
+    // a full run commits real numbers the gate arms.
+    let gate_checks = regression_gate(
         "hotpath",
         &[
-            ("quick", f64::from(u8::from(quick))),
-            ("spawn_rate_units_per_s", real),
-            ("steady_state_inflight_children", peak_children as f64),
-            ("reactor_event_driven", f64::from(u8::from(rstats.event_driven))),
-            ("reactor_wakeups_per_completion", rstats.total_wakeups() as f64 / completions),
-            ("reactor_idle_wakeups", rstats.idle_wakeups as f64),
-            ("alloc_churn_allocs_per_s", alloc_rate),
-            ("alloc_slots_modeled_per_op", alloc_slots),
-            ("alloc_words_real_per_op", alloc_words),
-            ("event_queue_ops_per_s", ev),
-            ("agent_sim_events_per_s", sim_ev),
-            ("json_docs_per_s", json),
+            ("spawn_rate_units_per_s", real, Direction::HigherIsBetter),
+            ("um_sim_per_event_us_big", per_ev_big, Direction::LowerIsBetter),
+            ("um_feed_speedup_x", feed_speedup, Direction::HigherIsBetter),
         ],
-    )
-    .unwrap();
+    );
+    let gate_ok = gate_checks.iter().all(|c| c.ok);
 
-    // schema-check every committed BENCH_*.json at the repository root
-    // (including the two refreshed above).  This gates even --quick:
-    // a malformed trajectory record is breakage, not runner noise.
+    // the committed perf trajectory: spawn rates, concurrency gauges,
+    // per-event costs, allocator work, wakeup accounting.  Quick runs
+    // must not overwrite it — the baseline always comes from a full run.
+    if !quick {
+        write_bench_json(
+            "hotpath",
+            &[
+                ("spawn_rate_units_per_s", real),
+                ("um_sim_scale_units", n_big as f64),
+                ("um_sim_per_event_us_small", per_ev_small),
+                ("um_sim_per_event_us_big", per_ev_big),
+                ("um_sim_peak_inflight", peak_big as f64),
+                ("um_sim_spawn_rate_units_per_s", um_spawn_rate),
+                ("um_feed_batched_trans_per_s", feed_batched),
+                ("um_feed_baseline_trans_per_s", feed_baseline),
+                ("um_feed_speedup_x", feed_speedup),
+                ("steady_state_inflight_children", peak_children as f64),
+                ("reactor_event_driven", f64::from(u8::from(rstats.event_driven))),
+                (
+                    "reactor_wakeups_per_completion",
+                    rstats.total_wakeups() as f64 / n_children as f64,
+                ),
+                ("reactor_idle_wakeups", rstats.idle_wakeups as f64),
+                ("alloc_churn_allocs_per_s", alloc_rate),
+                ("alloc_slots_modeled_per_op", alloc_slots),
+                ("alloc_words_real_per_op", alloc_words),
+                ("event_queue_ops_per_s", ev),
+                ("agent_sim_events_per_s", sim_ev),
+                ("json_docs_per_s", json),
+            ],
+        )
+        .unwrap();
+    }
+
+    // schema-check every committed BENCH_*.json at the repository root.
+    // This gates even --quick: a malformed trajectory record is
+    // breakage, not runner noise.
     let n_bench_docs = validate_repo_bench_json()
         .unwrap_or_else(|e| panic!("BENCH_*.json schema check failed: {e}"));
 
     let mut report = Report::new("perf hot paths");
+    for c in gate_checks {
+        report.add(c);
+    }
     report.add(Check::shape(
         "bench trajectory records",
         "every BENCH_*.json matches rp-bench-v1",
@@ -291,6 +406,24 @@ fn main() {
         "> 100 units/s spawn-to-done",
         real > 100.0,
     ));
+    report.add(Check {
+        label: format!("um sim holds {n_big} units in flight"),
+        paper: format!("peak in-flight == {n_big}"),
+        measured: format!("{peak_big}"),
+        ok: peak_big == n_big,
+    });
+    report.add(Check {
+        label: "um per-event cost flat with scale".into(),
+        paper: format!("{n_big}-unit cost <= 3x {n_small}-unit cost"),
+        measured: format!("{per_ev_big:.3} vs {per_ev_small:.3} us/event"),
+        ok: per_ev_big <= 3.0 * per_ev_small.max(0.05),
+    });
+    report.add(Check {
+        label: "batched feed >= 4x per-unit path".into(),
+        paper: format!("{feed_n} units, {feed_threads} producers"),
+        measured: format!("{feed_speedup:.1}x"),
+        ok: feed_speedup >= 4.0,
+    });
     report.add(Check {
         label: "reactor lifts thread-per-slot cap".into(),
         paper: format!("seed: {threads} children at {threads} threads"),
@@ -327,8 +460,16 @@ fn main() {
         ok: alloc_words * 10.0 <= alloc_slots,
     });
 
-    let code = report.print();
-    // quick mode is the CI smoke job: API/harness breakage panics above,
-    // but perf thresholds must not gate shared-runner noise
-    std::process::exit(if quick { 0 } else { code });
+    let perf_code = report.print();
+    // quick mode is the CI smoke job: API/harness breakage panics above
+    // and a tripped regression gate fails, but the remaining perf
+    // thresholds must not gate shared-runner noise
+    let code = if !gate_ok {
+        1
+    } else if quick {
+        0
+    } else {
+        perf_code
+    };
+    std::process::exit(code);
 }

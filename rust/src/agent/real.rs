@@ -99,20 +99,27 @@ pub struct UnitRecord {
     /// a cancel — an admission wake does not pay an O(in-flight) pass
     /// of unit-mutex locks.
     pub(crate) exec_cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
-    /// Wake handle to the owning UnitManager's state watcher, set on
-    /// submission: every state change bumps the watcher's sequence so it
-    /// can park on a condvar instead of polling unit states.
-    pub(crate) watch_wake: Option<std::sync::Weak<StateWatch>>,
+    /// Handle to the owning UnitManager's transition event bus, set on
+    /// submission: every state change appends a transition record to
+    /// its shard queue (under this record's lock, which preserves
+    /// per-unit order) and bumps the bus's sequence so the drainer can
+    /// park on a condvar instead of polling unit states.
+    pub(crate) bus: Option<std::sync::Weak<crate::api::um_state::TransitionBus>>,
+    /// The bound pilot's `outstanding` gauge, set by the UM dispatch
+    /// pass and released (taken + decremented) when the bus drain
+    /// processes this unit's final transition — replacing the seed's
+    /// O(live-units) `bound` retain-scan per placement pass.
+    pub(crate) bound_gauge: Option<Arc<std::sync::atomic::AtomicUsize>>,
     /// Session profiler, set on UM submission so client-side
     /// finalization (cancel of a still-unbound unit) records its
     /// transition like every agent-side path does.
     pub(crate) profiler: Option<Arc<Profiler>>,
 }
 
-/// A sequence-numbered state-change channel: every unit state change
-/// routed through [`advance`] / failure / cancellation bumps the
-/// sequence and wakes waiters.  The UnitManager's callback watcher
-/// parks on it instead of polling unit states at 5 ms.
+/// A sequence-numbered event channel (notify / snapshot / wait_change).
+/// The UnitManager's [`TransitionBus`](crate::api::um_state::TransitionBus)
+/// embeds one: producers bump the sequence after publishing a batch and
+/// the bus drainer parks on it instead of polling unit states.
 #[derive(Debug)]
 pub(crate) struct StateWatch {
     seq: Mutex<u64>,
@@ -165,61 +172,84 @@ pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
             sched_wake: None,
             exec_wake: None,
             exec_cancel: None,
-            watch_wake: None,
+            bus: None,
+            bound_gauge: None,
             profiler: None,
         }),
         Condvar::new(),
     ))
 }
 
-/// Notify the UnitManager watcher attached to a record, outside the
-/// record's lock (the watch channel takes its own lock).
-fn notify_watch(watch: Option<std::sync::Weak<StateWatch>>) {
-    if let Some(w) = watch.and_then(|w| w.upgrade()) {
-        w.notify();
-    }
+/// Publish a transition on the bus attached to `rec` (if any).  Must be
+/// called while holding the record's lock — that lock is what keeps one
+/// unit's records in per-unit order on the bus — and returns the
+/// upgraded bus handle so the caller can `notify()` *outside* the lock.
+pub(crate) fn publish_locked(
+    rec: &UnitRecord,
+    unit: &SharedUnit,
+    from: S,
+    to: S,
+    t: f64,
+) -> Option<Arc<crate::api::um_state::TransitionBus>> {
+    let bus = rec.bus.as_ref().and_then(|b| b.upgrade())?;
+    bus.publish(unit, rec.id, from, to, t);
+    Some(bus)
 }
 
-/// Advance a unit's state (recording to the profiler) and notify waiters.
+/// Advance a unit's state (recording to the profiler), notify per-unit
+/// waiters and publish the transition to the owning UnitManager's bus.
 pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
     let (m, cv) = &**unit;
-    let watch = {
+    let bus = {
         let mut rec = m.lock().unwrap();
         let t = util::now();
+        let from = rec.machine.state();
         rec.machine.advance(to, t)?;
         profiler.record(t, rec.id, to);
         cv.notify_all();
-        rec.watch_wake.clone()
+        publish_locked(&rec, unit, from, to, t)
     };
-    notify_watch(watch);
+    if let Some(b) = bus {
+        b.notify();
+    }
     Ok(())
 }
 
 fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
     let (m, cv) = &**unit;
-    let watch = {
+    let bus = {
         let mut rec = m.lock().unwrap();
         let t = util::now();
-        let _ = rec.machine.advance(S::Failed, t);
+        let from = rec.machine.state();
+        if rec.machine.advance(S::Failed, t).is_err() {
+            return; // already final: nothing to record or publish
+        }
         profiler.record(t, rec.id, S::Failed);
         rec.error = Some(err);
         cv.notify_all();
-        rec.watch_wake.clone()
+        publish_locked(&rec, unit, from, S::Failed, t)
     };
-    notify_watch(watch);
+    if let Some(b) = bus {
+        b.notify();
+    }
 }
 
 fn cancel_unit(unit: &SharedUnit, profiler: &Profiler) {
     let (m, cv) = &**unit;
-    let watch = {
+    let bus = {
         let mut rec = m.lock().unwrap();
         let t = util::now();
-        let _ = rec.machine.advance(S::Canceled, t);
+        let from = rec.machine.state();
+        if rec.machine.advance(S::Canceled, t).is_err() {
+            return; // already final: nothing to record or publish
+        }
         profiler.record(t, rec.id, S::Canceled);
         cv.notify_all();
-        rec.watch_wake.clone()
+        publish_locked(&rec, unit, from, S::Canceled, t)
     };
-    notify_watch(watch);
+    if let Some(b) = bus {
+        b.notify();
+    }
 }
 
 /// Real-agent configuration, derived from the resource config.

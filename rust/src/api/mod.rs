@@ -21,6 +21,7 @@ mod pilot;
 mod pilot_manager;
 mod session;
 pub mod um_scheduler;
+pub mod um_state;
 mod unit;
 mod unit_manager;
 
@@ -31,5 +32,6 @@ pub use session::Session;
 pub use um_scheduler::{
     make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
 };
+pub use um_state::{StateCallback, TransitionBus, UnitShards, DEFAULT_UM_SHARDS};
 pub use unit::Unit;
 pub use unit_manager::UnitManager;

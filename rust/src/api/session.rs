@@ -99,6 +99,13 @@ impl Session {
         UnitManager::new(self.clone())
     }
 
+    /// Create a UnitManager with an explicit unit-state / transition-bus
+    /// shard count (`rp run --um-shards`; 0 uses the default,
+    /// [`crate::api::um_state::DEFAULT_UM_SHARDS`]).
+    pub fn unit_manager_with_shards(&self, shards: usize) -> UnitManager {
+        UnitManager::with_shards(self.clone(), shards)
+    }
+
     pub fn is_closed(&self) -> bool {
         self.inner.closed.load(Ordering::SeqCst)
     }

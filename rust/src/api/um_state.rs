@@ -1,0 +1,608 @@
+//! Sharded UnitManager unit state + the batched state-transition event
+//! bus — the 100K-concurrency control plane.
+//!
+//! The seed UnitManager serialized every unit through one
+//! `Mutex<Vec<Unit>>`, one `delivered: Mutex<HashMap<..>>` and a
+//! watcher that re-scanned *every* unit on *every* state event: O(n)
+//! bookkeeping per transition, O(n²) over a workload — exactly the
+//! client-side wall the Titan/Summit follow-on papers identify.  This
+//! module replaces that with two sharded structures, both keyed by
+//! `UnitId % shards` the way the [`crate::db::Store`] shards by
+//! collection:
+//!
+//! * [`TransitionBus`] — producers (the UM submit/placement passes,
+//!   [`crate::api::Unit::cancel`], and every agent-side
+//!   `advance`/fail/cancel) append `(unit, from, to, t)`
+//!   [`Transition`] records to a per-shard queue *while holding the
+//!   unit's record lock* (which is what keeps each unit's records in
+//!   order), then bump one sequence-numbered condvar — **one wake per
+//!   batch**, not one per unit.
+//! * [`UnitShards`] — the unit registry plus the per-unit
+//!   `delivered` bookkeeping, sharded so registration and delivery
+//!   tracking never funnel through a single mutex.  Entries in
+//!   `delivered` are pruned the moment a unit's final transition is
+//!   delivered, so memory stays proportional to *live* units across
+//!   arbitrarily many submit waves.
+//!
+//! A single drain pass ([`drain_once`]) swaps out every shard queue and
+//! coalesces the batch into: one bulk store write
+//! ([`crate::db::Store::update_bulk`] of the last state per unit), one
+//! in-order callback dispatch pass (every transition is delivered —
+//! strictly more faithful than the seed's coalescing scan), one pass of
+//! per-pilot `outstanding` gauge releases, and one update of the
+//! finals counter the watcher-exit check reads.  Every hot-path event
+//! is therefore O(1) amortized in the number of concurrent units.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::agent::real::{SharedUnit, StateWatch};
+use crate::db::Store;
+use crate::ids::UnitId;
+use crate::states::UnitState;
+
+use super::unit::Unit;
+
+/// Callback invoked on every observed unit state change.
+pub type StateCallback = Box<dyn Fn(&Unit, UnitState) + Send>;
+
+/// Default shard count for the UM unit state (see
+/// [`crate::api::Session::unit_manager_with_shards`] / `rp run
+/// --um-shards`).
+pub const DEFAULT_UM_SHARDS: usize = 16;
+
+/// One recorded state transition travelling through the bus.
+#[derive(Clone)]
+pub struct Transition {
+    /// Handle to the unit (needed for callback dispatch and gauge
+    /// release; cloning is one refcount).
+    pub unit: SharedUnit,
+    pub id: UnitId,
+    pub from: UnitState,
+    pub to: UnitState,
+    /// Timestamp the transition happened (recorded at the producer, so
+    /// a deferred drain loses no timing fidelity).
+    pub t: f64,
+}
+
+impl std::fmt::Debug for Transition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {:?}->{:?}@{:.6}", self.id, self.from, self.to, self.t)
+    }
+}
+
+/// The batched state-transition event bus (see module docs).
+///
+/// Producers call [`TransitionBus::publish`] *while holding the unit's
+/// record lock* — that lock is what serializes a unit's transitions, so
+/// holding it across the queue append is what guarantees per-unit
+/// in-order delivery.  The shard queues are keyed by `UnitId`, so all
+/// of one unit's records land in one queue and concurrent producers of
+/// different units rarely share a queue mutex.  After releasing the
+/// record lock, producers call [`TransitionBus::notify`] once per
+/// event (agent side) or once per *batch* (UM submit/dispatch side).
+pub struct TransitionBus {
+    queues: Vec<Mutex<Vec<Transition>>>,
+    /// Queued-but-undrained record count (fast emptiness check for the
+    /// watcher-exit protocol).
+    pending: AtomicUsize,
+    /// The sequence-numbered condvar drainers park on.
+    watch: StateWatch,
+    /// Serializes drain passes: two concurrent drains could otherwise
+    /// reorder one unit's transitions across their swapped batches.
+    drain_serial: Mutex<()>,
+}
+
+impl TransitionBus {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        TransitionBus {
+            queues: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            pending: AtomicUsize::new(0),
+            watch: StateWatch::new(),
+            drain_serial: Mutex::new(()),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    #[inline]
+    fn queue_of(&self, id: UnitId) -> &Mutex<Vec<Transition>> {
+        &self.queues[(id.raw() as usize) % self.queues.len()]
+    }
+
+    /// Append one transition record.  The caller must hold `unit`'s
+    /// record lock (see type docs); this only takes the (sharded,
+    /// short-lived) queue mutex.
+    pub fn publish(&self, unit: &SharedUnit, id: UnitId, from: UnitState, to: UnitState, t: f64) {
+        self.queue_of(id).lock().unwrap().push(Transition {
+            unit: unit.clone(),
+            id,
+            from,
+            to,
+            t,
+        });
+        self.pending.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Wake drainers (one condvar signal; call once per batch).
+    pub fn notify(&self) {
+        self.watch.notify();
+    }
+
+    /// Sequence snapshot for [`TransitionBus::wait_change`].
+    pub fn snapshot(&self) -> u64 {
+        self.watch.snapshot()
+    }
+
+    /// Park until the sequence advances past `seen` or `timeout`
+    /// elapses.
+    pub fn wait_change(&self, seen: u64, timeout: std::time::Duration) -> u64 {
+        self.watch.wait_change(seen, timeout)
+    }
+
+    /// No queued records?
+    pub fn is_empty(&self) -> bool {
+        self.pending.load(Ordering::SeqCst) == 0
+    }
+
+    /// Swap out every shard queue (each under its own brief lock) and
+    /// return the per-shard batches.  Use [`drain_once`] unless you are
+    /// a bench/test driving the primitives directly.
+    pub fn swap_all(&self) -> Vec<Vec<Transition>> {
+        let mut out = Vec::with_capacity(self.queues.len());
+        let mut n = 0;
+        for q in &self.queues {
+            let batch = std::mem::take(&mut *q.lock().unwrap());
+            n += batch.len();
+            out.push(batch);
+        }
+        if n > 0 {
+            self.pending.fetch_sub(n, Ordering::SeqCst);
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for TransitionBus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TransitionBus")
+            .field("shards", &self.queues.len())
+            .field("pending", &self.pending.load(Ordering::SeqCst))
+            .finish()
+    }
+}
+
+/// One unit-state shard: the registered units plus the last state
+/// delivered per unit (pruned on final delivery).
+#[derive(Default)]
+struct UnitShard {
+    units: Vec<Unit>,
+    delivered: HashMap<UnitId, UnitState>,
+}
+
+/// The sharded UM unit registry (see module docs).
+pub struct UnitShards {
+    shards: Vec<Mutex<UnitShard>>,
+    /// Registered unit count (monotonic).
+    len: AtomicUsize,
+    /// Units whose final transition the drain has processed.
+    finals: AtomicUsize,
+}
+
+impl UnitShards {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        UnitShards {
+            shards: (0..shards).map(|_| Mutex::new(UnitShard::default())).collect(),
+            len: AtomicUsize::new(0),
+            finals: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, id: UnitId) -> &Mutex<UnitShard> {
+        &self.shards[(id.raw() as usize) % self.shards.len()]
+    }
+
+    /// Register submitted units (each into its id's shard).
+    pub fn push_bulk(&self, units: &[Unit]) {
+        for u in units {
+            self.shard_of(u.id()).lock().unwrap().units.push(u.clone());
+        }
+        self.len.fetch_add(units.len(), Ordering::SeqCst);
+    }
+
+    /// Registered unit count.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drained final-transition count.
+    pub fn finals(&self) -> usize {
+        self.finals.load(Ordering::SeqCst)
+    }
+
+    /// Have all registered units been drained to a final state?  (False
+    /// while no unit is registered, matching the seed watcher's "a
+    /// watcher with nothing to watch parks" behavior.)
+    pub fn all_final(&self) -> bool {
+        let n = self.len();
+        n > 0 && self.finals() == n
+    }
+
+    /// Snapshot every registered unit, in submission (id) order.
+    pub fn snapshot(&self) -> Vec<Unit> {
+        let mut out = Vec::with_capacity(self.len());
+        for sh in &self.shards {
+            out.extend(sh.lock().unwrap().units.iter().cloned());
+        }
+        out.sort_by_key(|u| u.id());
+        out
+    }
+
+    /// Units currently in a final state (exact scan; not hot-path).
+    pub fn count_final(&self) -> usize {
+        let mut n = 0;
+        for sh in &self.shards {
+            n += sh.lock().unwrap().units.iter().filter(|u| u.state().is_final()).count();
+        }
+        n
+    }
+
+    /// Total `delivered` entries across shards — bounded by *live*
+    /// (non-final) units, which is what the memory-stability test pins.
+    pub fn delivered_len(&self) -> usize {
+        self.shards.iter().map(|sh| sh.lock().unwrap().delivered.len()).sum()
+    }
+}
+
+impl std::fmt::Debug for UnitShards {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("UnitShards")
+            .field("shards", &self.shards.len())
+            .field("len", &self.len())
+            .field("finals", &self.finals())
+            .finish()
+    }
+}
+
+/// What one [`drain_once`] pass processed.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DrainStats {
+    /// Transition records consumed.
+    pub transitions: usize,
+    /// Documents updated by the coalesced store write.
+    pub store_updates: usize,
+    /// Final transitions (units completed this pass).
+    pub finals: usize,
+}
+
+/// Drain the bus once: swap out every shard queue and coalesce the
+/// batch into one bulk store write, one callback dispatch pass, one
+/// gauge-release pass and one finals-counter update (see module docs).
+/// Serialized internally, so concurrent callers (the watcher thread and
+/// a `register_callback` flush) never reorder a unit's transitions.
+pub fn drain_once(
+    bus: &TransitionBus,
+    units: &UnitShards,
+    store: &Store,
+    collection: &str,
+    callbacks: &Mutex<Vec<StateCallback>>,
+) -> DrainStats {
+    assert_eq!(
+        bus.shards(),
+        units.shards.len(),
+        "bus and unit-state shard counts must match (same id -> shard map)"
+    );
+    let _serial = bus.drain_serial.lock().unwrap();
+    let batches = bus.swap_all();
+    let total: usize = batches.iter().map(Vec::len).sum();
+    if total == 0 {
+        return DrainStats::default();
+    }
+
+    // 1. Coalesced store pass: last state per unit, one bulk write.
+    //    (Units whose document is not inserted yet — still unbound —
+    //    are skipped by `update_bulk`; their state lands with the
+    //    dispatch-time insert or a later drain.)
+    let mut last: HashMap<UnitId, UnitState> = HashMap::with_capacity(total);
+    for batch in &batches {
+        for tr in batch {
+            last.insert(tr.id, tr.to);
+        }
+    }
+    let store_updates = store.update_bulk(
+        collection,
+        "state",
+        last.iter().map(|(id, s)| (id.to_string(), s.name().into())),
+    );
+
+    // 2. Per-shard delivery bookkeeping (dedupe + final pruning), with
+    //    callback dispatch deferred so no shard lock is held while user
+    //    code runs.
+    let mut deliveries: Vec<(SharedUnit, UnitState)> = Vec::with_capacity(total);
+    let mut final_units: Vec<SharedUnit> = Vec::new();
+    for (si, batch) in batches.into_iter().enumerate() {
+        if batch.is_empty() {
+            continue;
+        }
+        let mut shard = units.shards[si].lock().unwrap();
+        for tr in batch {
+            let fresh = shard.delivered.get(&tr.id) != Some(&tr.to);
+            if tr.to.is_final() {
+                shard.delivered.remove(&tr.id);
+                final_units.push(tr.unit.clone());
+            } else if fresh {
+                shard.delivered.insert(tr.id, tr.to);
+            }
+            if fresh {
+                deliveries.push((tr.unit, tr.to));
+            }
+        }
+    }
+    let finals = final_units.len();
+    if finals > 0 {
+        units.finals.fetch_add(finals, Ordering::SeqCst);
+        // release the per-pilot outstanding gauges the UM scheduler
+        // reads — the O(live-units) `bound` retain-scan of the seed's
+        // placement pass became this O(finals) pass
+        for u in &final_units {
+            let gauge = u.0.lock().unwrap().bound_gauge.take();
+            if let Some(g) = gauge {
+                g.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    // 3. One callback dispatch pass for the whole batch, in per-unit
+    //    order (per-unit order is guaranteed by publish-under-record-
+    //    lock + per-unit shard affinity).
+    let n_delivered = deliveries.len();
+    if n_delivered > 0 {
+        let cbs = callbacks.lock().unwrap();
+        if !cbs.is_empty() {
+            for (shared, state) in deliveries {
+                let unit = Unit { shared };
+                for cb in cbs.iter() {
+                    cb(&unit, state);
+                }
+            }
+        }
+    }
+
+    DrainStats { transitions: total, store_updates, finals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::real::new_unit;
+    use crate::api::descriptions::UnitDescription;
+    use crate::ids::PilotId;
+    use crate::states::UnitState as S;
+    use crate::util::rng::Pcg;
+
+    fn mk_unit(id: u64) -> SharedUnit {
+        new_unit(UnitId(id), UnitDescription::sleep(0.0))
+    }
+
+    /// Apply a transition to a record the way producers do: advance the
+    /// machine under the record lock and publish in the same critical
+    /// section.
+    fn apply(bus: &TransitionBus, u: &SharedUnit, to: S, t: f64) {
+        let mut rec = u.0.lock().unwrap();
+        let from = rec.machine.state();
+        rec.machine.advance(to, t).unwrap();
+        bus.publish(u, rec.id, from, to, t);
+    }
+
+    /// The scripted lifecycles the property test runs: each unit walks
+    /// the nominal chain up to `Done`, with `bound_pilot` set at the
+    /// placement step like the real dispatch pass does.
+    const CHAIN: &[S] = &[
+        S::UmSchedulingPending,
+        S::UmScheduling,
+        S::AStagingInPending,
+        S::ASchedulingPending,
+        S::AScheduling,
+        S::AExecutingPending,
+        S::AExecuting,
+        S::AStagingOutPending,
+        S::Done,
+    ];
+
+    /// Satellite: batched event-bus delivery must be observationally
+    /// identical to the seed's per-unit path — same final store state,
+    /// same `bound_pilot` records, same per-unit callback sequence —
+    /// for the same scripted workload, across randomized interleavings
+    /// and drain batch sizes.
+    #[test]
+    fn property_batched_bus_equals_per_unit_path() {
+        for seed in 0..8u64 {
+            let mut rng = Pcg::seeded(seed);
+            let n_units = 24usize;
+
+            // --- reference: the per-unit path (store write + callback
+            // per transition, applied in script order) ---
+            let ref_store = Store::new();
+            let mut ref_cbs: HashMap<u64, Vec<S>> = HashMap::new();
+            // --- bus path: same script through publish + drain_once ---
+            let bus = TransitionBus::new(4);
+            let shards = UnitShards::new(4);
+            let bus_store = Store::new();
+            let callbacks: Mutex<Vec<StateCallback>> = Mutex::new(Vec::new());
+            let log: Arc<Mutex<Vec<(u64, S)>>> = Arc::new(Mutex::new(Vec::new()));
+            let log2 = log.clone();
+            callbacks.lock().unwrap().push(Box::new(move |u, s| {
+                log2.lock().unwrap().push((u.id().raw(), s));
+            }));
+
+            let units: Vec<SharedUnit> = (0..n_units as u64).map(mk_unit).collect();
+            shards.push_bulk(
+                &units.iter().map(|u| Unit { shared: u.clone() }).collect::<Vec<_>>(),
+            );
+            let mut cursor = vec![0usize; n_units]; // next CHAIN step per unit
+            let mut t = 0.0f64;
+            let mut since_drain = 0usize;
+            let drain_every = 1 + (rng.below(9) as usize); // 1..=9
+            loop {
+                // pick a random unit that still has steps left
+                let open: Vec<usize> =
+                    (0..n_units).filter(|&i| cursor[i] < CHAIN.len()).collect();
+                let Some(&i) = open.get(rng.below(open.len().max(1) as u64) as usize)
+                else {
+                    break;
+                };
+                let to = CHAIN[cursor[i]];
+                cursor[i] += 1;
+                t += 0.001;
+                let id = format!("{}", UnitId(i as u64));
+
+                // reference per-unit path
+                if to == S::UmScheduling {
+                    ref_store.insert(
+                        "units",
+                        &id,
+                        crate::util::json::Value::obj(vec![("state", to.name().into())]),
+                    );
+                } else {
+                    let _ = ref_store.update_field("units", &id, "state", to.name().into());
+                }
+                ref_cbs.entry(i as u64).or_default().push(to);
+
+                // bus path: the dispatch pass inserts the doc and sets
+                // bound_pilot at the placement step, then transitions
+                // flow through the bus
+                if to == S::UmScheduling {
+                    units[i].0.lock().unwrap().bound_pilot = Some(PilotId(7));
+                    bus_store.insert(
+                        "units",
+                        &id,
+                        crate::util::json::Value::obj(vec![("state", to.name().into())]),
+                    );
+                }
+                apply(&bus, &units[i], to, t);
+                since_drain += 1;
+                if since_drain >= drain_every {
+                    since_drain = 0;
+                    drain_once(&bus, &shards, &bus_store, "units", &callbacks);
+                }
+            }
+            drain_once(&bus, &shards, &bus_store, "units", &callbacks);
+            assert!(bus.is_empty());
+
+            // identical final store state
+            for i in 0..n_units {
+                let id = format!("{}", UnitId(i as u64));
+                let a = ref_store.find_one("units", &id).unwrap();
+                let b = bus_store.find_one("units", &id).unwrap();
+                assert_eq!(
+                    a.get_str("state", "?a"),
+                    b.get_str("state", "?b"),
+                    "seed {seed} unit {i}: store state diverged"
+                );
+            }
+            // identical bound_pilot records
+            for u in &units {
+                assert_eq!(u.0.lock().unwrap().bound_pilot, Some(PilotId(7)));
+            }
+            // identical per-unit callback sequences
+            let mut bus_cbs: HashMap<u64, Vec<S>> = HashMap::new();
+            for (id, s) in log.lock().unwrap().iter() {
+                bus_cbs.entry(*id).or_default().push(*s);
+            }
+            assert_eq!(ref_cbs, bus_cbs, "seed {seed}: callback sequences diverged");
+            // delivered pruned on finals: every unit completed, so the
+            // bookkeeping must be empty
+            assert_eq!(shards.delivered_len(), 0);
+            assert_eq!(shards.finals(), n_units);
+            assert!(shards.all_final());
+        }
+    }
+
+    /// Shard-contention stress (PR 2 sharded-store style): concurrent
+    /// producers over disjoint unit populations plus a live drainer —
+    /// every transition must be consumed exactly once and per-unit
+    /// order preserved.
+    #[test]
+    fn shard_contention_stress() {
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: usize = 64;
+        let bus = Arc::new(TransitionBus::new(8));
+        let shards = Arc::new(UnitShards::new(8));
+        let store = Store::new();
+        let callbacks: Arc<Mutex<Vec<StateCallback>>> = Arc::new(Mutex::new(Vec::new()));
+        let log: Arc<Mutex<HashMap<u64, Vec<S>>>> = Arc::new(Mutex::new(HashMap::new()));
+        let log2 = log.clone();
+        callbacks.lock().unwrap().push(Box::new(move |u, s| {
+            log2.lock().unwrap().entry(u.id().raw()).or_default().push(s);
+        }));
+
+        let mut all_units: Vec<Unit> = Vec::new();
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let units: Vec<SharedUnit> =
+                (0..PER_PRODUCER).map(|i| mk_unit((p * PER_PRODUCER + i) as u64)).collect();
+            all_units.extend(units.iter().map(|u| Unit { shared: u.clone() }));
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                for (i, u) in units.iter().enumerate() {
+                    for (k, &to) in CHAIN.iter().enumerate() {
+                        apply(&bus, u, to, (i * CHAIN.len() + k) as f64);
+                    }
+                    bus.notify();
+                }
+            }));
+        }
+        shards.push_bulk(&all_units);
+        // drainer: consume until every unit's final has been seen
+        let drainer = {
+            let (bus, shards, callbacks) = (bus.clone(), shards.clone(), callbacks.clone());
+            std::thread::spawn(move || {
+                let mut consumed = 0usize;
+                while shards.finals() < PRODUCERS * PER_PRODUCER {
+                    let seen = bus.snapshot();
+                    consumed +=
+                        drain_once(&bus, &shards, &store, "units", &callbacks).transitions;
+                    bus.wait_change(seen, std::time::Duration::from_millis(10));
+                }
+                consumed + drain_once(&bus, &shards, &store, "units", &callbacks).transitions
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let consumed = drainer.join().unwrap();
+        assert_eq!(consumed, PRODUCERS * PER_PRODUCER * CHAIN.len(), "exactly-once");
+        assert!(bus.is_empty());
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), PRODUCERS * PER_PRODUCER);
+        for (id, seq) in log.iter() {
+            assert_eq!(seq.as_slice(), CHAIN, "unit {id}: per-unit order violated");
+        }
+        assert_eq!(shards.delivered_len(), 0, "finals pruned");
+    }
+
+    #[test]
+    fn drain_skips_store_docs_not_yet_inserted() {
+        let bus = TransitionBus::new(2);
+        let shards = UnitShards::new(2);
+        let store = Store::new();
+        let callbacks: Mutex<Vec<StateCallback>> = Mutex::new(Vec::new());
+        let u = mk_unit(0);
+        shards.push_bulk(&[Unit { shared: u.clone() }]);
+        apply(&bus, &u, S::UmSchedulingPending, 0.1);
+        let stats = drain_once(&bus, &shards, &store, "units", &callbacks);
+        assert_eq!(stats.transitions, 1);
+        assert_eq!(stats.store_updates, 0, "no doc yet: skipped, not an error");
+        assert_eq!(shards.delivered_len(), 1, "non-final state tracked");
+    }
+}

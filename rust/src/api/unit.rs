@@ -54,25 +54,33 @@ impl Unit {
     /// uninterruptible, so their cancellation takes effect when a pool
     /// thread picks the unit up.
     pub fn cancel(&self) {
-        let (wake, exec_wake, exec_cancel, watch) = {
+        let (wake, exec_wake, exec_cancel, bus) = {
             let mut rec = self.shared.0.lock().unwrap();
             rec.cancel_requested = true;
+            let mut bus = None;
             if rec.bound_pilot.is_none()
                 && rec.machine.state() == UnitState::UmSchedulingPending
             {
                 let t = crate::util::now();
+                let from = rec.machine.state();
                 let _ = rec.machine.advance(UnitState::Canceled, t);
                 if let Some(p) = &rec.profiler {
                     p.record(t, rec.id, UnitState::Canceled);
                 }
                 self.shared.1.notify_all();
+                // publish the client-side finalization on the UM's
+                // transition bus (under the record lock, like every
+                // producer) so the drain delivers it to callbacks and
+                // the store like any agent-side transition
+                bus = crate::agent::real::publish_locked(
+                    &rec,
+                    &self.shared,
+                    from,
+                    UnitState::Canceled,
+                    t,
+                );
             }
-            (
-                rec.sched_wake.clone(),
-                rec.exec_wake.clone(),
-                rec.exec_cancel.clone(),
-                rec.watch_wake.clone(),
-            )
+            (rec.sched_wake.clone(), rec.exec_wake.clone(), rec.exec_cancel.clone(), bus)
         };
         if let Some(shared) = wake.and_then(|w| w.upgrade()) {
             shared.notify_event();
@@ -85,8 +93,8 @@ impl Unit {
         if let Some(w) = exec_wake {
             w.wake();
         }
-        if let Some(w) = watch.and_then(|w| w.upgrade()) {
-            w.notify();
+        if let Some(b) = bus {
+            b.notify();
         }
     }
 

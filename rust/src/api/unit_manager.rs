@@ -11,13 +11,14 @@
 //! `UMGR_SCHEDULING_PENDING` and binds the moment an eligible pilot is
 //! added; nothing fails fast.
 
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::agent::real::{advance, new_unit, SharedUnit, StateWatch};
+use crate::agent::real::{advance, new_unit, SharedUnit};
 use crate::db::LatencyModel;
 use crate::error::{Error, Result};
 use crate::ids::UnitId;
+use crate::profiler::Event;
 use crate::states::{PilotState, UnitState as S};
 use crate::util;
 
@@ -27,36 +28,37 @@ use super::session::Session;
 use super::um_scheduler::{
     make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
 };
+use super::um_state::{drain_once, TransitionBus, UnitShards, DEFAULT_UM_SHARDS};
 use super::unit::Unit;
 
-/// Callback invoked on every observed unit state change.
-pub type StateCallback = Box<dyn Fn(&Unit, crate::states::UnitState) + Send>;
+pub use super::um_state::StateCallback;
 
-/// One pilot as the UM scheduler sees it: the handle plus the units
-/// bound to it (for the `outstanding` gauge).
+/// One pilot as the UM scheduler sees it: the handle plus an atomic
+/// `outstanding` gauge.  The gauge is incremented when a unit binds
+/// (dispatch) and decremented by the transition-bus drain when the
+/// unit's final transition is processed — the seed's O(live-units)
+/// `bound` retain-scan per placement pass became an O(1) atomic read.
 struct PilotSlot {
     pilot: Pilot,
-    bound: Vec<SharedUnit>,
+    outstanding: Arc<AtomicUsize>,
 }
 
 impl PilotSlot {
-    /// Snapshot for the scheduler.  Final units are pruned from `bound`
-    /// here, so the outstanding gauge costs O(live units) per pass
-    /// instead of O(every unit ever bound).
-    fn view(&mut self) -> PilotView {
-        self.bound.retain(|u| !u.0.lock().unwrap().machine.is_final());
+    /// Snapshot for the scheduler.
+    fn view(&self) -> PilotView {
         PilotView {
             cores: self.pilot.cores(),
             free_cores: self.pilot.agent().free_cores(),
-            outstanding: self.bound.len(),
+            outstanding: self.outstanding.load(Ordering::SeqCst),
             active: self.pilot.state() == PilotState::PActive,
         }
     }
 }
 
 /// Scheduling state guarded by one mutex: the critical section of a
-/// submission is exactly one placement pass — store writes and agent
-/// feeds happen outside it.
+/// submission is exactly one placement pass — state advancement, store
+/// writes and agent feeds all happen outside it (batched, see
+/// [`super::um_state`]).
 struct UmSched {
     scheduler: Box<dyn UmScheduler>,
     /// Was the policy set explicitly (vs. adopted from the first
@@ -68,27 +70,46 @@ struct UmSched {
 
 /// Schedules units over the pilots added to it through exchangeable
 /// late-binding policies (see [`super::um_scheduler`]).
+///
+/// Unit state is sharded ([`UnitShards`]) and every hot-path state
+/// change flows through the batched transition event bus
+/// ([`TransitionBus`]): the watcher thread is a bus *drainer* that
+/// coalesces each batch into one bulk store write, one callback
+/// dispatch pass and one finals/gauge update — see
+/// [`super::um_state`] for the full control-plane design.
 #[derive(Clone)]
 pub struct UnitManager {
     session: Session,
-    units: Arc<Mutex<Vec<Unit>>>,
+    /// Sharded unit registry + per-unit delivery bookkeeping.
+    state: Arc<UnitShards>,
+    /// The batched transition event bus (same shard count as `state`).
+    bus: Arc<TransitionBus>,
     sched: Arc<Mutex<UmSched>>,
     /// Communication model applied when feeding units (None = local).
     latency: Arc<Mutex<Option<LatencyModel>>>,
     callbacks: Arc<Mutex<Vec<StateCallback>>>,
-    watcher_running: Arc<Mutex<bool>>,
-    /// State-change event channel the callback watcher parks on.
-    watch: Arc<StateWatch>,
-    /// Last state delivered per unit — persistent across watcher
-    /// respawns so a fresh watcher never re-delivers old transitions.
-    delivered: Arc<Mutex<HashMap<UnitId, crate::states::UnitState>>>,
+    /// Single watcher-alive flag (a satellite of the sharding PR
+    /// replaced the seed's `Mutex<bool>`; the only other single-flag
+    /// state here, `UmSched::explicit_policy`, lives under the `sched`
+    /// mutex it is mutated with, so it stays a plain bool).
+    watcher_running: Arc<AtomicBool>,
 }
 
 impl UnitManager {
     pub(crate) fn new(session: Session) -> Self {
+        Self::with_shards(session, DEFAULT_UM_SHARDS)
+    }
+
+    /// Build a UnitManager with an explicit unit-state shard count
+    /// (`rp run --um-shards`; 0 falls back to the default).  More
+    /// shards reduce producer contention on the transition bus at very
+    /// high concurrency; the default suits up to ~100K units.
+    pub(crate) fn with_shards(session: Session, shards: usize) -> Self {
+        let shards = if shards == 0 { DEFAULT_UM_SHARDS } else { shards };
         UnitManager {
             session,
-            units: Arc::new(Mutex::new(Vec::new())),
+            state: Arc::new(UnitShards::new(shards)),
+            bus: Arc::new(TransitionBus::new(shards)),
             sched: Arc::new(Mutex::new(UmSched {
                 scheduler: make_um_scheduler(UmPolicy::default()),
                 explicit_policy: false,
@@ -97,10 +118,13 @@ impl UnitManager {
             })),
             latency: Arc::new(Mutex::new(None)),
             callbacks: Arc::new(Mutex::new(Vec::new())),
-            watcher_running: Arc::new(Mutex::new(false)),
-            watch: Arc::new(StateWatch::new()),
-            delivered: Arc::new(Mutex::new(HashMap::new())),
+            watcher_running: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// Unit-state / bus shard count.
+    pub fn shards(&self) -> usize {
+        self.bus.shards()
     }
 
     /// Select the UM scheduling policy.  Replaces the scheduler (and any
@@ -128,25 +152,45 @@ impl UnitManager {
     }
 
     /// Register a state-change callback (the Pilot API's
-    /// `register_callback`).  The watcher thread parks on the state
-    /// event channel and wakes per transition, so callbacks are
-    /// delivered promptly; transitions faster than one wake-scan cycle
-    /// may be coalesced — final states are always delivered.
+    /// `register_callback`).  The watcher thread drains the transition
+    /// bus, so callbacks receive *every* transition that happens after
+    /// registration, in per-unit order (the seed's wake-scan could
+    /// coalesce fast transitions).  For units submitted before
+    /// registration, the new callback is caught up with their *current*
+    /// state (pending transitions are flushed first); a transition
+    /// racing with registration may be seen twice by the new callback.
     pub fn register_callback(&self, cb: StateCallback) {
+        // flush the backlog to the existing callbacks, then catch the
+        // new one up on where every known unit currently stands
+        self.drain();
+        for u in self.state.snapshot() {
+            cb(&u, u.state());
+        }
         self.callbacks.lock().unwrap().push(cb);
         self.ensure_watcher();
     }
 
-    /// Spawn the watcher thread if callbacks exist and none is running
-    /// (a watcher that exited after its units finished is respawned here
-    /// for late submissions / late-registered callbacks).
+    /// One drain pass over the transition bus (see
+    /// [`super::um_state::drain_once`]).
+    fn drain(&self) -> super::um_state::DrainStats {
+        drain_once(&self.bus, &self.state, self.session.store(), "units", &self.callbacks)
+    }
+
+    /// Spawn the watcher/drainer thread if none is running (a watcher
+    /// that exited after its units finished is respawned here for late
+    /// submissions / late-registered callbacks).  Unlike the seed's
+    /// callback-gated watcher, it runs whenever units exist: the drain
+    /// is also what lands batched state updates in the store and keeps
+    /// the bus queues bounded.
     fn ensure_watcher(&self) {
-        if self.callbacks.lock().unwrap().is_empty() {
-            return;
+        if self.state.is_empty() && self.callbacks.lock().unwrap().is_empty() {
+            return; // nothing to drain or deliver yet
         }
-        let mut running = self.watcher_running.lock().unwrap();
-        if !*running {
-            *running = true;
+        if self
+            .watcher_running
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
             let me = self.clone();
             std::thread::Builder::new()
                 .name("umgr-watcher".into())
@@ -157,49 +201,37 @@ impl UnitManager {
 
     fn watch_loop(&self) {
         loop {
-            // Snapshot the event sequence *before* scanning: an event
-            // racing with the scan bumps it and the park below returns
-            // immediately, so no transition is missed.
-            let seen = self.watch.snapshot();
-            let units = self.units();
-            let mut all_final = !units.is_empty();
-            for u in &units {
-                let s = u.state();
-                let fresh = {
-                    let mut delivered = self.delivered.lock().unwrap();
-                    if delivered.get(&u.id()) != Some(&s) {
-                        delivered.insert(u.id(), s);
-                        true
-                    } else {
-                        false
-                    }
-                };
-                if fresh {
-                    for cb in self.callbacks.lock().unwrap().iter() {
-                        cb(u, s);
-                    }
-                }
-                all_final &= s.is_final();
-            }
+            // Snapshot the bus sequence *before* draining: a publish
+            // racing with the drain bumps it and the park below returns
+            // immediately, so no transition waits a full tick.
+            let seen = self.bus.snapshot();
+            self.drain();
             if self.session.is_closed() {
-                *self.watcher_running.lock().unwrap() = false;
+                self.watcher_running.store(false, Ordering::SeqCst);
                 return;
             }
-            if all_final {
-                // Every unit is final and delivered: exit and reset the
+            if self.state.all_final() && self.bus.is_empty() {
+                // Every unit is final and drained: exit and reset the
                 // flag so a later submit/register respawns a watcher.
-                // Re-check under the flag lock that no submission raced
-                // in between the scan and this exit.
-                let mut running = self.watcher_running.lock().unwrap();
-                if self.units.lock().unwrap().len() == units.len() {
-                    *running = false;
+                self.watcher_running.store(false, Ordering::SeqCst);
+                if self.state.all_final() && self.bus.is_empty() {
                     return;
                 }
-                continue;
+                // a submission raced in between the drain and the flag
+                // reset: reclaim the flag unless a fresh watcher already
+                // took over
+                if self
+                    .watcher_running
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    continue;
+                }
+                return;
             }
-            // Park until the next state event; the bounded tick only
-            // serves to notice session close, not to poll states.
-            self.watch.wait_change(seen, std::time::Duration::from_millis(250));
+            // Park until the next batch; the bounded tick only serves
+            // to notice session close, not to poll states.
+            self.bus.wait_change(seen, std::time::Duration::from_millis(250));
         }
     }
 
@@ -216,7 +248,10 @@ impl UnitManager {
                     st.scheduler = make_um_scheduler(p);
                 }
             }
-            st.pilots.push(PilotSlot { pilot: pilot.clone(), bound: Vec::new() });
+            st.pilots.push(PilotSlot {
+                pilot: pilot.clone(),
+                outstanding: Arc::new(AtomicUsize::new(0)),
+            });
             self.place(&mut st)
         };
         self.dispatch(placed);
@@ -233,7 +268,7 @@ impl UnitManager {
     /// fresh pilot views.  Returns the bindings grouped per pilot;
     /// state advancement, store writes and agent feeds happen in
     /// [`Self::dispatch`], outside the lock.
-    fn place(&self, st: &mut UmSched) -> Vec<(Pilot, Vec<SharedUnit>)> {
+    fn place(&self, st: &mut UmSched) -> Vec<(Pilot, Arc<AtomicUsize>, Vec<SharedUnit>)> {
         if st.pool.is_empty() {
             return Vec::new();
         }
@@ -249,11 +284,10 @@ impl UnitManager {
         if st.pool.is_empty() || st.pilots.is_empty() {
             return Vec::new();
         }
-        let mut views: Vec<PilotView> = st.pilots.iter_mut().map(|s| s.view()).collect();
+        let mut views: Vec<PilotView> = st.pilots.iter().map(|s| s.view()).collect();
         let UmSched { scheduler, pool, pilots, .. } = st;
         let mut batches: Vec<(usize, Vec<SharedUnit>)> = Vec::new();
         pool.place_all(scheduler.as_mut(), &mut views, |unit, k| {
-            pilots[k].bound.push(unit.clone());
             match batches.iter().position(|(i, _)| *i == k) {
                 Some(j) => batches[j].1.push(unit),
                 None => batches.push((k, vec![unit])),
@@ -263,42 +297,80 @@ impl UnitManager {
         // drags a full ResourceConfig along)
         batches
             .into_iter()
-            .map(|(k, units)| (pilots[k].pilot.clone(), units))
+            .map(|(k, units)| (pilots[k].pilot.clone(), pilots[k].outstanding.clone(), units))
             .collect()
     }
 
-    /// Bind placed units: advance UM states, record the binding, write
-    /// the submission to the coordination store as one bulk insert, and
-    /// feed each pilot's agent (optionally paying the modeled
-    /// communication latency, bulked as the store would).
-    fn dispatch(&self, placed: Vec<(Pilot, Vec<SharedUnit>)>) {
+    /// Bind placed units: advance UM states (batched — the transitions
+    /// are published to the bus under each record's lock, the profiler
+    /// sees one bulk flush, the drainer one wake), record the binding,
+    /// write the submission to the coordination store as one bulk
+    /// insert, and feed each pilot's agent (optionally paying the
+    /// modeled communication latency, bulked as the store would).
+    fn dispatch(&self, placed: Vec<(Pilot, Arc<AtomicUsize>, Vec<SharedUnit>)>) {
         if placed.is_empty() {
             return;
         }
         let profiler = self.session.profiler();
+        let mut events = Vec::new();
         let mut docs = Vec::new();
         let mut feeds: Vec<(Pilot, Vec<SharedUnit>)> = Vec::new();
-        for (pilot, units) in placed {
+        for (pilot, gauge, units) in placed {
             let mut batch = Vec::with_capacity(units.len());
             for unit in units {
-                if advance(&unit, S::UmScheduling, &profiler).is_err() {
-                    // canceled in the place -> dispatch window: it never
-                    // binds (no doc, no feed, no bound_pilot)
-                    continue;
-                }
-                {
+                let bound = {
                     let mut rec = unit.0.lock().unwrap();
-                    rec.bound_pilot = Some(pilot.id());
-                    docs.push((rec.id.to_string(), rec.descr.to_json()));
+                    let t = util::now();
+                    if rec.machine.advance(S::UmScheduling, t).is_err() {
+                        // canceled in the place -> dispatch window: it
+                        // never binds (no doc, no feed, no bound_pilot)
+                        false
+                    } else {
+                        crate::agent::real::publish_locked(
+                            &rec,
+                            &unit,
+                            S::UmSchedulingPending,
+                            S::UmScheduling,
+                            t,
+                        );
+                        events.push(Event { t, unit: rec.id, state: S::UmScheduling });
+                        rec.bound_pilot = Some(pilot.id());
+                        rec.bound_gauge = Some(gauge.clone());
+                        let mut doc = rec.descr.to_json();
+                        doc.set("pilot", pilot.id().to_string().into());
+                        doc.set("state", S::AStagingInPending.name().into());
+                        docs.push((rec.id.to_string(), doc));
+                        // both UM transitions under one record lock: a
+                        // concurrent cancel observes either none or both
+                        let t2 = util::now();
+                        rec.machine
+                            .advance(S::AStagingInPending, t2)
+                            .expect("UmScheduling -> AStagingInPending");
+                        crate::agent::real::publish_locked(
+                            &rec,
+                            &unit,
+                            S::UmScheduling,
+                            S::AStagingInPending,
+                            t2,
+                        );
+                        events.push(Event { t: t2, unit: rec.id, state: S::AStagingInPending });
+                        true
+                    }
+                };
+                if bound {
+                    gauge.fetch_add(1, Ordering::SeqCst);
+                    batch.push(unit);
                 }
-                let _ = advance(&unit, S::AStagingInPending, &profiler);
-                batch.push(unit);
             }
             if !batch.is_empty() {
                 feeds.push((pilot, batch));
             }
         }
+        // one profiler flush + one bulk store write + one drainer wake
+        // for the whole dispatch batch
+        profiler.record_bulk(events);
         self.session.store().insert_bulk("units", docs);
+        self.bus.notify();
         let latency = *self.latency.lock().unwrap();
         for (pilot, batch) in feeds {
             if let Some(model) = latency {
@@ -329,19 +401,30 @@ impl UnitManager {
         let profiler = self.session.profiler();
         let mut created = Vec::with_capacity(descrs.len());
         let mut pending = Vec::with_capacity(descrs.len());
+        let mut events = Vec::with_capacity(descrs.len());
         for d in descrs {
             let id: UnitId = self.session.inner.unit_ids.next();
             let req = UnitReq { cores: d.cores, workload: workload_key(&d.name) };
             let shared = new_unit(id, d);
             {
                 let mut rec = shared.0.lock().unwrap();
-                rec.watch_wake = Some(Arc::downgrade(&self.watch));
+                rec.bus = Some(Arc::downgrade(&self.bus));
                 rec.profiler = Some(profiler.clone());
+                // batched advance NEW -> UMGR_SCHEDULING_PENDING under
+                // the same lock acquisition that attached the bus
+                let t = util::now();
+                rec.machine
+                    .advance(S::UmSchedulingPending, t)
+                    .expect("New -> UmSchedulingPending");
+                self.bus.publish(&shared, id, S::New, S::UmSchedulingPending, t);
+                events.push(Event { t, unit: id, state: S::UmSchedulingPending });
             }
-            let _ = advance(&shared, S::UmSchedulingPending, &profiler);
             created.push(Unit { shared: shared.clone() });
             pending.push((shared, req));
         }
+        // one profiler flush for the whole submission
+        profiler.record_bulk(events);
+        self.state.push_bulk(&created);
         let placed = {
             let mut st = self.sched.lock().unwrap();
             for (shared, req) in pending {
@@ -350,15 +433,16 @@ impl UnitManager {
             self.place(&mut st)
         };
         self.dispatch(placed);
-        self.units.lock().unwrap().extend(created.iter().cloned());
         self.ensure_watcher();
-        self.watch.notify();
+        // one drainer wake for the whole batch (dispatch notified too,
+        // but only for the bound part)
+        self.bus.notify();
         Ok(created)
     }
 
-    /// All units submitted through this manager.
+    /// All units submitted through this manager, in submission order.
     pub fn units(&self) -> Vec<Unit> {
-        self.units.lock().unwrap().clone()
+        self.state.snapshot()
     }
 
     /// Wait for every submitted unit to reach a final state.
@@ -376,12 +460,7 @@ impl UnitManager {
 
     /// Count of units currently in a final state.
     pub fn completed(&self) -> usize {
-        self.units
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|u| u.state().is_final())
-            .count()
+        self.state.count_final()
     }
 }
 
@@ -501,6 +580,36 @@ mod tests {
             );
             // let the watcher observe the all-final state and exit
             crate::util::sleep(0.05);
+        }
+        pilot.drain().unwrap();
+        s.close();
+    }
+
+    #[test]
+    fn delivered_bookkeeping_pruned_over_submit_waves() {
+        // satellite of the sharding PR: `delivered` entries are dropped
+        // when a unit's final transition is delivered, so the map stays
+        // bounded by *live* units over arbitrarily many submit waves
+        let s = Session::new("um-delivered-prune");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        let pilot = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        um.add_pilot(&pilot);
+        um.register_callback(Box::new(|_, _| {}));
+        for wave in 1..=4usize {
+            um.submit((0..8).map(|_| UnitDescription::sleep(0.005)).collect()).unwrap();
+            um.wait_all(20.0).unwrap();
+            // wait for the drainer to deliver (and prune) the finals
+            let t0 = crate::util::now();
+            while um.state.delivered_len() > 0 && crate::util::now() - t0 < 5.0 {
+                crate::util::sleep(0.01);
+            }
+            assert_eq!(
+                um.state.delivered_len(),
+                0,
+                "wave {wave}: all units final, bookkeeping must be empty"
+            );
+            assert_eq!(um.completed(), wave * 8, "waves accumulate in the registry");
         }
         pilot.drain().unwrap();
         s.close();

@@ -8,9 +8,12 @@
 
 pub mod policy;
 pub mod report;
+pub mod um_feed;
 
 pub use policy::{policy_probe, policy_probe_with};
 pub use report::{
-    bench_json_path, csv_path, validate_bench_json, validate_repo_bench_json, write_bench_json,
-    write_csv, Check, Report,
+    bench_json_path, csv_path, regression_gate, regression_gate_against, validate_bench_json,
+    validate_repo_bench_json, write_bench_json, write_csv, Check, Direction, Report,
+    REGRESSION_TOLERANCE,
 };
+pub use um_feed::{batched_throughput, per_unit_baseline_throughput, transitions_per_unit};

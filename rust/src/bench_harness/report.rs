@@ -175,6 +175,83 @@ pub fn validate_repo_bench_json() -> std::result::Result<usize, String> {
     Ok(n)
 }
 
+/// Relative tolerance of the perf-regression gate ([`regression_gate`]).
+///
+/// Why 30%: the gated metrics are *intensive* — rates, per-event costs,
+/// speedup ratios — so they are scale-robust between `--quick` and full
+/// workloads and shared-runner noise on them stays well inside ±30%,
+/// while the regressions the gate exists to catch (a hot-path global
+/// lock reintroduced, an O(1) amortized pass degrading to O(n))
+/// overshoot it by integer factors.  The gate fails the CI lint job
+/// even under `--quick` (unlike the aspirational perf thresholds,
+/// which only gate full runs).
+pub const REGRESSION_TOLERANCE: f64 = 0.30;
+
+/// Which way a gated metric gets *worse*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// A rate / speedup: regression = fresh value too far *below* the
+    /// committed baseline.
+    HigherIsBetter,
+    /// A cost (e.g. µs per event): regression = fresh value too far
+    /// *above* the committed baseline.
+    LowerIsBetter,
+}
+
+/// Perf-regression gate: compare freshly measured metrics against the
+/// committed `BENCH_<name>.json` trajectory record, allowing
+/// [`REGRESSION_TOLERANCE`] of drift in each metric's worse direction
+/// (improvements never fail).  A metric missing from the committed
+/// record — the seed's empty placeholder, or a metric this change just
+/// introduced — passes vacuously as a baseline seed: the gate arms
+/// itself the first time a measured trajectory is committed.  Callers
+/// must run the gate *before* rewriting the trajectory file.
+pub fn regression_gate(name: &str, fresh: &[(&str, f64, Direction)]) -> Vec<Check> {
+    let committed = crate::util::json::Value::parse_file(&bench_json_path(name)).ok();
+    regression_gate_against(committed.as_ref(), fresh)
+}
+
+/// [`regression_gate`] against an explicit committed document (split
+/// out so the gate logic is unit-testable without touching the real
+/// trajectory files).
+pub fn regression_gate_against(
+    committed: Option<&crate::util::json::Value>,
+    fresh: &[(&str, f64, Direction)],
+) -> Vec<Check> {
+    let mut checks = Vec::with_capacity(fresh.len());
+    for &(key, measured, dir) in fresh {
+        let base = committed.and_then(|v| v.get("metrics").get(key).as_f64());
+        // a zero/negative/absent baseline cannot anchor a relative
+        // gate: treat it as unseeded
+        let Some(base) = base.filter(|b| b.is_finite() && *b > 0.0) else {
+            checks.push(Check {
+                label: format!("gate: {key}"),
+                paper: "no committed baseline yet".into(),
+                measured: format!("{measured:.3} (seeds the trajectory)"),
+                ok: true,
+            });
+            continue;
+        };
+        let (bound, ok) = match dir {
+            Direction::HigherIsBetter => {
+                let b = base * (1.0 - REGRESSION_TOLERANCE);
+                (format!(">= {b:.3}"), measured >= b)
+            }
+            Direction::LowerIsBetter => {
+                let b = base * (1.0 + REGRESSION_TOLERANCE);
+                (format!("<= {b:.3}"), measured <= b)
+            }
+        };
+        checks.push(Check {
+            label: format!("gate: {key}"),
+            paper: format!("committed {base:.3}, {bound}"),
+            measured: format!("{measured:.3}"),
+            ok,
+        });
+    }
+    checks
+}
+
 /// Write rows as CSV.
 pub fn write_csv(name: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<PathBuf> {
     let path = csv_path(name);
@@ -259,6 +336,32 @@ mod tests {
         let no_name = write("BENCH_bad3.json", r#"{"schema": "rp-bench-v1", "metrics": {}}"#);
         assert!(validate_bench_json(&no_name).unwrap_err().contains("bench"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn regression_gate_checks_directions_and_tolerance() {
+        use crate::util::json::Value;
+        let committed = Value::parse(
+            r#"{"bench": "x", "schema": "rp-bench-v1",
+                "metrics": {"rate": 100.0, "cost_us": 10.0, "zero": 0.0}}"#,
+        )
+        .unwrap();
+        let gate = |fresh: &[(&str, f64, Direction)]| {
+            regression_gate_against(Some(&committed), fresh)
+        };
+        // inside tolerance (30%) both ways
+        assert!(gate(&[("rate", 71.0, Direction::HigherIsBetter)])[0].ok);
+        assert!(gate(&[("cost_us", 12.9, Direction::LowerIsBetter)])[0].ok);
+        // improvements never fail
+        assert!(gate(&[("rate", 500.0, Direction::HigherIsBetter)])[0].ok);
+        assert!(gate(&[("cost_us", 1.0, Direction::LowerIsBetter)])[0].ok);
+        // >30% regressions fail
+        assert!(!gate(&[("rate", 69.0, Direction::HigherIsBetter)])[0].ok);
+        assert!(!gate(&[("cost_us", 13.1, Direction::LowerIsBetter)])[0].ok);
+        // unseeded baselines (absent / zero / no committed doc) pass
+        assert!(gate(&[("new_metric", 1.0, Direction::HigherIsBetter)])[0].ok);
+        assert!(gate(&[("zero", 1.0, Direction::LowerIsBetter)])[0].ok);
+        assert!(regression_gate_against(None, &[("r", 1.0, Direction::HigherIsBetter)])[0].ok);
     }
 
     #[test]

@@ -35,6 +35,9 @@ COMMANDS:
                  --search linear|freelist
                  --um-policy round_robin|load_aware|locality
                    (UnitManager late-binding policy)
+                 --um-shards N (0 = default 16; unit-state / transition
+                   -bus shards in the UnitManager — raise for very wide
+                   submission fan-in, e.g. 100K-unit workloads)
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
                  --generations N (3) --duration S (64)
@@ -135,13 +138,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let artifact = args.get("artifact");
     let (policy, search) = sched_flags(args)?;
     let um_policy = um_policy_flag(args)?;
+    let um_shards = args.get_usize("um-shards", 0)?;
 
     let session = Session::new("cli-run");
     if artifact.is_some() {
         session.load_artifacts("artifacts")?;
     }
     let pmgr = session.pilot_manager();
-    let umgr = session.unit_manager();
+    let umgr = session.unit_manager_with_shards(um_shards);
     if let Some(p) = um_policy {
         umgr.set_policy(p);
     }
@@ -485,6 +489,26 @@ mod tests {
         // agent-level flags are rejected on the UM-twin path
         assert_eq!(run(&["sim", "--pilots", "32,32", "--policy", "backfill"]), 1);
         assert_eq!(run(&["sim", "--um-policy", "rr", "--max-inflight", "8"]), 1);
+    }
+
+    #[test]
+    fn run_real_um_shards() {
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--um-shards", "4",
+            ]),
+            0
+        );
+        // 0 = default shard count
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--um-shards", "0",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--um-shards", "abc"]), 1);
     }
 
     #[test]

@@ -6,8 +6,12 @@ use std::sync::{Arc, RwLock};
 use crate::error::{Error, Result};
 use crate::util::json::Value;
 
-/// One collection's documents behind its own lock.
-type Shard = RwLock<BTreeMap<String, Value>>;
+/// One collection's documents behind its own lock.  Documents are
+/// stored as `Arc<Value>` so filtered scans ([`Store::find`]) hand out
+/// shared references instead of deep-copying JSON trees; mutation goes
+/// through `Arc::make_mut` (copy-on-write only while a reader still
+/// holds the old document).
+type Shard = RwLock<BTreeMap<String, Arc<Value>>>;
 
 /// A concurrent, in-process document store.
 ///
@@ -38,6 +42,7 @@ impl Store {
 
     /// Insert (or replace) a document.
     pub fn insert(&self, collection: &str, id: &str, doc: Value) {
+        let doc = Arc::new(doc);
         {
             let outer = self.shards.read().unwrap();
             if let Some(shard) = outer.get(collection) {
@@ -64,7 +69,7 @@ impl Store {
             if let Some(shard) = outer.get(collection) {
                 let mut g = shard.write().unwrap();
                 for (id, doc) in docs {
-                    g.insert(id, doc);
+                    g.insert(id, Arc::new(doc));
                 }
                 return;
             }
@@ -72,20 +77,26 @@ impl Store {
         let mut outer = self.shards.write().unwrap();
         let mut g = outer.entry(collection.to_string()).or_default().write().unwrap();
         for (id, doc) in docs {
-            g.insert(id, doc);
+            g.insert(id, Arc::new(doc));
         }
     }
 
-    /// Fetch a document by id.
+    /// Fetch a document by id (clones the one document).
     pub fn find_one(&self, collection: &str, id: &str) -> Option<Value> {
         let outer = self.shards.read().unwrap();
         outer
             .get(collection)
-            .and_then(|s| s.read().unwrap().get(id).cloned())
+            .and_then(|s| s.read().unwrap().get(id).map(|d| (**d).clone()))
     }
 
-    /// All (id, doc) pairs matching a predicate.
-    pub fn find(&self, collection: &str, pred: impl Fn(&Value) -> bool) -> Vec<(String, Value)> {
+    /// All (id, doc) pairs matching a predicate.  Documents are returned
+    /// as `Arc<Value>` handles shared with the store — a scan over N
+    /// matches clones N refcounts, not N JSON trees.
+    pub fn find(
+        &self,
+        collection: &str,
+        pred: impl Fn(&Value) -> bool,
+    ) -> Vec<(String, Arc<Value>)> {
         let outer = self.shards.read().unwrap();
         outer
             .get(collection)
@@ -94,10 +105,22 @@ impl Store {
                     .unwrap()
                     .iter()
                     .filter(|(_, d)| pred(d))
-                    .map(|(k, d)| (k.clone(), d.clone()))
+                    .map(|(k, d)| (k.clone(), Arc::clone(d)))
                     .collect()
             })
             .unwrap_or_default()
+    }
+
+    /// Visit every document of a collection under the read lock without
+    /// copying anything — the zero-allocation alternative to
+    /// [`Store::find`] when the caller only aggregates.
+    pub fn for_each(&self, collection: &str, mut visit: impl FnMut(&str, &Value)) {
+        let outer = self.shards.read().unwrap();
+        if let Some(s) = outer.get(collection) {
+            for (k, d) in s.read().unwrap().iter() {
+                visit(k, d);
+            }
+        }
     }
 
     /// Set one field of a document.  Errors if the document is missing.
@@ -110,8 +133,34 @@ impl Store {
         let doc = g
             .get_mut(id)
             .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
-        doc.set(key, value);
+        Arc::make_mut(doc).set(key, value);
         Ok(())
+    }
+
+    /// Set field `key` on many documents under one lock acquisition —
+    /// the write-side analog of [`Store::insert_bulk`] the UnitManager's
+    /// transition-bus drain uses to land a whole batch of state changes
+    /// as one store pass.  Documents not (yet) present are skipped, not
+    /// an error: a transition drained before its unit's document was
+    /// inserted is superseded by a later drain.  Returns how many
+    /// documents were updated.
+    pub fn update_bulk(
+        &self,
+        collection: &str,
+        key: &str,
+        updates: impl IntoIterator<Item = (String, Value)>,
+    ) -> usize {
+        let outer = self.shards.read().unwrap();
+        let Some(shard) = outer.get(collection) else { return 0 };
+        let mut g = shard.write().unwrap();
+        let mut n = 0;
+        for (id, value) in updates {
+            if let Some(doc) = g.get_mut(&id) {
+                Arc::make_mut(doc).set(key, value);
+                n += 1;
+            }
+        }
+        n
     }
 
     /// Remove a document; returns it if present.
@@ -120,6 +169,7 @@ impl Store {
         outer
             .get(collection)
             .and_then(|s| s.write().unwrap().remove(id))
+            .map(|d| Arc::try_unwrap(d).unwrap_or_else(|a| (*a).clone()))
     }
 
     /// Document count in a collection.
@@ -190,6 +240,55 @@ mod tests {
         s.insert_bulk("units", [("u0".to_string(), Value::Null)]);
         assert_eq!(s.count("units"), 50);
         assert_eq!(s.find_one("units", "u0"), Some(Value::Null));
+    }
+
+    #[test]
+    fn find_shares_docs_without_deep_copy() {
+        let s = Store::new();
+        s.insert("units", "u1", Value::obj(vec![("state", "NEW".into())]));
+        let found = s.find("units", |_| true);
+        assert_eq!(found.len(), 1);
+        // the returned handle is the stored doc, not a copy
+        let again = s.find("units", |_| true);
+        assert!(Arc::ptr_eq(&found[0].1, &again[0].1));
+        // copy-on-write: updating while a reader holds the old doc
+        // leaves the reader's view intact
+        s.update_field("units", "u1", "state", "DONE".into()).unwrap();
+        assert_eq!(found[0].1.get_str("state", ""), "NEW");
+        assert_eq!(s.find_one("units", "u1").unwrap().get_str("state", ""), "DONE");
+    }
+
+    #[test]
+    fn for_each_visits_in_place() {
+        let s = Store::new();
+        for i in 0..8 {
+            s.insert("units", &format!("u{i}"), Value::Num(i as f64));
+        }
+        let mut sum = 0.0;
+        s.for_each("units", |_, d| sum += d.as_f64().unwrap_or(0.0));
+        assert_eq!(sum, 28.0);
+        // missing collection: no visits, no panic
+        s.for_each("nope", |_, _| panic!("must not visit"));
+    }
+
+    #[test]
+    fn update_bulk_sets_present_and_skips_missing() {
+        let s = Store::new();
+        for i in 0..6 {
+            s.insert("units", &format!("u{i}"), Value::obj(vec![("state", "NEW".into())]));
+        }
+        let n = s.update_bulk(
+            "units",
+            "state",
+            (0..8).map(|i| (format!("u{i}"), Value::Str("DONE".into()))),
+        );
+        assert_eq!(n, 6, "u6/u7 do not exist and are skipped");
+        for i in 0..6 {
+            let d = s.find_one("units", &format!("u{i}")).unwrap();
+            assert_eq!(d.get_str("state", ""), "DONE");
+        }
+        // missing collection updates nothing
+        assert_eq!(s.update_bulk("nope", "state", [("x".to_string(), Value::Null)]), 0);
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod analysis;
 mod recorder;
 
 pub use analysis::{Analysis, UnitPhases};
-pub use recorder::{Profile, Profiler};
+pub use recorder::{Event, Profile, Profiler};

@@ -47,6 +47,12 @@ pub struct UmSimConfig {
     /// Units bound per wave; the next wave binds when the previous one
     /// completed (0 = bind the whole workload at once).
     pub generation_size: usize,
+    /// Override the UM→Agent feed bulk size (`None` = the calibrated
+    /// `db.bulk_size`).  `Some(1)` models the seed's *per-unit* feed
+    /// path — one Arrive event and one transfer per unit — which is
+    /// what the batched-control-plane ablation in `perf_hotpath`
+    /// compares the batched feed against.
+    pub feed_bulk: Option<usize>,
     /// Profiler enabled?
     pub profile: bool,
     /// PRNG seed.
@@ -56,7 +62,14 @@ pub struct UmSimConfig {
 impl UmSimConfig {
     /// Single-wave setup over the given pilots.
     pub fn new(pilots: Vec<usize>, policy: UmPolicy) -> Self {
-        UmSimConfig { pilots, policy, generation_size: 0, profile: true, seed: 0 }
+        UmSimConfig {
+            pilots,
+            policy,
+            generation_size: 0,
+            feed_bulk: None,
+            profile: true,
+            seed: 0,
+        }
     }
 }
 
@@ -72,6 +85,10 @@ pub struct UmSimResult {
     pub per_pilot_makespan: Vec<f64>,
     /// Units never bound (no eligible pilot for their core request).
     pub unbound: usize,
+    /// Peak number of units executing concurrently across all pilots —
+    /// the steady-state in-flight gauge the 100K-concurrency scenario
+    /// in `perf_hotpath` pins (it must reach the full workload size).
+    pub peak_inflight: usize,
     /// DES events processed.
     pub events: u64,
     /// Wall-clock seconds the simulation took.
@@ -126,6 +143,9 @@ pub struct UmSim {
     pilots: Vec<SimPilot>,
     bound_total: usize,
     done_total: usize,
+    feed_bulk: Option<usize>,
+    inflight: usize,
+    peak_inflight: usize,
 }
 
 impl UmSim {
@@ -175,6 +195,9 @@ impl UmSim {
             pilots,
             bound_total: 0,
             done_total: 0,
+            feed_bulk: cfg.feed_bulk,
+            inflight: 0,
+            peak_inflight: 0,
         }
     }
 
@@ -224,7 +247,8 @@ impl UmSim {
                 self.prof(now, *u, S::UmScheduling);
             }
             // the batch travels UM -> store -> agent in calibrated bulks
-            let bulk = self.db.bulk_size.max(1) as usize;
+            // (or the ablation's override — Some(1) = per-unit feed)
+            let bulk = self.feed_bulk.unwrap_or(self.db.bulk_size.max(1) as usize).max(1);
             let mut t = now + self.db.notice_delay();
             let mut lo = self.pilots[k].inbox.len() as u32;
             for chunk in batch.chunks(bulk) {
@@ -279,6 +303,8 @@ impl UmSim {
                 let now = self.q.now();
                 self.pilots[p as usize].launch_busy = false;
                 self.prof(now, u, S::AExecuting);
+                self.inflight += 1;
+                self.peak_inflight = self.peak_inflight.max(self.inflight);
                 let d = self.units[u as usize].duration;
                 self.q.after(d, Ev::ExecDone(p, u));
                 self.kick(p as usize);
@@ -291,6 +317,7 @@ impl UmSim {
                 pilot.free += self.units[u as usize].cores;
                 pilot.done += 1;
                 pilot.last_done_t = now;
+                self.inflight -= 1;
                 self.done_total += 1;
                 self.kick(p as usize);
                 // wave barrier: completion notices travel back to the
@@ -320,6 +347,7 @@ impl UmSim {
             per_pilot_units: self.pilots.iter().map(|p| p.bound).collect(),
             per_pilot_makespan: self.pilots.iter().map(|p| p.last_done_t).collect(),
             unbound: self.pool.len(),
+            peak_inflight: self.peak_inflight,
             events: self.q.processed(),
             wall_s: wall0.elapsed().as_secs_f64(),
             profile: self.profiler.snapshot(),
@@ -444,6 +472,26 @@ mod tests {
         for &c in &r.per_pilot_units {
             assert_eq!(c % 20, 0, "ensembles must not split: {:?}", r.per_pilot_units);
         }
+    }
+
+    #[test]
+    fn peak_inflight_gauge_and_feed_bulk_ablation() {
+        // long units over enough cores: the whole workload ends up in
+        // flight at once, which is what the 100K scenario scales up
+        let wl = WorkloadSpec::uniform(64, 1e6).build();
+        let mut cfg = UmSimConfig::new(vec![32, 32], UmPolicy::RoundRobin);
+        let batched = UmSim::new(&comet(), cfg.clone(), &wl).run();
+        assert_eq!(batched.peak_inflight, 64, "all units concurrently in flight");
+        // the seed's per-unit feed path processes strictly more events
+        cfg.feed_bulk = Some(1);
+        let per_unit = UmSim::new(&comet(), cfg, &wl).run();
+        assert_eq!(per_unit.peak_inflight, 64, "feed shape must not change the outcome");
+        assert!(
+            per_unit.events > batched.events,
+            "batched feed coalesces Arrive events: {} vs {}",
+            per_unit.events,
+            batched.events
+        );
     }
 
     /// The twin and the real UnitManager drive the same pool + policy

@@ -161,6 +161,8 @@ fn bench_reactor_inflight(
         scheduler_policy: SchedPolicy::Fifo,
         reserve_window: 64,
         sandbox: std::env::temp_dir().join("rp_perf_reactor"),
+        stage_cache_bytes: 0,  // no staging in this bench
+        prefetch_workers: 0,
         synthetic_as_process: true, // real children
     };
     let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();

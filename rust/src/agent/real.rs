@@ -30,6 +30,19 @@
 //! in-flight unit is one wakeup: the wake-pipe rouses the reactor,
 //! which kills the child instead of waiting for it.
 //!
+//! Input staging is pipelined: units that declare `input_staging`
+//! directives are routed to a pool of **stager-in workers** which fetch
+//! their inputs through the pilot's content-addressed
+//! [`StageCache`](stager::cache::StageCache) *concurrently with* the
+//! scheduler's placement pass over already-staged units — warm-cache or
+//! overlapped staging adds ~zero makespan over skipping staging
+//! entirely.  A staged unit is forwarded to the scheduler
+//! (`AStagingIn -> ASchedulingPending`); a failed fetch fails the unit
+//! cleanly without poisoning the cache.  With
+//! `staging.policy = "serial"` the workers are disabled and inputs are
+//! fetched inline on the scheduler thread (blocking placement — the
+//! baseline the prefetch pipeline is measured against).
+//!
 //! Used by the Pilot API for local pilots (examples, the end-to-end MD
 //! driver) and by the profiler-overhead bench; the supercomputer-scale
 //! figure benches use the DES twin ([`crate::sim::AgentSim`]), which
@@ -38,7 +51,7 @@
 //! events.
 
 use std::collections::{HashMap, VecDeque};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -272,6 +285,14 @@ pub struct RealAgentConfig {
     /// [`WaitPool`] for the starvation semantics.
     pub reserve_window: usize,
     pub sandbox: PathBuf,
+    /// Byte budget of the content-addressed input-staging cache
+    /// (`staging.cache_bytes`; 0 disables it — every stage-in copies).
+    pub stage_cache_bytes: u64,
+    /// Stager-in worker threads prefetching unit inputs concurrently
+    /// with the scheduler's placement pass (`staging.prefetch_workers`).
+    /// 0 = serial mode: inputs are fetched inline on the scheduler
+    /// thread, blocking placement.
+    pub prefetch_workers: usize,
     /// Run synthetic units as real `sleep` processes (true exercises the
     /// spawn path; false models them as reactor timers).
     pub synthetic_as_process: bool,
@@ -293,6 +314,12 @@ impl RealAgentConfig {
                 .unwrap_or_default(),
             reserve_window: cfg.agent.reserve_window,
             sandbox,
+            stage_cache_bytes: cfg.staging.cache_bytes,
+            prefetch_workers: if cfg.staging.policy == "serial" {
+                0
+            } else {
+                cfg.staging.prefetch_workers.max(1)
+            },
             synthetic_as_process: false,
         }
     }
@@ -339,11 +366,18 @@ impl SchedShared {
 pub struct RealAgent {
     cfg: RealAgentConfig,
     input: Bridge<SharedUnit>,
+    /// Units with input-staging directives, routed to the stager-in
+    /// workers; each staged unit is forwarded into `input`.
+    stagein_bridge: Bridge<SharedUnit>,
     exec_bridge: Bridge<(SharedUnit, Allocation)>,
     /// Blocking payloads (PJRT) routed from the reactor to the executer
     /// thread pool.
     pool_bridge: Bridge<(SharedUnit, Allocation)>,
     stage_bridge: Bridge<SharedUnit>,
+    /// Content-addressed input-staging cache (`.stage_cache` under the
+    /// pilot sandbox); its residency mask feeds the UnitManager's
+    /// data-aware binding policy.
+    stage_cache: Arc<stager::cache::StageCache>,
     sched_shared: Arc<SchedShared>,
     /// Wake-pipe into the executer reactor's `poll(2)` wait: written on
     /// every new placement, cancellation, and shutdown.
@@ -359,6 +393,9 @@ pub struct RealAgent {
     /// Live executer-side threads (reactor + pool workers); the last one
     /// out closes the stage bridge.
     exec_active: std::sync::atomic::AtomicUsize,
+    /// Live stager-in workers; the last one out closes the input bridge
+    /// (prefetch mode only — in serial mode `drain_and_stop` closes it).
+    stagein_active: std::sync::atomic::AtomicUsize,
     /// Memoized PATH lookups for wrapped launch methods: the stat-walk
     /// runs once per (agent, executable) instead of once per unit.
     which_cache: Mutex<HashMap<String, bool>>,
@@ -387,12 +424,18 @@ impl RealAgent {
         let exec_wake = reactor.wake_handle();
         let reactor_stats = reactor.stats();
         let exec_cancel_pending = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stage_cache = Arc::new(stager::cache::StageCache::new(
+            cfg.sandbox.join(".stage_cache"),
+            cfg.stage_cache_bytes,
+        ));
         let agent = Arc::new(RealAgent {
             cfg,
             input: Bridge::new("agent-input"),
+            stagein_bridge: Bridge::new("agent-stagein"),
             exec_bridge: Bridge::new("sched-exec"),
             pool_bridge: Bridge::new("reactor-pool"),
             stage_bridge: Bridge::new("exec-stageout"),
+            stage_cache,
             sched_shared: Arc::new(SchedShared {
                 state: Mutex::new(SchedState {
                     sched,
@@ -408,11 +451,15 @@ impl RealAgent {
             profiler,
             threads: Mutex::new(Vec::new()),
             exec_active: std::sync::atomic::AtomicUsize::new(0),
+            stagein_active: std::sync::atomic::AtomicUsize::new(0),
             which_cache: Mutex::new(HashMap::new()),
         });
         agent
             .exec_active
             .store(agent.cfg.executers + 1, std::sync::atomic::Ordering::SeqCst);
+        agent
+            .stagein_active
+            .store(agent.cfg.prefetch_workers, std::sync::atomic::Ordering::SeqCst);
 
         let mut threads = vec![];
         // scheduler thread
@@ -446,6 +493,17 @@ impl RealAgent {
                     .map_err(|e| Error::other(format!("spawn executer: {e}")))?,
             );
         }
+        // input stager workers: prefetch unit inputs concurrently with
+        // the scheduler's placement pass (0 = serial inline staging)
+        for i in 0..agent.cfg.prefetch_workers {
+            let a = agent.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("agent-stager-in-{i}"))
+                    .spawn(move || a.stagein_loop())
+                    .map_err(|e| Error::other(format!("spawn stager-in: {e}")))?,
+            );
+        }
         // output stager thread
         {
             let a = agent.clone();
@@ -461,11 +519,26 @@ impl RealAgent {
     }
 
     /// Submit units to the Agent (they must be in `AStagingInPending`).
-    /// Every submission is a scheduling event: it triggers a placement
-    /// pass over the wait-pool.
+    /// Units with input-staging directives route to the stager-in
+    /// workers (when prefetching is on) so their fetches overlap the
+    /// scheduler's placement pass; everything else is a scheduling
+    /// event immediately.
     pub fn submit(&self, units: Vec<SharedUnit>) {
-        self.input.send_bulk(units);
-        self.sched_shared.notify_event();
+        if self.cfg.prefetch_workers > 0 {
+            let (staged, direct): (Vec<_>, Vec<_>) = units
+                .into_iter()
+                .partition(|u| !u.0.lock().unwrap().descr.input_staging.is_empty());
+            if !staged.is_empty() {
+                self.stagein_bridge.send_bulk(staged);
+            }
+            if !direct.is_empty() {
+                self.input.send_bulk(direct);
+                self.sched_shared.notify_event();
+            }
+        } else {
+            self.input.send_bulk(units);
+            self.sched_shared.notify_event();
+        }
     }
 
     /// Pilot capacity in cores.
@@ -486,9 +559,28 @@ impl RealAgent {
         self.reactor_stats.snapshot()
     }
 
+    /// Live staging-cache counters (hits, misses, evictions, resident
+    /// bytes/entries) — the fig5 bench gates on these.
+    pub fn stage_cache_stats(&self) -> stager::cache::CacheStats {
+        self.stage_cache.stats()
+    }
+
+    /// Bloom-style residency gauge of the staging cache (bit = digest
+    /// mod 64): the UnitManager's `residency` policy reads it when
+    /// ranking pilots for data-aware binding.  A set bit means an input
+    /// with that digest class is *probably* resident; a clear bit means
+    /// it definitely is not.
+    pub fn resident_mask(&self) -> u64 {
+        self.stage_cache.resident_mask()
+    }
+
     /// Drain all queued work and stop the component threads.
     pub fn drain_and_stop(&self) {
-        self.input.close();
+        self.stagein_bridge.close();
+        if self.cfg.prefetch_workers == 0 {
+            // no stager-in workers to hand the input bridge to
+            self.input.close();
+        }
         // wake a possibly-idle scheduler so it can observe shutdown
         {
             let mut st = self.sched_shared.state.lock().unwrap();
@@ -497,9 +589,11 @@ impl RealAgent {
         }
         self.sched_shared.wake.notify_all();
         let threads = std::mem::take(&mut *self.threads.lock().unwrap());
-        // scheduler exits -> close exec bridge -> reactor drains its
-        // in-flight set and closes the pool bridge -> pool workers exit
-        // -> close stage bridge -> stager exits (ordering enforced below)
+        // stager-in workers fail their queue and the last one closes the
+        // input bridge -> scheduler exits -> close exec bridge -> reactor
+        // drains its in-flight set and closes the pool bridge -> pool
+        // workers exit -> close stage bridge -> stager exits (ordering
+        // enforced below)
         for t in threads {
             let _ = t.join();
         }
@@ -524,6 +618,12 @@ impl RealAgent {
 
             // drain-input: admit everything queued into the wait-pool
             for unit in self.input.try_recv_all() {
+                // serial (no-prefetch) mode: fetch inputs inline on this
+                // thread, blocking placement — the baseline the prefetch
+                // pipeline overlaps away
+                if self.cfg.prefetch_workers == 0 && !self.stage_in_inline(&unit) {
+                    continue; // staging failed: the unit is final
+                }
                 // AGENT_SCHEDULING_PENDING on entry into the scheduler
                 if advance(&unit, S::ASchedulingPending, &self.profiler).is_err() {
                     continue; // canceled/failed upstream
@@ -593,13 +693,17 @@ impl RealAgent {
                 self.exec_wake.wake();
             }
 
-            if stopping || (self.input.is_drained() && pool.is_empty()) {
+            // on stop, wait for the stager-in workers to retire their
+            // queue (the last one closes the input bridge) so no unit
+            // can be forwarded after the leftover sweep below
+            if (stopping && self.stagein_idle()) || (self.input.is_drained() && pool.is_empty())
+            {
                 break;
             }
 
             // sleep until the next scheduling event (no poll timeout)
             let mut st = self.sched_shared.state.lock().unwrap();
-            while st.wake_seq == seen_seq && !st.stopping {
+            while st.wake_seq == seen_seq && !(st.stopping && self.stagein_idle()) {
                 st = self.sched_shared.wake.wait(st).unwrap();
             }
         }
@@ -651,6 +755,93 @@ impl RealAgent {
             st.wake_seq += 1;
         }
         self.sched_shared.wake.notify_all();
+    }
+
+    /// A stager-in worker: fetch unit inputs through the content-
+    /// addressed cache, concurrently with the scheduler's placement
+    /// pass over already-staged units, then forward each staged unit
+    /// into the scheduler's input bridge (`AStagingIn ->
+    /// ASchedulingPending` is the pipeline hop).  A failed fetch fails
+    /// the unit cleanly; the cache is never poisoned by partial
+    /// fetches (see [`stager::cache`]).  The last worker out closes
+    /// the input bridge so the scheduler's shutdown sweep cannot race
+    /// a late forward.
+    fn stagein_loop(&self) {
+        loop {
+            let mut batch = self.stagein_bridge.recv(1);
+            let Some(unit) = batch.pop() else { break };
+            if self.sched_shared.state.lock().unwrap().stopping {
+                fail_unit(&unit, "agent shutting down".into(), &self.profiler);
+                continue;
+            }
+            self.stage_in_unit(&unit);
+        }
+        if self.stagein_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
+            self.input.close();
+            self.sched_shared.notify_event();
+        }
+    }
+
+    /// Fetch one unit's inputs into its sandbox (prefetch path).
+    fn stage_in_unit(&self, unit: &SharedUnit) {
+        let (id, name, directives, canceled) = {
+            let rec = unit.0.lock().unwrap();
+            (
+                rec.id,
+                rec.descr.name.clone(),
+                rec.descr.input_staging.clone(),
+                rec.cancel_requested,
+            )
+        };
+        if canceled {
+            cancel_unit(unit, &self.profiler);
+            return;
+        }
+        // AGENT_STAGING_INPUT while the fetch overlaps placement
+        if advance(unit, S::AStagingIn, &self.profiler).is_err() {
+            return; // finalized upstream
+        }
+        let dst = self.cfg.sandbox.join(unit_sandbox_name(id, &name));
+        match stager::stage_cached(&directives, Path::new("."), &dst, &self.stage_cache) {
+            Ok(_hits) => {
+                self.input.send(unit.clone());
+                self.sched_shared.notify_event();
+            }
+            Err(e) => fail_unit(unit, e.to_string(), &self.profiler),
+        }
+    }
+
+    /// Serial stage-in used when prefetching is disabled
+    /// (`staging.policy = "serial"`): fetch the unit's inputs inline on
+    /// the scheduler thread.  Returns false if the unit was finalized
+    /// here (staging failure).
+    fn stage_in_inline(&self, unit: &SharedUnit) -> bool {
+        let (id, name, directives) = {
+            let rec = unit.0.lock().unwrap();
+            if rec.descr.input_staging.is_empty() {
+                return true;
+            }
+            (rec.id, rec.descr.name.clone(), rec.descr.input_staging.clone())
+        };
+        if advance(unit, S::AStagingIn, &self.profiler).is_err() {
+            return true; // canceled upstream: the pool intake finalizes it
+        }
+        let dst = self.cfg.sandbox.join(unit_sandbox_name(id, &name));
+        match stager::stage_cached(&directives, Path::new("."), &dst, &self.stage_cache) {
+            Ok(_hits) => true,
+            Err(e) => {
+                fail_unit(unit, e.to_string(), &self.profiler);
+                false
+            }
+        }
+    }
+
+    /// Have all stager-in workers exited?  (Trivially true in serial
+    /// mode.)  The scheduler's shutdown path gates on this so a late
+    /// forward cannot be lost.
+    fn stagein_idle(&self) -> bool {
+        self.cfg.prefetch_workers == 0
+            || self.stagein_active.load(std::sync::atomic::Ordering::SeqCst) == 0
     }
 
     /// The executer reactor: one thread multiplexing every running unit.
@@ -921,13 +1112,8 @@ impl RealAgent {
                 // below so the API handle keeps serving it after Done.
                 let (name, outcome, failed, out_staging) = {
                     let mut rec = unit.0.lock().unwrap();
-                    let name = if rec.descr.name.is_empty() {
-                        rec.id.to_string()
-                    } else {
-                        rec.descr.name.clone()
-                    };
                     (
-                        name,
+                        unit_sandbox_name(rec.id, &rec.descr.name),
                         rec.outcome.take(),
                         rec.machine.is_final(),
                         rec.descr.output_staging.clone(),
@@ -982,6 +1168,20 @@ impl RealAgent {
     }
 }
 
+/// Sandbox directory name of a unit.  Keyed primarily by the unit id —
+/// two units sharing a human-readable `name` (common in generated
+/// ensembles) must never collide on one directory — with the name kept
+/// as a suffix for readability.  Both the stage-in destination and the
+/// output stager use this, so staged inputs and `STDOUT`/`STDERR` land
+/// in the same per-unit directory.
+fn unit_sandbox_name(id: UnitId, name: &str) -> String {
+    if name.is_empty() {
+        id.to_string()
+    } else {
+        format!("{id}-{name}")
+    }
+}
+
 /// Does this unit's payload block a thread for its full runtime (and so
 /// belong on the executer pool rather than in the reactor)?
 fn is_blocking_payload(unit: &SharedUnit) -> bool {
@@ -1031,6 +1231,8 @@ mod tests {
             scheduler_policy: SchedPolicy::Fifo,
             reserve_window: 64,
             sandbox: sandbox(name),
+            stage_cache_bytes: 64 << 20,
+            prefetch_workers: 2,
             synthetic_as_process: false,
         }
     }
@@ -1110,12 +1312,172 @@ mod tests {
         }
         drop(rec);
         agent.drain_and_stop();
-        // STDOUT staged to the sandbox
+        // STDOUT staged to the unit's id-keyed sandbox directory
         let out = std::fs::read_to_string(
-            std::env::temp_dir().join("rp_agent_test/exe/echo/STDOUT"),
+            std::env::temp_dir().join("rp_agent_test/exe/unit.000000-echo/STDOUT"),
         )
         .unwrap();
         assert_eq!(out.trim(), "hi");
+    }
+
+    #[test]
+    fn same_named_units_keep_distinct_sandboxes() {
+        // regression: sandboxes were keyed by `descr.name`, so two units
+        // sharing a name clobbered each other's outputs
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("twins", 4, 1), profiler.clone(), None).unwrap();
+        let a = ready_unit(
+            0,
+            UnitDescription::executable("/bin/echo", vec!["alpha".into()]).name("twin"),
+            &profiler,
+        );
+        let b = ready_unit(
+            1,
+            UnitDescription::executable("/bin/echo", vec!["beta".into()]).name("twin"),
+            &profiler,
+        );
+        agent.submit(vec![a.clone(), b.clone()]);
+        assert_eq!(wait_final(&a, 10.0), S::Done);
+        assert_eq!(wait_final(&b, 10.0), S::Done);
+        agent.drain_and_stop();
+        let root = std::env::temp_dir().join("rp_agent_test/twins");
+        let out_a = std::fs::read_to_string(root.join("unit.000000-twin/STDOUT")).unwrap();
+        let out_b = std::fs::read_to_string(root.join("unit.000001-twin/STDOUT")).unwrap();
+        assert_eq!(out_a.trim(), "alpha");
+        assert_eq!(out_b.trim(), "beta");
+    }
+
+    /// Stage-in fixture: a source directory with `n` input files.
+    fn stage_src(name: &str, files: &[(&str, &[u8])]) -> PathBuf {
+        let d = std::env::temp_dir().join("rp_agent_test_src").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        for (f, bytes) in files {
+            std::fs::write(d.join(f), bytes).unwrap();
+        }
+        d
+    }
+
+    #[test]
+    fn prefetch_stages_inputs_into_unit_sandbox() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("stagein", 4, 1), profiler.clone(), None).unwrap();
+        let src = stage_src("stagein", &[("in.dat", b"payload")]);
+        let u = ready_unit(
+            0,
+            UnitDescription::sleep(0.01)
+                .name("s1")
+                .stage_in(src.join("in.dat").to_str().unwrap(), "in.dat"),
+            &profiler,
+        );
+        agent.submit(vec![u.clone()]);
+        assert_eq!(wait_final(&u, 10.0), S::Done);
+        // the prefetch path recorded AGENT_STAGING_INPUT
+        assert!(u.0.lock().unwrap().machine.entered(S::AStagingIn).is_some());
+        agent.drain_and_stop();
+        let staged = std::env::temp_dir().join("rp_agent_test/stagein/unit.000000-s1/in.dat");
+        assert_eq!(std::fs::read(staged).unwrap(), b"payload");
+        assert_eq!(agent.stage_cache_stats().misses, 1);
+    }
+
+    #[test]
+    fn serial_mode_stages_inline_on_the_scheduler() {
+        let profiler = Arc::new(Profiler::new(true));
+        let mut cfg = agent_cfg("stagein-serial", 4, 1);
+        cfg.prefetch_workers = 0;
+        let agent = RealAgent::bootstrap(cfg, profiler.clone(), None).unwrap();
+        let src = stage_src("stagein-serial", &[("in.dat", b"payload")]);
+        let u = ready_unit(
+            0,
+            UnitDescription::sleep(0.01)
+                .name("s1")
+                .stage_in(src.join("in.dat").to_str().unwrap(), "in.dat"),
+            &profiler,
+        );
+        agent.submit(vec![u.clone()]);
+        assert_eq!(wait_final(&u, 10.0), S::Done);
+        assert!(u.0.lock().unwrap().machine.entered(S::AStagingIn).is_some());
+        agent.drain_and_stop();
+        let staged = std::env::temp_dir()
+            .join("rp_agent_test/stagein-serial/unit.000000-s1/in.dat");
+        assert_eq!(std::fs::read(staged).unwrap(), b"payload");
+    }
+
+    #[test]
+    fn repeated_inputs_hit_the_cache() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("stagein-hits", 8, 1), profiler.clone(), None)
+                .unwrap();
+        let src = stage_src("stagein-hits", &[("shared.dat", b"ensemble input")]);
+        let units: Vec<SharedUnit> = (0..6)
+            .map(|i| {
+                ready_unit(
+                    i,
+                    UnitDescription::sleep(0.01)
+                        .name(format!("e{i}"))
+                        .stage_in(src.join("shared.dat").to_str().unwrap(), "in.dat"),
+                    &profiler,
+                )
+            })
+            .collect();
+        agent.submit(units.clone());
+        for u in &units {
+            assert_eq!(wait_final(u, 10.0), S::Done);
+        }
+        let stats = agent.stage_cache_stats();
+        agent.drain_and_stop();
+        assert_eq!(stats.hits + stats.misses, 6);
+        // two prefetch workers can race the first cold fetch, so up to
+        // one duplicate miss is legitimate — never more
+        assert!(stats.misses <= 2, "at most the racing cold fetches miss: {stats:?}");
+        assert!(stats.hits >= 4, "the warm ensemble must hit: {stats:?}");
+        assert_ne!(agent.resident_mask(), 0, "the staged digest must be resident");
+    }
+
+    /// Satellite regression: a unit with several stage-in directives
+    /// whose second source is missing must fail cleanly — never run
+    /// half-staged — and must not poison the cache for later units.
+    #[test]
+    fn partial_stage_in_fails_unit_without_poisoning_cache() {
+        let profiler = Arc::new(Profiler::new(true));
+        let agent =
+            RealAgent::bootstrap(agent_cfg("stagein-partial", 4, 1), profiler.clone(), None)
+                .unwrap();
+        let src = stage_src("stagein-partial", &[("good.dat", b"ok")]);
+        let bad = ready_unit(
+            0,
+            UnitDescription::sleep(0.01)
+                .name("bad")
+                .stage_in(src.join("good.dat").to_str().unwrap(), "a.dat")
+                .stage_in(src.join("missing.dat").to_str().unwrap(), "b.dat"),
+            &profiler,
+        );
+        agent.submit(vec![bad.clone()]);
+        assert_eq!(wait_final(&bad, 10.0), S::Failed);
+        {
+            let rec = bad.0.lock().unwrap();
+            let err = rec.error.as_ref().unwrap();
+            assert!(err.contains("staging error"), "error names the stage: {err}");
+            // the unit never started executing half-staged
+            assert!(rec.machine.entered(S::AExecuting).is_none());
+        }
+        // a later unit that needs only the good input is unaffected and
+        // served from the (unpoisoned) cache
+        let good = ready_unit(
+            1,
+            UnitDescription::sleep(0.01)
+                .name("good")
+                .stage_in(src.join("good.dat").to_str().unwrap(), "a.dat"),
+            &profiler,
+        );
+        agent.submit(vec![good.clone()]);
+        assert_eq!(wait_final(&good, 10.0), S::Done);
+        let stats = agent.stage_cache_stats();
+        agent.drain_and_stop();
+        assert_eq!(stats.hits, 1, "good.dat was cached by the failed unit: {stats:?}");
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Content-addressed input staging cache (per-pilot).
+//!
+//! The Titan characterization (arXiv 1801.01843) attributes much of the
+//! staging cost to small-file traffic that repeats identically across
+//! ensemble members: N members stage the *same* inputs N times.  This
+//! cache de-duplicates that work.  Staged sources are digested
+//! (FNV-1a, zero-dependency) and stored once in a per-pilot object
+//! store (`<sandbox>/.stage_cache/<digest>`); subsequent fetches of
+//! identical content hard-link the cached object into the unit sandbox
+//! (copy fallback for filesystems without links) instead of re-copying
+//! the bytes.
+//!
+//! A stat-gated digest memo (the git-index idiom) makes the warm path
+//! pure metadata: a source whose `(len, mtime)` is unchanged since the
+//! last digest reuses the memoized digest without re-reading content.
+//! Mutating a source changes its stat signature, forcing a re-digest —
+//! and since the digest covers content, changed bytes yield a new
+//! object: **the cache never serves stale content** for any mutation
+//! that updates `mtime` or length (every normal write; a byte-flip that
+//! forges both within the filesystem's mtime granularity is out of
+//! scope, exactly as for `git status`).
+//!
+//! # Eviction invariants
+//!
+//! Residency is bounded by an LRU byte budget (`staging.cache_bytes`;
+//! `0` disables caching entirely — every fetch is a plain copy):
+//!
+//! * after every insert, `resident_bytes <= budget` unless the single
+//!   newest object alone exceeds the budget (it is kept so the fetch
+//!   that paid for it still hits);
+//! * eviction unlinks only the *cache object* — sandbox copies that
+//!   were hard-linked from it keep their data (the inode survives
+//!   until the last link drops);
+//! * a failed fetch never inserts: sources are copied to a temp file
+//!   first and renamed into the store only on success, so a missing or
+//!   half-readable source cannot poison the cache;
+//! * the 64-bit residency bloom (`resident_mask`, bit = `digest % 64`)
+//!   is recomputed from the surviving entries after every eviction
+//!   pass, so a set bit always has at least one resident witness
+//!   (clear bit ⇒ definitely not resident; set bit ⇒ probably
+//!   resident — the one-word gauge the UM `residency` policy binds
+//!   on).
+
+use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::SystemTime;
+
+use crate::api::descriptions::StagingDirective;
+use crate::error::{Error, Result};
+
+/// FNV-1a 64-bit, streamed over a byte chunk.
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100_0000_01b3;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Content digest of a file: FNV-1a over its bytes, seeded with the
+/// length so empty/truncated prefixes of each other still differ.
+pub fn digest_file(path: &Path) -> std::io::Result<u64> {
+    let mut f = fs::File::open(path)?;
+    let len = f.metadata()?.len();
+    let mut h = fnv1a(FNV_OFFSET, &len.to_le_bytes());
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h = fnv1a(h, &buf[..n]);
+    }
+    Ok(h)
+}
+
+/// The residency-bloom bit of a digest (`digest % 64`).
+#[inline]
+pub fn digest_bit(digest: u64) -> u64 {
+    1u64 << (digest % 64)
+}
+
+/// Identity digest for substrates without file content (the DES
+/// twins): FNV-1a over a source *name*.  Self-consistent — the same
+/// source string always maps to the same digest, hence the same
+/// residency bit — which is all the binding model needs.
+pub fn digest_str(s: &str) -> u64 {
+    fnv1a(FNV_OFFSET, s.as_bytes())
+}
+
+/// Stat-gated digest memo: `(len, mtime)` unchanged since the last
+/// digest ⇒ reuse it without re-reading content (the git-index quick
+/// check).  Any normal write updates `mtime`, invalidating the memo.
+#[derive(Default)]
+struct DigestMemo {
+    map: HashMap<PathBuf, (u64, SystemTime, u64)>,
+}
+
+impl DigestMemo {
+    /// Memoized digest of `path`; re-reads content only when the stat
+    /// signature changed.
+    fn digest(&mut self, path: &Path) -> std::io::Result<u64> {
+        let meta = fs::metadata(path)?;
+        let len = meta.len();
+        let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        if let Some(&(l, t, d)) = self.map.get(path) {
+            if l == len && t == mtime {
+                return Ok(d);
+            }
+        }
+        let d = digest_file(path)?;
+        self.map.insert(path.to_path_buf(), (len, mtime, d));
+        Ok(d)
+    }
+}
+
+/// Live counters of a [`StageCache`] (also the UM-visible gauge set).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Fetches served by linking a resident object (no byte copy).
+    pub hits: u64,
+    /// Fetches that had to copy the source (including all fetches of a
+    /// disabled cache).
+    pub misses: u64,
+    /// Objects evicted by the LRU byte budget.
+    pub evictions: u64,
+    /// Bytes currently resident in the object store.
+    pub resident_bytes: u64,
+    /// Objects currently resident.
+    pub resident_entries: u64,
+}
+
+struct CacheInner {
+    memo: DigestMemo,
+    /// digest -> object size in bytes.
+    entries: HashMap<u64, u64>,
+    /// LRU order, front = coldest.
+    order: VecDeque<u64>,
+}
+
+/// Per-pilot content-addressed input cache (see module docs for the
+/// eviction invariants).
+pub struct StageCache {
+    root: PathBuf,
+    budget: u64,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    resident_bytes: AtomicU64,
+    resident_mask: AtomicU64,
+    tmp_seq: AtomicU64,
+}
+
+impl StageCache {
+    /// A cache rooted at `root` (created lazily) with an LRU byte
+    /// budget; `budget_bytes == 0` disables caching (plain copies).
+    pub fn new(root: PathBuf, budget_bytes: u64) -> StageCache {
+        StageCache {
+            root,
+            budget: budget_bytes,
+            inner: Mutex::new(CacheInner {
+                memo: DigestMemo::default(),
+                entries: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            resident_bytes: AtomicU64::new(0),
+            resident_mask: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Is caching enabled (nonzero budget)?
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            resident_entries: inner.entries.len() as u64,
+        }
+    }
+
+    /// The 64-bit residency bloom (bit = `digest % 64`): the one-word
+    /// gauge the UM `residency` policy keys binding on.
+    pub fn resident_mask(&self) -> u64 {
+        self.resident_mask.load(Ordering::Relaxed)
+    }
+
+    /// Fetch `src` into `dst` through the cache; returns `true` on a
+    /// cache hit (object linked, no byte copy).  A failed fetch leaves
+    /// the cache untouched (no entry inserted, counters aside).
+    pub fn fetch(&self, src: &Path, dst: &Path) -> Result<bool> {
+        if self.budget == 0 {
+            // disabled: the pre-cache behavior, a plain copy
+            copy_into(src, dst)?;
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(false);
+        }
+        // Phase 1: digest under the lock (the memo makes the warm path
+        // a stat), and serve a resident object without dropping it so
+        // eviction cannot race the link.
+        let digest = {
+            let mut inner = self.inner.lock().unwrap();
+            let digest = inner
+                .memo
+                .digest(src)
+                .map_err(|e| Error::Staging(format!("{}: {e}", src.display())))?;
+            if inner.entries.contains_key(&digest) {
+                inner.order.retain(|&d| d != digest);
+                inner.order.push_back(digest);
+                link_or_copy(&self.object_path(digest), dst)?;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(true);
+            }
+            digest
+        };
+        // Phase 2 (miss): copy outside the lock into a temp file, then
+        // rename into the store — a failed copy never inserts.
+        fs::create_dir_all(&self.root)?;
+        let tmp = self
+            .root
+            .join(format!("tmp-{digest:016x}-{}", self.tmp_seq.fetch_add(1, Ordering::Relaxed)));
+        let size = match fs::copy(src, &tmp) {
+            Ok(n) => n,
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                return Err(Error::Staging(format!(
+                    "{} -> cache: {e}",
+                    src.display()
+                )));
+            }
+        };
+        let obj = self.object_path(digest);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.contains_key(&digest) {
+            // another worker cached it while we copied; ours is surplus
+            let _ = fs::remove_file(&tmp);
+        } else {
+            fs::rename(&tmp, &obj)?;
+            inner.entries.insert(digest, size);
+            inner.order.push_back(digest);
+            self.resident_bytes.fetch_add(size, Ordering::Relaxed);
+            self.evict_over_budget(&mut inner);
+            self.recompute_mask(&inner);
+        }
+        link_or_copy(&obj, dst)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(false)
+    }
+
+    fn object_path(&self, digest: u64) -> PathBuf {
+        self.root.join(format!("{digest:016x}"))
+    }
+
+    /// Drop coldest objects until under budget; the newest entry is
+    /// never evicted (the fetch that paid for it must still hit).
+    fn evict_over_budget(&self, inner: &mut CacheInner) {
+        while self.resident_bytes.load(Ordering::Relaxed) > self.budget && inner.order.len() > 1
+        {
+            let Some(d) = inner.order.pop_front() else { break };
+            if let Some(size) = inner.entries.remove(&d) {
+                let _ = fs::remove_file(self.object_path(d));
+                self.resident_bytes.fetch_sub(size, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn recompute_mask(&self, inner: &CacheInner) {
+        let mask = inner.entries.keys().fold(0u64, |m, &d| m | digest_bit(d));
+        self.resident_mask.store(mask, Ordering::Relaxed);
+    }
+}
+
+/// Plain copy with parent creation (the disabled-cache / cold path).
+fn copy_into(src: &Path, dst: &Path) -> Result<u64> {
+    if let Some(parent) = dst.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::copy(src, dst)
+        .map_err(|e| Error::Staging(format!("{} -> {}: {e}", src.display(), dst.display())))
+}
+
+/// Materialize a cached object at `dst`: hard-link where the
+/// filesystem allows (pure metadata), byte copy otherwise.
+fn link_or_copy(obj: &Path, dst: &Path) -> Result<()> {
+    if let Some(parent) = dst.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let _ = fs::remove_file(dst);
+    if fs::hard_link(obj, dst).is_ok() {
+        return Ok(());
+    }
+    fs::copy(obj, dst)
+        .map(|_| ())
+        .map_err(|e| Error::Staging(format!("{} -> {}: {e}", obj.display(), dst.display())))
+}
+
+/// Digest mask of a unit's input staging set: OR of [`digest_bit`]
+/// over every readable source (missing sources contribute nothing —
+/// binding stays best-effort; the stage-in pass will surface the
+/// error).  Served from a process-wide stat-gated memo so UM submit
+/// stays cheap for repeated-input ensembles.
+pub fn source_mask(directives: &[StagingDirective], src_root: &Path) -> u64 {
+    if directives.is_empty() {
+        return 0;
+    }
+    static MEMO: OnceLock<Mutex<DigestMemo>> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(DigestMemo::default()));
+    let mut memo = memo.lock().unwrap();
+    let mut mask = 0u64;
+    for d in directives {
+        let src = super::resolve(src_root, &d.source);
+        if let Ok(digest) = memo.digest(&src) {
+            mask |= digest_bit(digest);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("rp_stage_cache_test").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn digest_is_content_addressed() {
+        let d = tmp("digest");
+        let a = d.join("a");
+        let b = d.join("b");
+        std::fs::write(&a, b"same bytes").unwrap();
+        std::fs::write(&b, b"same bytes").unwrap();
+        assert_eq!(digest_file(&a).unwrap(), digest_file(&b).unwrap());
+        std::fs::write(&b, b"other bytes").unwrap();
+        assert_ne!(digest_file(&a).unwrap(), digest_file(&b).unwrap());
+    }
+
+    #[test]
+    fn warm_fetch_hits_without_copying() {
+        let d = tmp("warm");
+        let src = d.join("in.dat");
+        std::fs::write(&src, b"payload").unwrap();
+        let cache = StageCache::new(d.join("cache"), 1 << 20);
+        assert!(!cache.fetch(&src, &d.join("u1/in.dat")).unwrap(), "first fetch is cold");
+        assert!(cache.fetch(&src, &d.join("u2/in.dat")).unwrap(), "second fetch hits");
+        assert_eq!(std::fs::read(d.join("u2/in.dat")).unwrap(), b"payload");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.resident_entries, 1);
+        assert_eq!(s.resident_bytes, 7);
+        assert_ne!(cache.resident_mask(), 0, "residency bloom must expose the object");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn hits_are_hard_links() {
+        use std::os::unix::fs::MetadataExt;
+        let d = tmp("links");
+        let src = d.join("in.dat");
+        std::fs::write(&src, b"linked").unwrap();
+        let cache = StageCache::new(d.join("cache"), 1 << 20);
+        cache.fetch(&src, &d.join("u1/in.dat")).unwrap();
+        cache.fetch(&src, &d.join("u2/in.dat")).unwrap();
+        let a = std::fs::metadata(d.join("u1/in.dat")).unwrap().ino();
+        let b = std::fs::metadata(d.join("u2/in.dat")).unwrap().ino();
+        assert_eq!(a, b, "hits must share the cached object's inode");
+    }
+
+    /// The stale-content property: mutating a source after it was
+    /// cached yields a new digest and a fresh copy, never the old
+    /// bytes.
+    #[test]
+    fn mutated_source_never_served_stale() {
+        let d = tmp("stale");
+        let src = d.join("in.dat");
+        std::fs::write(&src, b"version-1").unwrap();
+        let cache = StageCache::new(d.join("cache"), 1 << 20);
+        cache.fetch(&src, &d.join("u1/in.dat")).unwrap();
+        assert!(cache.fetch(&src, &d.join("u2/in.dat")).unwrap());
+        std::fs::write(&src, b"version-2!").unwrap();
+        let hit = cache.fetch(&src, &d.join("u3/in.dat")).unwrap();
+        assert!(!hit, "mutated source must be a fresh digest, not a hit");
+        assert_eq!(std::fs::read(d.join("u3/in.dat")).unwrap(), b"version-2!");
+        // the old object is still resident (still valid for its digest)
+        assert_eq!(cache.stats().resident_entries, 2);
+        // and hitting the new content again works
+        assert!(cache.fetch(&src, &d.join("u4/in.dat")).unwrap());
+        assert_eq!(std::fs::read(d.join("u4/in.dat")).unwrap(), b"version-2!");
+    }
+
+    /// A failed fetch must not poison the cache with a bogus entry.
+    #[test]
+    fn missing_source_does_not_poison() {
+        let d = tmp("poison");
+        let cache = StageCache::new(d.join("cache"), 1 << 20);
+        let err = cache.fetch(&d.join("nope.dat"), &d.join("u1/nope.dat")).unwrap_err();
+        assert!(err.to_string().contains("staging error"), "got: {err}");
+        let s = cache.stats();
+        assert_eq!(s.resident_entries, 0);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(cache.resident_mask(), 0);
+        // the store works normally afterwards
+        let src = d.join("ok.dat");
+        std::fs::write(&src, b"fine").unwrap();
+        assert!(!cache.fetch(&src, &d.join("u1/ok.dat")).unwrap());
+        assert!(cache.fetch(&src, &d.join("u2/ok.dat")).unwrap());
+    }
+
+    #[test]
+    fn lru_budget_evicts_coldest() {
+        let d = tmp("lru");
+        let mk = |name: &str, bytes: &[u8]| {
+            let p = d.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            p
+        };
+        let a = mk("a.dat", &[1u8; 100]);
+        let b = mk("b.dat", &[2u8; 100]);
+        let c = mk("c.dat", &[3u8; 100]);
+        let cache = StageCache::new(d.join("cache"), 250);
+        cache.fetch(&a, &d.join("u/a")).unwrap();
+        cache.fetch(&b, &d.join("u/b")).unwrap();
+        cache.fetch(&c, &d.join("u/c")).unwrap(); // over budget: evicts a
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.resident_bytes <= 250, "resident={} must be under budget", s.resident_bytes);
+        assert_eq!(s.resident_entries, 2);
+        // the evicted (coldest) object misses again; b and c still hit
+        assert!(!cache.fetch(&a, &d.join("u2/a")).unwrap(), "evicted object must miss");
+        assert!(cache.fetch(&c, &d.join("u2/c")).unwrap());
+        // eviction never tears data out of already-staged sandboxes
+        assert_eq!(std::fs::read(d.join("u/a")).unwrap(), vec![1u8; 100]);
+    }
+
+    #[test]
+    fn disabled_cache_copies_every_time() {
+        let d = tmp("disabled");
+        let src = d.join("in.dat");
+        std::fs::write(&src, b"plain").unwrap();
+        let cache = StageCache::new(d.join("cache"), 0);
+        assert!(!cache.enabled());
+        assert!(!cache.fetch(&src, &d.join("u1/in.dat")).unwrap());
+        assert!(!cache.fetch(&src, &d.join("u2/in.dat")).unwrap());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.resident_entries), (0, 2, 0));
+        assert!(!d.join("cache").exists(), "disabled cache must not create a store");
+    }
+
+    #[test]
+    fn source_mask_skips_missing_sources() {
+        let d = tmp("mask");
+        std::fs::write(d.join("real.dat"), b"bytes").unwrap();
+        let dirs = vec![
+            StagingDirective { source: "real.dat".into(), target: "in/real.dat".into() },
+            StagingDirective { source: "ghost.dat".into(), target: "in/ghost.dat".into() },
+        ];
+        let mask = source_mask(&dirs, &d);
+        assert_ne!(mask, 0, "the readable source must contribute a bit");
+        let expected = digest_bit(digest_file(&d.join("real.dat")).unwrap());
+        assert_eq!(mask, expected, "the missing source must contribute nothing");
+        assert_eq!(source_mask(&[], &d), 0);
+    }
+}

@@ -11,6 +11,8 @@ use std::path::{Path, PathBuf};
 use crate::api::descriptions::StagingDirective;
 use crate::error::{Error, Result};
 
+pub mod cache;
+
 /// Stage a set of directives relative to (src_root -> dst_root).
 pub fn stage(
     directives: &[StagingDirective],
@@ -32,7 +34,29 @@ pub fn stage(
     Ok(moved)
 }
 
-fn resolve(root: &Path, p: &str) -> PathBuf {
+/// Stage a set of input directives through a content-addressed
+/// [`cache::StageCache`] (src_root -> dst_root); returns how many of
+/// the directives were cache hits.  Errors abort at the first failed
+/// directive, exactly like [`stage`] — the caller fails the unit, and
+/// the cache is left unpoisoned (see the cache's eviction invariants).
+pub fn stage_cached(
+    directives: &[StagingDirective],
+    src_root: &Path,
+    dst_root: &Path,
+    cache: &cache::StageCache,
+) -> Result<usize> {
+    let mut hits = 0;
+    for d in directives {
+        let src = resolve(src_root, &d.source);
+        let dst = resolve(dst_root, &d.target);
+        if cache.fetch(&src, &dst)? {
+            hits += 1;
+        }
+    }
+    Ok(hits)
+}
+
+pub(crate) fn resolve(root: &Path, p: &str) -> PathBuf {
     let path = Path::new(p);
     if path.is_absolute() {
         path.to_path_buf()
@@ -107,6 +131,19 @@ mod tests {
         assert!(dir.join("STDERR").exists());
         assert!(dir.join("result.json").exists());
         assert_eq!(std::fs::read_to_string(dir.join("STDOUT")).unwrap(), "out\n");
+    }
+
+    #[test]
+    fn stage_cached_counts_hits() {
+        let src = tmp("csrc");
+        let dst = tmp("cdst");
+        std::fs::write(src.join("shared.dat"), b"ensemble input").unwrap();
+        let cache = cache::StageCache::new(dst.join(".stage_cache"), 1 << 20);
+        let dirs =
+            vec![StagingDirective { source: "shared.dat".into(), target: "in.dat".into() }];
+        assert_eq!(stage_cached(&dirs, &src, &dst.join("u1"), &cache).unwrap(), 0);
+        assert_eq!(stage_cached(&dirs, &src, &dst.join("u2"), &cache).unwrap(), 1);
+        assert_eq!(std::fs::read(dst.join("u2/in.dat")).unwrap(), b"ensemble input");
     }
 
     #[test]

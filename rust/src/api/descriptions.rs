@@ -213,23 +213,46 @@ impl UnitDescription {
                 ("steps_chunks", (*steps_chunks as u64).into()),
             ]),
         };
+        let dir = |d: &StagingDirective| {
+            Value::obj(vec![
+                ("source", d.source.as_str().into()),
+                ("target", d.target.as_str().into()),
+            ])
+        };
         Value::obj(vec![
             ("name", self.name.as_str().into()),
             ("payload", payload),
             ("cores", self.cores.into()),
             ("is_mpi", self.is_mpi.into()),
             ("priority", (self.priority as i64).into()),
+            // counts stay alongside the full directives for readers
+            // that only gauge staging volume
             ("n_stage_in", self.input_staging.len().into()),
             ("n_stage_out", self.output_staging.len().into()),
+            ("input_staging", self.input_staging.iter().map(dir).collect::<Vec<_>>().into()),
+            (
+                "output_staging",
+                self.output_staging.iter().map(dir).collect::<Vec<_>>().into(),
+            ),
+            (
+                "environment",
+                self.environment
+                    .iter()
+                    .map(|(k, v)| {
+                        Value::obj(vec![("k", k.as_str().into()), ("v", v.as_str().into())])
+                    })
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
         ])
     }
 
     /// Deserialize a description from its coordination-store document
     /// (the inverse of [`Self::to_json`]).  Staging directives and the
-    /// environment are not part of the store schema (only their counts
-    /// travel), so they come back empty; executable args are stored
-    /// `\u{1f}`-joined, so an empty-string-only arg list and args that
-    /// themselves contain `U+001F` are not representable.
+    /// environment travel in full (an agent reached through the store
+    /// must stage the same files a local one would); executable args
+    /// are stored `\u{1f}`-joined, so an empty-string-only arg list and
+    /// args that themselves contain `U+001F` are not representable.
     pub fn from_json(v: &Value) -> Result<UnitDescription> {
         let p = v.get("payload");
         let payload = match p.get_str("kind", "") {
@@ -254,15 +277,32 @@ impl UnitDescription {
                 return Err(Error::Json(format!("unknown unit payload kind '{other}'")))
             }
         };
+        let dirs = |key: &str| -> Vec<StagingDirective> {
+            v.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| StagingDirective {
+                    source: d.get_str("source", "").to_string(),
+                    target: d.get_str("target", "").to_string(),
+                })
+                .collect()
+        };
         Ok(UnitDescription {
             name: v.get_str("name", "").to_string(),
             payload,
             cores: v.get_u64("cores", 1) as usize,
             is_mpi: v.get_bool("is_mpi", false),
             priority: v.get("priority").as_i64().unwrap_or(0) as i32,
-            input_staging: vec![],
-            output_staging: vec![],
-            environment: vec![],
+            input_staging: dirs("input_staging"),
+            output_staging: dirs("output_staging"),
+            environment: v
+                .get("environment")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| (e.get_str("k", "").to_string(), e.get_str("v", "").to_string()))
+                .collect(),
         })
     }
 }
@@ -315,11 +355,19 @@ mod tests {
                 .priority(7),
             UnitDescription::executable("/bin/true", vec![]),
             UnitDescription::pjrt("md_n64_s10", 9).priority(2),
+            UnitDescription::executable("/bin/cat", vec!["in.dat".into()])
+                .name("staged-1")
+                .stage_in("data/shared.dat", "in.dat")
+                .stage_in("data/params.json", "params.json")
+                .stage_out("STDOUT", "results/staged-1.out")
+                .env("OMP_NUM_THREADS", "4")
+                .env("SCRATCH", "/tmp/s"),
         ];
         for d in descrs {
             let back = UnitDescription::from_json(&d.to_json()).unwrap();
-            // lossless for every store-schema field (staging/env counts
-            // excepted by design; see the from_json docs)
+            // lossless for every field, staging directives and the
+            // environment included (a remote agent must see exactly
+            // what a local one would)
             assert_eq!(back, d);
         }
         // unknown payload kinds are rejected, missing priority defaults

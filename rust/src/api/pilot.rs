@@ -103,6 +103,13 @@ impl Pilot {
         self.agent.reactor_stats()
     }
 
+    /// Live staging-cache counters of this pilot's agent (hits, misses,
+    /// evictions, resident bytes — `rp run` prints them; the fig5 bench
+    /// gates on them).
+    pub fn stage_stats(&self) -> crate::agent::stager::cache::CacheStats {
+        self.agent.stage_cache_stats()
+    }
+
     /// Block until the pilot is active (or final), waking on the state
     /// transition itself rather than polling.
     pub fn wait_active(&self, timeout: f64) -> Result<PilotState> {

@@ -7,7 +7,7 @@
 //! exchangeable UnitManager schedulers (round-robin, backfilling); this
 //! module provides the same extension point for our UnitManager.
 //!
-//! Three policies:
+//! Four policies:
 //!
 //! * [`UmPolicy::RoundRobin`] — cycle over eligible pilots (RP's default
 //!   for homogeneous pilots);
@@ -19,7 +19,18 @@
 //!   first unit of a workload (grouped by [`workload_key`]) picks a
 //!   pilot load-aware, and every later unit of the same workload binds
 //!   to the same pilot while it stays eligible (data/cache locality, cf.
-//!   EnTK's resource-aware task binding).
+//!   EnTK's resource-aware task binding);
+//! * [`UmPolicy::Residency`] — data-aware binding: bind to the eligible
+//!   pilot whose staging cache already holds the unit's input data,
+//!   decided by overlapping the unit's input digest mask
+//!   ([`UnitReq::digest_mask`]) with each pilot's residency bloom
+//!   ([`PilotView::resident`], fed live from the agent-side
+//!   [`crate::agent::stager::cache::StageCache`] gauge).  Units with no
+//!   resident data anywhere (or no staged inputs at all) fall back to
+//!   load-aware placement, which is also the tie-break among equally
+//!   resident pilots — so a repeated-input ensemble converges onto the
+//!   pilot that staged the inputs first and every later member
+//!   hard-links from its warm cache.
 //!
 //! The policies are pure decision functions over [`PilotView`]
 //! snapshots, so the real [`crate::api::UnitManager`] and the DES twin
@@ -46,18 +57,22 @@ pub enum UmPolicy {
     LoadAware,
     /// Sticky per-workload pilot affinity (load-aware first binding).
     Locality,
+    /// Bind where the unit's staged input data already lives
+    /// (residency-bloom overlap; load-aware fallback and tie-break).
+    Residency,
 }
 
 impl UmPolicy {
     /// All policies, for sweeps.
-    pub const ALL: [UmPolicy; 3] =
-        [UmPolicy::RoundRobin, UmPolicy::LoadAware, UmPolicy::Locality];
+    pub const ALL: [UmPolicy; 4] =
+        [UmPolicy::RoundRobin, UmPolicy::LoadAware, UmPolicy::Locality, UmPolicy::Residency];
 
     pub fn name(self) -> &'static str {
         match self {
             UmPolicy::RoundRobin => "round_robin",
             UmPolicy::LoadAware => "load_aware",
             UmPolicy::Locality => "locality",
+            UmPolicy::Residency => "residency",
         }
     }
 
@@ -66,6 +81,7 @@ impl UmPolicy {
             "round_robin" | "roundrobin" | "rr" => Some(UmPolicy::RoundRobin),
             "load_aware" | "loadaware" => Some(UmPolicy::LoadAware),
             "locality" => Some(UmPolicy::Locality),
+            "residency" | "data_aware" => Some(UmPolicy::Residency),
             _ => None,
         }
     }
@@ -87,6 +103,11 @@ pub struct PilotView {
     pub outstanding: usize,
     /// Is the pilot accepting units (`P_ACTIVE`)?
     pub active: bool,
+    /// Residency bloom of the pilot's staging cache (bit =
+    /// `digest % 64`; see
+    /// [`crate::agent::stager::cache::StageCache::resident_mask`]):
+    /// which input data already lives on this pilot.
+    pub resident: u64,
 }
 
 impl PilotView {
@@ -103,6 +124,11 @@ impl PilotView {
 pub struct UnitReq {
     pub cores: usize,
     pub workload: String,
+    /// Digest mask of the unit's input staging set (OR of
+    /// [`crate::agent::stager::cache::digest_bit`] over its sources;
+    /// `0` = no staged inputs).  Overlapped against
+    /// [`PilotView::resident`] by [`UmPolicy::Residency`].
+    pub digest_mask: u64,
 }
 
 /// Affinity key of a unit name: the prefix before the last `-`
@@ -132,6 +158,7 @@ pub fn make_um_scheduler(policy: UmPolicy) -> Box<dyn UmScheduler> {
         UmPolicy::RoundRobin => Box::new(RoundRobin { next: 0 }),
         UmPolicy::LoadAware => Box::new(LoadAware),
         UmPolicy::Locality => Box::new(Locality { affinity: HashMap::new() }),
+        UmPolicy::Residency => Box::new(Residency),
     }
 }
 
@@ -215,6 +242,45 @@ impl UmScheduler for Locality {
     }
 }
 
+struct Residency;
+
+impl UmScheduler for Residency {
+    fn policy(&self) -> UmPolicy {
+        UmPolicy::Residency
+    }
+
+    fn select(&mut self, unit: &UnitReq, pilots: &[PilotView]) -> Option<usize> {
+        if unit.digest_mask != 0 {
+            // prefer the eligible pilot with the most resident input
+            // bits; equally resident pilots split load-aware
+            let mut best: Option<(u32, usize)> = None;
+            for (i, p) in pilots.iter().enumerate() {
+                if !p.eligible(unit.cores) {
+                    continue;
+                }
+                let overlap = (p.resident & unit.digest_mask).count_ones();
+                if overlap == 0 {
+                    continue;
+                }
+                best = match best {
+                    Some((bo, bi))
+                        if bo > overlap
+                            || (bo == overlap && !less_loaded(p, &pilots[bi])) =>
+                    {
+                        Some((bo, bi))
+                    }
+                    _ => Some((overlap, i)),
+                };
+            }
+            if let Some((_, i)) = best {
+                return Some(i);
+            }
+        }
+        // cold data (or no staged inputs): plain load-aware placement
+        least_loaded(unit.cores, pilots)
+    }
+}
+
 /// The UnitManager's wait-pool: units waiting for an eligible pilot.
 ///
 /// Generic over the caller's unit handle (the real UnitManager stores
@@ -293,8 +359,9 @@ impl<T> UmWaitPool<T> {
     /// One placement pass: offer every waiting unit (in submission
     /// order) to the scheduler, calling `on_place(item, pilot_idx)` for
     /// each placed unit.  `pilots` is updated in place (`outstanding`
-    /// up, `free_cores` down) so later decisions in the same pass see
-    /// the earlier ones.  Returns the number of units placed.
+    /// up, `free_cores` down, `resident` ORed with the unit's digest
+    /// mask) so later decisions in the same pass see the earlier ones.
+    /// Returns the number of units placed.
     pub fn place_all(
         &mut self,
         sched: &mut dyn UmScheduler,
@@ -309,6 +376,12 @@ impl<T> UmWaitPool<T> {
                     let (item, req) = self.queue.remove(i).expect("index in bounds");
                     pilots[k].outstanding += 1;
                     pilots[k].free_cores = pilots[k].free_cores.saturating_sub(req.cores);
+                    // optimistic residency: a bound unit's inputs will be
+                    // staged (and cached) on pilot k, so later decisions
+                    // in this pass already treat them as resident — a
+                    // repeated-input bulk converges within one pass
+                    // instead of scattering its first wave
+                    pilots[k].resident |= req.digest_mask;
                     self.placed += 1;
                     n_placed += 1;
                     on_place(item, k);
@@ -325,11 +398,11 @@ mod tests {
     use super::*;
 
     fn view(cores: usize) -> PilotView {
-        PilotView { cores, free_cores: cores, outstanding: 0, active: true }
+        PilotView { cores, free_cores: cores, outstanding: 0, active: true, resident: 0 }
     }
 
     fn req(cores: usize, wl: &str) -> UnitReq {
-        UnitReq { cores, workload: wl.to_string() }
+        UnitReq { cores, workload: wl.to_string(), digest_mask: 0 }
     }
 
     #[test]
@@ -407,6 +480,47 @@ mod tests {
     }
 
     #[test]
+    fn residency_binds_where_the_data_lives() {
+        let mut s = make_um_scheduler(UmPolicy::Residency);
+        let mut pilots = vec![view(4), view(4), view(4)];
+        // pilot 2 holds the unit's data; pilot 0 holds other data
+        pilots[0].resident = 0b0001;
+        pilots[2].resident = 0b0110;
+        let mut unit = req(1, "md");
+        unit.digest_mask = 0b0100;
+        // even when the data-holding pilot is the most loaded
+        pilots[2].outstanding = 10;
+        assert_eq!(s.select(&unit, &pilots), Some(2));
+        // ineligible data holder: fall back to load-aware
+        pilots[2].active = false;
+        assert_eq!(s.select(&unit, &pilots), Some(1), "cold pilots split load-aware");
+    }
+
+    #[test]
+    fn residency_prefers_more_overlap_then_load() {
+        let mut s = make_um_scheduler(UmPolicy::Residency);
+        let mut pilots = vec![view(4), view(4)];
+        pilots[0].resident = 0b0011; // both input bits resident
+        pilots[1].resident = 0b0001; // one of two
+        let mut unit = req(1, "md");
+        unit.digest_mask = 0b0011;
+        assert_eq!(s.select(&unit, &pilots), Some(0));
+        // equal overlap: the less-loaded pilot wins
+        pilots[1].resident = 0b0011;
+        pilots[0].outstanding = 5;
+        assert_eq!(s.select(&unit, &pilots), Some(1));
+    }
+
+    #[test]
+    fn residency_without_staged_inputs_is_load_aware() {
+        let mut s = make_um_scheduler(UmPolicy::Residency);
+        let mut pilots = vec![view(4), view(4)];
+        pilots[0].resident = u64::MAX; // residency is irrelevant at mask 0
+        pilots[0].outstanding = 3;
+        assert_eq!(s.select(&req(1, "md"), &pilots), Some(1));
+    }
+
+    #[test]
     fn pool_pass_places_what_fits_and_keeps_the_rest() {
         let mut pool: UmWaitPool<u32> = UmWaitPool::new();
         pool.push(0, req(1, "a"));
@@ -445,6 +559,24 @@ mod tests {
             evals.values().all(|&n| n == 1),
             "a non-idempotent predicate must run exactly once per unit: {evals:?}"
         );
+    }
+
+    #[test]
+    fn pass_converges_repeated_inputs_under_residency() {
+        // one bulk sharing one input file: the first unit seeds a pilot
+        // load-aware; the optimistic residency update makes every later
+        // unit in the same pass follow the data instead of scattering
+        let mut pool: UmWaitPool<u32> = UmWaitPool::new();
+        for u in 0..6 {
+            let mut r = req(1, "md");
+            r.digest_mask = 0b1000;
+            pool.push(u, r);
+        }
+        let mut sched = make_um_scheduler(UmPolicy::Residency);
+        let mut pilots = vec![view(8), view(8)];
+        let mut counts = [0usize; 2];
+        pool.place_all(sched.as_mut(), &mut pilots, |_, k| counts[k] += 1);
+        assert!(counts.contains(&6), "repeated inputs must converge: {counts:?}");
     }
 
     #[test]

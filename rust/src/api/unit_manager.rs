@@ -6,7 +6,8 @@
 //! runs on every scheduling event — a submission or a pilot arrival —
 //! under an exchangeable [`UmScheduler`] policy
 //! ([`UmPolicy::RoundRobin`] / [`UmPolicy::LoadAware`] /
-//! [`UmPolicy::Locality`]).  A unit submitted before any pilot exists
+//! [`UmPolicy::Locality`] / [`UmPolicy::Residency`]).  A unit
+//! submitted before any pilot exists
 //! (or whose core request no current pilot satisfies) simply stays in
 //! `UMGR_SCHEDULING_PENDING` and binds the moment an eligible pilot is
 //! added; nothing fails fast.
@@ -51,6 +52,9 @@ impl PilotSlot {
             free_cores: self.pilot.agent().free_cores(),
             outstanding: self.outstanding.load(Ordering::SeqCst),
             active: self.pilot.state() == PilotState::PActive,
+            // live agent-side staging-cache gauge: what the
+            // `residency` policy keys binding on
+            resident: self.pilot.agent().resident_mask(),
         }
     }
 }
@@ -404,7 +408,17 @@ impl UnitManager {
         let mut events = Vec::with_capacity(descrs.len());
         for d in descrs {
             let id: UnitId = self.session.inner.unit_ids.next();
-            let req = UnitReq { cores: d.cores, workload: workload_key(&d.name) };
+            let req = UnitReq {
+                cores: d.cores,
+                workload: workload_key(&d.name),
+                // best-effort digest of the unit's staged inputs (memoized
+                // stats; missing sources contribute nothing) so the
+                // `residency` policy can overlap it with pilot gauges
+                digest_mask: crate::agent::stager::cache::source_mask(
+                    &d.input_staging,
+                    std::path::Path::new("."),
+                ),
+            };
             let shared = new_unit(id, d);
             {
                 let mut rec = shared.0.lock().unwrap();
@@ -749,6 +763,54 @@ mod tests {
             units.iter().find(|u| u.name().starts_with("wla")).unwrap().pilot(),
             units.iter().find(|u| u.name().starts_with("wlb")).unwrap().pilot(),
         );
+        p1.drain().unwrap();
+        p2.drain().unwrap();
+    }
+
+    #[test]
+    fn residency_follows_the_warm_cache_across_waves() {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join("rp_um_residency");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shared.dat");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"ensemble input data").unwrap();
+        drop(f);
+        let src = path.to_str().unwrap().to_string();
+
+        let s = Session::new("um-residency");
+        let pm = s.pilot_manager();
+        let um = s.unit_manager();
+        um.set_policy(UmPolicy::Residency);
+        let p1 = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        let p2 = pm.submit(PilotDescription::new("local.localhost", 4, 60.0)).unwrap();
+        um.add_pilot(&p1);
+        um.add_pilot(&p2);
+        // wave 1 seeds one pilot's staging cache with the shared input
+        let seed = um
+            .submit(vec![
+                UnitDescription::sleep(0.01).name("ens-0").stage_in(src.as_str(), "in.dat"),
+            ])
+            .unwrap();
+        um.wait_all(20.0).unwrap();
+        let warm = seed[0].pilot().expect("wave 1 bound");
+        // wave 2: the same input — the live residency gauge must steer
+        // every unit onto the pilot whose cache already holds the data
+        let units = um
+            .submit(
+                (1..7)
+                    .map(|i| {
+                        UnitDescription::sleep(0.01)
+                            .name(format!("ens-{i}"))
+                            .stage_in(src.as_str(), "in.dat")
+                    })
+                    .collect(),
+            )
+            .unwrap();
+        um.wait_all(20.0).unwrap();
+        for u in &units {
+            assert_eq!(u.pilot(), Some(warm), "{} must follow the warm cache", u.name());
+        }
         p1.drain().unwrap();
         p2.drain().unwrap();
     }

@@ -33,11 +33,18 @@ COMMANDS:
                    overtaking policy is reserved after N overtakes so
                    wide units cannot starve; 0 disables)
                  --search linear|freelist
-                 --um-policy round_robin|load_aware|locality
-                   (UnitManager late-binding policy)
+                 --um-policy round_robin|load_aware|locality|residency
+                   (UnitManager late-binding policy; residency binds
+                   units where their staged inputs are cache-resident)
                  --um-shards N (0 = default 16; unit-state / transition
                    -bus shards in the UnitManager — raise for very wide
                    submission fan-in, e.g. 100K-unit workloads)
+                 --stage-input FILE (stage FILE into every unit sandbox
+                   through the content-addressed cache)
+                 --stage-cache-bytes N (268435456; 0 disables caching)
+                 --stage-workers N (2; stager-in prefetch threads)
+                 --stage-policy prefetch|serial (serial fetches inline
+                   on the scheduler thread — the blocking baseline)
     sim        simulated agent-level experiment on a paper testbed
                  --resource LABEL (stampede) --cores N (1024)
                  --generations N (3) --duration S (64)
@@ -50,9 +57,14 @@ COMMANDS:
                  --max-inflight N (0 = unbounded reactor window)
                  --reap-latency S (0 = readiness reactor; >0 models a
                    sweep-based reaper holding completions up to 2S)
-                 --um-policy round_robin|load_aware|locality: run the
-                   UnitManager DES twin instead, binding the workload
-                   over multiple simulated pilots
+                 --stage-in (model per-unit input staging)
+                 --stage-hit-ratio F (0; fraction of stage-ins served
+                   from the content-addressed cache)
+                 --stage-serial (block scheduling on each stage-in
+                   instead of overlapping it)
+                 --um-policy round_robin|load_aware|locality|residency:
+                   run the UnitManager DES twin instead, binding the
+                   workload over multiple simulated pilots
                  --pilots A,B,.. (pilot sizes for the UM twin;
                    default: a 2:1 heterogeneous split of --cores)
     micro      component micro-benchmark (paper §IV-B)
@@ -122,7 +134,9 @@ fn um_policy_flag(args: &Args) -> Result<Option<UmPolicy>> {
     args.get("um-policy")
         .map(|s| {
             UmPolicy::parse(s).ok_or_else(|| {
-                crate::Error::other("bad --um-policy (round_robin|load_aware|locality)")
+                crate::Error::other(
+                    "bad --um-policy (round_robin|load_aware|locality|residency)",
+                )
             })
         })
         .transpose()
@@ -139,6 +153,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (policy, search) = sched_flags(args)?;
     let um_policy = um_policy_flag(args)?;
     let um_shards = args.get_usize("um-shards", 0)?;
+    let stage_input = args.get("stage-input");
+    let stage_cache_bytes = args.get_usize("stage-cache-bytes", 256 << 20)?;
+    let stage_workers = args.get_usize("stage-workers", 2)?;
+    let stage_policy = args.get("stage-policy").unwrap_or("prefetch");
 
     let session = Session::new("cli-run");
     if artifact.is_some() {
@@ -152,7 +170,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut pd = PilotDescription::new("local.localhost", cores, 3600.0)
         .with_override("agent.executers", executers.to_string())
         .with_override("agent.max_inflight", max_inflight.to_string())
-        .with_override("agent.reserve_window", reserve_window.to_string());
+        .with_override("agent.reserve_window", reserve_window.to_string())
+        .with_override("staging.cache_bytes", stage_cache_bytes.to_string())
+        .with_override("staging.prefetch_workers", stage_workers.to_string())
+        .with_override("staging.policy", stage_policy);
     if let Some(p) = policy {
         pd = pd.with_override("agent.scheduler_policy", p.name());
     }
@@ -163,9 +184,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     umgr.add_pilot(&pilot);
 
     let descrs: Vec<UnitDescription> = (0..n_units)
-        .map(|i| match artifact {
-            Some(a) => UnitDescription::pjrt(a, i as u64).name(format!("task-{i:04}")),
-            None => UnitDescription::sleep(duration).name(format!("task-{i:04}")),
+        .map(|i| {
+            let d = match artifact {
+                Some(a) => UnitDescription::pjrt(a, i as u64).name(format!("task-{i:04}")),
+                None => UnitDescription::sleep(duration).name(format!("task-{i:04}")),
+            };
+            match stage_input {
+                Some(src) => d.stage_in(src, "in.dat"),
+                None => d,
+            }
         })
         .collect();
     let t0 = crate::util::now();
@@ -196,6 +223,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         rs.sweeps,
         if rs.event_driven { "" } else { " (sweep fallback)" },
     );
+    let ss = pilot.stage_stats();
+    if ss.hits + ss.misses > 0 {
+        println!(
+            "stage cache: {} hits / {} misses, {} evictions, {} bytes resident",
+            ss.hits, ss.misses, ss.evictions, ss.resident_bytes
+        );
+    }
     pilot.drain()?;
     session.close();
     Ok(())
@@ -210,6 +244,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let max_inflight = args.get_usize("max-inflight", 0)?;
     let reserve_window = args.get_usize("reserve-window", DEFAULT_RESERVE_WINDOW)?;
     let reap_latency = args.get_f64("reap-latency", 0.0)?;
+    let stage_in = args.get_bool("stage-in");
+    let stage_hit_ratio = args.get_f64("stage-hit-ratio", 0.0)?;
+    if !(0.0..=1.0).contains(&stage_hit_ratio) {
+        return Err(crate::Error::other("bad --stage-hit-ratio (expected 0..1)"));
+    }
+    let stage_serial = args.get_bool("stage-serial");
     let barrier = BarrierMode::parse(args.get("barrier").unwrap_or("agent"))
         .ok_or_else(|| crate::Error::other("bad --barrier (agent|application|generation)"))?;
     let (policy, search) = sched_flags(args)?;
@@ -229,6 +269,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
             "max-inflight",
             "reserve-window",
             "reap-latency",
+            "stage-in",
+            "stage-hit-ratio",
+            "stage-serial",
         ] {
             if args.get(flag).is_some() {
                 return Err(crate::Error::other(format!(
@@ -266,6 +309,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
     sim_cfg.max_inflight = max_inflight;
     sim_cfg.reserve_window = reserve_window;
     sim_cfg.reap_latency = reap_latency.max(0.0);
+    if stage_in {
+        sim_cfg.stage_in = true;
+    }
+    sim_cfg.stage_in_hit_ratio = stage_hit_ratio;
+    sim_cfg.stage_in_prefetch = !stage_serial;
     if let Some(p) = policy {
         sim_cfg.policy = p;
     }
@@ -273,9 +321,16 @@ fn cmd_sim(args: &Args) -> Result<()> {
         sim_cfg.search_mode = s;
     }
     let (pname, sname) = (sim_cfg.policy.name(), sim_cfg.search_mode.name());
+    let show_staging = sim_cfg.stage_in;
     let r = AgentSim::new(&cfg, sim_cfg, &wl).run();
     println!("resource: {}  pilot: {cores} cores", cfg.label);
     println!("scheduler: policy={pname} search={sname} x{}", schedulers.max(1));
+    if show_staging {
+        println!(
+            "stage-in: hit-ratio {stage_hit_ratio:.2} ({})",
+            if stage_serial { "serial" } else { "prefetch" }
+        );
+    }
     println!(
         "workload: {} units x {duration}s ({generations} generations, {} barrier)",
         wl.len(),
@@ -521,6 +576,51 @@ mod tests {
             0
         );
         assert_eq!(run(&["run", "--um-policy", "bogus"]), 1);
+    }
+
+    #[test]
+    fn run_real_staging_flags() {
+        let src = std::env::temp_dir().join("rp_cli_stage_input.dat");
+        std::fs::write(&src, b"cli staging input").unwrap();
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "4", "--duration", "0.01",
+                "--stage-input", src.to_str().unwrap(),
+            ]),
+            0
+        );
+        // serial staging policy and a disabled cache both still complete
+        assert_eq!(
+            run(&[
+                "run", "--cores", "2", "--units", "2", "--duration", "0.01",
+                "--stage-input", src.to_str().unwrap(), "--stage-policy", "serial",
+                "--stage-cache-bytes", "0",
+            ]),
+            0
+        );
+        assert_eq!(run(&["run", "--stage-policy", "eager"]), 1);
+        assert_eq!(run(&["run", "--stage-cache-bytes", "abc"]), 1);
+    }
+
+    #[test]
+    fn sim_staging_flags() {
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "2", "--duration", "10",
+                "--stage-in", "--stage-hit-ratio", "0.8",
+            ]),
+            0
+        );
+        assert_eq!(
+            run(&[
+                "sim", "--cores", "64", "--generations", "1", "--duration", "10",
+                "--stage-in", "--stage-serial",
+            ]),
+            0
+        );
+        assert_eq!(run(&["sim", "--stage-hit-ratio", "1.5"]), 1);
+        // agent-level flag: rejected on the UM-twin path
+        assert_eq!(run(&["sim", "--pilots", "32,32", "--stage-in"]), 1);
     }
 
     #[test]

@@ -142,6 +142,32 @@ impl Default for Calibration {
     }
 }
 
+/// Input-staging pipeline configuration: the agent's content-addressed
+/// stage-in cache ([`crate::agent::stager::cache::StageCache`]) and
+/// prefetch worker pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagingConfig {
+    /// Byte budget of the per-pilot content-addressed stage-in cache
+    /// (LRU-evicted; 0 disables caching — every stage-in copies).
+    pub cache_bytes: u64,
+    /// Stager-in worker threads prefetching unit inputs concurrently
+    /// with agent scheduling (clamped to >= 1 under "prefetch").
+    pub prefetch_workers: usize,
+    /// "prefetch" (overlap staging with scheduling) | "serial" (fetch
+    /// inline on the scheduler thread — the blocking baseline).
+    pub policy: String,
+}
+
+impl Default for StagingConfig {
+    fn default() -> Self {
+        StagingConfig {
+            cache_bytes: 256 << 20,
+            prefetch_workers: 2,
+            policy: "prefetch".into(),
+        }
+    }
+}
+
 /// Full description of a target resource.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResourceConfig {
@@ -160,6 +186,7 @@ pub struct ResourceConfig {
     pub um_policy: String,
     pub launch_methods: LaunchMethods,
     pub agent: AgentLayout,
+    pub staging: StagingConfig,
     pub calib: Calibration,
 }
 
@@ -198,7 +225,16 @@ impl ResourceConfig {
         let um_policy = v.get_str("um_policy", "round_robin").to_string();
         if crate::api::um_scheduler::UmPolicy::parse(&um_policy).is_none() {
             return Err(Error::Config(format!(
-                "{label}: um_policy '{um_policy}': expected round_robin|load_aware|locality"
+                "{label}: um_policy '{um_policy}': expected \
+                 round_robin|load_aware|locality|residency"
+            )));
+        }
+        let sg = v.get("staging");
+        let ds = StagingConfig::default();
+        let staging_policy = sg.get_str("policy", "prefetch").to_string();
+        if staging_policy != "prefetch" && staging_policy != "serial" {
+            return Err(Error::Config(format!(
+                "{label}: staging policy '{staging_policy}': expected prefetch|serial"
             )));
         }
         Ok(ResourceConfig {
@@ -229,6 +265,12 @@ impl ResourceConfig {
                     crate::agent::scheduler::DEFAULT_RESERVE_WINDOW as u64,
                 ) as usize,
                 search_mode,
+            },
+            staging: StagingConfig {
+                cache_bytes: sg.get_u64("cache_bytes", ds.cache_bytes),
+                prefetch_workers: sg.get_u64("prefetch_workers", ds.prefetch_workers as u64)
+                    as usize,
+                policy: staging_policy,
             },
             calib: Calibration {
                 sched_rate_mean: c.get_f64("sched_rate_mean", d.sched_rate_mean),
@@ -303,7 +345,8 @@ impl ResourceConfig {
             "um_policy" => {
                 crate::api::um_scheduler::UmPolicy::parse(value).ok_or_else(|| {
                     Error::Config(format!(
-                        "override {key}={value}: expected round_robin|load_aware|locality"
+                        "override {key}={value}: expected \
+                         round_robin|load_aware|locality|residency"
                     ))
                 })?;
                 self.um_policy = value.to_string();
@@ -349,6 +392,24 @@ impl ResourceConfig {
                     Error::Config(format!("override {key}={value}: expected linear|freelist"))
                 })?;
                 self.agent.search_mode = value.to_string();
+            }
+            "staging.cache_bytes" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0 (0 disables the cache)"
+                    )));
+                }
+                self.staging.cache_bytes = v as u64;
+            }
+            "staging.prefetch_workers" => self.staging.prefetch_workers = num()? as usize,
+            "staging.policy" => {
+                if value != "prefetch" && value != "serial" {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected prefetch|serial"
+                    )));
+                }
+                self.staging.policy = value.to_string();
             }
             k if k.starts_with("calib.") => {
                 let v = num()?;
@@ -403,7 +464,30 @@ mod tests {
         assert_eq!(c.agent.reserve_window, 64, "reservation window defaults on");
         assert_eq!(c.agent.search_mode, "linear");
         assert_eq!(c.um_policy, "round_robin", "um_policy defaults to round_robin");
+        assert_eq!(c.staging.cache_bytes, 256 << 20, "stage cache defaults to 256 MiB");
+        assert_eq!(c.staging.prefetch_workers, 2);
+        assert_eq!(c.staging.policy, "prefetch");
         assert_eq!(c.calib.sched_rate_mean, 158.0);
+    }
+
+    #[test]
+    fn staging_section_parsed_and_validated() {
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4,
+                "staging": {"cache_bytes": 1048576, "prefetch_workers": 4,
+                            "policy": "serial"}}"#,
+        )
+        .unwrap();
+        let c = ResourceConfig::from_json(&v).unwrap();
+        assert_eq!(c.staging.cache_bytes, 1 << 20);
+        assert_eq!(c.staging.prefetch_workers, 4);
+        assert_eq!(c.staging.policy, "serial");
+        // typos fail loudly, like the other enum-like strings
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "staging": {"policy": "prefech"}}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
     }
 
     #[test]
@@ -418,6 +502,11 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ResourceConfig::from_json(&v).unwrap().um_policy, "locality");
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "um_policy": "residency"}"#,
+        )
+        .unwrap();
+        assert_eq!(ResourceConfig::from_json(&v).unwrap().um_policy, "residency");
     }
 
     #[test]
@@ -495,7 +584,19 @@ mod tests {
         assert_eq!(c.agent.search_mode, "freelist");
         c.apply_override("um_policy", "load_aware").unwrap();
         assert_eq!(c.um_policy, "load_aware");
+        c.apply_override("um_policy", "residency").unwrap();
+        assert_eq!(c.um_policy, "residency");
         assert!(c.apply_override("um_policy", "best_fit").is_err());
+        c.apply_override("staging.cache_bytes", "1048576").unwrap();
+        assert_eq!(c.staging.cache_bytes, 1 << 20);
+        c.apply_override("staging.cache_bytes", "0").unwrap();
+        assert_eq!(c.staging.cache_bytes, 0, "0 disables the cache");
+        assert!(c.apply_override("staging.cache_bytes", "-1").is_err());
+        c.apply_override("staging.prefetch_workers", "8").unwrap();
+        assert_eq!(c.staging.prefetch_workers, 8);
+        c.apply_override("staging.policy", "serial").unwrap();
+        assert_eq!(c.staging.policy, "serial");
+        assert!(c.apply_override("staging.policy", "eager").is_err());
         // typos are rejected rather than silently falling back to fifo
         assert!(c.apply_override("agent.scheduler_policy", "backfil").is_err());
         assert!(c.apply_override("agent.search_mode", "quadratic").is_err());

@@ -1,67 +1,103 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls keep the crate
+//! zero-dependency while preserving the exact message formats the
+//! tests and callers match on.
+
+use std::fmt;
 
 use crate::states::{PilotState, UnitState};
 
 /// Errors surfaced by the pilot system.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// An illegal pilot state transition was attempted.
-    #[error("illegal pilot state transition: {from:?} -> {to:?}")]
     PilotTransition { from: PilotState, to: PilotState },
 
     /// An illegal unit state transition was attempted.
-    #[error("illegal unit state transition: {from:?} -> {to:?}")]
     UnitTransition { from: UnitState, to: UnitState },
 
     /// Referenced entity does not exist.
-    #[error("unknown {kind}: {id}")]
     Unknown { kind: &'static str, id: String },
 
     /// Resource configuration problems.
-    #[error("configuration error: {0}")]
     Config(String),
 
     /// SAGA / resource-manager layer failures.
-    #[error("saga error: {0}")]
     Saga(String),
 
     /// Scheduling failures (e.g. unit larger than the pilot).
-    #[error("scheduling error: {0}")]
     Schedule(String),
 
     /// Unit execution failures.
-    #[error("execution error: {0}")]
     Exec(String),
 
     /// Staging failures.
-    #[error("staging error: {0}")]
     Staging(String),
 
     /// Coordination-store failures.
-    #[error("db error: {0}")]
     Db(String),
 
     /// JSON parse/serialize failures (util::json).
-    #[error("json error: {0}")]
     Json(String),
 
     /// PJRT runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Timeouts on waits.
-    #[error("timed out after {0}s waiting for {1}")]
     Timeout(f64, String),
 
     /// Session is already closed.
-    #[error("session closed")]
     SessionClosed,
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// I/O failures (transparent: displays as the inner error).
+    Io(std::io::Error),
 
-    #[error("{0}")]
+    /// Ad-hoc errors.
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::PilotTransition { from, to } => {
+                write!(f, "illegal pilot state transition: {from:?} -> {to:?}")
+            }
+            Error::UnitTransition { from, to } => {
+                write!(f, "illegal unit state transition: {from:?} -> {to:?}")
+            }
+            Error::Unknown { kind, id } => write!(f, "unknown {kind}: {id}"),
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Saga(m) => write!(f, "saga error: {m}"),
+            Error::Schedule(m) => write!(f, "scheduling error: {m}"),
+            Error::Exec(m) => write!(f, "execution error: {m}"),
+            Error::Staging(m) => write!(f, "staging error: {m}"),
+            Error::Db(m) => write!(f, "db error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Timeout(secs, what) => {
+                write!(f, "timed out after {secs}s waiting for {what}")
+            }
+            Error::SessionClosed => write!(f, "session closed"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -91,5 +127,15 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_display_is_transparent() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing");
+        let inner = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), inner, "Io must display as the inner error");
+        use std::error::Error as _;
+        assert!(e.source().is_some(), "Io must expose the inner error as source");
     }
 }

@@ -24,10 +24,19 @@
 //! identically in both substrates.
 //! One layer up, the UnitManager late-binds units onto pilots the same
 //! way: a UM-side wait-pool plus exchangeable [`api::UmScheduler`]
-//! policies (`round_robin` / `load_aware` / `locality`), shared between
-//! the real [`api::UnitManager`] and its DES twin ([`sim::UmSim`]), so
-//! units submitted before any pilot exists wait and bind late instead
-//! of failing.  Execution is readiness-driven: the executer reactor
+//! policies (`round_robin` / `load_aware` / `locality` / `residency`),
+//! shared between the real [`api::UnitManager`] and its DES twin
+//! ([`sim::UmSim`]), so units submitted before any pilot exists wait
+//! and bind late instead of failing.
+//! Input staging is a first-class pipeline stage: a per-pilot
+//! content-addressed cache ([`agent::stager::cache::StageCache`] —
+//! FNV-1a digests, hardlinked warm fetches, LRU byte budget) serves
+//! repeated inputs without byte copies, a stage-in worker pool
+//! prefetches unit inputs concurrently with scheduler placement
+//! (`staging.policy = "serial"` restores the inline path), and the
+//! `residency` UM policy keys binding on each pilot's live residency
+//! gauge so ensembles land where their data already lives.
+//! Execution is readiness-driven: the executer reactor
 //! sleeps in a `poll(2)` wait ([`util::poll`]) over a SIGCHLD
 //! self-pipe, every child's pipes, and an agent wake-pipe, and the
 //! core allocator ([`agent::nodelist::NodeList`]) is packed `u64`

@@ -31,6 +31,11 @@ use crate::states::UnitState as S;
 use crate::util::rng::Pcg;
 use crate::workload::{BarrierMode, Workload};
 
+/// Service-time fraction a warm stage-in cache hit costs relative to a
+/// full copy: a digest stat plus a hardlink instead of a byte transfer.
+/// Kept well under the fig5 bench's 5x warm-speedup floor.
+pub const STAGE_HIT_COST: f64 = 0.02;
+
 /// Simulation parameters for one agent-level experiment.
 #[derive(Debug, Clone)]
 pub struct AgentSimConfig {
@@ -55,6 +60,17 @@ pub struct AgentSimConfig {
     pub stager_nodes: usize,
     /// Whether units perform agent-side input staging.
     pub stage_in: bool,
+    /// Fraction of stage-in requests served from the warm
+    /// content-addressed cache: a hit is a stat + hardlink instead of a
+    /// byte transfer, charged at [`STAGE_HIT_COST`] of the full service
+    /// draw.  0 models a cold (or disabled) cache.
+    pub stage_in_hit_ratio: f64,
+    /// Pipelined input staging (the default): the stage-in station runs
+    /// concurrently with the scheduler, as the real agent's prefetch
+    /// workers do.  `false` models the serial baseline in which the
+    /// scheduler thread stages inline — placement stalls while a unit
+    /// stages, so the two stations share one server.
+    pub stage_in_prefetch: bool,
     /// Whether units perform agent-side output staging (stdout/stderr
     /// reads — the paper's units always do).
     pub stage_out: bool,
@@ -102,6 +118,8 @@ impl AgentSimConfig {
             stagers_out: 1,
             stager_nodes: 1,
             stage_in: false,
+            stage_in_hit_ratio: 0.0,
+            stage_in_prefetch: true,
             stage_out: true,
             barrier: BarrierMode::Agent,
             generation_size: pilot_cores,
@@ -328,6 +346,10 @@ impl AgentSim {
         if self.sched_busy[p] {
             return;
         }
+        // serial staging occupies the shared scheduler thread
+        if !self.cfg.stage_in_prefetch && self.stage_in_busy {
+            return;
+        }
         let (pool, sched) = (&mut self.pools[p], &mut self.scheds[p]);
         let Some((u, alloc)) = pool.pop_placeable(&mut **sched) else {
             return; // nothing placeable until the next release
@@ -381,16 +403,29 @@ impl AgentSim {
         if self.stage_in_busy {
             return;
         }
+        // serial baseline: the scheduler thread stages inline, so the
+        // stage-in station and the scheduler share one server
+        if !self.cfg.stage_in_prefetch && self.sched_busy.iter().any(|&b| b) {
+            return;
+        }
         let Some(u) = self.stage_in_queue.pop_front() else { return };
         self.stage_in_busy = true;
         let now = self.q.now();
         self.prof(now, u, S::AStagingIn);
-        let service = self.machine.stage_service(
+        let mut service = self.machine.stage_service(
             &mut self.rng,
             false,
             self.cfg.stagers_out,
             self.cfg.stager_nodes,
         );
+        // a warm cache hit is a stat + hardlink, not a copy (the extra
+        // RNG draw is gated so hit_ratio=0 runs stay bit-identical to
+        // the pre-cache traces)
+        if self.cfg.stage_in_hit_ratio > 0.0
+            && self.rng.range(0.0, 1.0) < self.cfg.stage_in_hit_ratio
+        {
+            service *= STAGE_HIT_COST;
+        }
         self.q.after(service, Ev::StageInDone(u));
     }
 
@@ -440,6 +475,13 @@ impl AgentSim {
             Ev::StageInDone(u) => {
                 self.stage_in_busy = false;
                 self.to_sched_queue(u);
+                if !self.cfg.stage_in_prefetch {
+                    // staging blocked every partition, not just this
+                    // unit's: re-kick them all now the thread is free
+                    for p in 0..self.scheds.len() {
+                        self.kick_scheduler(p);
+                    }
+                }
                 self.kick_stage_in();
             }
             Ev::SchedDone(u) => {
@@ -450,6 +492,11 @@ impl AgentSim {
                 self.exec_queue.push_back(u);
                 self.kick_executer();
                 self.kick_scheduler(p);
+                if !self.cfg.stage_in_prefetch {
+                    // shared-server handoff: the thread that just placed
+                    // may now stage the next queued input
+                    self.kick_stage_in();
+                }
             }
             Ev::Spawned(u) => {
                 self.exec_busy = false;
@@ -492,6 +539,9 @@ impl AgentSim {
                 }
                 let p = self.partition(u);
                 self.kick_scheduler(p);
+                if !self.cfg.stage_in_prefetch {
+                    self.kick_stage_in();
+                }
                 // a completion frees a window slot: the reactor admits
                 // the next spawn (no-op while the window is unbounded)
                 self.kick_executer();
@@ -968,5 +1018,69 @@ mod tests {
         let r = AgentSim::new(&builtin("bluewaters").unwrap(), cfg, &wl).run();
         assert!(r.ttc_a >= 60.0);
         assert_eq!(r.peak_concurrency as usize, 64);
+    }
+
+    /// Staging-bound calibration: stage-in slowed to 20/s so the input
+    /// station (not the 158/s scheduler or the ~64/s launcher) binds
+    /// the pipeline and cache effects are visible in the makespan.
+    fn staging_bound() -> ResourceConfig {
+        let mut r = stampede();
+        r.calib.stage_in_rate_mean = 20.0;
+        r.calib.stage_in_rate_std = 2.0;
+        r
+    }
+
+    fn run_staged(hit: f64, prefetch: bool) -> AgentSimResult {
+        let wl = WorkloadSpec::generations(64, 3, 0.5).build();
+        let mut cfg = AgentSimConfig::paper_default(64);
+        cfg.stage_in = true;
+        cfg.stage_in_hit_ratio = hit;
+        cfg.stage_in_prefetch = prefetch;
+        AgentSim::new(&staging_bound(), cfg, &wl).run()
+    }
+
+    #[test]
+    fn cache_hit_ratio_monotonically_cuts_staged_makespan() {
+        // the fig5 sweep shape: the warmer the cache, the shorter the run
+        let cold = run_staged(0.0, true);
+        let half = run_staged(0.5, true);
+        let warm = run_staged(1.0, true);
+        assert!(
+            half.ttc_a < cold.ttc_a && warm.ttc_a < half.ttc_a,
+            "hit ratio must monotonically cut makespan: cold={:.1} half={:.1} warm={:.1}",
+            cold.ttc_a,
+            half.ttc_a,
+            warm.ttc_a
+        );
+    }
+
+    #[test]
+    fn warm_prefetch_staging_is_nearly_free() {
+        // tentpole claim, DES form: overlapped staging on a warm cache
+        // adds ~zero makespan over not staging at all
+        let wl = WorkloadSpec::generations(64, 3, 0.5).build();
+        let base_cfg = AgentSimConfig::paper_default(64);
+        let base = AgentSim::new(&staging_bound(), base_cfg, &wl).run();
+        let warm = run_staged(1.0, true);
+        assert!(
+            warm.ttc_a < base.ttc_a * 1.10,
+            "warm overlapped staging must cost <10%: base={:.2} warm={:.2}",
+            base.ttc_a,
+            warm.ttc_a
+        );
+    }
+
+    #[test]
+    fn serial_staging_blocks_the_scheduler() {
+        // the serial baseline shares one server between staging and
+        // placement, so it must be measurably slower than the pipeline
+        let piped = run_staged(0.0, true);
+        let serial = run_staged(0.0, false);
+        assert!(
+            serial.ttc_a > piped.ttc_a * 1.05,
+            "inline staging must stall placement: prefetch={:.1} serial={:.1}",
+            piped.ttc_a,
+            serial.ttc_a
+        );
     }
 }

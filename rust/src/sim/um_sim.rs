@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 
 use super::engine::EventQueue;
 use super::machine::MachineModel;
+use crate::agent::stager::cache::{digest_bit, digest_str};
 use crate::api::um_scheduler::{
     make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
 };
@@ -111,6 +112,11 @@ struct SimUnit {
     duration: f64,
     cores: usize,
     workload: String,
+    /// Input residency mask: OR of the digest bits of the unit's
+    /// stage-in sources.  The twin has no file content, so the digest
+    /// is over the source *name* ([`digest_str`]) — self-consistent
+    /// within a run, which is all the binding model needs.
+    digest_mask: u64,
 }
 
 struct SimPilot {
@@ -124,6 +130,10 @@ struct SimPilot {
     bound: usize,
     done: usize,
     last_done_t: f64,
+    /// Residency bloom of the pilot's (modeled) staging cache: the OR
+    /// of every bound unit's digest mask, mirroring the real agent's
+    /// [`crate::agent::stager::cache::StageCache::resident_mask`].
+    resident: u64,
 }
 
 /// The simulated UnitManager over its simulated pilots.
@@ -158,6 +168,10 @@ impl UmSim {
                 duration: u.duration().unwrap_or(0.0),
                 cores: u.cores.max(1),
                 workload: workload_key(&u.name),
+                digest_mask: u
+                    .input_staging
+                    .iter()
+                    .fold(0u64, |m, d| m | digest_bit(digest_str(&d.source))),
             })
             .collect();
         let n = units.len();
@@ -178,6 +192,7 @@ impl UmSim {
                 bound: 0,
                 done: 0,
                 last_done_t: 0.0,
+                resident: 0,
             })
             .collect();
         let (profile, seed, policy) = (cfg.profile, cfg.seed, cfg.policy);
@@ -218,7 +233,11 @@ impl UmSim {
                 let unit = &self.units[u as usize];
                 self.pool.push(
                     u,
-                    UnitReq { cores: unit.cores, workload: unit.workload.clone() },
+                    UnitReq {
+                        cores: unit.cores,
+                        workload: unit.workload.clone(),
+                        digest_mask: unit.digest_mask,
+                    },
                 );
             }
         }
@@ -230,6 +249,7 @@ impl UmSim {
                 free_cores: p.free,
                 outstanding: p.bound - p.done,
                 active: true,
+                resident: p.resident,
             })
             .collect();
         let mut newly: Vec<Vec<u32>> = vec![Vec::new(); self.pilots.len()];
@@ -245,6 +265,9 @@ impl UmSim {
             self.pilots[k].bound += batch.len();
             for u in &batch {
                 self.prof(now, *u, S::UmScheduling);
+                // the bound unit's inputs get staged (and cached) on
+                // this pilot: its residency gauge picks them up
+                self.pilots[k].resident |= self.units[*u as usize].digest_mask;
             }
             // the batch travels UM -> store -> agent in calibrated bulks
             // (or the ablation's override — Some(1) = per-unit feed)
@@ -491,6 +514,46 @@ mod tests {
             "batched feed coalesces Arrive events: {} vs {}",
             per_unit.events,
             batched.events
+        );
+    }
+
+    #[test]
+    fn residency_converges_same_input_units_onto_one_pilot() {
+        use crate::api::UnitDescription;
+        // two ensembles sharing one input file each ("shared-A.dat"
+        // hashes to residency bit 25, "shared-B.dat" to 44 — no bloom
+        // collision): residency must keep each ensemble on the pilot
+        // that staged its data, splitting 60:20 rather than balancing
+        let mut units = vec![];
+        for i in 0..60 {
+            units.push(
+                UnitDescription::sleep(1.0)
+                    .name(format!("ensA-{i}"))
+                    .stage_in("shared-A.dat", "in.dat"),
+            );
+        }
+        for i in 0..20 {
+            units.push(
+                UnitDescription::sleep(1.0)
+                    .name(format!("ensB-{i}"))
+                    .stage_in("shared-B.dat", "in.dat"),
+            );
+        }
+        let wl = Workload { units };
+        let r = UmSim::new(
+            &comet(),
+            UmSimConfig::new(vec![48, 48], UmPolicy::Residency),
+            &wl,
+        )
+        .run();
+        assert_eq!(r.unbound, 0);
+        let mut counts = r.per_pilot_units.clone();
+        counts.sort_unstable();
+        assert_eq!(
+            counts,
+            vec![20, 60],
+            "each ensemble must follow its resident data: {:?}",
+            r.per_pilot_units
         );
     }
 

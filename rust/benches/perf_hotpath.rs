@@ -178,11 +178,9 @@ fn bench_reactor_inflight(
     agent.submit(units.clone());
     for u in &units {
         let (m, cv) = &**u;
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         while !rec.machine.is_final() {
-            let (r, _) = cv
-                .wait_timeout(rec, std::time::Duration::from_millis(200))
-                .unwrap();
+            let (r, _) = cv.wait_timeout(rec, std::time::Duration::from_millis(200));
             rec = r;
         }
     }

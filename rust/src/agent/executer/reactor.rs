@@ -28,6 +28,15 @@
 //! not arm SIGCHLD), where the old adaptive backoff bounds the sweep
 //! cadence exactly as before.
 //!
+//! # Lock ownership
+//!
+//! The reactor deliberately owns **no locks**: it runs single-threaded
+//! on the agent's reactor thread over atomics ([`ReactorStats`], the
+//! cancel-pending flag) and fd readiness; cross-thread communication
+//! happens through the wake-pipe and the bridges, and any unit-record
+//! access goes through the `unit.record` checked lock — see the crate
+//! lock hierarchy in [`crate::util::lockcheck`].
+//!
 //! Two kinds of in-flight work:
 //! * **children** — real OS processes started by [`super::Spawner::start`];
 //! * **timers** — in-thread synthetic units (virtual `sleep`s), which

@@ -52,7 +52,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::agent::bridge::Bridge;
@@ -75,6 +75,7 @@ use crate::runtime::{PayloadStore, TaskResult};
 use crate::states::machine::StateMachine;
 use crate::states::UnitState as S;
 use crate::util;
+use crate::util::lockcheck::{CheckedCondvar, CheckedMutex};
 
 /// Execution outcome stored on the unit record.
 #[derive(Debug, Clone, PartialEq)]
@@ -135,46 +136,46 @@ pub struct UnitRecord {
 /// the bus drainer parks on it instead of polling unit states.
 #[derive(Debug)]
 pub(crate) struct StateWatch {
-    seq: Mutex<u64>,
-    cv: Condvar,
+    seq: CheckedMutex<u64>,
+    cv: CheckedCondvar,
 }
 
 impl StateWatch {
     pub(crate) fn new() -> Self {
-        StateWatch { seq: Mutex::new(0), cv: Condvar::new() }
+        StateWatch { seq: CheckedMutex::new("um.watch", 0), cv: CheckedCondvar::new() }
     }
 
     /// Record a state event and wake parked watchers.
     pub(crate) fn notify(&self) {
-        *self.seq.lock().unwrap() += 1;
+        *self.seq.lock() += 1;
         self.cv.notify_all();
     }
 
     /// Current sequence number (snapshot before scanning).
     pub(crate) fn snapshot(&self) -> u64 {
-        *self.seq.lock().unwrap()
+        *self.seq.lock()
     }
 
     /// Park until the sequence advances past `seen` or `timeout`
     /// elapses (the bounded tick lets the watcher notice session
     /// close); returns the new snapshot.
     pub(crate) fn wait_change(&self, seen: u64, timeout: std::time::Duration) -> u64 {
-        let seq = self.seq.lock().unwrap();
+        let seq = self.seq.lock();
         if *seq != seen {
             return *seq;
         }
-        let (seq, _) = self.cv.wait_timeout(seq, timeout).unwrap();
+        let (seq, _) = self.cv.wait_timeout(seq, timeout);
         *seq
     }
 }
 
 /// Shared handle to a unit record (condvar notifies state changes).
-pub type SharedUnit = Arc<(Mutex<UnitRecord>, Condvar)>;
+pub type SharedUnit = Arc<(CheckedMutex<UnitRecord>, CheckedCondvar)>;
 
 /// Create a shared unit record in state `New`.
 pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
     Arc::new((
-        Mutex::new(UnitRecord {
+        CheckedMutex::new("unit.record", UnitRecord {
             id,
             descr,
             machine: StateMachine::new(S::New, util::now()),
@@ -189,7 +190,7 @@ pub fn new_unit(id: UnitId, descr: UnitDescription) -> SharedUnit {
             bound_gauge: None,
             profiler: None,
         }),
-        Condvar::new(),
+        CheckedCondvar::new(),
     ))
 }
 
@@ -214,7 +215,7 @@ pub(crate) fn publish_locked(
 pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
     let (m, cv) = &**unit;
     let bus = {
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         let t = util::now();
         let from = rec.machine.state();
         rec.machine.advance(to, t)?;
@@ -231,7 +232,7 @@ pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
 fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
     let (m, cv) = &**unit;
     let bus = {
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         let t = util::now();
         let from = rec.machine.state();
         if rec.machine.advance(S::Failed, t).is_err() {
@@ -250,7 +251,7 @@ fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
 fn cancel_unit(unit: &SharedUnit, profiler: &Profiler) {
     let (m, cv) = &**unit;
     let bus = {
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         let t = util::now();
         let from = rec.machine.state();
         if rec.machine.advance(S::Canceled, t).is_err() {
@@ -350,14 +351,14 @@ struct SchedState {
 }
 
 pub(crate) struct SchedShared {
-    state: Mutex<SchedState>,
-    wake: Condvar,
+    state: CheckedMutex<SchedState>,
+    wake: CheckedCondvar,
 }
 
 impl SchedShared {
     /// Record a scheduling event and wake the scheduler thread.
     pub(crate) fn notify_event(&self) {
-        self.state.lock().unwrap().wake_seq += 1;
+        self.state.lock().wake_seq += 1;
         self.wake.notify_all();
     }
 }
@@ -389,7 +390,7 @@ pub struct RealAgent {
     /// Live reactor counters (wakeup causes, sweeps vs targeted reaps).
     reactor_stats: Arc<ReactorStats>,
     profiler: Arc<Profiler>,
-    threads: Mutex<Vec<JoinHandle<()>>>,
+    threads: CheckedMutex<Vec<JoinHandle<()>>>,
     /// Live executer-side threads (reactor + pool workers); the last one
     /// out closes the stage bridge.
     exec_active: std::sync::atomic::AtomicUsize,
@@ -398,7 +399,7 @@ pub struct RealAgent {
     stagein_active: std::sync::atomic::AtomicUsize,
     /// Memoized PATH lookups for wrapped launch methods: the stat-walk
     /// runs once per (agent, executable) instead of once per unit.
-    which_cache: Mutex<HashMap<String, bool>>,
+    which_cache: CheckedMutex<HashMap<String, bool>>,
 }
 
 impl RealAgent {
@@ -437,22 +438,22 @@ impl RealAgent {
             stage_bridge: Bridge::new("exec-stageout"),
             stage_cache,
             sched_shared: Arc::new(SchedShared {
-                state: Mutex::new(SchedState {
+                state: CheckedMutex::new("agent.sched", SchedState {
                     sched,
                     wake_seq: 0,
                     stopping: false,
                     released_shares: Vec::new(),
                 }),
-                wake: Condvar::new(),
+                wake: CheckedCondvar::new(),
             }),
             exec_wake,
             exec_cancel_pending,
             reactor_stats,
             profiler,
-            threads: Mutex::new(Vec::new()),
+            threads: CheckedMutex::new("agent.threads", Vec::new()),
             exec_active: std::sync::atomic::AtomicUsize::new(0),
             stagein_active: std::sync::atomic::AtomicUsize::new(0),
-            which_cache: Mutex::new(HashMap::new()),
+            which_cache: CheckedMutex::new("agent.which", HashMap::new()),
         });
         agent
             .exec_active
@@ -514,7 +515,7 @@ impl RealAgent {
                     .map_err(|e| Error::other(format!("spawn stager: {e}")))?,
             );
         }
-        *agent.threads.lock().unwrap() = threads;
+        *agent.threads.lock() = threads;
         Ok(agent)
     }
 
@@ -527,7 +528,7 @@ impl RealAgent {
         if self.cfg.prefetch_workers > 0 {
             let (staged, direct): (Vec<_>, Vec<_>) = units
                 .into_iter()
-                .partition(|u| !u.0.lock().unwrap().descr.input_staging.is_empty());
+                .partition(|u| !u.0.lock().descr.input_staging.is_empty());
             if !staged.is_empty() {
                 self.stagein_bridge.send_bulk(staged);
             }
@@ -543,13 +544,13 @@ impl RealAgent {
 
     /// Pilot capacity in cores.
     pub fn capacity(&self) -> usize {
-        self.sched_shared.state.lock().unwrap().sched.capacity()
+        self.sched_shared.state.lock().sched.capacity()
     }
 
     /// Currently free cores (the UnitManager's load-aware scheduler
     /// reads this gauge when ranking pilots).
     pub fn free_cores(&self) -> usize {
-        self.sched_shared.state.lock().unwrap().sched.free_cores()
+        self.sched_shared.state.lock().sched.free_cores()
     }
 
     /// Live executer-reactor counters: wakeup causes, targeted reaps vs
@@ -583,12 +584,12 @@ impl RealAgent {
         }
         // wake a possibly-idle scheduler so it can observe shutdown
         {
-            let mut st = self.sched_shared.state.lock().unwrap();
+            let mut st = self.sched_shared.state.lock();
             st.stopping = true;
             st.wake_seq += 1;
         }
         self.sched_shared.wake.notify_all();
-        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        let threads = std::mem::take(&mut *self.threads.lock());
         // stager-in workers fail their queue and the last one closes the
         // input bridge -> scheduler exits -> close exec bridge -> reactor
         // drains its in-flight set and closes the pool bridge -> pool
@@ -614,7 +615,7 @@ impl RealAgent {
             // Snapshot the wake sequence *before* draining input: any
             // event racing with this pass bumps it and the sleep below
             // returns immediately, so no wakeup can be lost.
-            let seen_seq = self.sched_shared.state.lock().unwrap().wake_seq;
+            let seen_seq = self.sched_shared.state.lock().wake_seq;
 
             // drain-input: admit everything queued into the wait-pool
             for unit in self.input.try_recv_all() {
@@ -629,7 +630,7 @@ impl RealAgent {
                     continue; // canceled/failed upstream
                 }
                 let (canceled, cores, priority, share) = {
-                    let mut rec = unit.0.lock().unwrap();
+                    let mut rec = unit.0.lock();
                     // cancellation must be able to wake this loop — and,
                     // once the unit is in flight, the reactor's poll
                     rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
@@ -664,7 +665,7 @@ impl RealAgent {
 
             // finalize cancellations before attempting placement
             for (unit, _) in
-                pool.retain_or_remove(|u, _| !u.0.lock().unwrap().cancel_requested)
+                pool.retain_or_remove(|u, _| !u.0.lock().cancel_requested)
             {
                 cancel_unit(&unit, &self.profiler);
             }
@@ -673,7 +674,7 @@ impl RealAgent {
             // hand the placed units to the reactor outside of it
             let mut placed = Vec::new();
             let stopping = {
-                let mut st = self.sched_shared.state.lock().unwrap();
+                let mut st = self.sched_shared.state.lock();
                 // fair-share bookkeeping: completions recorded on other
                 // threads land in the pool's outstanding gauge here
                 for (tag, cores) in std::mem::take(&mut st.released_shares) {
@@ -702,9 +703,9 @@ impl RealAgent {
             }
 
             // sleep until the next scheduling event (no poll timeout)
-            let mut st = self.sched_shared.state.lock().unwrap();
+            let mut st = self.sched_shared.state.lock();
             while st.wake_seq == seen_seq && !(st.stopping && self.stagein_idle()) {
-                st = self.sched_shared.wake.wait(st).unwrap();
+                st = self.sched_shared.wake.wait(st);
             }
         }
         // shutdown: every unit still waiting reaches a final state
@@ -715,7 +716,7 @@ impl RealAgent {
             .chain(pool.drain_all().into_iter().map(|(unit, _)| unit));
         for unit in leftovers {
             let (canceled, cores) = {
-                let rec = unit.0.lock().unwrap();
+                let rec = unit.0.lock();
                 (rec.cancel_requested, rec.descr.cores)
             };
             if canceled {
@@ -742,12 +743,12 @@ impl RealAgent {
     /// the scheduler thread through the buffered `released_shares`.
     fn release_cores(&self, unit: &SharedUnit, alloc: &Allocation) {
         let share = if self.cfg.scheduler_policy == SchedPolicy::FairShare {
-            Some(share_tag(&unit.0.lock().unwrap().descr))
+            Some(share_tag(&unit.0.lock().descr))
         } else {
             None
         };
         {
-            let mut st = self.sched_shared.state.lock().unwrap();
+            let mut st = self.sched_shared.state.lock();
             st.sched.release(alloc);
             if let Some(tag) = share {
                 st.released_shares.push((tag, alloc.n_cores()));
@@ -770,7 +771,7 @@ impl RealAgent {
         loop {
             let mut batch = self.stagein_bridge.recv(1);
             let Some(unit) = batch.pop() else { break };
-            if self.sched_shared.state.lock().unwrap().stopping {
+            if self.sched_shared.state.lock().stopping {
                 fail_unit(&unit, "agent shutting down".into(), &self.profiler);
                 continue;
             }
@@ -785,7 +786,7 @@ impl RealAgent {
     /// Fetch one unit's inputs into its sandbox (prefetch path).
     fn stage_in_unit(&self, unit: &SharedUnit) {
         let (id, name, directives, canceled) = {
-            let rec = unit.0.lock().unwrap();
+            let rec = unit.0.lock();
             (
                 rec.id,
                 rec.descr.name.clone(),
@@ -817,7 +818,7 @@ impl RealAgent {
     /// here (staging failure).
     fn stage_in_inline(&self, unit: &SharedUnit) -> bool {
         let (id, name, directives) = {
-            let rec = unit.0.lock().unwrap();
+            let rec = unit.0.lock();
             if rec.descr.input_staging.is_empty() {
                 return true;
             }
@@ -872,7 +873,7 @@ impl RealAgent {
             // cancellations of not-yet-started units finalize without
             // occupying a window slot
             pending.retain(|(unit, alloc)| {
-                if unit.0.lock().unwrap().cancel_requested {
+                if unit.0.lock().cancel_requested {
                     cancel_unit(unit, &self.profiler);
                     self.release_cores(unit, alloc);
                     false
@@ -899,7 +900,7 @@ impl RealAgent {
                 .exec_cancel_pending
                 .swap(false, std::sync::atomic::Ordering::AcqRel);
             for (token, completion) in reactor
-                .reap(|(unit, _)| scan_cancels && unit.0.lock().unwrap().cancel_requested)
+                .reap(|(unit, _)| scan_cancels && unit.0.lock().cancel_requested)
             {
                 self.complete_unit(token, completion);
             }
@@ -919,7 +920,7 @@ impl RealAgent {
         pending: &mut VecDeque<(SharedUnit, Allocation)>,
     ) {
         for (unit, alloc) in placed {
-            if unit.0.lock().unwrap().cancel_requested {
+            if unit.0.lock().cancel_requested {
                 // canceled between placement and intake: finalize now
                 // (the pool workers also re-check on pickup)
                 cancel_unit(&unit, &self.profiler);
@@ -941,7 +942,7 @@ impl RealAgent {
         spawner: &dyn Spawner,
         reactor: &mut Reactor<(SharedUnit, Allocation)>,
     ) {
-        let descr = unit.0.lock().unwrap().descr.clone();
+        let descr = unit.0.lock().descr.clone();
         let argv: Vec<String> = match &descr.payload {
             UnitPayload::Pjrt { .. } => {
                 // normally diverted at intake by `route_placed` (via
@@ -1015,11 +1016,11 @@ impl RealAgent {
         let (unit, alloc) = token;
         match completion {
             Completion::Exited(outcome) => {
-                unit.0.lock().unwrap().outcome = Some(UnitOutcome::Exec(outcome));
+                unit.0.lock().outcome = Some(UnitOutcome::Exec(outcome));
                 let _ = advance(&unit, S::AStagingOutPending, &self.profiler);
             }
             Completion::TimerElapsed => {
-                unit.0.lock().unwrap().outcome = Some(UnitOutcome::Exec(ExecOutcome {
+                unit.0.lock().outcome = Some(UnitOutcome::Exec(ExecOutcome {
                     exit_code: 0,
                     stdout: String::new(),
                     stderr: String::new(),
@@ -1035,11 +1036,11 @@ impl RealAgent {
 
     /// Memoized `which` lookup (per agent + executable).
     fn which_cached(&self, exe: &str) -> bool {
-        if let Some(&hit) = self.which_cache.lock().unwrap().get(exe) {
+        if let Some(&hit) = self.which_cache.lock().get(exe) {
             return hit;
         }
         let found = which_exists(exe);
-        self.which_cache.lock().unwrap().insert(exe.to_string(), found);
+        self.which_cache.lock().insert(exe.to_string(), found);
         found
     }
 
@@ -1050,7 +1051,7 @@ impl RealAgent {
         loop {
             let mut batch = self.pool_bridge.recv(1);
             let Some((unit, alloc)) = batch.pop() else { break };
-            if unit.0.lock().unwrap().cancel_requested {
+            if unit.0.lock().cancel_requested {
                 cancel_unit(&unit, &self.profiler);
             } else {
                 self.execute_blocking(&unit, payloads.as_ref());
@@ -1067,7 +1068,7 @@ impl RealAgent {
         if advance(unit, S::AExecuting, &self.profiler).is_err() {
             return;
         }
-        let descr = unit.0.lock().unwrap().descr.clone();
+        let descr = unit.0.lock().descr.clone();
         let result: Result<UnitOutcome> = match &descr.payload {
             UnitPayload::Pjrt { artifact, task_id, steps_chunks } => match payloads {
                 Some(store) => {
@@ -1091,7 +1092,7 @@ impl RealAgent {
         match result {
             Ok(outcome) => {
                 {
-                    let mut rec = unit.0.lock().unwrap();
+                    let mut rec = unit.0.lock();
                     rec.outcome = Some(outcome);
                 }
                 let _ = advance(unit, S::AStagingOutPending, &self.profiler);
@@ -1111,7 +1112,7 @@ impl RealAgent {
                 // clone of the bulk stdout/stderr text); it is restored
                 // below so the API handle keeps serving it after Done.
                 let (name, outcome, failed, out_staging) = {
-                    let mut rec = unit.0.lock().unwrap();
+                    let mut rec = unit.0.lock();
                     (
                         unit_sandbox_name(rec.id, &rec.descr.name),
                         rec.outcome.take(),
@@ -1120,7 +1121,7 @@ impl RealAgent {
                     )
                 };
                 let restore = |outcome: Option<UnitOutcome>| {
-                    unit.0.lock().unwrap().outcome = outcome;
+                    unit.0.lock().outcome = outcome;
                 };
                 if failed {
                     restore(outcome);
@@ -1185,7 +1186,7 @@ fn unit_sandbox_name(id: UnitId, name: &str) -> String {
 /// Does this unit's payload block a thread for its full runtime (and so
 /// belong on the executer pool rather than in the reactor)?
 fn is_blocking_payload(unit: &SharedUnit) -> bool {
-    matches!(unit.0.lock().unwrap().descr.payload, UnitPayload::Pjrt { .. })
+    matches!(unit.0.lock().descr.payload, UnitPayload::Pjrt { .. })
 }
 
 /// Submitter tag of a unit under the fair-share policy: its workload
@@ -1247,14 +1248,14 @@ mod tests {
 
     fn wait_final(unit: &SharedUnit, timeout: f64) -> S {
         let (m, cv) = &**unit;
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
         while !rec.machine.is_final() {
             let now = std::time::Instant::now();
             if now >= deadline {
                 break;
             }
-            let (r, _) = cv.wait_timeout(rec, deadline - now).unwrap();
+            let (r, _) = cv.wait_timeout(rec, deadline - now);
             rec = r;
         }
         rec.machine.state()
@@ -1263,12 +1264,10 @@ mod tests {
     fn wait_executing(unit: &SharedUnit, timeout: f64) {
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
         let (m, cv) = &**unit;
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         while rec.machine.entered(S::AExecuting).is_none() {
             assert!(std::time::Instant::now() < deadline, "unit never started executing");
-            let (r, _) = cv
-                .wait_timeout(rec, std::time::Duration::from_millis(100))
-                .unwrap();
+            let (r, _) = cv.wait_timeout(rec, std::time::Duration::from_millis(100));
             rec = r;
         }
     }
@@ -1305,7 +1304,7 @@ mod tests {
         );
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Done);
-        let rec = u.0.lock().unwrap();
+        let rec = u.0.lock();
         match rec.outcome.as_ref().unwrap() {
             UnitOutcome::Exec(o) => assert_eq!(o.stdout.trim(), "hi"),
             _ => panic!("wrong outcome"),
@@ -1375,7 +1374,7 @@ mod tests {
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Done);
         // the prefetch path recorded AGENT_STAGING_INPUT
-        assert!(u.0.lock().unwrap().machine.entered(S::AStagingIn).is_some());
+        assert!(u.0.lock().machine.entered(S::AStagingIn).is_some());
         agent.drain_and_stop();
         let staged = std::env::temp_dir().join("rp_agent_test/stagein/unit.000000-s1/in.dat");
         assert_eq!(std::fs::read(staged).unwrap(), b"payload");
@@ -1398,7 +1397,7 @@ mod tests {
         );
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Done);
-        assert!(u.0.lock().unwrap().machine.entered(S::AStagingIn).is_some());
+        assert!(u.0.lock().machine.entered(S::AStagingIn).is_some());
         agent.drain_and_stop();
         let staged = std::env::temp_dir()
             .join("rp_agent_test/stagein-serial/unit.000000-s1/in.dat");
@@ -1458,7 +1457,7 @@ mod tests {
         agent.submit(vec![bad.clone()]);
         assert_eq!(wait_final(&bad, 10.0), S::Failed);
         {
-            let rec = bad.0.lock().unwrap();
+            let rec = bad.0.lock();
             let err = rec.error.as_ref().unwrap();
             assert!(err.contains("staging error"), "error names the stage: {err}");
             // the unit never started executing half-staged
@@ -1488,7 +1487,7 @@ mod tests {
         let u = ready_unit(0, UnitDescription::sleep(0.01).cores(64), &profiler);
         agent.submit(vec![u.clone()]);
         assert_eq!(wait_final(&u, 10.0), S::Failed);
-        assert!(u.0.lock().unwrap().error.as_ref().unwrap().contains("cores"));
+        assert!(u.0.lock().error.as_ref().unwrap().contains("cores"));
         agent.drain_and_stop();
     }
 
@@ -1524,8 +1523,8 @@ mod tests {
         for u in [&long, &wide, &small] {
             assert_eq!(wait_final(u, 10.0), S::Done);
         }
-        let small_done = small.0.lock().unwrap().machine.entered(S::Done).unwrap();
-        let wide_started = wide.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+        let small_done = small.0.lock().machine.entered(S::Done).unwrap();
+        let wide_started = wide.0.lock().machine.entered(S::AExecuting).unwrap();
         assert!(
             small_done < wide_started,
             "small unit must finish ({small_done:.3}s) before the blocked wide head \
@@ -1708,11 +1707,11 @@ mod tests {
                 assert_eq!(wait_final(u, 30.0), S::Done);
             }
             agent.drain_and_stop();
-            let wide_started = wide.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+            let wide_started = wide.0.lock().machine.entered(S::AExecuting).unwrap();
             smalls
                 .iter()
                 .filter(|u| {
-                    u.0.lock().unwrap().machine.entered(S::AExecuting).unwrap() < wide_started
+                    u.0.lock().machine.entered(S::AExecuting).unwrap() < wide_started
                 })
                 .count()
         };
@@ -1748,8 +1747,8 @@ mod tests {
             assert_eq!(wait_final(u, 10.0), S::Done);
         }
         agent.drain_and_stop();
-        let high_started = high.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
-        let low_started = low.0.lock().unwrap().machine.entered(S::AExecuting).unwrap();
+        let high_started = high.0.lock().machine.entered(S::AExecuting).unwrap();
+        let low_started = low.0.lock().machine.entered(S::AExecuting).unwrap();
         assert!(
             high_started < low_started,
             "priority 7 ({high_started:.3}s) must start before priority -1 \

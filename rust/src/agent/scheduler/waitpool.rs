@@ -8,6 +8,15 @@
 //! pipeline) and [`crate::sim::AgentSim`] (DES twin) place through the
 //! same pass logic, so policy behavior is identical in both modes.
 //!
+//! # Lock ownership
+//!
+//! The pool deliberately owns **no locks**: the real agent mutates it
+//! only under the `agent.sched` checked lock on the scheduler thread,
+//! and the DES twin is single-threaded.  Every cross-thread entry point
+//! (submit, core release, cancel) routes through
+//! [`crate::util::lockcheck`]-wrapped state — see the crate lock
+//! hierarchy there — so the pool itself stays a plain data structure.
+//!
 //! Four policies:
 //!
 //! * [`SchedPolicy::Fifo`] — faithful to the paper: the head unit blocks

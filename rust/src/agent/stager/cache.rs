@@ -46,7 +46,9 @@ use std::fs;
 use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
+
+use crate::util::lockcheck::CheckedMutex;
 use std::time::SystemTime;
 
 use crate::api::descriptions::StagingDirective;
@@ -151,7 +153,7 @@ struct CacheInner {
 pub struct StageCache {
     root: PathBuf,
     budget: u64,
-    inner: Mutex<CacheInner>,
+    inner: CheckedMutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -167,7 +169,7 @@ impl StageCache {
         StageCache {
             root,
             budget: budget_bytes,
-            inner: Mutex::new(CacheInner {
+            inner: CheckedMutex::new("stage.cache", CacheInner {
                 memo: DigestMemo::default(),
                 entries: HashMap::new(),
                 order: VecDeque::new(),
@@ -188,7 +190,7 @@ impl StageCache {
 
     /// Current counters.
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -218,7 +220,7 @@ impl StageCache {
         // a stat), and serve a resident object without dropping it so
         // eviction cannot race the link.
         let digest = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock();
             let digest = inner
                 .memo
                 .digest(src)
@@ -249,7 +251,7 @@ impl StageCache {
             }
         };
         let obj = self.object_path(digest);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         if inner.entries.contains_key(&digest) {
             // another worker cached it while we copied; ours is surplus
             let _ = fs::remove_file(&tmp);
@@ -323,9 +325,9 @@ pub fn source_mask(directives: &[StagingDirective], src_root: &Path) -> u64 {
     if directives.is_empty() {
         return 0;
     }
-    static MEMO: OnceLock<Mutex<DigestMemo>> = OnceLock::new();
-    let memo = MEMO.get_or_init(|| Mutex::new(DigestMemo::default()));
-    let mut memo = memo.lock().unwrap();
+    static MEMO: OnceLock<CheckedMutex<DigestMemo>> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| CheckedMutex::new("stage.memo", DigestMemo::default()));
+    let mut memo = memo.lock();
     let mut mask = 0u64;
     for d in directives {
         let src = super::resolve(src_root, &d.source);

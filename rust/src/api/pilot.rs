@@ -10,6 +10,7 @@ use crate::saga::JobService;
 use crate::states::machine::StateMachine;
 use crate::states::PilotState;
 use crate::util;
+use crate::util::sync::lock_ok;
 
 /// The pilot's state machine behind a condvar: transitions notify
 /// waiters, so [`Pilot::wait_active`] blocks on the transition instead
@@ -27,12 +28,12 @@ impl PilotStateCell {
     }
 
     pub(crate) fn state(&self) -> PilotState {
-        self.machine.lock().unwrap().state()
+        lock_ok(self.machine.lock()).state()
     }
 
     /// Run `f` on the machine and wake every state waiter.
     pub(crate) fn with<R>(&self, f: impl FnOnce(&mut StateMachine<PilotState>) -> R) -> R {
-        let mut m = self.machine.lock().unwrap();
+        let mut m = lock_ok(self.machine.lock());
         let r = f(&mut m);
         self.cv.notify_all();
         r
@@ -46,7 +47,7 @@ impl PilotStateCell {
     ) -> Option<PilotState> {
         let deadline =
             std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout.max(0.0));
-        let mut m = self.machine.lock().unwrap();
+        let mut m = lock_ok(self.machine.lock());
         loop {
             let s = m.state();
             if pred(s) {
@@ -56,7 +57,7 @@ impl PilotStateCell {
             if now >= deadline {
                 return None;
             }
-            let (g, _) = self.cv.wait_timeout(m, deadline - now).unwrap();
+            let (g, _) = lock_ok(self.cv.wait_timeout(m, deadline - now));
             m = g;
         }
     }

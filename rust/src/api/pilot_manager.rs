@@ -16,6 +16,7 @@ use crate::util::json::Value;
 use super::descriptions::PilotDescription;
 use super::pilot::{Pilot, PilotStateCell};
 use super::session::Session;
+use crate::util::sync::lock_ok;
 
 /// Launches and tracks pilots for one session.
 #[derive(Clone)]
@@ -104,13 +105,13 @@ impl PilotManager {
         );
 
         let pilot = Pilot { id, cfg, cores: pd.cores, machine, agent, job, job_service };
-        self.pilots.lock().unwrap().push(pilot.clone());
+        lock_ok(self.pilots.lock()).push(pilot.clone());
         Ok(pilot)
     }
 
     /// Pilots submitted through this manager.
     pub fn pilots(&self) -> Vec<Pilot> {
-        self.pilots.lock().unwrap().clone()
+        lock_ok(self.pilots.lock()).clone()
     }
 
     /// Cancel all pilots.

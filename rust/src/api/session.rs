@@ -12,6 +12,7 @@ use crate::runtime::{PayloadStore, Runtime};
 
 use super::pilot_manager::PilotManager;
 use super::unit_manager::UnitManager;
+use crate::util::sync::lock_ok;
 
 /// Shared session internals.
 pub(crate) struct SessionInner {
@@ -77,7 +78,7 @@ impl Session {
     /// Attach a PJRT runtime (AOT artifacts dir) so pilots can execute
     /// `UnitPayload::Pjrt` units.  Idempotent.
     pub fn load_artifacts(&self, dir: impl AsRef<std::path::Path>) -> crate::Result<()> {
-        let mut guard = self.inner.payloads.lock().unwrap();
+        let mut guard = lock_ok(self.inner.payloads.lock());
         if guard.is_none() {
             let rt = Runtime::load(dir)?;
             *guard = Some(PayloadStore::new(rt));
@@ -86,7 +87,7 @@ impl Session {
     }
 
     pub(crate) fn payloads(&self) -> Option<PayloadStore> {
-        self.inner.payloads.lock().unwrap().clone()
+        lock_ok(self.inner.payloads.lock()).clone()
     }
 
     /// Create a PilotManager bound to this session.

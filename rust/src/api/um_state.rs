@@ -35,7 +35,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::lockcheck::CheckedMutex;
 
 use crate::agent::real::{SharedUnit, StateWatch};
 use crate::db::Store;
@@ -83,7 +85,7 @@ impl std::fmt::Debug for Transition {
 /// record lock, producers call [`TransitionBus::notify`] once per
 /// event (agent side) or once per *batch* (UM submit/dispatch side).
 pub struct TransitionBus {
-    queues: Vec<Mutex<Vec<Transition>>>,
+    queues: Vec<CheckedMutex<Vec<Transition>>>,
     /// Queued-but-undrained record count (fast emptiness check for the
     /// watcher-exit protocol).
     pending: AtomicUsize,
@@ -91,17 +93,17 @@ pub struct TransitionBus {
     watch: StateWatch,
     /// Serializes drain passes: two concurrent drains could otherwise
     /// reorder one unit's transitions across their swapped batches.
-    drain_serial: Mutex<()>,
+    drain_serial: CheckedMutex<()>,
 }
 
 impl TransitionBus {
     pub fn new(shards: usize) -> Self {
         let shards = shards.max(1);
         TransitionBus {
-            queues: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            queues: (0..shards).map(|_| CheckedMutex::new("um.bus", Vec::new())).collect(),
             pending: AtomicUsize::new(0),
             watch: StateWatch::new(),
-            drain_serial: Mutex::new(()),
+            drain_serial: CheckedMutex::new("um.drain", ()),
         }
     }
 
@@ -110,7 +112,7 @@ impl TransitionBus {
     }
 
     #[inline]
-    fn queue_of(&self, id: UnitId) -> &Mutex<Vec<Transition>> {
+    fn queue_of(&self, id: UnitId) -> &CheckedMutex<Vec<Transition>> {
         &self.queues[(id.raw() as usize) % self.queues.len()]
     }
 
@@ -118,7 +120,7 @@ impl TransitionBus {
     /// record lock (see type docs); this only takes the (sharded,
     /// short-lived) queue mutex.
     pub fn publish(&self, unit: &SharedUnit, id: UnitId, from: UnitState, to: UnitState, t: f64) {
-        self.queue_of(id).lock().unwrap().push(Transition {
+        self.queue_of(id).lock().push(Transition {
             unit: unit.clone(),
             id,
             from,
@@ -156,7 +158,7 @@ impl TransitionBus {
         let mut out = Vec::with_capacity(self.queues.len());
         let mut n = 0;
         for q in &self.queues {
-            let batch = std::mem::take(&mut *q.lock().unwrap());
+            let batch = std::mem::take(&mut *q.lock());
             n += batch.len();
             out.push(batch);
         }
@@ -186,7 +188,7 @@ struct UnitShard {
 
 /// The sharded UM unit registry (see module docs).
 pub struct UnitShards {
-    shards: Vec<Mutex<UnitShard>>,
+    shards: Vec<CheckedMutex<UnitShard>>,
     /// Registered unit count (monotonic).
     len: AtomicUsize,
     /// Units whose final transition the drain has processed.
@@ -197,21 +199,21 @@ impl UnitShards {
     pub fn new(shards: usize) -> Self {
         let shards = shards.max(1);
         UnitShards {
-            shards: (0..shards).map(|_| Mutex::new(UnitShard::default())).collect(),
+            shards: (0..shards).map(|_| CheckedMutex::new("um.shard", UnitShard::default())).collect(),
             len: AtomicUsize::new(0),
             finals: AtomicUsize::new(0),
         }
     }
 
     #[inline]
-    fn shard_of(&self, id: UnitId) -> &Mutex<UnitShard> {
+    fn shard_of(&self, id: UnitId) -> &CheckedMutex<UnitShard> {
         &self.shards[(id.raw() as usize) % self.shards.len()]
     }
 
     /// Register submitted units (each into its id's shard).
     pub fn push_bulk(&self, units: &[Unit]) {
         for u in units {
-            self.shard_of(u.id()).lock().unwrap().units.push(u.clone());
+            self.shard_of(u.id()).lock().units.push(u.clone());
         }
         self.len.fetch_add(units.len(), Ordering::SeqCst);
     }
@@ -242,7 +244,7 @@ impl UnitShards {
     pub fn snapshot(&self) -> Vec<Unit> {
         let mut out = Vec::with_capacity(self.len());
         for sh in &self.shards {
-            out.extend(sh.lock().unwrap().units.iter().cloned());
+            out.extend(sh.lock().units.iter().cloned());
         }
         out.sort_by_key(|u| u.id());
         out
@@ -252,7 +254,7 @@ impl UnitShards {
     pub fn count_final(&self) -> usize {
         let mut n = 0;
         for sh in &self.shards {
-            n += sh.lock().unwrap().units.iter().filter(|u| u.state().is_final()).count();
+            n += sh.lock().units.iter().filter(|u| u.state().is_final()).count();
         }
         n
     }
@@ -260,7 +262,7 @@ impl UnitShards {
     /// Total `delivered` entries across shards — bounded by *live*
     /// (non-final) units, which is what the memory-stability test pins.
     pub fn delivered_len(&self) -> usize {
-        self.shards.iter().map(|sh| sh.lock().unwrap().delivered.len()).sum()
+        self.shards.iter().map(|sh| sh.lock().delivered.len()).sum()
     }
 }
 
@@ -295,14 +297,14 @@ pub fn drain_once(
     units: &UnitShards,
     store: &Store,
     collection: &str,
-    callbacks: &Mutex<Vec<StateCallback>>,
+    callbacks: &CheckedMutex<Vec<StateCallback>>,
 ) -> DrainStats {
     assert_eq!(
         bus.shards(),
         units.shards.len(),
         "bus and unit-state shard counts must match (same id -> shard map)"
     );
-    let _serial = bus.drain_serial.lock().unwrap();
+    let _serial = bus.drain_serial.lock();
     let batches = bus.swap_all();
     let total: usize = batches.iter().map(Vec::len).sum();
     if total == 0 {
@@ -334,7 +336,7 @@ pub fn drain_once(
         if batch.is_empty() {
             continue;
         }
-        let mut shard = units.shards[si].lock().unwrap();
+        let mut shard = units.shards[si].lock();
         for tr in batch {
             let fresh = shard.delivered.get(&tr.id) != Some(&tr.to);
             if tr.to.is_final() {
@@ -355,7 +357,7 @@ pub fn drain_once(
         // reads — the O(live-units) `bound` retain-scan of the seed's
         // placement pass became this O(finals) pass
         for u in &final_units {
-            let gauge = u.0.lock().unwrap().bound_gauge.take();
+            let gauge = u.0.lock().bound_gauge.take();
             if let Some(g) = gauge {
                 g.fetch_sub(1, Ordering::SeqCst);
             }
@@ -367,7 +369,7 @@ pub fn drain_once(
     //    lock + per-unit shard affinity).
     let n_delivered = deliveries.len();
     if n_delivered > 0 {
-        let cbs = callbacks.lock().unwrap();
+        let cbs = callbacks.lock();
         if !cbs.is_empty() {
             for (shared, state) in deliveries {
                 let unit = Unit { shared };
@@ -389,6 +391,7 @@ mod tests {
     use crate::ids::PilotId;
     use crate::states::UnitState as S;
     use crate::util::rng::Pcg;
+    use std::sync::Mutex;
 
     fn mk_unit(id: u64) -> SharedUnit {
         new_unit(UnitId(id), UnitDescription::sleep(0.0))
@@ -398,7 +401,7 @@ mod tests {
     /// machine under the record lock and publish in the same critical
     /// section.
     fn apply(bus: &TransitionBus, u: &SharedUnit, to: S, t: f64) {
-        let mut rec = u.0.lock().unwrap();
+        let mut rec = u.0.lock();
         let from = rec.machine.state();
         rec.machine.advance(to, t).unwrap();
         bus.publish(u, rec.id, from, to, t);
@@ -438,10 +441,11 @@ mod tests {
             let bus = TransitionBus::new(4);
             let shards = UnitShards::new(4);
             let bus_store = Store::new();
-            let callbacks: Mutex<Vec<StateCallback>> = Mutex::new(Vec::new());
+            let callbacks: CheckedMutex<Vec<StateCallback>> =
+                CheckedMutex::new("um.callbacks", Vec::new());
             let log: Arc<Mutex<Vec<(u64, S)>>> = Arc::new(Mutex::new(Vec::new()));
             let log2 = log.clone();
-            callbacks.lock().unwrap().push(Box::new(move |u, s| {
+            callbacks.lock().push(Box::new(move |u, s| {
                 log2.lock().unwrap().push((u.id().raw(), s));
             }));
 
@@ -482,7 +486,7 @@ mod tests {
                 // bound_pilot at the placement step, then transitions
                 // flow through the bus
                 if to == S::UmScheduling {
-                    units[i].0.lock().unwrap().bound_pilot = Some(PilotId(7));
+                    units[i].0.lock().bound_pilot = Some(PilotId(7));
                     bus_store.insert(
                         "units",
                         &id,
@@ -512,7 +516,7 @@ mod tests {
             }
             // identical bound_pilot records
             for u in &units {
-                assert_eq!(u.0.lock().unwrap().bound_pilot, Some(PilotId(7)));
+                assert_eq!(u.0.lock().bound_pilot, Some(PilotId(7)));
             }
             // identical per-unit callback sequences
             let mut bus_cbs: HashMap<u64, Vec<S>> = HashMap::new();
@@ -539,10 +543,11 @@ mod tests {
         let bus = Arc::new(TransitionBus::new(8));
         let shards = Arc::new(UnitShards::new(8));
         let store = Store::new();
-        let callbacks: Arc<Mutex<Vec<StateCallback>>> = Arc::new(Mutex::new(Vec::new()));
+        let callbacks: Arc<CheckedMutex<Vec<StateCallback>>> =
+            Arc::new(CheckedMutex::new("um.callbacks", Vec::new()));
         let log: Arc<Mutex<HashMap<u64, Vec<S>>>> = Arc::new(Mutex::new(HashMap::new()));
         let log2 = log.clone();
-        callbacks.lock().unwrap().push(Box::new(move |u, s| {
+        callbacks.lock().push(Box::new(move |u, s| {
             log2.lock().unwrap().entry(u.id().raw()).or_default().push(s);
         }));
 
@@ -596,7 +601,8 @@ mod tests {
         let bus = TransitionBus::new(2);
         let shards = UnitShards::new(2);
         let store = Store::new();
-        let callbacks: Mutex<Vec<StateCallback>> = Mutex::new(Vec::new());
+        let callbacks: CheckedMutex<Vec<StateCallback>> =
+            CheckedMutex::new("um.callbacks", Vec::new());
         let u = mk_unit(0);
         shards.push_bulk(&[Unit { shared: u.clone() }]);
         apply(&bus, &u, S::UmSchedulingPending, 0.1);

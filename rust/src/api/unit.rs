@@ -13,31 +13,31 @@ pub struct Unit {
 
 impl Unit {
     pub fn id(&self) -> UnitId {
-        self.shared.0.lock().unwrap().id
+        self.shared.0.lock().id
     }
 
     pub fn name(&self) -> String {
-        self.shared.0.lock().unwrap().descr.name.clone()
+        self.shared.0.lock().descr.name.clone()
     }
 
     pub fn state(&self) -> UnitState {
-        self.shared.0.lock().unwrap().machine.state()
+        self.shared.0.lock().machine.state()
     }
 
     /// Pilot this unit was late-bound to, once the UnitManager
     /// scheduler has placed it (`None` while it waits in the UM pool).
     pub fn pilot(&self) -> Option<crate::ids::PilotId> {
-        self.shared.0.lock().unwrap().bound_pilot
+        self.shared.0.lock().bound_pilot
     }
 
     /// Execution outcome, if finished.
     pub fn outcome(&self) -> Option<UnitOutcome> {
-        self.shared.0.lock().unwrap().outcome.clone()
+        self.shared.0.lock().outcome.clone()
     }
 
     /// Error message, if failed.
     pub fn error(&self) -> Option<String> {
-        self.shared.0.lock().unwrap().error.clone()
+        self.shared.0.lock().error.clone()
     }
 
     /// Request cancellation.  A unit still waiting in the UnitManager
@@ -55,7 +55,7 @@ impl Unit {
     /// thread picks the unit up.
     pub fn cancel(&self) {
         let (wake, exec_wake, exec_cancel, bus) = {
-            let mut rec = self.shared.0.lock().unwrap();
+            let mut rec = self.shared.0.lock();
             rec.cancel_requested = true;
             let mut bus = None;
             if rec.bound_pilot.is_none()
@@ -100,20 +100,20 @@ impl Unit {
 
     /// Time the unit entered a state, if it did (profiled timeline).
     pub fn entered(&self, state: UnitState) -> Option<f64> {
-        self.shared.0.lock().unwrap().machine.entered(state)
+        self.shared.0.lock().machine.entered(state)
     }
 
     /// Block until the unit reaches a final state.
     pub fn wait(&self, timeout: f64) -> Result<UnitState> {
         let (m, cv) = &*self.shared;
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         while !rec.machine.is_final() {
             let now = std::time::Instant::now();
             if now >= deadline {
                 return Err(crate::Error::Timeout(timeout, format!("unit {}", rec.id)));
             }
-            let (r, _) = cv.wait_timeout(rec, deadline - now).unwrap();
+            let (r, _) = cv.wait_timeout(rec, deadline - now);
             rec = r;
         }
         Ok(rec.machine.state())

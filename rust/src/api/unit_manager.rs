@@ -13,7 +13,7 @@
 //! added; nothing fails fast.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::agent::real::{advance, new_unit, SharedUnit};
 use crate::db::LatencyModel;
@@ -22,6 +22,7 @@ use crate::ids::UnitId;
 use crate::profiler::Event;
 use crate::states::{PilotState, UnitState as S};
 use crate::util;
+use crate::util::lockcheck::CheckedMutex;
 
 use super::descriptions::UnitDescription;
 use super::pilot::Pilot;
@@ -88,10 +89,10 @@ pub struct UnitManager {
     state: Arc<UnitShards>,
     /// The batched transition event bus (same shard count as `state`).
     bus: Arc<TransitionBus>,
-    sched: Arc<Mutex<UmSched>>,
+    sched: Arc<CheckedMutex<UmSched>>,
     /// Communication model applied when feeding units (None = local).
-    latency: Arc<Mutex<Option<LatencyModel>>>,
-    callbacks: Arc<Mutex<Vec<StateCallback>>>,
+    latency: Arc<CheckedMutex<Option<LatencyModel>>>,
+    callbacks: Arc<CheckedMutex<Vec<StateCallback>>>,
     /// Single watcher-alive flag (a satellite of the sharding PR
     /// replaced the seed's `Mutex<bool>`; the only other single-flag
     /// state here, `UmSched::explicit_policy`, lives under the `sched`
@@ -114,14 +115,14 @@ impl UnitManager {
             session,
             state: Arc::new(UnitShards::new(shards)),
             bus: Arc::new(TransitionBus::new(shards)),
-            sched: Arc::new(Mutex::new(UmSched {
+            sched: Arc::new(CheckedMutex::new("um.sched", UmSched {
                 scheduler: make_um_scheduler(UmPolicy::default()),
                 explicit_policy: false,
                 pool: UmWaitPool::new(),
                 pilots: Vec::new(),
             })),
-            latency: Arc::new(Mutex::new(None)),
-            callbacks: Arc::new(Mutex::new(Vec::new())),
+            latency: Arc::new(CheckedMutex::new("um.latency", None)),
+            callbacks: Arc::new(CheckedMutex::new("um.callbacks", Vec::new())),
             watcher_running: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -137,7 +138,7 @@ impl UnitManager {
     /// policy on the next scheduling event.
     pub fn set_policy(&self, policy: UmPolicy) {
         let placed = {
-            let mut st = self.sched.lock().unwrap();
+            let mut st = self.sched.lock();
             st.scheduler = make_um_scheduler(policy);
             st.explicit_policy = true;
             self.place(&mut st)
@@ -147,12 +148,12 @@ impl UnitManager {
 
     /// The active UM scheduling policy.
     pub fn policy(&self) -> UmPolicy {
-        self.sched.lock().unwrap().scheduler.policy()
+        self.sched.lock().scheduler.policy()
     }
 
     /// Units waiting in the UM pool for an eligible pilot.
     pub fn pending(&self) -> usize {
-        self.sched.lock().unwrap().pool.len()
+        self.sched.lock().pool.len()
     }
 
     /// Register a state-change callback (the Pilot API's
@@ -170,7 +171,7 @@ impl UnitManager {
         for u in self.state.snapshot() {
             cb(&u, u.state());
         }
-        self.callbacks.lock().unwrap().push(cb);
+        self.callbacks.lock().push(cb);
         self.ensure_watcher();
     }
 
@@ -187,7 +188,7 @@ impl UnitManager {
     /// is also what lands batched state updates in the store and keeps
     /// the bus queues bounded.
     fn ensure_watcher(&self) {
-        if self.state.is_empty() && self.callbacks.lock().unwrap().is_empty() {
+        if self.state.is_empty() && self.callbacks.lock().is_empty() {
             return; // nothing to drain or deliver yet
         }
         if self
@@ -244,7 +245,7 @@ impl UnitManager {
     /// the new pilot set is eligible binds immediately.
     pub fn add_pilot(&self, pilot: &Pilot) {
         let placed = {
-            let mut st = self.sched.lock().unwrap();
+            let mut st = self.sched.lock();
             // Adopt the resource config's policy with the first pilot
             // unless the application chose one explicitly.
             if !st.explicit_policy && st.pilots.is_empty() {
@@ -264,7 +265,7 @@ impl UnitManager {
     /// Inject a UM->Agent communication latency model (used by the
     /// integrated experiments; local sessions default to none).
     pub fn set_latency(&self, model: LatencyModel) {
-        *self.latency.lock().unwrap() = Some(model);
+        *self.latency.lock() = Some(model);
     }
 
     /// One placement pass under the scheduler lock: finalize canceled
@@ -281,7 +282,7 @@ impl UnitManager {
         let profiler = self.session.profiler();
         for unit in st
             .pool
-            .retain_or_remove(|u| !u.0.lock().unwrap().cancel_requested)
+            .retain_or_remove(|u| !u.0.lock().cancel_requested)
         {
             let _ = advance(&unit, S::Canceled, &profiler);
         }
@@ -323,7 +324,7 @@ impl UnitManager {
             let mut batch = Vec::with_capacity(units.len());
             for unit in units {
                 let bound = {
-                    let mut rec = unit.0.lock().unwrap();
+                    let mut rec = unit.0.lock();
                     let t = util::now();
                     if rec.machine.advance(S::UmScheduling, t).is_err() {
                         // canceled in the place -> dispatch window: it
@@ -375,7 +376,7 @@ impl UnitManager {
         profiler.record_bulk(events);
         self.session.store().insert_bulk("units", docs);
         self.bus.notify();
-        let latency = *self.latency.lock().unwrap();
+        let latency = *self.latency.lock();
         for (pilot, batch) in feeds {
             if let Some(model) = latency {
                 util::sleep(model.transfer_time(batch.len() as u64));
@@ -421,7 +422,7 @@ impl UnitManager {
             };
             let shared = new_unit(id, d);
             {
-                let mut rec = shared.0.lock().unwrap();
+                let mut rec = shared.0.lock();
                 rec.bus = Some(Arc::downgrade(&self.bus));
                 rec.profiler = Some(profiler.clone());
                 // batched advance NEW -> UMGR_SCHEDULING_PENDING under
@@ -440,7 +441,7 @@ impl UnitManager {
         profiler.record_bulk(events);
         self.state.push_bulk(&created);
         let placed = {
-            let mut st = self.sched.lock().unwrap();
+            let mut st = self.sched.lock();
             for (shared, req) in pending {
                 st.pool.push(shared, req);
             }

@@ -37,6 +37,8 @@ use crate::profiler::{Event, Profiler};
 use crate::states::UnitState;
 use crate::util;
 use crate::util::json::Value;
+use crate::util::lockcheck::CheckedMutex;
+use crate::util::sync::lock_ok;
 
 /// The nominal lifecycle every unit walks in both paths (submit through
 /// execution to `Done`).
@@ -82,27 +84,27 @@ pub fn per_unit_baseline_throughput(n_units: usize, threads: usize) -> f64 {
             for i in (th * per)..((th + 1) * per) {
                 let id = UnitId(i as u64);
                 let shared = new_unit(id, UnitDescription::sleep(0.0));
-                registry.lock().unwrap().push(Unit { shared: shared.clone() });
+                lock_ok(registry.lock()).push(Unit { shared: shared.clone() });
                 store.insert("units", &id.to_string(), Value::obj(vec![("state", "NEW".into())]));
                 for (k, &to) in CHAIN.iter().enumerate() {
                     let t = (i * CHAIN.len() + k) as f64;
                     {
-                        let mut rec = shared.0.lock().unwrap();
+                        let mut rec = shared.0.lock();
                         rec.machine.advance(to, t).expect("scripted chain is legal");
                     }
                     profiler.record(t, id, to);
                     let _ = store.update_field("units", &id.to_string(), "state", to.name().into());
-                    delivered.lock().unwrap().insert(id, to);
+                    lock_ok(delivered.lock()).insert(id, to);
                     watch.notify();
                     since_scan += 1;
                     if since_scan == 256 {
                         // the watcher-wake scan: read every registered
                         // unit's state and compare to `delivered`
                         since_scan = 0;
-                        let reg = registry.lock().unwrap();
-                        let del = delivered.lock().unwrap();
+                        let reg = lock_ok(registry.lock());
+                        let del = lock_ok(delivered.lock());
                         for u in reg.iter() {
-                            let rec = u.shared.0.lock().unwrap();
+                            let rec = u.shared.0.lock();
                             std::hint::black_box(
                                 del.get(&rec.id) == Some(&rec.machine.state()),
                             );
@@ -132,7 +134,8 @@ pub fn batched_throughput(n_units: usize, threads: usize, shards: usize) -> f64 
     let state = Arc::new(UnitShards::new(shards));
     let store = Store::new();
     let profiler = Arc::new(Profiler::new(true));
-    let callbacks: Arc<Mutex<Vec<StateCallback>>> = Arc::new(Mutex::new(Vec::new()));
+    let callbacks: Arc<CheckedMutex<Vec<StateCallback>>> =
+        Arc::new(CheckedMutex::new("um.callbacks", Vec::new()));
     let t0 = util::now();
     let drainer = {
         let bus = bus.clone();
@@ -161,11 +164,11 @@ pub fn batched_throughput(n_units: usize, threads: usize, shards: usize) -> f64 
             for i in (th * per)..((th + 1) * per) {
                 let id = UnitId(i as u64);
                 let shared = new_unit(id, UnitDescription::sleep(0.0));
-                shared.0.lock().unwrap().bus = Some(Arc::downgrade(&bus));
+                shared.0.lock().bus = Some(Arc::downgrade(&bus));
                 docs.push((id.to_string(), Value::obj(vec![("state", "NEW".into())])));
                 for (k, &to) in CHAIN.iter().enumerate() {
                     let t = (i * CHAIN.len() + k) as f64;
-                    let mut rec = shared.0.lock().unwrap();
+                    let mut rec = shared.0.lock();
                     let from = rec.machine.state();
                     rec.machine.advance(to, t).expect("scripted chain is legal");
                     bus.publish(&shared, id, from, to, t);

@@ -71,6 +71,11 @@ COMMANDS:
                  --component scheduler|stager_in|stager_out|executer
                  --resource LABEL --instances N (1) --nodes N (1)
     resources  list built-in resource configurations
+    lint       static source gate over rust/src (sleep-deny outside the
+                 allowlist, lock-result .unwrap() outside tests,
+                 todo!/unimplemented!, ResourceConfig key drift vs
+                 configs/*.json); exits nonzero on any violation
+                 --src DIR (src) --configs DIR (../configs)
     help       show this help
 
 EXAMPLES:
@@ -98,6 +103,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("micro") => cmd_micro(&args),
         Some("resources") => cmd_resources(),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -413,6 +419,25 @@ fn cmd_micro(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    let src = args.get("src").unwrap_or("src");
+    let configs = args.get("configs").unwrap_or("../configs");
+    let violations =
+        crate::lint::run(std::path::Path::new(src), std::path::Path::new(configs))?;
+    if violations.is_empty() {
+        println!("rp lint: clean ({src})");
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        Err(crate::Error::other(format!(
+            "rp lint: {} violation(s)",
+            violations.len()
+        )))
+    }
+}
+
 fn cmd_resources() -> Result<()> {
     for label in builtin_labels() {
         let c = ResourceConfig::load(&label)?;
@@ -442,6 +467,14 @@ mod tests {
     #[test]
     fn unknown_command_fails() {
         assert_eq!(run(&["frobnicate"]), 1);
+    }
+
+    #[test]
+    fn lint_gate_is_clean() {
+        // cargo test runs with CWD = rust/: the defaults resolve
+        assert_eq!(run(&["lint"]), 0);
+        // a bogus source root is an error, not a silent pass
+        assert_eq!(run(&["lint", "--src", "no-such-dir"]), 1);
     }
 
     #[test]

@@ -2,50 +2,68 @@
 //! state updates travel back.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::util::lockcheck::{CheckedCondvar, CheckedMutex};
 
 /// A multi-producer multi-consumer FIFO with bulk pull, mirroring the
 //  pull-based consumption of RP Agents against MongoDB.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct UnitQueue<T> {
-    inner: Arc<(Mutex<QueueInner<T>>, Condvar)>,
+    inner: Arc<(CheckedMutex<QueueInner<T>>, CheckedCondvar)>,
+}
+
+impl<T> Default for UnitQueue<T> {
+    fn default() -> Self {
+        UnitQueue::new()
+    }
 }
 
 #[derive(Debug)]
 struct QueueInner<T> {
     items: VecDeque<T>,
     closed: bool,
+    /// Consumers currently parked inside [`UnitQueue::pull_wait`] —
+    /// a gauge, maintained under the lock, that lets tests (and
+    /// drain logic) synchronize on "a consumer is actually blocked"
+    /// instead of sleeping and hoping.
+    waiters: usize,
 }
 
 impl<T> Default for QueueInner<T> {
     fn default() -> Self {
-        QueueInner { items: VecDeque::new(), closed: false }
+        QueueInner { items: VecDeque::new(), closed: false, waiters: 0 }
     }
 }
 
 impl<T> UnitQueue<T> {
     pub fn new() -> Self {
-        UnitQueue { inner: Arc::new((Mutex::default(), Condvar::new())) }
+        UnitQueue {
+            inner: Arc::new((
+                CheckedMutex::new("db.queue", QueueInner::default()),
+                CheckedCondvar::new(),
+            )),
+        }
     }
 
     /// Push one item.
     pub fn push(&self, item: T) {
         let (m, cv) = &*self.inner;
-        m.lock().unwrap().items.push_back(item);
+        m.lock().items.push_back(item);
         cv.notify_one();
     }
 
     /// Push many items as one bulk.
     pub fn push_bulk(&self, items: impl IntoIterator<Item = T>) {
         let (m, cv) = &*self.inner;
-        m.lock().unwrap().items.extend(items);
+        m.lock().items.extend(items);
         cv.notify_all();
     }
 
     /// Non-blocking pull of up to `max` items.
     pub fn pull_bulk(&self, max: usize) -> Vec<T> {
         let (m, _) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let mut g = m.lock();
         let n = g.items.len().min(max);
         g.items.drain(..n).collect()
     }
@@ -54,36 +72,65 @@ impl<T> UnitQueue<T> {
     /// Returns an empty vec only when closed and drained.
     pub fn pull_wait(&self, max: usize, timeout: f64) -> Vec<T> {
         let (m, cv) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let mut g = m.lock();
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        let mut parked = false;
         while g.items.is_empty() && !g.closed {
             let now = std::time::Instant::now();
             if now >= deadline {
-                return vec![];
+                break;
             }
-            let (g2, res) = cv.wait_timeout(g, deadline - now).unwrap();
+            if !parked {
+                parked = true;
+                g.waiters += 1;
+                cv.notify_all(); // wake wait_for_waiters observers
+            }
+            let (g2, res) = cv.wait_timeout(g, deadline - now);
             g = g2;
             if res.timed_out() && g.items.is_empty() {
-                return vec![];
+                break;
             }
+        }
+        if parked {
+            g.waiters -= 1;
         }
         let n = g.items.len().min(max);
         g.items.drain(..n).collect()
     }
 
+    /// Block until at least `n` consumers are parked in
+    /// [`pull_wait`](Self::pull_wait), or `timeout` seconds pass.
+    /// Returns whether the target was reached.  This is the condvar
+    /// replacement for "sleep a while and assume the consumer got
+    /// there" in tests.
+    pub fn wait_for_waiters(&self, n: usize, timeout: f64) -> bool {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout);
+        while g.waiters < n {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g2, _) = cv.wait_timeout(g, deadline - now);
+            g = g2;
+        }
+        true
+    }
+
     /// Mark the queue closed (producers done); consumers drain then stop.
     pub fn close(&self) {
         let (m, cv) = &*self.inner;
-        m.lock().unwrap().closed = true;
+        m.lock().closed = true;
         cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.0.lock().unwrap().closed
+        self.inner.0.lock().closed
     }
 
     pub fn len(&self) -> usize {
-        self.inner.0.lock().unwrap().items.len()
+        self.inner.0.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -111,7 +158,8 @@ mod tests {
         let q = UnitQueue::new();
         let q2 = q.clone();
         let h = std::thread::spawn(move || q2.pull_wait(10, 5.0));
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        // condvar-synchronized: the consumer is provably parked
+        assert!(q.wait_for_waiters(1, 5.0));
         q.push(7);
         assert_eq!(h.join().unwrap(), vec![7]);
     }
@@ -129,10 +177,23 @@ mod tests {
         let q: UnitQueue<u32> = UnitQueue::new();
         let q2 = q.clone();
         let h = std::thread::spawn(move || q2.pull_wait(1, 10.0));
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(q.wait_for_waiters(1, 5.0));
         q.close();
         assert!(h.join().unwrap().is_empty());
         assert!(q.is_closed());
+    }
+
+    #[test]
+    fn waiter_gauge_settles_to_zero() {
+        let q: UnitQueue<u32> = UnitQueue::new();
+        // no waiter ever shows up: times out false
+        assert!(!q.wait_for_waiters(1, 0.05));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pull_wait(1, 5.0));
+        assert!(q.wait_for_waiters(1, 5.0));
+        q.push(1);
+        assert_eq!(h.join().unwrap(), vec![1]);
+        assert_eq!(q.inner.0.lock().waiters, 0);
     }
 
     #[test]

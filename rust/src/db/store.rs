@@ -1,17 +1,23 @@
 //! Document store: named collections of JSON documents.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::util::json::Value;
+use crate::util::lockcheck::CheckedRwLock;
 
 /// One collection's documents behind its own lock.  Documents are
 /// stored as `Arc<Value>` so filtered scans ([`Store::find`]) hand out
 /// shared references instead of deep-copying JSON trees; mutation goes
 /// through `Arc::make_mut` (copy-on-write only while a reader still
 /// holds the old document).
-type Shard = RwLock<BTreeMap<String, Arc<Value>>>;
+type Shard = CheckedRwLock<BTreeMap<String, Arc<Value>>>;
+
+fn new_shard() -> Shard {
+    // lock class "db.store.shard": always nested under "db.store"
+    CheckedRwLock::new("db.store.shard", BTreeMap::new())
+}
 
 /// A concurrent, in-process document store.
 ///
@@ -30,33 +36,38 @@ type Shard = RwLock<BTreeMap<String, Arc<Value>>>;
 /// other), so `drop_collection` linearizes with in-flight writes — a
 /// write that completes after a drop returns is never silently lost
 /// into a detached shard.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Store {
-    shards: Arc<RwLock<BTreeMap<String, Shard>>>,
+    shards: Arc<CheckedRwLock<BTreeMap<String, Shard>>>,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Store {
     pub fn new() -> Self {
-        Self::default()
+        Store { shards: Arc::new(CheckedRwLock::new("db.store", BTreeMap::new())) }
     }
 
     /// Insert (or replace) a document.
     pub fn insert(&self, collection: &str, id: &str, doc: Value) {
         let doc = Arc::new(doc);
         {
-            let outer = self.shards.read().unwrap();
+            let outer = self.shards.read();
             if let Some(shard) = outer.get(collection) {
-                shard.write().unwrap().insert(id.to_string(), doc);
+                shard.write().insert(id.to_string(), doc);
                 return;
             }
         }
         // first write to this collection: create the shard
-        let mut outer = self.shards.write().unwrap();
+        let mut outer = self.shards.write();
         outer
             .entry(collection.to_string())
-            .or_default()
+            .or_insert_with(new_shard)
             .write()
-            .unwrap()
             .insert(id.to_string(), doc);
     }
 
@@ -65,17 +76,17 @@ impl Store {
     /// whole submission without serializing per-unit on the shard lock.
     pub fn insert_bulk(&self, collection: &str, docs: impl IntoIterator<Item = (String, Value)>) {
         {
-            let outer = self.shards.read().unwrap();
+            let outer = self.shards.read();
             if let Some(shard) = outer.get(collection) {
-                let mut g = shard.write().unwrap();
+                let mut g = shard.write();
                 for (id, doc) in docs {
                     g.insert(id, Arc::new(doc));
                 }
                 return;
             }
         }
-        let mut outer = self.shards.write().unwrap();
-        let mut g = outer.entry(collection.to_string()).or_default().write().unwrap();
+        let mut outer = self.shards.write();
+        let mut g = outer.entry(collection.to_string()).or_insert_with(new_shard).write();
         for (id, doc) in docs {
             g.insert(id, Arc::new(doc));
         }
@@ -83,10 +94,10 @@ impl Store {
 
     /// Fetch a document by id (clones the one document).
     pub fn find_one(&self, collection: &str, id: &str) -> Option<Value> {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         outer
             .get(collection)
-            .and_then(|s| s.read().unwrap().get(id).map(|d| (**d).clone()))
+            .and_then(|s| s.read().get(id).map(|d| (**d).clone()))
     }
 
     /// All (id, doc) pairs matching a predicate.  Documents are returned
@@ -97,12 +108,11 @@ impl Store {
         collection: &str,
         pred: impl Fn(&Value) -> bool,
     ) -> Vec<(String, Arc<Value>)> {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         outer
             .get(collection)
             .map(|s| {
                 s.read()
-                    .unwrap()
                     .iter()
                     .filter(|(_, d)| pred(d))
                     .map(|(k, d)| (k.clone(), Arc::clone(d)))
@@ -115,9 +125,9 @@ impl Store {
     /// copying anything — the zero-allocation alternative to
     /// [`Store::find`] when the caller only aggregates.
     pub fn for_each(&self, collection: &str, mut visit: impl FnMut(&str, &Value)) {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         if let Some(s) = outer.get(collection) {
-            for (k, d) in s.read().unwrap().iter() {
+            for (k, d) in s.read().iter() {
                 visit(k, d);
             }
         }
@@ -125,11 +135,11 @@ impl Store {
 
     /// Set one field of a document.  Errors if the document is missing.
     pub fn update_field(&self, collection: &str, id: &str, key: &str, value: Value) -> Result<()> {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         let shard = outer
             .get(collection)
             .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
-        let mut g = shard.write().unwrap();
+        let mut g = shard.write();
         let doc = g
             .get_mut(id)
             .ok_or_else(|| Error::Db(format!("{collection}/{id} not found")))?;
@@ -150,9 +160,9 @@ impl Store {
         key: &str,
         updates: impl IntoIterator<Item = (String, Value)>,
     ) -> usize {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         let Some(shard) = outer.get(collection) else { return 0 };
-        let mut g = shard.write().unwrap();
+        let mut g = shard.write();
         let mut n = 0;
         for (id, value) in updates {
             if let Some(doc) = g.get_mut(&id) {
@@ -165,30 +175,30 @@ impl Store {
 
     /// Remove a document; returns it if present.
     pub fn remove(&self, collection: &str, id: &str) -> Option<Value> {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         outer
             .get(collection)
-            .and_then(|s| s.write().unwrap().remove(id))
+            .and_then(|s| s.write().remove(id))
             .map(|d| Arc::try_unwrap(d).unwrap_or_else(|a| (*a).clone()))
     }
 
     /// Document count in a collection.
     pub fn count(&self, collection: &str) -> usize {
-        let outer = self.shards.read().unwrap();
+        let outer = self.shards.read();
         outer
             .get(collection)
-            .map(|s| s.read().unwrap().len())
+            .map(|s| s.read().len())
             .unwrap_or(0)
     }
 
     /// Drop a whole collection.
     pub fn drop_collection(&self, collection: &str) {
-        self.shards.write().unwrap().remove(collection);
+        self.shards.write().remove(collection);
     }
 
     /// Names of existing collections.
     pub fn collections(&self) -> Vec<String> {
-        self.shards.read().unwrap().keys().cloned().collect()
+        self.shards.read().keys().cloned().collect()
     }
 }
 

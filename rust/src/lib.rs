@@ -60,6 +60,7 @@ pub mod config;
 pub mod db;
 pub mod error;
 pub mod ids;
+pub mod lint;
 pub mod profiler;
 pub mod runtime;
 pub mod saga;

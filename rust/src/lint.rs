@@ -1,0 +1,440 @@
+//! `rp lint` — the crate's own zero-dependency static source gate.
+//!
+//! Clippy checks what any Rust crate should hold; this pass checks
+//! what *this* runtime must hold.  It scans `rust/src` line by line
+//! (no rustc, no syn — the same hand-rolled spirit as `util::json`)
+//! and denies:
+//!
+//! * **`thread::sleep`** outside [`SLEEP_ALLOWLIST`] — the runtime is
+//!   event-driven end to end (condvars, the poll reactor, the
+//!   transition bus); a sleep in the tree is either modeled latency
+//!   (the one allowlisted helper) or a latent polling loop.
+//! * **`.unwrap()` on lock results** outside `#[cfg(test)]` regions —
+//!   a panicking worker must not cascade poison-aborts through every
+//!   other thread; non-test code routes through the poison-recovering
+//!   [`crate::util::sync::lock_ok`] or the
+//!   [`crate::util::lockcheck`] wrappers instead.
+//! * **`todo!` / `unimplemented!`** anywhere — unreachable stubs
+//!   do not ship.
+//! * **config-key drift** — every `agent.*`/`staging.*` key that
+//!   `ResourceConfig::from_json` reads must appear in all four
+//!   `configs/*.json`, so a key added to the schema cannot silently
+//!   fall back to its default on the shipped resources.
+//!
+//! Wired into CI's lint job (`cargo run --bin rp -- lint`); the unit
+//! tests below are the self-test proving each rule fires on a seeded
+//! violation.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Files (path suffixes, `/`-separated) where `thread::sleep` is
+/// sanctioned, with the reason on record.
+pub const SLEEP_ALLOWLIST: &[(&str, &str)] = &[
+    ("util/mod.rs", "the modeled-latency sleep() helper itself"),
+    ("util/poll.rs", "test-only pacing for OS signal delivery"),
+    (
+        "agent/executer/spawn.rs",
+        "test-only polling of raw spawn handles, which expose no readiness fd",
+    ),
+    (
+        "agent/executer/reactor.rs",
+        "test-only pacing of the bounded sweep fallback",
+    ),
+];
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// `/`-separated path relative to the scan root.
+    pub file: String,
+    /// 1-based line, 0 for whole-file findings (config cross-check).
+    pub line: usize,
+    /// Rule id: `sleep-deny`, `lock-unwrap`, `todo-deny`, `config-keys`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Line ranges (1-based, inclusive) covered by `#[cfg(test)]` items.
+///
+/// Brace counting starts at the first `{` after the attribute and runs
+/// to its match.  Braces are counted raw: every brace-bearing string
+/// in the tree (format strings, embedded JSON) is internally balanced,
+/// and the lock-unwrap rule this feeds is deliberately conservative —
+/// an unbalanced brace in a string would only ever *shrink* or *grow*
+/// a test region, never invent one.
+fn test_regions(text: &str) -> Vec<(usize, usize)> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim_start().starts_with("#[cfg(test)]") {
+            let start = i + 1; // 1-based line of the attribute
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < lines.len() {
+                for c in lines[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            regions.push((start, j + 1));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+fn sleep_allowed(rel_path: &str) -> bool {
+    SLEEP_ALLOWLIST.iter().any(|(suffix, _)| rel_path.ends_with(suffix))
+}
+
+/// Lock-result `.unwrap()` patterns.  `.wait(`/`.wait_timeout(` only
+/// ever return poison-carrying results in this tree (condvar waits);
+/// `Unit::wait`/`Pilot::wait_active` return `crate::Result` and are
+/// consumed with `?` or matched, never `.unwrap()` in non-test code.
+const LOCK_UNWRAP_PATTERNS: &[&str] =
+    &[".lock().unwrap()", ".read().unwrap()", ".write().unwrap()"];
+
+/// Lint one source file's text.  `rel_path` is the `/`-separated path
+/// relative to the scan root (used for the sleep allowlist and
+/// reporting).
+pub fn lint_text(rel_path: &str, text: &str) -> Vec<Violation> {
+    // the linter's own pattern tables and self-tests are not violations
+    if rel_path.ends_with("lint.rs") {
+        return Vec::new();
+    }
+    let regions = test_regions(text);
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        if line.contains("thread::sleep") && !sleep_allowed(rel_path) {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: lineno,
+                rule: "sleep-deny",
+                message: "thread::sleep outside the allowlist: use condvar waits, \
+                          util::poll, or util::sleep (modeled latency)"
+                    .into(),
+            });
+        }
+        if line.contains("todo!(") || line.contains("unimplemented!(") {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: lineno,
+                rule: "todo-deny",
+                message: "todo!/unimplemented! must not ship".into(),
+            });
+        }
+        if !in_regions(&regions, lineno) {
+            let lock_unwrap = LOCK_UNWRAP_PATTERNS.iter().any(|p| line.contains(p))
+                || ((line.contains(".wait(") || line.contains(".wait_timeout("))
+                    && line.contains(".unwrap()"));
+            if lock_unwrap {
+                out.push(Violation {
+                    file: rel_path.to_string(),
+                    line: lineno,
+                    rule: "lock-unwrap",
+                    message: "lock-result .unwrap() outside #[cfg(test)]: route through \
+                              util::sync::lock_ok or the util::lockcheck wrappers"
+                        .into(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Harvest the `agent.*` / `staging.*` keys `ResourceConfig::from_json`
+/// reads, straight from `config/resource.rs` source text: every string
+/// literal passed to a `get_*` call on the `ag` / `sg` JSON handles.
+pub fn schema_keys(resource_rs: &str) -> (Vec<String>, Vec<String>) {
+    // collapse whitespace so multi-line builder chains read linearly
+    let mut collapsed = String::with_capacity(resource_rs.len());
+    let mut last_space = false;
+    for c in resource_rs.chars() {
+        if c.is_whitespace() {
+            if !last_space {
+                collapsed.push(' ');
+            }
+            last_space = true;
+        } else {
+            collapsed.push(c);
+            last_space = false;
+        }
+    }
+    let collapsed = collapsed.replace(" .", ".");
+    let harvest = |receiver: &str| -> Vec<String> {
+        let needle = format!("{receiver}.get_");
+        let mut keys = Vec::new();
+        let mut rest: &str = &collapsed;
+        while let Some(pos) = rest.find(&needle) {
+            // word boundary: `ag.get_` must not match `flag.get_`
+            let boundary = pos == 0
+                || !rest[..pos]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            let after = &rest[pos + needle.len()..];
+            if boundary {
+                if let Some(q0) = after.find('"') {
+                    if let Some(q1) = after[q0 + 1..].find('"') {
+                        let key = &after[q0 + 1..q0 + 1 + q1];
+                        if !keys.iter().any(|k| k == key) {
+                            keys.push(key.to_string());
+                        }
+                    }
+                }
+            }
+            rest = after;
+        }
+        keys
+    };
+    (harvest("ag"), harvest("sg"))
+}
+
+/// Cross-check schema keys against the shipped resource configs.
+pub fn check_config_keys(
+    resource_rs: &str,
+    configs: &[(String, Value)],
+) -> Vec<Violation> {
+    let (agent_keys, staging_keys) = schema_keys(resource_rs);
+    let mut out = Vec::new();
+    if agent_keys.is_empty() || staging_keys.is_empty() {
+        out.push(Violation {
+            file: "config/resource.rs".into(),
+            line: 0,
+            rule: "config-keys",
+            message: "schema harvest found no agent/staging keys — \
+                      the extractor no longer matches from_json"
+                .into(),
+        });
+        return out;
+    }
+    for (name, doc) in configs {
+        for (section, keys) in [("agent", &agent_keys), ("staging", &staging_keys)] {
+            let sec = doc.get(section);
+            for key in keys {
+                if *sec.get(key) == Value::Null {
+                    out.push(Violation {
+                        file: name.clone(),
+                        line: 0,
+                        rule: "config-keys",
+                        message: format!(
+                            "missing `{section}.{key}` (read by ResourceConfig::from_json)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Config(format!("lint: read_dir {}: {e}", dir.display())))?;
+    for entry in entries {
+        let path = entry
+            .map_err(|e| Error::Config(format!("lint: read_dir {}: {e}", dir.display())))?
+            .path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over a source tree + configs directory, returning
+/// all findings sorted by file/line.
+pub fn run(src_root: &Path, configs_dir: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    let mut resource_rs = None;
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("lint: read {}: {e}", path.display())))?;
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        if rel.ends_with("config/resource.rs") {
+            resource_rs = Some(text.clone());
+        }
+        out.extend(lint_text(&rel, &text));
+    }
+    match resource_rs {
+        Some(source) => {
+            let mut configs = Vec::new();
+            for label in ["bluewaters", "comet", "localhost", "stampede"] {
+                let path = configs_dir.join(format!("{label}.json"));
+                configs.push((format!("configs/{label}.json"), Value::parse_file(&path)?));
+            }
+            out.extend(check_config_keys(&source, &configs));
+        }
+        None => out.push(Violation {
+            file: "config/resource.rs".into(),
+            line: 0,
+            rule: "config-keys",
+            message: "config/resource.rs not found under the scan root".into(),
+        }),
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- self-test: each rule must fire on a seeded violation ----
+
+    #[test]
+    fn seeded_sleep_violation_fails_the_gate() {
+        let src = "fn spin() {\n    std::thread::sleep(d);\n}\n";
+        let v = lint_text("agent/somewhere.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "sleep-deny");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn allowlisted_file_may_sleep() {
+        let src = "pub fn sleep(secs: f64) { std::thread::sleep(d); }\n";
+        assert!(lint_text("util/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seeded_lock_unwrap_fails_the_gate() {
+        let src = "fn f(m: &Mutex<u8>) {\n    let g = m.lock().unwrap();\n}\n";
+        let v = lint_text("db/somewhere.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "lock-unwrap");
+        // rwlock + condvar shapes too
+        for line in [
+            "s.read().unwrap();",
+            "s.write().unwrap();",
+            "cv.wait(g).unwrap();",
+            "cv.wait_timeout(g, d).unwrap();",
+        ] {
+            let v = lint_text("x.rs", &format!("fn f() {{\n    {line}\n}}\n"));
+            assert_eq!(v.len(), 1, "{line} must be denied: {v:?}");
+        }
+    }
+
+    #[test]
+    fn test_region_lock_unwrap_is_fine() {
+        let src = "pub fn ok() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \    #[test]\n\
+                   \    fn t() { let _ = m.lock().unwrap(); }\n\
+                   }\n";
+        assert!(lint_text("db/somewhere.rs", src).is_empty());
+        // ...but a sleep inside a test region still fails (event-driven
+        // tests; db/queue.rs holds the regression)
+        let src = "#[cfg(test)]\nmod tests {\n fn t() { std::thread::sleep(d); }\n}\n";
+        let v = lint_text("db/queue.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "sleep-deny");
+    }
+
+    #[test]
+    fn seeded_todo_fails_the_gate() {
+        let v = lint_text("x.rs", "fn f() { todo!(\"later\") }\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "todo-deny");
+        let v = lint_text("x.rs", "fn f() { unimplemented!() }\n");
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn schema_harvest_reads_from_json() {
+        let src = r#"
+            let ag = v.get("agent");
+            let sg = v.get("staging");
+            let scheduler_policy = ag.get_str("scheduler_policy", "fifo").to_string();
+            AgentLayout {
+                schedulers: ag.get_u64("schedulers", 1) as usize,
+                reserve_window: ag.get_u64(
+                    "reserve_window",
+                    DEFAULT as u64,
+                ) as usize,
+            }
+            StagingConfig { cache_bytes: sg.get_u64("cache_bytes", ds.cache_bytes) }
+            let flag = other_flag.get_str("not_an_agent_key", "x");
+        "#;
+        let (agent, staging) = schema_keys(src);
+        assert_eq!(agent, vec!["scheduler_policy", "schedulers", "reserve_window"]);
+        assert_eq!(staging, vec!["cache_bytes"]);
+    }
+
+    #[test]
+    fn config_cross_check_flags_missing_key() {
+        let src = r#"ag.get_u64("executers", 1); sg.get_str("policy", "prefetch");"#;
+        let full = Value::parse(
+            r#"{"agent": {"executers": 2}, "staging": {"policy": "serial"}}"#,
+        )
+        .unwrap();
+        let hollow = Value::parse(r#"{"agent": {}, "staging": {}}"#).unwrap();
+        let v = check_config_keys(
+            src,
+            &[("full.json".into(), full), ("hollow.json".into(), hollow)],
+        );
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.file == "hollow.json" && x.rule == "config-keys"));
+    }
+
+    #[test]
+    fn empty_harvest_is_itself_a_violation() {
+        let v = check_config_keys("no keys here", &[]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("harvest"));
+    }
+
+    // ---- the tree itself must be clean (the real gate, in-process) ----
+
+    #[test]
+    fn tree_is_clean() {
+        // cargo test runs with CWD = rust/, so src + ../configs resolve
+        let violations = run(Path::new("src"), Path::new("../configs")).unwrap();
+        assert!(
+            violations.is_empty(),
+            "rp lint found {} violation(s):\n{}",
+            violations.len(),
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -5,6 +5,7 @@ use std::sync::Mutex;
 
 use crate::ids::UnitId;
 use crate::states::UnitState;
+use crate::util::sync::lock_ok;
 
 /// One recorded state-transition event.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,7 +42,7 @@ impl Profiler {
     #[inline]
     pub fn record(&self, t: f64, unit: UnitId, state: UnitState) {
         if self.enabled {
-            self.events.lock().unwrap().push(Event { t, unit, state });
+            lock_ok(self.events.lock()).push(Event { t, unit, state });
         }
     }
 
@@ -53,13 +54,13 @@ impl Profiler {
     #[inline]
     pub fn record_bulk(&self, events: impl IntoIterator<Item = Event>) {
         if self.enabled {
-            self.events.lock().unwrap().extend(events);
+            lock_ok(self.events.lock()).extend(events);
         }
     }
 
     /// Number of recorded events.
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        lock_ok(self.events.lock()).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -68,12 +69,12 @@ impl Profiler {
 
     /// Snapshot the recorded events into an immutable [`Profile`].
     pub fn snapshot(&self) -> Profile {
-        Profile { events: self.events.lock().unwrap().clone() }
+        Profile { events: lock_ok(self.events.lock()).clone() }
     }
 
     /// Drain events (used between experiment repetitions).
     pub fn reset(&self) {
-        self.events.lock().unwrap().clear();
+        lock_ok(self.events.lock()).clear();
     }
 }
 

@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 
 use super::pjrt::Runtime;
 use crate::error::{Error, Result};
+use crate::util::sync::lock_ok;
 
 /// What kind of payload an artifact implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,7 +84,7 @@ impl PayloadStore {
             "md" => {
                 let key = (format!("n{}", info.n), task_id);
                 let (pos, vel, prev_steps) = {
-                    let mut tasks = self.tasks.lock().unwrap();
+                    let mut tasks = lock_ok(self.tasks.lock());
                     let st = tasks.entry(key.clone()).or_insert_with(|| {
                         let (pos, vel) = lattice_init(info.n, 1.5);
                         TaskState { pos, vel, total_steps: 0 }
@@ -100,7 +101,7 @@ impl PayloadStore {
                 let pe = outs[2].first().copied().unwrap_or(0.0) as f64;
                 let ke = outs[3].first().copied().unwrap_or(0.0) as f64;
                 let total = prev_steps + info.steps;
-                let mut tasks = self.tasks.lock().unwrap();
+                let mut tasks = lock_ok(self.tasks.lock());
                 let st = tasks.get_mut(&key).unwrap();
                 st.pos = outs[0].clone();
                 st.vel = outs[1].clone();
@@ -110,7 +111,7 @@ impl PayloadStore {
             "rg" => {
                 let key = (format!("n{}", info.n), task_id);
                 let pos = {
-                    let tasks = self.tasks.lock().unwrap();
+                    let tasks = lock_ok(self.tasks.lock());
                     tasks
                         .get(&key)
                         .map(|st| st.pos.clone())
@@ -123,7 +124,7 @@ impl PayloadStore {
                     .copied()
                     .unwrap_or(0.0) as f64;
                 let steps = {
-                    let tasks = self.tasks.lock().unwrap();
+                    let tasks = lock_ok(self.tasks.lock());
                     tasks.get(&key).map(|s| s.total_steps).unwrap_or(0)
                 };
                 Ok(TaskResult { pe: 0.0, ke_or_rg: rg, total_steps: steps })
@@ -134,7 +135,7 @@ impl PayloadStore {
 
     /// Number of tasks with persisted state.
     pub fn task_count(&self) -> usize {
-        self.tasks.lock().unwrap().len()
+        lock_ok(self.tasks.lock()).len()
     }
 }
 

@@ -10,6 +10,7 @@ use crate::ids::{IdGen, JobId};
 use crate::saga::job::{JobDescription, JobInfo, JobState};
 use crate::util;
 use crate::util::rng::Pcg;
+use crate::util::sync::lock_ok;
 
 struct BatchJob {
     submitted_at: f64,
@@ -67,11 +68,11 @@ impl Adaptor for BatchAdaptor {
         }
         let id: JobId = self.ids.next();
         let queue_wait = if self.queue_wait_mean > 0.0 {
-            self.rng.lock().unwrap().exponential(self.queue_wait_mean)
+            lock_ok(self.rng.lock()).exponential(self.queue_wait_mean)
         } else {
             0.0
         };
-        self.jobs.lock().unwrap().insert(
+        lock_ok(self.jobs.lock()).insert(
             id,
             BatchJob {
                 submitted_at: util::now(),
@@ -88,7 +89,7 @@ impl Adaptor for BatchAdaptor {
     }
 
     fn info(&self, id: JobId) -> Result<JobInfo> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = lock_ok(self.jobs.lock());
         let j = jobs
             .get(&id)
             .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
@@ -97,7 +98,7 @@ impl Adaptor for BatchAdaptor {
     }
 
     fn cancel(&self, id: JobId) -> Result<()> {
-        let mut jobs = self.jobs.lock().unwrap();
+        let mut jobs = lock_ok(self.jobs.lock());
         let j = jobs
             .get_mut(&id)
             .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;

@@ -9,6 +9,7 @@ use crate::error::{Error, Result};
 use crate::ids::{IdGen, JobId};
 use crate::saga::job::{JobDescription, JobInfo, JobState};
 use crate::util;
+use crate::util::sync::lock_ok;
 
 struct ForkJob {
     started_at: f64,
@@ -44,7 +45,7 @@ impl Adaptor for ForkAdaptor {
             return Err(Error::Saga(format!("fork: job '{}' requests 0 cores", jd.name)));
         }
         let id: JobId = self.ids.next();
-        self.jobs.lock().unwrap().insert(
+        lock_ok(self.jobs.lock()).insert(
             id,
             ForkJob { started_at: util::now(), walltime: jd.walltime, overridden: None },
         );
@@ -56,7 +57,7 @@ impl Adaptor for ForkAdaptor {
     }
 
     fn info(&self, id: JobId) -> Result<JobInfo> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = lock_ok(self.jobs.lock());
         let j = jobs
             .get(&id)
             .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;
@@ -71,7 +72,7 @@ impl Adaptor for ForkAdaptor {
     }
 
     fn cancel(&self, id: JobId) -> Result<()> {
-        let mut jobs = self.jobs.lock().unwrap();
+        let mut jobs = lock_ok(self.jobs.lock());
         let j = jobs
             .get_mut(&id)
             .ok_or(Error::Unknown { kind: "job", id: id.to_string() })?;

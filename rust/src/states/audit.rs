@@ -1,0 +1,255 @@
+//! State-machine exhaustiveness audit (paper Figs. 2 & 3).
+//!
+//! Two halves:
+//!
+//! * **Static relation audit** — [`audit`] enumerates the *full*
+//!   transition relation of a state space (every `(from, to)` pair
+//!   `can_transition` admits) and checks the lifecycle invariants the
+//!   rest of the runtime silently assumes: every state is reachable
+//!   from the initial state, every non-final state can still reach a
+//!   final state (no livelock sinks), and final states have no
+//!   successors.  [`audit_unit_states`]/[`audit_pilot_states`] run it
+//!   over [`UnitState`]/[`PilotState`].
+//!
+//! * **Runtime request audit** — [`StateMachine::advance`] feeds
+//!   process-wide counters classifying every transition request:
+//!   accepted, rejected-from-final (the benign cancel/fail race every
+//!   caller handles), or rejected-illegal from a *non-final* state —
+//!   which is always a caller bug.  In debug builds the third kind
+//!   additionally `debug_assert`s unless a test pre-announced it via
+//!   [`expect_illegal`]; integration runs assert
+//!   [`unexpected_illegal`]` == 0` after driving the real agent and
+//!   the DES twins, proving both substrates only ever request legal
+//!   edges.
+//!
+//! [`StateMachine::advance`]: crate::states::machine::StateMachine::advance
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::states::machine::State;
+use crate::states::{PilotState, UnitState};
+
+/// Result of a static relation audit: the counts the assertions were
+/// proved over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuditReport {
+    /// States in the space.
+    pub states: usize,
+    /// Legal directed edges in the full transition relation.
+    pub edges: usize,
+    /// Final (sink) states.
+    pub finals: usize,
+}
+
+/// Enumerate the full legal transition relation of `all`.
+pub fn edges<S: State>(all: &[S]) -> Vec<(S, S)> {
+    let mut out = Vec::new();
+    for &from in all {
+        for &to in all {
+            if from.can_transition(to) {
+                out.push((from, to));
+            }
+        }
+    }
+    out
+}
+
+/// States reachable from `start` over legal edges (including `start`).
+fn reachable<S: State>(all: &[S], start: S) -> Vec<bool> {
+    let idx = |s: S| all.iter().position(|&x| x == s).expect("state listed in ALL");
+    let mut seen = vec![false; all.len()];
+    seen[idx(start)] = true;
+    let mut frontier = vec![start];
+    while let Some(from) = frontier.pop() {
+        for &to in all {
+            if from.can_transition(to) && !seen[idx(to)] {
+                seen[idx(to)] = true;
+                frontier.push(to);
+            }
+        }
+    }
+    seen
+}
+
+/// Audit one state space; panics (with the offending state named) on
+/// any violated invariant.  `all` must list every state, `initial` the
+/// entry state.
+pub fn audit<S: State>(all: &[S], initial: S) -> AuditReport {
+    let relation = edges(all);
+    let finals: Vec<S> = all.iter().copied().filter(|s| s.is_final()).collect();
+    assert!(!finals.is_empty(), "state space has no final state");
+
+    // 1. every state is reachable from the initial state
+    let from_initial = reachable(all, initial);
+    for (i, &s) in all.iter().enumerate() {
+        assert!(from_initial[i], "state {s:?} unreachable from initial {initial:?}");
+    }
+
+    // 2. every non-final state can reach a final state
+    for &s in all {
+        if s.is_final() {
+            continue;
+        }
+        let seen = reachable(all, s);
+        let hits_final = all
+            .iter()
+            .enumerate()
+            .any(|(i, t)| seen[i] && t.is_final());
+        assert!(hits_final, "non-final state {s:?} cannot reach any final state");
+    }
+
+    // 3. finals are sinks
+    for &(from, to) in &relation {
+        assert!(!from.is_final(), "final state {from:?} has successor {to:?}");
+    }
+
+    AuditReport { states: all.len(), edges: relation.len(), finals: finals.len() }
+}
+
+/// Audit the [`UnitState`] space (18 states, paper Fig. 3).
+pub fn audit_unit_states() -> AuditReport {
+    audit(&UnitState::ALL, UnitState::New)
+}
+
+/// Audit the [`PilotState`] space (8 states, paper Fig. 2).
+pub fn audit_pilot_states() -> AuditReport {
+    audit(&PilotState::ALL, PilotState::New)
+}
+
+// ------------------------------------------------- runtime counters
+
+static ACCEPTED: AtomicU64 = AtomicU64::new(0);
+static REJECTED_FROM_FINAL: AtomicU64 = AtomicU64::new(0);
+static REJECTED_ILLEGAL: AtomicU64 = AtomicU64::new(0);
+static EXPECTED_ILLEGAL: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide transition-request counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransitionCounters {
+    /// Legal requests that advanced a machine.
+    pub accepted: u64,
+    /// Requests rejected because the machine was already final — the
+    /// benign cancel/fail race; every caller handles this `Err`.
+    pub rejected_from_final: u64,
+    /// Requests rejected from a *non-final* state: a caller asked for
+    /// an edge the relation does not contain.  Always a bug outside
+    /// tests that pre-announce it with [`expect_illegal`].
+    pub rejected_illegal: u64,
+}
+
+/// Read the counters.
+pub fn counters() -> TransitionCounters {
+    TransitionCounters {
+        accepted: ACCEPTED.load(Ordering::Relaxed),
+        rejected_from_final: REJECTED_FROM_FINAL.load(Ordering::Relaxed),
+        rejected_illegal: REJECTED_ILLEGAL.load(Ordering::Relaxed),
+    }
+}
+
+/// Pre-announce `n` deliberate illegal requests (tests exercising the
+/// rejection path call this *before* requesting the illegal edge).
+pub fn expect_illegal(n: u64) {
+    EXPECTED_ILLEGAL.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Illegal-from-non-final requests beyond what tests pre-announced.
+/// Zero in any healthy process; integration runs assert on it.
+pub fn unexpected_illegal() -> u64 {
+    REJECTED_ILLEGAL
+        .load(Ordering::Relaxed)
+        .saturating_sub(EXPECTED_ILLEGAL.load(Ordering::Relaxed))
+}
+
+/// Record one accepted transition (called by `StateMachine::advance`).
+#[inline]
+pub(crate) fn note_accepted() {
+    ACCEPTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one rejected transition request; `from_final` says whether
+/// the machine was already final (the benign race).  Returns whether
+/// an illegal-from-non-final request was covered by an
+/// [`expect_illegal`] announcement — `debug_assert`ed by the caller.
+#[inline]
+pub(crate) fn note_rejected(from_final: bool) -> bool {
+    if from_final {
+        REJECTED_FROM_FINAL.fetch_add(1, Ordering::Relaxed);
+        true
+    } else {
+        REJECTED_ILLEGAL.fetch_add(1, Ordering::Relaxed);
+        REJECTED_ILLEGAL.load(Ordering::Relaxed)
+            <= EXPECTED_ILLEGAL.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_space_passes_full_audit() {
+        let report = audit_unit_states();
+        assert_eq!(report.states, 18);
+        assert_eq!(report.finals, 3);
+        // the relation is dense: every non-final has >= Failed + Canceled
+        assert!(report.edges >= 2 * (report.states - report.finals));
+    }
+
+    #[test]
+    fn pilot_space_passes_full_audit() {
+        let report = audit_pilot_states();
+        assert_eq!(report.states, 8);
+        assert_eq!(report.finals, 3);
+        // 5 nominal hops + fail/cancel from each of the 5 non-finals
+        assert_eq!(report.edges, 5 + 2 * 5);
+    }
+
+    #[test]
+    fn unit_edge_count_is_exact() {
+        // forward edges: every (a, b) pair with only optional states
+        // between, plus Failed/Canceled from each of the 15 non-finals;
+        // pin the exact count so relation changes are deliberate
+        let n = edges(&UnitState::ALL).len();
+        assert_eq!(n, audit_unit_states().edges);
+        let fail_cancel = 2 * 15;
+        assert!(n > fail_cancel, "forward chain must contribute edges");
+    }
+
+    #[test]
+    fn broken_relation_is_caught() {
+        // a state space whose final has a successor must fail the audit
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        enum Bad {
+            A,
+            B,
+        }
+        impl State for Bad {
+            fn can_transition(self, _to: Self) -> bool {
+                true // even finals have successors: invariant 3 broken
+            }
+            fn is_final(self) -> bool {
+                self == Bad::B
+            }
+            fn transition_error(_f: Self, _t: Self) -> crate::error::Error {
+                crate::error::Error::Config("bad".into())
+            }
+        }
+        let err = std::panic::catch_unwind(|| audit(&[Bad::A, Bad::B], Bad::A));
+        assert!(err.is_err(), "sink violation must panic");
+    }
+
+    #[test]
+    fn counters_classify_requests() {
+        use crate::states::machine::StateMachine;
+        let before = counters();
+        let mut m = StateMachine::new(PilotState::New, 0.0);
+        m.advance(PilotState::PmLaunchingPending, 1.0).unwrap();
+        let after = counters();
+        assert!(after.accepted > before.accepted);
+        // rejected-from-final: the benign race, no expectation needed
+        let mut f = StateMachine::new(PilotState::New, 0.0);
+        f.advance(PilotState::Canceled, 1.0).unwrap();
+        assert!(f.advance(PilotState::Done, 2.0).is_err());
+        assert!(counters().rejected_from_final > before.rejected_from_final);
+    }
+}

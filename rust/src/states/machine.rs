@@ -57,10 +57,25 @@ impl<S: State> StateMachine<S> {
     }
 
     /// Attempt a transition at time `t`; errors if illegal.
+    ///
+    /// Every request feeds the process-wide audit counters
+    /// ([`crate::states::audit::counters`]).  A rejection from a state
+    /// that is already final is the benign cancel/fail race and stays
+    /// an ordinary `Err`; a rejection from a *non-final* state means
+    /// the caller asked for an edge the relation does not contain —
+    /// that is a bug, and debug builds assert on it unless a test
+    /// pre-announced it via [`crate::states::audit::expect_illegal`].
     pub fn advance(&mut self, to: S, t: f64) -> Result<()> {
         if !self.current.can_transition(to) {
+            let covered = crate::states::audit::note_rejected(self.current.is_final());
+            debug_assert!(
+                covered,
+                "illegal transition request {:?} -> {:?} from a non-final state",
+                self.current, to
+            );
             return Err(S::transition_error(self.current, to));
         }
+        crate::states::audit::note_accepted();
         self.current = to;
         self.history.push((t, to));
         Ok(())
@@ -106,6 +121,9 @@ mod tests {
 
     #[test]
     fn illegal_transition_rejected() {
+        // deliberate illegal edge from a non-final state: announce it
+        // so the audit layer knows this rejection is the test's point
+        crate::states::audit::expect_illegal(1);
         let mut m = StateMachine::new(PilotState::New, 0.0);
         let err = m.advance(PilotState::PActive, 1.0).unwrap_err();
         assert!(matches!(err, Error::PilotTransition { .. }));

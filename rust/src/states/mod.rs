@@ -3,8 +3,11 @@
 //! Both entity kinds are stateful with strictly sequential lifecycles;
 //! every transition can instead end in `Failed` or `Canceled`.  The
 //! [`machine::StateMachine`] wrapper enforces legality and notifies the
-//! profiler on every transition.
+//! profiler on every transition; [`audit`] proves the relations'
+//! lifecycle invariants exhaustively and counts every runtime
+//! transition request by legality.
 
+pub mod audit;
 pub mod machine;
 mod pilot;
 mod unit;

@@ -1,14 +1,17 @@
 //! Small self-built substrates: JSON, readiness waiting ([`poll`]),
-//! PRNG + distributions, statistics.
+//! lock-order checking ([`lockcheck`]), poison-recovering lock helpers
+//! ([`sync`]), PRNG + distributions, statistics.
 //!
 //! The offline vendor set has no `serde`/`rand`/`criterion`, so the pieces
 //! the coordinator needs are implemented (and tested) here — the crate is
 //! zero-dependency (std only; see `Cargo.toml`).
 
 pub mod json;
+pub mod lockcheck;
 pub mod poll;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Wall-clock seconds since the process-wide epoch (first call).
 /// Used by the profiler in real mode; sim mode uses the virtual clock.

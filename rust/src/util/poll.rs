@@ -33,6 +33,7 @@
 //! reactor's bounded sweeps ([`WaitSummary::check_all`]).
 
 use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::lock_ok;
 
 /// What ended a [`Waiter::wait`] call.  Several causes can coincide.
 #[derive(Debug, Default)]
@@ -157,7 +158,7 @@ struct ParkState {
 
 impl ParkState {
     fn wake(&self) {
-        *self.seq.lock().unwrap() += 1;
+        *lock_ok(self.seq.lock()) += 1;
         self.cv.notify_all();
     }
 }
@@ -181,7 +182,7 @@ impl ParkWaiter {
 
     fn wait(&mut self, timeout: Option<f64>) -> WaitSummary {
         let mut summary = WaitSummary { check_all: true, ..WaitSummary::default() };
-        let mut seq = self.state.seq.lock().unwrap();
+        let mut seq = lock_ok(self.state.seq.lock());
         match timeout {
             Some(t) => {
                 // re-arm across spurious condvar wakeups until a real
@@ -194,7 +195,7 @@ impl ParkWaiter {
                         break;
                     }
                     let (guard, _) =
-                        self.state.cv.wait_timeout(seq, deadline - now).unwrap();
+                        lock_ok(self.state.cv.wait_timeout(seq, deadline - now));
                     seq = guard;
                 }
                 if *seq != self.seen {
@@ -206,7 +207,7 @@ impl ParkWaiter {
             }
             None => {
                 while *seq == self.seen {
-                    seq = self.state.cv.wait(seq).unwrap();
+                    seq = lock_ok(self.state.cv.wait(seq));
                 }
                 self.seen = *seq;
                 summary.woke = true;
@@ -277,6 +278,7 @@ mod imp {
     use std::sync::{Arc, Mutex, Once, OnceLock};
 
     use super::WaitSummary;
+    use crate::util::sync::lock_ok;
 
     #[repr(C)]
     struct PollFd {
@@ -439,7 +441,7 @@ mod imp {
     /// `None` when the registry is full (the waiter then reports
     /// `event_driven() == false` and the reactor keeps bounded sweeps).
     fn acquire_sig_pipe() -> Option<SigPipe> {
-        if let Some(p) = parked().lock().unwrap().pop() {
+        if let Some(p) = lock_ok(parked().lock()).pop() {
             p.pipe.drain(); // stale wakeups from its parked life
             return Some(p);
         }
@@ -478,7 +480,7 @@ mod imp {
     impl Drop for PollWaiter {
         fn drop(&mut self) {
             if let Some(sig) = self.sig.take() {
-                parked().lock().unwrap().push(sig);
+                lock_ok(parked().lock()).push(sig);
             }
         }
     }

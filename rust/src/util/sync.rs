@@ -1,0 +1,65 @@
+//! Poison-recovering lock helpers.
+//!
+//! Every `std::sync` lock returns `Result<Guard, PoisonError<Guard>>`
+//! so a panic while holding the lock can be observed.  The crate-wide
+//! policy (enforced by `rp lint`, see [`crate::lint`]) is that
+//! non-test code never calls `.unwrap()` on those results: a panicking
+//! worker thread must not cascade into aborting every other component
+//! that later touches the same lock.  All shared state guarded by
+//! plain `std` locks is transition-consistent (records, queues and
+//! gauges are updated in place under the guard, never left half
+//! rewritten across a call that can panic), so recovering the guard
+//! with [`PoisonError::into_inner`] is sound — [`lock_ok`] is that
+//! recovery, spelled once.
+//!
+//! The lock-heavy modules go one step further and use the
+//! [`crate::util::lockcheck`] wrappers, whose `lock()`/`read()`/
+//! `write()` absorb poison internally (they are built on this helper)
+//! and additionally track lock-acquisition order under
+//! `--features lockcheck`.
+
+use std::sync::PoisonError;
+
+/// Unwrap a lock result, recovering the guard from a poisoned lock.
+///
+/// Works for every `std::sync` poison-carrying result shape:
+/// `Mutex::lock`, `RwLock::read`/`write`, `Condvar::wait` (guard) and
+/// `Condvar::wait_timeout` (guard + timeout flag tuples) all return
+/// `Result<G, PoisonError<G>>` for some `G`.
+///
+/// ```
+/// use std::sync::Mutex;
+/// use rp::util::sync::lock_ok;
+///
+/// let m = Mutex::new(41);
+/// *lock_ok(m.lock()) += 1;
+/// assert_eq!(*lock_ok(m.lock()), 42);
+/// ```
+pub fn lock_ok<G>(result: Result<G, PoisonError<G>>) -> G {
+    match result {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_poisoned_guard() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        // poison the mutex by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ok(m.lock()), 7, "guard recovered from poison");
+        *lock_ok(m.lock()) = 8;
+        assert_eq!(*lock_ok(m.lock()), 8);
+    }
+}

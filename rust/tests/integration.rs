@@ -404,11 +404,9 @@ fn synthetic_as_process_spawns_real_sleep() {
     agent.submit(units.clone());
     for u in &units {
         let (m, cv) = &**u;
-        let mut rec = m.lock().unwrap();
+        let mut rec = m.lock();
         while !rec.machine.is_final() {
-            let (r, _) = cv
-                .wait_timeout(rec, std::time::Duration::from_secs(20))
-                .unwrap();
+            let (r, _) = cv.wait_timeout(rec, std::time::Duration::from_secs(20));
             rec = r;
         }
         assert_eq!(rec.machine.state(), UnitState::Done);
@@ -436,4 +434,35 @@ fn launch_method_fallback_on_missing_wrapper() {
     umgr.wait_all(30.0).unwrap();
     assert_eq!(units[0].state(), UnitState::Done);
     pilot.drain().unwrap();
+}
+
+/// Runtime half of the state-machine exhaustiveness audit: drive the
+/// full API pipeline — including the cancel and failure races that
+/// exercise the benign rejected-from-final path — then assert neither
+/// substrate ever requested an illegal edge from a non-final state.
+/// (The counters are process-wide, so this also covers every other
+/// test that ran in this binary before it.)
+#[test]
+fn no_unexpected_illegal_transitions_after_full_pipeline() {
+    let session = Session::new("int-audit");
+    let umgr = session.unit_manager();
+    let pilot = local_pilot(&session, 2);
+    umgr.add_pilot(&pilot);
+    let mut descrs: Vec<UnitDescription> = (0..6)
+        .map(|i| UnitDescription::sleep(0.01).name(format!("audit-{i}")))
+        .collect();
+    // a failure and a cancellation keep the rejection paths honest
+    descrs.push(UnitDescription::executable("/bin/false", vec![]).name("audit-fail"));
+    let units = umgr.submit(descrs).unwrap();
+    units.last().unwrap().cancel(); // may race completion: both legal
+    umgr.wait_all(30.0).unwrap();
+    pilot.drain().unwrap();
+
+    let counters = rp::states::audit::counters();
+    assert!(counters.accepted > 0, "the pipeline recorded transitions");
+    assert_eq!(
+        rp::states::audit::unexpected_illegal(),
+        0,
+        "an illegal from-non-final transition was requested: {counters:?}"
+    );
 }

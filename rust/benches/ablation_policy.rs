@@ -18,7 +18,7 @@ use rp::api::UnitDescription;
 use rp::bench_harness::{policy_probe, policy_probe_with, write_csv, Check, Report};
 use rp::config::ResourceConfig;
 use rp::ids::UnitId;
-use rp::sim::{AgentSim, AgentSimConfig, AgentSimResult};
+use rp::sim::{AgentSim, AgentSimConfig};
 use rp::states::UnitState;
 use rp::workload::Workload;
 
@@ -29,9 +29,11 @@ fn run(st: &ResourceConfig, wl: &Workload, policy: SchedPolicy, mode: SearchMode
     policy_probe(st, wl, PILOT, policy, mode)
 }
 
-/// Virtual time unit `u` entered `state` in a finished sim.
-fn entered_at(r: &AgentSimResult, u: u64, state: UnitState) -> f64 {
-    r.profile.time_of(UnitId(u), state).expect("state recorded")
+/// Virtual time unit `u` entered `state`, from the per-unit index built
+/// once per finished sim (`Profile::times_by_unit`; the per-call
+/// `time_of` scan made these per-unit loops quadratic).
+fn entered_at(idx: &rp::profiler::UnitTimes, u: u64, state: UnitState) -> f64 {
+    idx.time_of(UnitId(u), state).expect("state recorded")
 }
 
 fn heterogeneity_sweep(st: &ResourceConfig, report: &mut Report) {
@@ -125,8 +127,9 @@ fn priority_reorder(st: &ResourceConfig, report: &mut Report) {
     cfg.generation_size = pilot;
     let r = AgentSim::new(st, cfg, &wl).run();
     let n = pilot as u64;
+    let idx = r.profile.times_by_unit();
     let done = |lo: u64, hi: u64| -> Vec<f64> {
-        (lo..hi).map(|u| entered_at(&r, u, UnitState::UmStagingOutPending)).collect()
+        (lo..hi).map(|u| entered_at(&idx, u, UnitState::UmStagingOutPending)).collect()
     };
     let (lows, mids, highs) = (done(0, n), done(n, 2 * n), done(2 * n, 3 * n));
     let max_high = highs.iter().cloned().fold(f64::MIN, f64::max);
@@ -173,8 +176,9 @@ fn fair_share_protects(st: &ResourceConfig, report: &mut Report) {
         cfg.policy = policy;
         cfg.generation_size = pilot;
         let r = AgentSim::new(st, cfg, &wl).run();
+        let idx = r.profile.times_by_unit();
         let total: f64 = (960..1024)
-            .map(|u| entered_at(&r, u, UnitState::UmStagingOutPending))
+            .map(|u| entered_at(&idx, u, UnitState::UmStagingOutPending))
             .sum();
         total / 64.0
     };
@@ -223,9 +227,10 @@ fn starvation_ablation(st: &ResourceConfig, report: &mut Report) {
         cfg.reserve_window = window;
         cfg.generation_size = pilot;
         let r = AgentSim::new(st, cfg, &wl).run();
-        let wide_started = entered_at(&r, wide, UnitState::AExecuting);
+        let idx = r.profile.times_by_unit();
+        let wide_started = entered_at(&idx, wide, UnitState::AExecuting);
         let overtaken = ((wide + 1)..(wide + 1 + 400))
-            .filter(|&u| entered_at(&r, u, UnitState::AExecuting) < wide_started)
+            .filter(|&u| entered_at(&idx, u, UnitState::AExecuting) < wide_started)
             .count();
         println!(
             "reserve_window {window:>3}: wide starts at {wide_started:>6.1}s after \

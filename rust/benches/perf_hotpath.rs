@@ -4,9 +4,16 @@
 //! * DES engine event throughput (target >= 1M events/s so 8k-core
 //!   figures regenerate in seconds);
 //! * full agent-sim events/s on the Fig. 7 heavy configuration;
-//! * real-agent end-to-end unit throughput (sleep-0 units) — the
-//!   real-agent-backed leg of the 100K-concurrency scenario, at the
-//!   scale one local agent can host;
+//! * real-agent end-to-end unit throughput (sleep-0 units) at **two
+//!   scales** (2K and 32K full; 300 and 2K quick) — the real-agent leg
+//!   of the 100K-concurrency scenario.  The flatness check gates the
+//!   de-contended hot path: per-unit cost at the big scale must stay
+//!   within 1.5x the small-scale cost (chained advances + sharded
+//!   profiler + batched hand-offs keep it O(1) per unit);
+//! * contended profiler recording (8 threads): ns/record on the
+//!   production striped recorder, gated against the committed
+//!   trajectory (`prof_record_contended_ns`; the seed-vs-sharded
+//!   speedup itself is `benches/profiler_overhead.rs`);
 //! * 100K-concurrency control-plane scenario on the UM DES twin: the
 //!   whole workload resident in flight at once, per-event cost must
 //!   stay flat from 1K to 100K units (sharded state + batched bus —
@@ -45,8 +52,9 @@ use rp::agent::real::{advance, new_unit, RealAgent, RealAgentConfig, SharedUnit}
 use rp::agent::scheduler::{ContinuousScheduler, CoreScheduler, SchedPolicy, SearchMode};
 use rp::api::{PilotDescription, Session, UmPolicy, UnitDescription, DEFAULT_UM_SHARDS};
 use rp::bench_harness::{
-    batched_throughput, per_unit_baseline_throughput, regression_gate, validate_repo_bench_json,
-    write_bench_json, write_csv, Check, Direction, Report,
+    batched_throughput, contended_record_ns_sharded, per_unit_baseline_throughput,
+    regression_gate, validate_repo_bench_json, write_bench_json, write_csv, Check, Direction,
+    Report,
 };
 use rp::config::ResourceConfig;
 use rp::ids::UnitId;
@@ -82,8 +90,12 @@ fn bench_agent_sim(pilot: usize, gens: usize) -> (f64, f64) {
     (r.events as f64 / r.wall_s, r.wall_s)
 }
 
-fn bench_real_agent(n: usize) -> f64 {
-    let session = Session::with_options("perf-real", true);
+/// Real-agent end-to-end throughput at one scale: `n` sleep-0 units
+/// submit-to-done through a profiled 8-core agent.  `tag` keeps the
+/// per-scale sessions' sandboxes apart; the 32K scale needs the longer
+/// `wait_s`.
+fn bench_real_agent(n: usize, tag: &str, wait_s: f64) -> f64 {
+    let session = Session::with_options(format!("perf-real-{tag}"), true);
     let pmgr = session.pilot_manager();
     let umgr = session.unit_manager();
     let pilot = pmgr
@@ -95,7 +107,7 @@ fn bench_real_agent(n: usize) -> f64 {
     umgr.add_pilot(&pilot);
     let t0 = util::now();
     umgr.submit((0..n).map(|_| UnitDescription::sleep(0.0)).collect()).unwrap();
-    umgr.wait_all(300.0).unwrap();
+    umgr.wait_all(wait_s).unwrap();
     let rate = n as f64 / (util::now() - t0);
     pilot.drain().unwrap();
     session.close();
@@ -241,7 +253,29 @@ fn main() {
     let ev = bench_event_queue(if quick { 200_000 } else { 2_000_000 });
     let (sim_pilot, sim_gens) = if quick { (1024, 2) } else { (8192, 3) };
     let (sim_ev, sim_wall) = bench_agent_sim(sim_pilot, sim_gens);
-    let real = bench_real_agent(if quick { 300 } else { 2000 });
+
+    // real-agent leg at two scales; the flatness check compares their
+    // per-unit costs.  Quick shrinks both scales (the 32K run is
+    // minutes of wall clock), which it logs explicitly below.
+    let (real_small_n, real_big_n) = if quick { (300, 2_000) } else { (2_000, 32_768) };
+    if quick {
+        println!(
+            "quick: real-agent leg at {real_small_n}/{real_big_n} units \
+             (full runs 2_000/32_768; the 32K scale is skipped)"
+        );
+    }
+    let real = bench_real_agent(real_small_n, "small", 300.0);
+    let real_big = bench_real_agent(real_big_n, "big", 600.0);
+    // per-unit cost = 1/rate, so the big/small cost ratio is the
+    // inverse rate ratio; flat scaling keeps it near 1
+    let real_cost_ratio = real / real_big.max(1e-9);
+
+    // contended profiler recording: 8 pipeline-like threads hammering
+    // the striped recorder (ns per record; the seed comparison and the
+    // >= 4x claim live in benches/profiler_overhead.rs)
+    let prof_threads = 8;
+    let prof_per = if quick { 4_000 } else { 40_000 };
+    let prof_record_ns = contended_record_ns_sharded(prof_threads, prof_per);
 
     // 100K-concurrency scenario: small anchor (best-of-3) vs big run
     let (n_small, n_big) = if quick { (1_000, 16_384) } else { (1_000, 100_000) };
@@ -267,7 +301,19 @@ fn main() {
         "agent sim       : {:>12.0} events/s  ({sim_pilot}-core config in {sim_wall:.2}s)",
         sim_ev
     );
-    println!("real agent      : {:>12.0} units/s (sleep-0, 8 cores)", real);
+    println!(
+        "real agent      : {:>12.0} units/s (sleep-0, 8 cores, {real_small_n} units)",
+        real
+    );
+    println!(
+        "real agent big  : {:>12.0} units/s ({real_big_n} units; per-unit cost \
+         {real_cost_ratio:.2}x the {real_small_n}-unit cost)",
+        real_big
+    );
+    println!(
+        "prof record 8thr: {:>12.1} ns/record (striped recorder under contention)",
+        prof_record_ns
+    );
     println!(
         "um sim {n_big:>7}  : {per_ev_big:>12.3} us/event  (peak in-flight {peak_big}, \
          {um_events} events, spawn {um_spawn_rate:.0} units/s)"
@@ -310,6 +356,10 @@ fn main() {
             vec!["agent_sim_events_per_s".into(), format!("{sim_ev:.0}")],
             vec!["agent_sim_wall_s".into(), format!("{sim_wall:.3}")],
             vec!["real_agent_units_per_s".into(), format!("{real:.0}")],
+            vec!["real_agent_big_units".into(), format!("{real_big_n}")],
+            vec!["real_agent_big_units_per_s".into(), format!("{real_big:.0}")],
+            vec!["real_agent_cost_ratio_big_vs_small".into(), format!("{real_cost_ratio:.3}")],
+            vec!["prof_record_contended_ns".into(), format!("{prof_record_ns:.1}")],
             vec!["um_sim_scale_units".into(), format!("{n_big}")],
             vec!["um_sim_per_event_us_small".into(), format!("{per_ev_small:.4}")],
             vec!["um_sim_per_event_us_big".into(), format!("{per_ev_big:.4}")],
@@ -340,6 +390,8 @@ fn main() {
         "hotpath",
         &[
             ("spawn_rate_units_per_s", real, Direction::HigherIsBetter),
+            ("real_agent_units_per_s_32k", real_big, Direction::HigherIsBetter),
+            ("prof_record_contended_ns", prof_record_ns, Direction::LowerIsBetter),
             ("um_sim_per_event_us_big", per_ev_big, Direction::LowerIsBetter),
             ("um_feed_speedup_x", feed_speedup, Direction::HigherIsBetter),
         ],
@@ -354,6 +406,9 @@ fn main() {
             "hotpath",
             &[
                 ("spawn_rate_units_per_s", real),
+                ("real_agent_units_per_s_32k", real_big),
+                ("real_agent_cost_ratio_big_vs_small", real_cost_ratio),
+                ("prof_record_contended_ns", prof_record_ns),
                 ("um_sim_scale_units", n_big as f64),
                 ("um_sim_per_event_us_small", per_ev_small),
                 ("um_sim_per_event_us_big", per_ev_big),
@@ -406,6 +461,14 @@ fn main() {
         "> 100 units/s spawn-to-done",
         real > 100.0,
     ));
+    report.add(Check {
+        label: "real agent per-unit cost flat with scale".into(),
+        paper: format!("{real_big_n}-unit cost <= 1.5x {real_small_n}-unit cost"),
+        measured: format!(
+            "{real_cost_ratio:.2}x ({real:.0} vs {real_big:.0} units/s)"
+        ),
+        ok: real_cost_ratio <= 1.5,
+    });
     report.add(Check {
         label: format!("um sim holds {n_big} units in flight"),
         paper: format!("peak in-flight == {n_big}"),

@@ -70,7 +70,7 @@ use crate::api::descriptions::{UnitDescription, UnitPayload};
 use crate::config::ResourceConfig;
 use crate::error::{Error, Result};
 use crate::ids::UnitId;
-use crate::profiler::Profiler;
+use crate::profiler::{Event, Profiler};
 use crate::runtime::{PayloadStore, TaskResult};
 use crate::states::machine::StateMachine;
 use crate::states::UnitState as S;
@@ -212,21 +212,105 @@ pub(crate) fn publish_locked(
 
 /// Advance a unit's state (recording to the profiler), notify per-unit
 /// waiters and publish the transition to the owning UnitManager's bus.
+/// Single-hop form of [`advance_chain`].
 pub fn advance(unit: &SharedUnit, to: S, profiler: &Profiler) -> Result<()> {
+    advance_chain(unit, &[to], profiler)
+}
+
+/// Advance a unit through a multi-hop transition chain under **one**
+/// record-lock acquisition — the hot-path replacement for a sequence of
+/// [`advance`] calls at the agent's dispatch chain
+/// (`ASchedulingPending → AScheduling → AExecutingPending`) and
+/// completion chain (`… → UmStagingOutPending → Done`).
+///
+/// # Atomicity and failure semantics
+///
+/// The chain is validated hop-by-hop against the transition relation
+/// *before* anything is applied: the first invalid hop fails the whole
+/// chain with `Err(`[`Error::UnitTransition`]`)` naming that hop, and
+/// **nothing** happens — no state advances, no profiler events, no bus
+/// records, no watcher wake.  On success every hop is applied with its
+/// own fresh timestamp (per-unit ordering in the profiler and on the
+/// bus relies on increasing per-unit times) and published to the
+/// UnitManager bus in per-unit order, but the profiler sees one bulk
+/// append, per-unit waiters get one wake, and the bus one notify —
+/// so an N-hop chain costs one lock round instead of N.
+///
+/// # Audit
+///
+/// Accepted hops feed the state-machine audit counters exactly as the
+/// equivalent sequence of [`advance`] calls would (one `accepted` per
+/// hop); a rejected chain counts one rejection, classified by whether
+/// the *current* state was final (the benign cancel/fail race) just
+/// like a single rejected [`advance`].
+pub fn advance_chain(unit: &SharedUnit, chain: &[S], profiler: &Profiler) -> Result<()> {
+    advance_chain_prep(unit, chain, profiler, |_| ((), true)).1
+}
+
+/// [`advance_chain`] with a caller hook run under the same record-lock
+/// acquisition: `prep` may mutate the record (set an outcome, wire wake
+/// handles) and read whatever the caller needs out of it, returning
+/// `(value, apply)`.  `prep`'s effects are kept regardless of the chain
+/// outcome; with `apply == false` the chain is skipped entirely
+/// (returning `Ok(())`) — for callers whose old code conditionally
+/// advanced after inspecting the record.  This is what lets the
+/// pipeline's per-stage *inspect → mutate → advance* sequences collapse
+/// from two or three lock acquisitions to one.
+pub(crate) fn advance_chain_prep<T>(
+    unit: &SharedUnit,
+    chain: &[S],
+    profiler: &Profiler,
+    prep: impl FnOnce(&mut UnitRecord) -> (T, bool),
+) -> (T, Result<()>) {
     let (m, cv) = &**unit;
-    let bus = {
+    let (out, res, bus) = {
         let mut rec = m.lock();
-        let t = util::now();
-        let from = rec.machine.state();
-        rec.machine.advance(to, t)?;
-        profiler.record(t, rec.id, to);
+        let (out, apply) = prep(&mut rec);
+        if !apply || chain.is_empty() {
+            return (out, Ok(()));
+        }
+        // validate the whole chain before applying any hop
+        let mut from = rec.machine.state();
+        let mut invalid = None;
+        for &to in chain {
+            if !from.can_transition(to) {
+                invalid = Some((from, to));
+                break;
+            }
+            from = to;
+        }
+        if let Some((from, to)) = invalid {
+            // mirror the single-advance rejection path exactly (audit
+            // classification + the debug assert on non-final rejects)
+            let covered = crate::states::audit::note_rejected(from.is_final());
+            debug_assert!(
+                covered,
+                "illegal chain hop {from:?} -> {to:?} from a non-final state"
+            );
+            return (out, Err(Error::UnitTransition { from, to }));
+        }
+        // apply: per-hop timestamps and bus records, one profiler bulk
+        // append, one watcher wake
+        let mut events = Vec::with_capacity(chain.len());
+        let mut bus = None;
+        let mut from = rec.machine.state();
+        for &to in chain {
+            let t = util::now();
+            rec.machine.advance(to, t).expect("chain validated above");
+            events.push(Event { t, unit: rec.id, state: to });
+            if let Some(b) = publish_locked(&rec, unit, from, to, t) {
+                bus = Some(b);
+            }
+            from = to;
+        }
+        profiler.record_bulk(events);
         cv.notify_all();
-        publish_locked(&rec, unit, from, to, t)
+        (out, Ok(()), bus)
     };
     if let Some(b) = bus {
         b.notify();
     }
-    Ok(())
+    (out, res)
 }
 
 fn fail_unit(unit: &SharedUnit, err: String, profiler: &Profiler) {
@@ -353,6 +437,13 @@ struct SchedState {
 pub(crate) struct SchedShared {
     state: CheckedMutex<SchedState>,
     wake: CheckedCondvar,
+    /// Armed by [`SchedShared::notify_cancel`] before the wake, consumed
+    /// (`swap(false)`) by the scheduler loop: the O(pool) cancel
+    /// finalization scan runs only on passes a cancellation actually
+    /// reached — an ordinary submit/release pass pays a single atomic
+    /// read instead of one record-lock per pooled unit (which made every
+    /// placement pass O(pool) and the 32K ramp quadratic).
+    cancel_pending: std::sync::atomic::AtomicBool,
 }
 
 impl SchedShared {
@@ -360,6 +451,15 @@ impl SchedShared {
     pub(crate) fn notify_event(&self) {
         self.state.lock().wake_seq += 1;
         self.wake.notify_all();
+    }
+
+    /// Record a *cancellation* event: arm the pool cancel scan, then
+    /// wake.  The flag is set before the wake-sequence bump, so a
+    /// scheduler pass that observes the bump also observes the flag (or
+    /// a later pass does — the flag is only cleared by the consumer).
+    pub(crate) fn notify_cancel(&self) {
+        self.cancel_pending.store(true, std::sync::atomic::Ordering::Release);
+        self.notify_event();
     }
 }
 
@@ -445,6 +545,7 @@ impl RealAgent {
                     released_shares: Vec::new(),
                 }),
                 wake: CheckedCondvar::new(),
+                cancel_pending: std::sync::atomic::AtomicBool::new(false),
             }),
             exec_wake,
             exec_cancel_pending,
@@ -625,24 +726,38 @@ impl RealAgent {
                 if self.cfg.prefetch_workers == 0 && !self.stage_in_inline(&unit) {
                     continue; // staging failed: the unit is final
                 }
-                // AGENT_SCHEDULING_PENDING on entry into the scheduler
-                if advance(&unit, S::ASchedulingPending, &self.profiler).is_err() {
+                // one lock round per admitted unit: wire the wake
+                // handles, read the placement inputs, and enter
+                // AGENT_SCHEDULING_PENDING under the same acquisition
+                let ((canceled, cores, priority, share), entered) = advance_chain_prep(
+                    &unit,
+                    &[S::ASchedulingPending],
+                    &self.profiler,
+                    |rec| {
+                        // cancellation must be able to wake this loop —
+                        // and, once the unit is in flight, the reactor's
+                        // poll
+                        rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
+                        rec.exec_wake = Some(self.exec_wake.clone());
+                        rec.exec_cancel = Some(self.exec_cancel_pending.clone());
+                        (
+                            (
+                                rec.cancel_requested,
+                                rec.descr.cores,
+                                rec.descr.priority,
+                                if fair_share {
+                                    share_tag(&rec.descr)
+                                } else {
+                                    String::new()
+                                },
+                            ),
+                            true,
+                        )
+                    },
+                );
+                if entered.is_err() {
                     continue; // canceled/failed upstream
                 }
-                let (canceled, cores, priority, share) = {
-                    let mut rec = unit.0.lock();
-                    // cancellation must be able to wake this loop — and,
-                    // once the unit is in flight, the reactor's poll
-                    rec.sched_wake = Some(Arc::downgrade(&self.sched_shared));
-                    rec.exec_wake = Some(self.exec_wake.clone());
-                    rec.exec_cancel = Some(self.exec_cancel_pending.clone());
-                    (
-                        rec.cancel_requested,
-                        rec.descr.cores,
-                        rec.descr.priority,
-                        if fair_share { share_tag(&rec.descr) } else { String::new() },
-                    )
-                };
                 // cancellation wins over the oversize check, matching
                 // the shutdown path below
                 if canceled {
@@ -663,11 +778,22 @@ impl RealAgent {
                 pool.push_req(unit, cores, priority, share);
             }
 
-            // finalize cancellations before attempting placement
-            for (unit, _) in
-                pool.retain_or_remove(|u, _| !u.0.lock().cancel_requested)
+            // finalize cancellations before attempting placement — but
+            // only on passes a cancel actually armed (`notify_cancel`):
+            // the scan is O(pool) record locks, which an ordinary
+            // submit/release pass at 32K+ pooled units cannot afford.
+            // A cancel racing past the swap re-arms the flag *and*
+            // bumps the wake sequence, so the next pass scans.
+            if self
+                .sched_shared
+                .cancel_pending
+                .swap(false, std::sync::atomic::Ordering::AcqRel)
             {
-                cancel_unit(&unit, &self.profiler);
+                for (unit, _) in
+                    pool.retain_or_remove(|u, _| !u.0.lock().cancel_requested)
+                {
+                    cancel_unit(&unit, &self.profiler);
+                }
             }
 
             // placement pass: allocate cores under the scheduler lock,
@@ -684,13 +810,21 @@ impl RealAgent {
                 st.stopping
             };
             let any_placed = !placed.is_empty();
-            for (unit, alloc) in placed {
-                let _ = advance(&unit, S::AScheduling, &self.profiler);
-                let _ = advance(&unit, S::AExecutingPending, &self.profiler);
-                self.exec_bridge.send((unit, alloc));
+            for (unit, _) in &placed {
+                // the dispatch chain: both hops under one record lock,
+                // one profiler append, one watcher wake.  A failed
+                // chain (canceled upstream) still ships the unit so the
+                // reactor's intake releases its cores.
+                let _ = advance_chain(
+                    unit,
+                    &[S::AScheduling, S::AExecutingPending],
+                    &self.profiler,
+                );
             }
             if any_placed {
-                // new placements are an executer event: wake its poll
+                // one bridge lock + one notify for the whole batch, and
+                // one executer wake: placements are batched hand-offs
+                self.exec_bridge.send_bulk(placed);
                 self.exec_wake.wake();
             }
 
@@ -738,21 +872,36 @@ impl RealAgent {
     }
 
     /// Release a unit's cores; every release is a scheduling event
-    /// (re-place from the pool).  Under the fair-share policy the
-    /// release also retires the unit's submitter-tag share, routed to
-    /// the scheduler thread through the buffered `released_shares`.
+    /// (re-place from the pool).  Single-unit form of
+    /// [`RealAgent::release_cores_bulk`].
     fn release_cores(&self, unit: &SharedUnit, alloc: &Allocation) {
-        let share = if self.cfg.scheduler_policy == SchedPolicy::FairShare {
-            Some(share_tag(&unit.0.lock().descr))
-        } else {
-            None
-        };
+        self.release_cores_bulk(&[(unit, alloc)]);
+    }
+
+    /// Release a batch of units' cores under **one** scheduler-lock
+    /// acquisition and wake the scheduler **once** — the reactor reaps
+    /// whole completion batches per wakeup, and waking the scheduler
+    /// per unit would fan one wakeup back out into N.  Under the
+    /// fair-share policy each release also retires the unit's
+    /// submitter-tag share, routed to the scheduler thread through the
+    /// buffered `released_shares` (the unit record locks are taken
+    /// before, never inside, the scheduler lock).
+    fn release_cores_bulk(&self, tokens: &[(&SharedUnit, &Allocation)]) {
+        if tokens.is_empty() {
+            return;
+        }
+        let mut shares = Vec::new();
+        if self.cfg.scheduler_policy == SchedPolicy::FairShare {
+            for (unit, alloc) in tokens {
+                shares.push((share_tag(&unit.0.lock().descr), alloc.n_cores()));
+            }
+        }
         {
             let mut st = self.sched_shared.state.lock();
-            st.sched.release(alloc);
-            if let Some(tag) = share {
-                st.released_shares.push((tag, alloc.n_cores()));
+            for (_, alloc) in tokens {
+                st.sched.release(alloc);
             }
+            st.released_shares.extend(shares);
             st.wake_seq += 1;
         }
         self.sched_shared.wake.notify_all();
@@ -769,13 +918,27 @@ impl RealAgent {
     /// a late forward.
     fn stagein_loop(&self) {
         loop {
-            let mut batch = self.stagein_bridge.recv(1);
-            let Some(unit) = batch.pop() else { break };
-            if self.sched_shared.state.lock().stopping {
-                fail_unit(&unit, "agent shutting down".into(), &self.profiler);
-                continue;
+            let batch = self.stagein_bridge.recv(8);
+            if batch.is_empty() {
+                break;
             }
-            self.stage_in_unit(&unit);
+            let stopping = self.sched_shared.state.lock().stopping;
+            // forward the whole staged batch in one bridge pass with one
+            // scheduler wake, instead of a send + wake per unit
+            let mut staged = Vec::with_capacity(batch.len());
+            for unit in batch {
+                if stopping {
+                    fail_unit(&unit, "agent shutting down".into(), &self.profiler);
+                    continue;
+                }
+                if self.stage_in_unit(&unit) {
+                    staged.push(unit);
+                }
+            }
+            if !staged.is_empty() {
+                self.input.send_bulk(staged);
+                self.sched_shared.notify_event();
+            }
         }
         if self.stagein_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1 {
             self.input.close();
@@ -784,31 +947,39 @@ impl RealAgent {
     }
 
     /// Fetch one unit's inputs into its sandbox (prefetch path).
-    fn stage_in_unit(&self, unit: &SharedUnit) {
-        let (id, name, directives, canceled) = {
-            let rec = unit.0.lock();
-            (
-                rec.id,
-                rec.descr.name.clone(),
-                rec.descr.input_staging.clone(),
-                rec.cancel_requested,
-            )
-        };
+    /// Returns true when the unit staged successfully and should be
+    /// forwarded to the scheduler (the caller batches the forwards).
+    fn stage_in_unit(&self, unit: &SharedUnit) -> bool {
+        // stage-in entry: read the directives and enter
+        // AGENT_STAGING_INPUT under one record-lock acquisition; the
+        // fetch itself then overlaps the scheduler's placement pass
+        let ((id, name, directives, canceled), entered) =
+            advance_chain_prep(unit, &[S::AStagingIn], &self.profiler, |rec| {
+                let canceled = rec.cancel_requested;
+                (
+                    (
+                        rec.id,
+                        rec.descr.name.clone(),
+                        rec.descr.input_staging.clone(),
+                        canceled,
+                    ),
+                    !canceled,
+                )
+            });
         if canceled {
             cancel_unit(unit, &self.profiler);
-            return;
+            return false;
         }
-        // AGENT_STAGING_INPUT while the fetch overlaps placement
-        if advance(unit, S::AStagingIn, &self.profiler).is_err() {
-            return; // finalized upstream
+        if entered.is_err() {
+            return false; // finalized upstream
         }
         let dst = self.cfg.sandbox.join(unit_sandbox_name(id, &name));
         match stager::stage_cached(&directives, Path::new("."), &dst, &self.stage_cache) {
-            Ok(_hits) => {
-                self.input.send(unit.clone());
-                self.sched_shared.notify_event();
+            Ok(_hits) => true,
+            Err(e) => {
+                fail_unit(unit, e.to_string(), &self.profiler);
+                false
             }
-            Err(e) => fail_unit(unit, e.to_string(), &self.profiler),
         }
     }
 
@@ -817,14 +988,27 @@ impl RealAgent {
     /// the scheduler thread.  Returns false if the unit was finalized
     /// here (staging failure).
     fn stage_in_inline(&self, unit: &SharedUnit) -> bool {
-        let (id, name, directives) = {
-            let rec = unit.0.lock();
-            if rec.descr.input_staging.is_empty() {
-                return true;
-            }
-            (rec.id, rec.descr.name.clone(), rec.descr.input_staging.clone())
+        // directive read + AStagingIn entry in one record-lock round;
+        // prep skips the chain when there is nothing to stage
+        let (fields, entered) =
+            advance_chain_prep(unit, &[S::AStagingIn], &self.profiler, |rec| {
+                if rec.descr.input_staging.is_empty() {
+                    (None, false)
+                } else {
+                    (
+                        Some((
+                            rec.id,
+                            rec.descr.name.clone(),
+                            rec.descr.input_staging.clone(),
+                        )),
+                        true,
+                    )
+                }
+            });
+        let Some((id, name, directives)) = fields else {
+            return true; // nothing to stage
         };
-        if advance(unit, S::AStagingIn, &self.profiler).is_err() {
+        if entered.is_err() {
             return true; // canceled upstream: the pool intake finalizes it
         }
         let dst = self.cfg.sandbox.join(unit_sandbox_name(id, &name));
@@ -899,10 +1083,20 @@ impl RealAgent {
             let scan_cancels = self
                 .exec_cancel_pending
                 .swap(false, std::sync::atomic::Ordering::AcqRel);
-            for (token, completion) in reactor
+            // reap the whole completion batch, then release all its
+            // cores under one scheduler lock (one scheduler wake) and
+            // hand the batch to the stager in one bridge pass
+            let finished: Vec<(SharedUnit, Allocation)> = reactor
                 .reap(|(unit, _)| scan_cancels && unit.0.lock().cancel_requested)
-            {
-                self.complete_unit(token, completion);
+                .into_iter()
+                .map(|(token, completion)| self.finish_unit(token, completion))
+                .collect();
+            if !finished.is_empty() {
+                let refs: Vec<(&SharedUnit, &Allocation)> =
+                    finished.iter().map(|(u, a)| (u, a)).collect();
+                self.release_cores_bulk(&refs);
+                self.stage_bridge
+                    .send_bulk(finished.into_iter().map(|(u, _)| u));
             }
         }
         self.pool_bridge.close();
@@ -919,17 +1113,30 @@ impl RealAgent {
         placed: Vec<(SharedUnit, Allocation)>,
         pending: &mut VecDeque<(SharedUnit, Allocation)>,
     ) {
+        // one record-lock round per unit (cancel + payload class read
+        // together), and one pool-bridge hand-off for the whole batch
+        let mut blocking = Vec::new();
         for (unit, alloc) in placed {
-            if unit.0.lock().cancel_requested {
+            let (canceled, is_blocking) = {
+                let rec = unit.0.lock();
+                (
+                    rec.cancel_requested,
+                    matches!(rec.descr.payload, UnitPayload::Pjrt { .. }),
+                )
+            };
+            if canceled {
                 // canceled between placement and intake: finalize now
                 // (the pool workers also re-check on pickup)
                 cancel_unit(&unit, &self.profiler);
                 self.release_cores(&unit, &alloc);
-            } else if is_blocking_payload(&unit) {
-                self.pool_bridge.send((unit, alloc));
+            } else if is_blocking {
+                blocking.push((unit, alloc));
             } else {
                 pending.push_back((unit, alloc));
             }
+        }
+        if !blocking.is_empty() {
+            self.pool_bridge.send_bulk(blocking);
         }
     }
 
@@ -942,27 +1149,35 @@ impl RealAgent {
         spawner: &dyn Spawner,
         reactor: &mut Reactor<(SharedUnit, Allocation)>,
     ) {
-        let descr = unit.0.lock().descr.clone();
+        // timer fast path (the synthetic hot path at scale): read the
+        // description and enter AExecuting under one record-lock
+        // acquisition instead of a read lock followed by an advance lock
+        let (descr, entered) =
+            advance_chain_prep(&unit, &[S::AExecuting], &self.profiler, |rec| {
+                let timer = matches!(rec.descr.payload, UnitPayload::Synthetic { .. })
+                    && !self.cfg.synthetic_as_process;
+                (rec.descr.clone(), timer)
+            });
+        if let UnitPayload::Synthetic { duration } = &descr.payload {
+            if !self.cfg.synthetic_as_process {
+                if entered.is_err() {
+                    self.release_cores(&unit, &alloc); // canceled upstream
+                    return;
+                }
+                reactor.admit_timer((unit, alloc), *duration);
+                return;
+            }
+        }
         let argv: Vec<String> = match &descr.payload {
             UnitPayload::Pjrt { .. } => {
-                // normally diverted at intake by `route_placed` (via
-                // `is_blocking_payload`, the routing source of truth);
-                // kept as a fallback so the reactor window can never
-                // gate a blocking payload
+                // normally diverted at intake by `route_placed`; kept as
+                // a fallback so the reactor window can never gate a
+                // blocking payload
                 self.pool_bridge.send((unit, alloc));
                 return;
             }
             UnitPayload::Synthetic { duration } => {
-                if self.cfg.synthetic_as_process {
-                    vec!["sleep".to_string(), format!("{duration}")]
-                } else {
-                    if advance(&unit, S::AExecuting, &self.profiler).is_err() {
-                        self.release_cores(&unit, &alloc);
-                        return;
-                    }
-                    reactor.admit_timer((unit, alloc), *duration);
-                    return;
-                }
+                vec!["sleep".to_string(), format!("{duration}")]
             }
             UnitPayload::Executable { executable, args } => {
                 match select_method(&descr, &self.cfg.mpi_method, &self.cfg.task_method) {
@@ -1010,28 +1225,50 @@ impl RealAgent {
         }
     }
 
-    /// Turn a reactor completion into the pipeline's downstream events:
-    /// record the outcome, release cores (a scheduling event), stage out.
-    fn complete_unit(&self, token: (SharedUnit, Allocation), completion: Completion) {
+    /// Turn a reactor completion into the unit's terminal execution
+    /// state (outcome recorded + `AStagingOutPending`, or a final
+    /// cancel/fail).  Core release and the stager hand-off are batched
+    /// by the caller; the token is returned for that batching.
+    fn finish_unit(
+        &self,
+        token: (SharedUnit, Allocation),
+        completion: Completion,
+    ) -> (SharedUnit, Allocation) {
         let (unit, alloc) = token;
         match completion {
             Completion::Exited(outcome) => {
-                unit.0.lock().outcome = Some(UnitOutcome::Exec(outcome));
-                let _ = advance(&unit, S::AStagingOutPending, &self.profiler);
+                // outcome write + advance under one record-lock round
+                let _ = advance_chain_prep(
+                    &unit,
+                    &[S::AStagingOutPending],
+                    &self.profiler,
+                    |rec| {
+                        rec.outcome = Some(UnitOutcome::Exec(outcome));
+                        ((), true)
+                    },
+                )
+                .1;
             }
             Completion::TimerElapsed => {
-                unit.0.lock().outcome = Some(UnitOutcome::Exec(ExecOutcome {
-                    exit_code: 0,
-                    stdout: String::new(),
-                    stderr: String::new(),
-                }));
-                let _ = advance(&unit, S::AStagingOutPending, &self.profiler);
+                let _ = advance_chain_prep(
+                    &unit,
+                    &[S::AStagingOutPending],
+                    &self.profiler,
+                    |rec| {
+                        rec.outcome = Some(UnitOutcome::Exec(ExecOutcome {
+                            exit_code: 0,
+                            stdout: String::new(),
+                            stderr: String::new(),
+                        }));
+                        ((), true)
+                    },
+                )
+                .1;
             }
             Completion::Canceled => cancel_unit(&unit, &self.profiler),
             Completion::Failed(e) => fail_unit(&unit, e.to_string(), &self.profiler),
         }
-        self.release_cores(&unit, &alloc);
-        self.stage_bridge.send(unit);
+        (unit, alloc)
     }
 
     /// Memoized `which` lookup (per agent + executable).
@@ -1091,11 +1328,17 @@ impl RealAgent {
         };
         match result {
             Ok(outcome) => {
-                {
-                    let mut rec = unit.0.lock();
-                    rec.outcome = Some(outcome);
-                }
-                let _ = advance(unit, S::AStagingOutPending, &self.profiler);
+                // outcome write + advance under one record-lock round
+                let _ = advance_chain_prep(
+                    unit,
+                    &[S::AStagingOutPending],
+                    &self.profiler,
+                    |rec| {
+                        rec.outcome = Some(outcome);
+                        ((), true)
+                    },
+                )
+                .1;
             }
             Err(e) => fail_unit(unit, e.to_string(), &self.profiler),
         }
@@ -1111,23 +1354,28 @@ impl RealAgent {
                 // Move the outcome out of the record for staging (no
                 // clone of the bulk stdout/stderr text); it is restored
                 // below so the API handle keeps serving it after Done.
-                let (name, outcome, failed, out_staging) = {
-                    let mut rec = unit.0.lock();
-                    (
-                        unit_sandbox_name(rec.id, &rec.descr.name),
-                        rec.outcome.take(),
-                        rec.machine.is_final(),
-                        rec.descr.output_staging.clone(),
-                    )
-                };
+                // The read, the take, and the AStagingOut entry share
+                // one record-lock round; prep skips the chain entirely
+                // when the unit already finalized upstream, so a
+                // canceled/failed unit adds no rejected-transition
+                // audit counts here (same as the seed's early-continue).
+                let ((name, outcome, failed, out_staging), entered) =
+                    advance_chain_prep(&unit, &[S::AStagingOut], &self.profiler, |rec| {
+                        let failed = rec.machine.is_final();
+                        (
+                            (
+                                unit_sandbox_name(rec.id, &rec.descr.name),
+                                rec.outcome.take(),
+                                failed,
+                                rec.descr.output_staging.clone(),
+                            ),
+                            !failed,
+                        )
+                    });
                 let restore = |outcome: Option<UnitOutcome>| {
                     unit.0.lock().outcome = outcome;
                 };
-                if failed {
-                    restore(outcome);
-                    continue;
-                }
-                if advance(&unit, S::AStagingOut, &self.profiler).is_err() {
+                if failed || entered.is_err() {
                     restore(outcome);
                     continue;
                 }
@@ -1155,9 +1403,21 @@ impl RealAgent {
                         if !out_staging.is_empty() {
                             let _ = stager::stage(&out_staging, &dir, &self.cfg.sandbox);
                         }
-                        restore(outcome);
-                        let _ = advance(&unit, S::UmStagingOutPending, &self.profiler);
-                        let _ = advance(&unit, S::Done, &self.profiler);
+                        // restore the outcome and run the completion
+                        // tail (UM_STAGING_OUT_PENDING → DONE) under
+                        // one record-lock round with one watcher wake —
+                        // a `wait()`er never observes Done without the
+                        // outcome already restored
+                        let _ = advance_chain_prep(
+                            &unit,
+                            &[S::UmStagingOutPending, S::Done],
+                            &self.profiler,
+                            |rec| {
+                                rec.outcome = outcome;
+                                ((), true)
+                            },
+                        )
+                        .1;
                     }
                     Err(e) => {
                         restore(outcome);
@@ -1181,12 +1441,6 @@ fn unit_sandbox_name(id: UnitId, name: &str) -> String {
     } else {
         format!("{id}-{name}")
     }
-}
-
-/// Does this unit's payload block a thread for its full runtime (and so
-/// belong on the executer pool rather than in the reactor)?
-fn is_blocking_payload(unit: &SharedUnit) -> bool {
-    matches!(unit.0.lock().descr.payload, UnitPayload::Pjrt { .. })
 }
 
 /// Submitter tag of a unit under the fair-share policy: its workload
@@ -1754,5 +2008,90 @@ mod tests {
             "priority 7 ({high_started:.3}s) must start before priority -1 \
              ({low_started:.3}s) despite submission order"
         );
+    }
+
+    /// `advance_chain` must be observationally equivalent to the same
+    /// sequence of single `advance` calls: identical machine history,
+    /// identical profiler event sequence (per-unit order = emission
+    /// order, strictly increasing timestamps), and the same number of
+    /// accepted audit counts per hop.
+    #[test]
+    fn advance_chain_equals_advance_sequence() {
+        let chains: [&[S]; 4] = [
+            &[S::UmSchedulingPending, S::UmScheduling, S::AStagingInPending],
+            &[S::ASchedulingPending, S::AScheduling, S::AExecutingPending],
+            &[S::AExecuting, S::AStagingOutPending],
+            &[S::AStagingOut, S::UmStagingOutPending, S::Done],
+        ];
+        let hops: usize = chains.iter().map(|c| c.len()).sum();
+        let before = crate::states::audit::counters();
+
+        let prof_chain = Profiler::new(true);
+        let chained = new_unit(UnitId(0), UnitDescription::sleep(0.0));
+        for chain in chains {
+            advance_chain(&chained, chain, &prof_chain).unwrap();
+        }
+
+        let prof_seq = Profiler::new(true);
+        let stepped = new_unit(UnitId(0), UnitDescription::sleep(0.0));
+        for chain in chains {
+            for &to in chain {
+                advance(&stepped, to, &prof_seq).unwrap();
+            }
+        }
+
+        // same watcher-visible machine history (state sequence)
+        let states = |u: &SharedUnit| -> Vec<S> {
+            u.0.lock().machine.history().iter().map(|&(_, s)| s).collect()
+        };
+        assert_eq!(states(&chained), states(&stepped));
+        assert_eq!(chained.0.lock().machine.state(), S::Done);
+
+        // same profiler event sequence, strictly increasing per-unit
+        // timestamps (what the stable snapshot merge relies on)
+        let ev_chain = prof_chain.snapshot().events;
+        let ev_seq = prof_seq.snapshot().events;
+        assert_eq!(ev_chain.len(), hops);
+        assert_eq!(
+            ev_chain.iter().map(|e| e.state).collect::<Vec<_>>(),
+            ev_seq.iter().map(|e| e.state).collect::<Vec<_>>()
+        );
+        for w in ev_chain.windows(2) {
+            assert!(w[0].t < w[1].t, "per-unit timestamps must strictly increase");
+        }
+
+        // audit: both units accepted one transition per hop (weak >=
+        // because the counters are process-global and tests run in
+        // parallel)
+        let after = crate::states::audit::counters();
+        assert!(after.accepted >= before.accepted + 2 * hops as u64);
+        assert_eq!(crate::states::audit::unexpected_illegal(), 0);
+    }
+
+    /// The first invalid hop fails the whole chain: no state applied,
+    /// nothing recorded, the error names the offending hop.
+    #[test]
+    fn advance_chain_first_invalid_hop_fails_whole_chain() {
+        let profiler = Profiler::new(true);
+        let u = new_unit(UnitId(0), UnitDescription::sleep(0.0));
+        advance(&u, S::UmSchedulingPending, &profiler).unwrap();
+
+        // hop 1 (UmSchedulingPending -> UmScheduling) is legal, hop 2
+        // (UmScheduling -> New) is not: the chain must reject as a unit
+        crate::states::audit::expect_illegal(1);
+        let err = advance_chain(&u, &[S::UmScheduling, S::New], &profiler).unwrap_err();
+        match err {
+            Error::UnitTransition { from, to } => {
+                assert_eq!(from, S::UmScheduling);
+                assert_eq!(to, S::New);
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+
+        let rec = u.0.lock();
+        assert_eq!(rec.machine.state(), S::UmSchedulingPending, "no hop applied");
+        assert_eq!(rec.machine.history().len(), 2, "history untouched by the chain");
+        drop(rec);
+        assert_eq!(profiler.len(), 1, "nothing recorded for the failed chain");
     }
 }

@@ -83,7 +83,10 @@ impl Unit {
             (rec.sched_wake.clone(), rec.exec_wake.clone(), rec.exec_cancel.clone(), bus)
         };
         if let Some(shared) = wake.and_then(|w| w.upgrade()) {
-            shared.notify_event();
+            // notify_cancel arms the scheduler's cancel-scan flag before
+            // the wake, so only passes that follow a cancellation pay
+            // the O(pool) record-lock sweep
+            shared.notify_cancel();
         }
         // flag before wake: the reactor consumes the flag only after a
         // wakeup, so this order can never lose a cancellation

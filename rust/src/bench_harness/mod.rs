@@ -7,10 +7,12 @@
 //! repository root ([`write_bench_json`]).
 
 pub mod policy;
+pub mod profiling;
 pub mod report;
 pub mod um_feed;
 
 pub use policy::{policy_probe, policy_probe_with};
+pub use profiling::{contended_record_ns_seed, contended_record_ns_sharded, SeedRecorder};
 pub use report::{
     bench_json_path, csv_path, regression_gate, regression_gate_against, validate_bench_json,
     validate_repo_bench_json, write_bench_json, write_csv, Check, Direction, Report,

@@ -1,0 +1,132 @@
+//! Contended-recording ablation: the sharded [`Profiler`] vs the seed's
+//! single-mutex recorder shape.
+//!
+//! The sharded-profiler claim (>= 4x under 8-thread contended
+//! recording, gated by `benches/profiler_overhead.rs`) needs the seed
+//! shape to still exist to measure against, so [`SeedRecorder`] keeps
+//! it verbatim: one global
+//! `Mutex<Vec<Event>>` that every recording thread fights over.  It
+//! doubles as the ordering oracle for the recorder property test in
+//! `profiler/recorder.rs` (its arrival-order log, stably time-sorted,
+//! is exactly what the sharded snapshot must produce) and as the
+//! profiler leg of the seed-path emulation in
+//! [`super::um_feed::per_unit_baseline_throughput`].
+
+use std::sync::{Barrier, Mutex};
+
+use crate::ids::UnitId;
+use crate::profiler::{Event, Profile, Profiler};
+use crate::states::UnitState;
+use crate::util;
+use crate::util::sync::lock_ok;
+
+/// The seed recorder: every `record` takes one process-global mutex.
+/// Kept only as a measurement/ordering baseline — production code uses
+/// the striped [`Profiler`].
+#[derive(Debug, Default)]
+pub struct SeedRecorder {
+    events: Mutex<Vec<Event>>,
+}
+
+impl SeedRecorder {
+    pub fn new() -> SeedRecorder {
+        SeedRecorder { events: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, t: f64, unit: UnitId, state: UnitState) {
+        lock_ok(self.events.lock()).push(Event { t, unit, state });
+    }
+
+    pub fn record_bulk(&self, events: impl IntoIterator<Item = Event>) {
+        lock_ok(self.events.lock()).extend(events);
+    }
+
+    pub fn len(&self) -> usize {
+        lock_ok(self.events.lock()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Arrival-order snapshot: the global mutex serializes pushes, so
+    /// the vector *is* the cross-thread arrival log (the property test
+    /// relies on this).
+    pub fn snapshot(&self) -> Profile {
+        Profile { events: lock_ok(self.events.lock()).clone() }
+    }
+}
+
+/// Drive `record` from `threads` barrier-synchronized threads,
+/// `per_thread` events each, and return the mean wall-clock cost per
+/// `record` call in nanoseconds.  Unit ids are disjoint per thread (the
+/// production pattern: one unit's transitions come from one thread at a
+/// time).
+fn contended_record_ns(
+    threads: usize,
+    per_thread: usize,
+    record: &(dyn Fn(f64, UnitId, UnitState) + Sync),
+) -> f64 {
+    let threads = threads.max(1);
+    let per_thread = per_thread.max(1);
+    let barrier = Barrier::new(threads + 1);
+    let mut elapsed = 0.0f64;
+    std::thread::scope(|s| {
+        for th in 0..threads {
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                for i in 0..per_thread {
+                    let unit = UnitId((th * per_thread + i) as u64);
+                    record(i as f64, unit, UnitState::ALL[i % 16]);
+                }
+                barrier.wait();
+            });
+        }
+        barrier.wait(); // release the recording loops together
+        let t0 = util::now();
+        barrier.wait(); // all threads done
+        elapsed = util::now() - t0;
+    });
+    elapsed * 1e9 / (threads * per_thread) as f64
+}
+
+/// ns per `record` on the sharded [`Profiler`] under contention.
+pub fn contended_record_ns_sharded(threads: usize, per_thread: usize) -> f64 {
+    let p = Profiler::new(true);
+    contended_record_ns(threads, per_thread, &|t, u, s| p.record(t, u, s))
+}
+
+/// ns per `record` on the seed single-mutex shape under contention.
+pub fn contended_record_ns_seed(threads: usize, per_thread: usize) -> f64 {
+    let r = SeedRecorder::new();
+    contended_record_ns(threads, per_thread, &|t, u, s| r.record(t, u, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_recorder_keeps_arrival_order() {
+        let r = SeedRecorder::new();
+        r.record(2.0, UnitId(1), UnitState::New);
+        r.record(1.0, UnitId(2), UnitState::New);
+        r.record_bulk([Event { t: 3.0, unit: UnitId(3), state: UnitState::Done }]);
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+        let snap = r.snapshot();
+        // arrival order, NOT time order — that's the point
+        assert_eq!(snap.events[0].t, 2.0);
+        assert_eq!(snap.events[1].t, 1.0);
+        assert_eq!(snap.events[2].t, 3.0);
+    }
+
+    #[test]
+    fn contended_drivers_measure() {
+        let sharded = contended_record_ns_sharded(2, 500);
+        let seed = contended_record_ns_seed(2, 500);
+        assert!(sharded.is_finite() && sharded > 0.0);
+        assert!(seed.is_finite() && seed > 0.0);
+    }
+}

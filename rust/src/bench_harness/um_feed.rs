@@ -28,6 +28,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use super::profiling::SeedRecorder;
 use crate::agent::real::{new_unit, StateWatch};
 use crate::api::um_state::{drain_once, StateCallback, TransitionBus, UnitShards};
 use crate::api::{Unit, UnitDescription};
@@ -70,7 +71,10 @@ pub fn per_unit_baseline_throughput(n_units: usize, threads: usize) -> f64 {
     let delivered: Arc<Mutex<HashMap<UnitId, UnitState>>> = Arc::new(Mutex::new(HashMap::new()));
     let watch = Arc::new(StateWatch::new());
     let store = Store::new();
-    let profiler = Arc::new(Profiler::new(true));
+    // the seed's profiler was one global mutex; the production
+    // `Profiler` is striped now, so the emulation uses the preserved
+    // seed shape to stay faithful
+    let profiler = Arc::new(SeedRecorder::new());
     let t0 = util::now();
     let mut handles = Vec::new();
     for th in 0..threads {

@@ -132,29 +132,23 @@ impl<'a> Analysis<'a> {
     }
 
     /// Fig. 8 decomposition for every unit that completed execution.
+    ///
+    /// Built over the [`Profile::times_by_unit`] index: one O(events)
+    /// pass, then O(1)-ish lookups per unit — the per-unit
+    /// [`Profile::time_of`] scans this replaced were quadratic in unit
+    /// count.  (States never re-enter, so the index's first-occurrence
+    /// semantics match the old last-write-wins map exactly.)
     pub fn unit_phases(&self) -> Vec<UnitPhases> {
-        #[derive(Default, Clone, Copy)]
-        struct Ts {
-            sched: Option<f64>,
-            pending: Option<f64>,
-            exec: Option<f64>,
-            out: Option<f64>,
-        }
-        let mut map: HashMap<UnitId, Ts> = HashMap::new();
-        for e in &self.profile.events {
-            let ts = map.entry(e.unit).or_default();
-            match e.state {
-                UnitState::AScheduling => ts.sched = Some(e.t),
-                UnitState::AExecutingPending => ts.pending = Some(e.t),
-                UnitState::AExecuting => ts.exec = Some(e.t),
-                UnitState::AStagingOutPending => ts.out = Some(e.t),
-                _ => {}
-            }
-        }
-        let mut out: Vec<UnitPhases> = map
+        let idx = self.profile.times_by_unit();
+        let mut out: Vec<UnitPhases> = self
+            .profile
+            .units()
             .into_iter()
-            .filter_map(|(unit, ts)| {
-                let (s, p, x, o) = (ts.sched?, ts.pending?, ts.exec?, ts.out?);
+            .filter_map(|unit| {
+                let s = idx.time_of(unit, UnitState::AScheduling)?;
+                let p = idx.time_of(unit, UnitState::AExecutingPending)?;
+                let x = idx.time_of(unit, UnitState::AExecuting)?;
+                let o = idx.time_of(unit, UnitState::AStagingOutPending)?;
                 Some(UnitPhases {
                     unit,
                     t_sched: s,
@@ -165,7 +159,7 @@ impl<'a> Analysis<'a> {
                 })
             })
             .collect();
-        out.sort_by(|a, b| a.t_sched.partial_cmp(&b.t_sched).unwrap());
+        out.sort_by(|a, b| a.t_sched.total_cmp(&b.t_sched));
         out
     }
 

@@ -2,10 +2,12 @@
 //!
 //! RP records timestamps of its operations to disk with minimal runtime
 //! effect; utility methods fetch and analyze them.  Here the
-//! [`Profiler`] records `(time, unit, state)` events into an in-memory
-//! ring (optionally mirrored to a file), and [`analysis`] computes the
-//! paper's derived metrics: `ttc_a`, core utilization, concurrency
-//! traces, rate series, and the Fig. 8 per-unit decomposition.
+//! [`Profiler`] records `(time, unit, state)` events into striped
+//! in-memory append buffers (one `prof.shard` stripe per recording
+//! thread — see `recorder.rs` for the ordering model), and [`analysis`]
+//! computes the paper's derived metrics: `ttc_a`, core utilization,
+//! concurrency traces, rate series, and the Fig. 8 per-unit
+//! decomposition.
 //!
 //! The profiler can be disabled at construction; the overhead of enabling
 //! it is characterized by `benches/profiler_overhead.rs` (paper reports
@@ -16,4 +18,4 @@ pub mod analysis;
 mod recorder;
 
 pub use analysis::{Analysis, UnitPhases};
-pub use recorder::{Event, Profile, Profiler};
+pub use recorder::{Event, Profile, Profiler, UnitTimes, DEFAULT_PROF_SHARDS};

@@ -1,11 +1,31 @@
 //! Event recording.
+//!
+//! The recorder is **striped**: `N` independent append buffers
+//! (`prof.shard` lock class), each thread pinned to one stripe, so the
+//! scheduler thread, the reactor, the stage-in prefetch workers, the
+//! executer pool and the UM drainer never contend on one global mutex
+//! the way the seed recorder did (`benches/profiler_overhead.rs`
+//! measures the contended-recording gap against that seed shape, kept
+//! in [`crate::bench_harness::SeedRecorder`]).
+//!
+//! Ordering model: a stripe's vector index is its per-shard sequence
+//! number — events within a stripe are in that stripe's emission
+//! order.  [`Profiler::snapshot`] merges the stripes with a *stable*
+//! timestamp sort, which preserves per-unit emission order because
+//! (a) two same-stripe events keep their sequence order on a
+//! timestamp tie, and (b) one unit's transitions are serialized under
+//! its record lock with a fresh monotonic [`crate::util::now`] per
+//! transition, so same-unit events landing in *different* stripes
+//! carry increasing timestamps.  The order-preservation property test
+//! at the bottom of this file pins both guarantees against the seed
+//! single-mutex recorder.
 
 use std::io::Write as _;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::ids::UnitId;
 use crate::states::UnitState;
-use crate::util::sync::lock_ok;
+use crate::util::lockcheck::CheckedMutex;
 
 /// One recorded state-transition event.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -15,22 +35,55 @@ pub struct Event {
     pub state: UnitState,
 }
 
+/// Default stripe count ([`Profiler::new`]); matches the transition
+/// bus's sharding so the two hot-path fan-outs scale together.
+pub const DEFAULT_PROF_SHARDS: usize = 16;
+
+/// One stripe: an append buffer plus its published length.  `count` is
+/// only written under the stripe lock, so it equals `events.len()` at
+/// every release; reading it lock-free lets [`Profiler::len`] avoid
+/// locks entirely and lets [`Profiler::snapshot`]/[`Profiler::reset`]
+/// skip stripes that were never touched.
+struct Shard {
+    events: CheckedMutex<Vec<Event>>,
+    count: AtomicUsize,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            events: CheckedMutex::new("prof.shard", Vec::with_capacity(1 << 12)),
+            count: AtomicUsize::new(0),
+        }
+    }
+}
+
 /// Thread-safe, optionally-disabled event recorder.
 ///
-/// Designed to be non-invasive: a disabled profiler is a single branch;
-/// an enabled one is a mutex-guarded `Vec::push` (events are fixed-size
-/// `Copy` records; no allocation per event after warm-up).
-#[derive(Debug)]
+/// Designed to be non-invasive: a disabled profiler is a single branch
+/// (no lock is ever constructed or touched); an enabled one is a
+/// striped `Vec::push` under the caller's own stripe lock (events are
+/// fixed-size `Copy` records; no allocation per event after warm-up,
+/// no cross-thread contention on the hot path).
 pub struct Profiler {
     enabled: bool,
-    events: Mutex<Vec<Event>>,
+    shards: Vec<Shard>,
 }
 
 impl Profiler {
     pub fn new(enabled: bool) -> Self {
+        Profiler::with_shards(enabled, DEFAULT_PROF_SHARDS)
+    }
+
+    /// Recorder with an explicit stripe count (benches sweep this).
+    pub fn with_shards(enabled: bool, shards: usize) -> Self {
         Profiler {
             enabled,
-            events: Mutex::new(Vec::with_capacity(if enabled { 1 << 16 } else { 0 })),
+            shards: if enabled {
+                (0..shards.max(1)).map(|_| Shard::new()).collect()
+            } else {
+                Vec::new()
+            },
         }
     }
 
@@ -38,48 +91,120 @@ impl Profiler {
         self.enabled
     }
 
+    /// Stripe count (0 when disabled).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The caller's stripe.  Each recording thread is assigned a
+    /// stripe index once (a process-wide round-robin counter cached in
+    /// a thread-local), so steady-state recording never shares a
+    /// stripe mutex between the pipeline's threads until there are
+    /// more recording threads than stripes.
+    fn stripe(&self) -> &Shard {
+        use std::cell::Cell;
+        static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+        thread_local! {
+            static STRIPE_SEED: Cell<usize> = const { Cell::new(usize::MAX) };
+        }
+        let seed = STRIPE_SEED.with(|c| {
+            let v = c.get();
+            if v != usize::MAX {
+                v
+            } else {
+                let v = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed);
+                c.set(v);
+                v
+            }
+        });
+        &self.shards[seed % self.shards.len()]
+    }
+
     /// Record `unit` entering `state` at time `t`.
     #[inline]
     pub fn record(&self, t: f64, unit: UnitId, state: UnitState) {
-        if self.enabled {
-            lock_ok(self.events.lock()).push(Event { t, unit, state });
+        if !self.enabled {
+            return;
         }
+        let shard = self.stripe();
+        let mut v = shard.events.lock();
+        v.push(Event { t, unit, state });
+        shard.count.store(v.len(), Ordering::Release);
     }
 
-    /// Record many events under one lock acquisition — the flush the
-    /// UnitManager's batched submit/dispatch passes use so a whole
-    /// submission costs one profiler lock, not one per transition.
-    /// Events carry their own timestamps, so a deferred flush loses no
-    /// timing fidelity.
+    /// Record many events under one stripe-lock acquisition — the
+    /// flush the UnitManager's batched submit/dispatch passes and the
+    /// agent's chained advances use so a whole batch costs one
+    /// profiler lock, not one per transition.  Events carry their own
+    /// timestamps, so a deferred flush loses no timing fidelity.
     #[inline]
     pub fn record_bulk(&self, events: impl IntoIterator<Item = Event>) {
-        if self.enabled {
-            lock_ok(self.events.lock()).extend(events);
+        if !self.enabled {
+            return;
         }
+        let shard = self.stripe();
+        let mut v = shard.events.lock();
+        v.extend(events);
+        shard.count.store(v.len(), Ordering::Release);
     }
 
-    /// Number of recorded events.
+    /// Number of recorded events.  Lock-free: sums the stripes'
+    /// published counts; a disabled profiler short-circuits to 0
+    /// without touching any stripe.
     pub fn len(&self) -> usize {
-        lock_ok(self.events.lock()).len()
+        if !self.enabled {
+            return 0;
+        }
+        self.shards.iter().map(|s| s.count.load(Ordering::Acquire)).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Snapshot the recorded events into an immutable [`Profile`].
+    /// Snapshot the recorded events into an immutable [`Profile`]:
+    /// collect every non-empty stripe (empty stripes are skipped
+    /// without locking) and stable-merge by timestamp.  See the module
+    /// docs for why the stable sort preserves per-unit emission order.
     pub fn snapshot(&self) -> Profile {
-        Profile { events: lock_ok(self.events.lock()).clone() }
+        let mut events: Vec<Event> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            if shard.count.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            events.extend_from_slice(&shard.events.lock());
+        }
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Profile { events }
     }
 
-    /// Drain events (used between experiment repetitions).
+    /// Drain events (used between experiment repetitions).  Empty
+    /// stripes are skipped without locking.
     pub fn reset(&self) {
-        lock_ok(self.events.lock()).clear();
+        for shard in &self.shards {
+            if shard.count.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            let mut v = shard.events.lock();
+            v.clear();
+            shard.count.store(0, Ordering::Release);
+        }
+    }
+}
+
+impl std::fmt::Debug for Profiler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Profiler")
+            .field("enabled", &self.enabled)
+            .field("shards", &self.shards.len())
+            .field("events", &self.len())
+            .finish()
     }
 }
 
 /// An immutable profile: the unit-of-analysis the paper's utility methods
-/// operate on.
+/// operate on.  Events are globally time-sorted, with per-unit emission
+/// order preserved (see [`Profiler::snapshot`]).
 #[derive(Debug, Clone, Default)]
 pub struct Profile {
     pub events: Vec<Event>,
@@ -96,11 +221,31 @@ impl Profile {
     }
 
     /// Entry time into `state` for one unit.
+    ///
+    /// This is an O(events) scan; callers that look up many units
+    /// should build a [`UnitTimes`] index once via
+    /// [`Profile::times_by_unit`] instead of calling this in a loop.
     pub fn time_of(&self, unit: UnitId, state: UnitState) -> Option<f64> {
         self.events
             .iter()
             .find(|e| e.unit == unit && e.state == state)
             .map(|e| e.t)
+    }
+
+    /// Build the per-unit first-entry index: O(events) once, then
+    /// O(states-per-unit) per [`UnitTimes::time_of`] lookup — replaces
+    /// the quadratic per-unit [`Profile::time_of`] loops in the fig
+    /// benches.
+    pub fn times_by_unit(&self) -> UnitTimes {
+        let mut map: std::collections::HashMap<UnitId, Vec<(UnitState, f64)>> =
+            std::collections::HashMap::new();
+        for e in &self.events {
+            let v = map.entry(e.unit).or_default();
+            if !v.iter().any(|(s, _)| *s == e.state) {
+                v.push((e.state, e.t));
+            }
+        }
+        UnitTimes { map }
     }
 
     /// All unit ids seen, in first-seen order.
@@ -127,15 +272,49 @@ impl Profile {
     }
 }
 
+/// Per-unit first-entry times, indexed once per [`Profile`]
+/// ([`Profile::times_by_unit`]).  Matches [`Profile::time_of`]
+/// semantics exactly: the *first* event of each `(unit, state)` pair.
+#[derive(Debug, Clone, Default)]
+pub struct UnitTimes {
+    map: std::collections::HashMap<UnitId, Vec<(UnitState, f64)>>,
+}
+
+impl UnitTimes {
+    /// Entry time into `state` for one unit (first occurrence).
+    pub fn time_of(&self, unit: UnitId, state: UnitState) -> Option<f64> {
+        self.map
+            .get(&unit)?
+            .iter()
+            .find(|(s, _)| *s == state)
+            .map(|(_, t)| *t)
+    }
+
+    /// Number of units indexed.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn disabled_records_nothing() {
         let p = Profiler::new(false);
         p.record(1.0, UnitId(0), UnitState::New);
         assert!(p.is_empty());
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.shards(), 0);
+        assert!(p.snapshot().events.is_empty());
+        p.reset(); // no-op, must not panic
     }
 
     #[test]
@@ -172,6 +351,8 @@ mod tests {
         p.record(1.0, UnitId(0), UnitState::New);
         p.reset();
         assert!(p.is_empty());
+        p.record(2.0, UnitId(1), UnitState::New);
+        assert_eq!(p.len(), 1);
     }
 
     #[test]
@@ -188,7 +369,7 @@ mod tests {
 
     #[test]
     fn concurrent_recording() {
-        let p = std::sync::Arc::new(Profiler::new(true));
+        let p = Arc::new(Profiler::new(true));
         let mut handles = vec![];
         for t in 0..4 {
             let p = p.clone();
@@ -202,5 +383,116 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(p.len(), 1000);
+    }
+
+    #[test]
+    fn times_by_unit_matches_time_of() {
+        let p = Profiler::new(true);
+        for i in 0..40u64 {
+            p.record(i as f64, UnitId(i % 8), UnitState::ALL[(i % 16) as usize]);
+        }
+        let prof = p.snapshot();
+        let idx = prof.times_by_unit();
+        assert_eq!(idx.len(), prof.units().len());
+        for unit in prof.units() {
+            for state in UnitState::ALL {
+                assert_eq!(
+                    idx.time_of(unit, state),
+                    prof.time_of(unit, state),
+                    "index diverges from the scan at ({unit:?}, {state:?})"
+                );
+            }
+        }
+    }
+
+    /// The order-preservation property test pinning the sharded
+    /// recorder against the seed single-mutex recorder
+    /// ([`crate::bench_harness::SeedRecorder`]): 8 threads record
+    /// concurrently into both; every event gets a globally unique,
+    /// emission-ordered timestamp (atomic counter).  `snapshot()` must
+    /// be globally time-sorted, and each unit's event order in it must
+    /// equal that unit's emission order — i.e. exactly the seed
+    /// recorder's events stably sorted by time.
+    #[test]
+    fn sharded_snapshot_matches_seed_recorder_order() {
+        let sharded = Arc::new(Profiler::with_shards(true, 4));
+        let seed = Arc::new(crate::bench_harness::SeedRecorder::new());
+        let clock = Arc::new(AtomicU64::new(0));
+        let threads = 8u64;
+        let per = 300u64;
+        let mut handles = vec![];
+        for th in 0..threads {
+            let sharded = sharded.clone();
+            let seed = seed.clone();
+            let clock = clock.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    // each thread owns disjoint units; the shared clock
+                    // makes timestamps globally unique and emission-
+                    // ordered per unit
+                    let t = clock.fetch_add(1, Ordering::SeqCst) as f64;
+                    let unit = UnitId(th * 10 + (i % 10));
+                    let state = UnitState::ALL[(i % 16) as usize];
+                    sharded.record(t, unit, state);
+                    seed.record(t, unit, state);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = sharded.snapshot();
+        assert_eq!(got.events.len(), (threads * per) as usize);
+        // globally time-sorted
+        for w in got.events.windows(2) {
+            assert!(w[0].t <= w[1].t, "snapshot not time-sorted: {:?} > {:?}", w[0], w[1]);
+        }
+        // identical to the seed recorder's arrival log, stably
+        // time-sorted — same multiset AND same per-unit order
+        let mut want = seed.snapshot().events;
+        want.sort_by(|a, b| a.t.total_cmp(&b.t));
+        assert_eq!(got.events, want);
+    }
+
+    /// Per-unit order across *stripes*: several threads advance the
+    /// same unit, serialized by a mutex standing in for the unit's
+    /// record lock (the production discipline).  The per-unit sequence
+    /// in the snapshot must equal the emission sequence even though
+    /// consecutive events land in different stripes.
+    #[test]
+    fn cross_stripe_per_unit_order_preserved() {
+        let p = Arc::new(Profiler::with_shards(true, 4));
+        let clock = Arc::new(AtomicU64::new(0));
+        let record_lock = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let p = p.clone();
+            let clock = clock.clone();
+            let record_lock = record_lock.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    // timestamp + record under the same "record lock",
+                    // exactly how `agent::real::advance` serializes one
+                    // unit's transitions
+                    let mut log = record_lock.lock().unwrap();
+                    let t = clock.fetch_add(1, Ordering::SeqCst) as f64;
+                    let state = UnitState::ALL[(t as usize) % 16];
+                    p.record(t, UnitId(42), state);
+                    log.push((t, state));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let emitted = record_lock.lock().unwrap().clone();
+        let snap: Vec<(f64, UnitState)> = p
+            .snapshot()
+            .events
+            .iter()
+            .filter(|e| e.unit == UnitId(42))
+            .map(|e| (e.t, e.state))
+            .collect();
+        assert_eq!(snap, emitted);
     }
 }

@@ -794,9 +794,12 @@ mod tests {
         assert!(rb.peak_concurrency <= 32);
     }
 
-    /// Virtual time a unit entered a state, from the profile trace.
-    fn entered_at(r: &AgentSimResult, unit: u64, state: S) -> f64 {
-        r.profile.time_of(UnitId(unit), state).expect("state recorded")
+    /// Virtual time a unit entered a state, from the per-unit index
+    /// built once per profile ([`crate::profiler::Profile::times_by_unit`]
+    /// — the per-call `time_of` scan this replaced made these per-unit
+    /// loops quadratic).
+    fn entered_at(idx: &crate::profiler::UnitTimes, unit: u64, state: S) -> f64 {
+        idx.time_of(UnitId(unit), state).expect("state recorded")
     }
 
     /// Starvation regression (reservation window), DES side: a blocked
@@ -829,9 +832,10 @@ mod tests {
         };
         let wide_idx = pilot as u64;
         let smalls_before_wide = |r: &AgentSimResult| {
-            let wide_started = entered_at(r, wide_idx, S::AExecuting);
+            let idx = r.profile.times_by_unit();
+            let wide_started = entered_at(&idx, wide_idx, S::AExecuting);
             ((pilot as u64 + 1)..(pilot as u64 + 1 + 400))
-                .filter(|&u| entered_at(r, u, S::AExecuting) < wide_started)
+                .filter(|&u| entered_at(&idx, u, S::AExecuting) < wide_started)
                 .count()
         };
         let reserved = run(16);
@@ -875,8 +879,9 @@ mod tests {
         cfg.policy = SchedPolicy::Priority;
         cfg.generation_size = pilot;
         let r = AgentSim::new(&stampede(), cfg, &wl).run();
+        let idx = r.profile.times_by_unit();
         let done = |lo: u64, hi: u64| -> Vec<f64> {
-            (lo..hi).map(|u| entered_at(&r, u, S::UmStagingOutPending)).collect()
+            (lo..hi).map(|u| entered_at(&idx, u, S::UmStagingOutPending)).collect()
         };
         let (n, lows, mids, highs) = (
             pilot as u64,
@@ -914,7 +919,9 @@ mod tests {
             cfg.policy = policy;
             cfg.generation_size = pilot;
             let r = AgentSim::new(&stampede(), cfg, &wl).run();
-            let total: f64 = (120..128).map(|u| entered_at(&r, u, S::UmStagingOutPending)).sum();
+            let idx = r.profile.times_by_unit();
+            let total: f64 =
+                (120..128).map(|u| entered_at(&idx, u, S::UmStagingOutPending)).sum();
             total / 8.0
         };
         let fair = mean_minor_done(SchedPolicy::FairShare);

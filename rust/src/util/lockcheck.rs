@@ -53,6 +53,7 @@
 //! | 8 | `agent.sched` | agent scheduler state: wait-pool + core bitmap (`SchedShared`) |
 //! | 9 | `um.bus` | one transition-bus producer queue slot |
 //! | 10 | `um.watch` | state-watch sequence counter |
+//! | 11 | `prof.shard` | one profiler stripe ([`crate::profiler::Profiler`]): recorded *inside* `unit.record` critical sections (`advance_chain` bulk-appends under the record lock), so it orders after the whole spine; it never takes another lock while held, and the sequential stripe sweep in `snapshot`/`reset` holds one stripe at a time |
 //! | — | `db.queue`, `stage.cache`, `stage.memo`, `agent.threads`, `agent.which`, `um.latency` | independent leaves: never held while taking another checked lock |
 //!
 //! [`crate::agent::scheduler::WaitPool`] and

@@ -11,8 +11,8 @@ use crate::config::{builtin_labels, ResourceConfig};
 use crate::error::Result;
 use crate::profiler::Analysis;
 use crate::sim::microbench::{Component, MicroBench};
-use crate::sim::{AgentSim, AgentSimConfig, UmSim, UmSimConfig};
-use crate::workload::{BarrierMode, WorkloadSpec};
+use crate::sim::{AgentSim, AgentSimConfig, FullSim, FullSimConfig, UmSim, UmSimConfig};
+use crate::workload::{BarrierMode, Workload, WorkloadSpec};
 
 pub const USAGE: &str = "\
 rp — a Rust pilot system for many-task workloads (RADICAL-Pilot reproduction)
@@ -67,6 +67,13 @@ COMMANDS:
                    workload over multiple simulated pilots
                  --pilots A,B,.. (pilot sizes for the UM twin;
                    default: a 2:1 heterogeneous split of --cores)
+                 --full: run the integrated full-stack twin — the
+                   UnitManager wave machinery feeding one complete
+                   agent sim per pilot; combines --um-policy/--pilots
+                   with the agent-level flags above (--barrier excluded:
+                   arrivals are paced by UM waves)
+                 --wave N (config sim.wave_size; units bound per UM
+                   wave in the full twin; 0 = whole workload at once)
     micro      component micro-benchmark (paper §IV-B)
                  --component scheduler|stager_in|stager_out|executer
                  --resource LABEL --instances N (1) --nodes N (1)
@@ -82,6 +89,7 @@ EXAMPLES:
     rp run --cores 8 --units 64 --duration 0.05
     rp sim --resource bluewaters --cores 2048 --duration 64
     rp sim --um-policy load_aware --pilots 1536,384 --duration 60
+    rp sim --full --pilots 96,24 --um-policy load_aware --policy backfill
     rp micro --component executer --resource stampede --instances 4 --nodes 2
 ";
 
@@ -146,6 +154,25 @@ fn um_policy_flag(args: &Args) -> Result<Option<UmPolicy>> {
             })
         })
         .transpose()
+}
+
+/// Parse `--pilots A,B,..` into pilot core counts; without the flag,
+/// a 2:1 heterogeneous split of `cores` (shared by the UM twin and the
+/// integrated full-stack twin).
+fn parse_pilots(args: &Args, cores: usize) -> Result<Vec<usize>> {
+    match args.get("pilots") {
+        Some(s) => s
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&c| c > 0)
+                    .ok_or_else(|| crate::Error::other("bad --pilots (e.g. 1536,384)"))
+            })
+            .collect::<Result<_>>(),
+        None => Ok(vec![(cores * 2 / 3).max(1), (cores - cores * 2 / 3).max(1)]),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -262,6 +289,54 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let um_policy = um_policy_flag(args)?;
 
     let cfg = ResourceConfig::load(resource)?;
+    // --full composes both layers: UnitManager binding waves feeding
+    // one complete agent sim per pilot (sim::FullSim)
+    if args.get_bool("full") {
+        if args.get("barrier").is_some() {
+            return Err(crate::Error::other(
+                "--barrier applies to the standalone agent sim; the integrated \
+                 twin (--full) paces arrivals through UnitManager waves",
+            ));
+        }
+        let pilots = parse_pilots(args, cores)?;
+        let n_sched = schedulers.max(1);
+        for &p in &pilots {
+            if !p.is_multiple_of(n_sched) {
+                return Err(crate::Error::other(format!(
+                    "pilot size {p} does not divide evenly over {n_sched} \
+                     scheduler partition(s)"
+                )));
+            }
+        }
+        // flags win over the resource config's sim.* defaults
+        let hit_ratio = match args.get("stage-hit-ratio") {
+            Some(_) => stage_hit_ratio,
+            None => cfg.sim.stage_in_hit_ratio,
+        };
+        let wave = args.get_usize("wave", cfg.sim.wave_size)?;
+        let total: usize = pilots.iter().sum();
+        let wl = WorkloadSpec::generations(total, generations, duration).build();
+        let mut full_cfg = FullSimConfig::new(pilots, um_policy.unwrap_or_default());
+        full_cfg.wave_size = wave;
+        full_cfg.feed_bulk = (cfg.sim.feed_bulk > 0).then_some(cfg.sim.feed_bulk);
+        full_cfg.seed = cfg.sim.seed;
+        full_cfg.agent.schedulers = n_sched;
+        full_cfg.agent.max_inflight = max_inflight;
+        full_cfg.agent.reserve_window = reserve_window;
+        full_cfg.agent.reap_latency = reap_latency.max(0.0);
+        if stage_in {
+            full_cfg.agent.stage_in = true;
+        }
+        full_cfg.agent.stage_in_hit_ratio = hit_ratio;
+        full_cfg.agent.stage_in_prefetch = !stage_serial;
+        if let Some(p) = policy {
+            full_cfg.agent.policy = p;
+        }
+        if let Some(s) = search {
+            full_cfg.agent.search_mode = s;
+        }
+        return cmd_sim_full(&cfg, full_cfg, &wl, generations, duration);
+    }
     // --um-policy / --pilots select the UnitManager-level twin: the
     // workload is late-bound over multiple simulated pilots
     if um_policy.is_some() || args.get("pilots").is_some() {
@@ -286,20 +361,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 )));
             }
         }
-        let pilots: Vec<usize> = match args.get("pilots") {
-            Some(s) => s
-                .split(',')
-                .map(|p| {
-                    p.trim()
-                        .parse::<usize>()
-                        .ok()
-                        .filter(|&c| c > 0)
-                        .ok_or_else(|| crate::Error::other("bad --pilots (e.g. 1536,384)"))
-                })
-                .collect::<Result<_>>()?,
-            // default: a 2:1 heterogeneous split of --cores
-            None => vec![(cores * 2 / 3).max(1), (cores - cores * 2 / 3).max(1)],
-        };
+        let pilots = parse_pilots(args, cores)?;
         return cmd_sim_um(
             &cfg,
             pilots,
@@ -384,6 +446,56 @@ fn cmd_sim_um(
     if r.unbound > 0 {
         println!("unbound: {} units had no eligible pilot", r.unbound);
     }
+    println!("makespan: {:.1}s", r.makespan);
+    println!(
+        "sim: {} events in {:.3}s wall ({:.0} ev/s)",
+        r.events,
+        r.wall_s,
+        r.events as f64 / r.wall_s.max(1e-9)
+    );
+    Ok(())
+}
+
+/// The integrated full-stack twin: UnitManager binding waves feed one
+/// complete agent sim per pilot; completions flow back to pace the
+/// next wave (sim::FullSim).
+fn cmd_sim_full(
+    cfg: &ResourceConfig,
+    full_cfg: FullSimConfig,
+    wl: &Workload,
+    generations: usize,
+    duration: f64,
+) -> Result<()> {
+    let pilots = full_cfg.pilots.clone();
+    let um_policy = full_cfg.policy;
+    let wave = full_cfg.wave_size;
+    let (pname, sname) =
+        (full_cfg.agent.policy.name(), full_cfg.agent.search_mode.name());
+    let total: usize = pilots.iter().sum();
+    let r = FullSim::new(cfg, full_cfg, wl).run();
+    println!("resource: {}  pilots: {pilots:?} ({total} cores)", cfg.label);
+    println!(
+        "um scheduler: policy={} wave={}",
+        um_policy.name(),
+        if wave == 0 { "whole-workload".to_string() } else { wave.to_string() }
+    );
+    println!("agent scheduler: policy={pname} search={sname}");
+    println!(
+        "workload: {} units x {duration}s ({generations} generations)",
+        wl.len()
+    );
+    println!("optimal ttc: {:.1}s", wl.optimal_ttc(total));
+    for i in 0..pilots.len() {
+        println!(
+            "pilot {i}: {:>6} cores  {:>7} units  done at {:>8.1}s",
+            pilots[i], r.per_pilot_units[i], r.per_pilot_makespan[i]
+        );
+    }
+    if r.unbound > 0 {
+        println!("unbound: {} units had no eligible pilot", r.unbound);
+    }
+    println!("ttc_a: {:.1}s", r.ttc_a);
+    println!("core utilization: {:.1}%", 100.0 * r.utilization);
     println!("makespan: {:.1}s", r.makespan);
     println!(
         "sim: {} events in {:.3}s wall ({:.0} ev/s)",
@@ -577,6 +689,46 @@ mod tests {
         // agent-level flags are rejected on the UM-twin path
         assert_eq!(run(&["sim", "--pilots", "32,32", "--policy", "backfill"]), 1);
         assert_eq!(run(&["sim", "--um-policy", "rr", "--max-inflight", "8"]), 1);
+    }
+
+    #[test]
+    fn sim_full_stack_twin() {
+        // integrated twin: UM waves over real agent sims, with agent
+        // knobs applied per pilot
+        assert_eq!(
+            run(&[
+                "sim", "--full", "--pilots", "48,24", "--um-policy", "load_aware",
+                "--policy", "backfill", "--generations", "1", "--duration", "5",
+                "--wave", "24",
+            ]),
+            0
+        );
+        // default heterogeneous pilot split from --cores
+        assert_eq!(
+            run(&[
+                "sim", "--full", "--cores", "96", "--generations", "1",
+                "--duration", "5",
+            ]),
+            0
+        );
+        // staging knobs reach the per-pilot agents
+        assert_eq!(
+            run(&[
+                "sim", "--full", "--pilots", "32,16", "--generations", "1",
+                "--duration", "5", "--stage-in", "--stage-hit-ratio", "0.9",
+            ]),
+            0
+        );
+        // arrivals are paced by UM waves: --barrier is rejected
+        assert_eq!(
+            run(&["sim", "--full", "--pilots", "32,32", "--barrier", "generation"]),
+            1
+        );
+        // pilot sizes must divide over the scheduler partitions
+        assert_eq!(
+            run(&["sim", "--full", "--pilots", "33,32", "--schedulers", "2"]),
+            1
+        );
     }
 
     #[test]

@@ -10,4 +10,4 @@ mod builtin;
 mod resource;
 
 pub use builtin::{builtin, builtin_labels};
-pub use resource::{AgentLayout, Calibration, LaunchMethods, ResourceConfig};
+pub use resource::{AgentLayout, Calibration, LaunchMethods, ResourceConfig, SimDefaults};

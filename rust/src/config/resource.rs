@@ -168,6 +168,29 @@ impl Default for StagingConfig {
     }
 }
 
+/// Defaults for the DES twins' UM-layer knobs.  `rp sim` and the
+/// figure benches read these; real execution mode ignores them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimDefaults {
+    /// Units bound per UM wave in the UM/full twins (0 = bind the whole
+    /// workload at once).
+    pub wave_size: usize,
+    /// UM→Agent feed bulk override (0 = use the calibrated
+    /// `calib.db_bulk_size`).
+    pub feed_bulk: usize,
+    /// Default stage-in cache hit ratio for simulated agents (0..=1;
+    /// 0 models a cold cache).
+    pub stage_in_hit_ratio: f64,
+    /// Default master PRNG seed for simulation runs.
+    pub seed: u64,
+}
+
+impl Default for SimDefaults {
+    fn default() -> Self {
+        SimDefaults { wave_size: 0, feed_bulk: 0, stage_in_hit_ratio: 0.0, seed: 0 }
+    }
+}
+
 /// Full description of a target resource.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResourceConfig {
@@ -187,6 +210,7 @@ pub struct ResourceConfig {
     pub launch_methods: LaunchMethods,
     pub agent: AgentLayout,
     pub staging: StagingConfig,
+    pub sim: SimDefaults,
     pub calib: Calibration,
 }
 
@@ -237,6 +261,14 @@ impl ResourceConfig {
                 "{label}: staging policy '{staging_policy}': expected prefetch|serial"
             )));
         }
+        let sm = v.get("sim");
+        let dm = SimDefaults::default();
+        let stage_in_hit_ratio = sm.get_f64("stage_in_hit_ratio", dm.stage_in_hit_ratio);
+        if !(0.0..=1.0).contains(&stage_in_hit_ratio) {
+            return Err(Error::Config(format!(
+                "{label}: sim stage_in_hit_ratio {stage_in_hit_ratio}: expected 0..=1"
+            )));
+        }
         Ok(ResourceConfig {
             label,
             description: v.get_str("description", "").to_string(),
@@ -271,6 +303,12 @@ impl ResourceConfig {
                 prefetch_workers: sg.get_u64("prefetch_workers", ds.prefetch_workers as u64)
                     as usize,
                 policy: staging_policy,
+            },
+            sim: SimDefaults {
+                wave_size: sm.get_u64("wave_size", dm.wave_size as u64) as usize,
+                feed_bulk: sm.get_u64("feed_bulk", dm.feed_bulk as u64) as usize,
+                stage_in_hit_ratio,
+                seed: sm.get_u64("seed", dm.seed),
             },
             calib: Calibration {
                 sched_rate_mean: c.get_f64("sched_rate_mean", d.sched_rate_mean),
@@ -411,6 +449,42 @@ impl ResourceConfig {
                 }
                 self.staging.policy = value.to_string();
             }
+            "sim.wave_size" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0 (0 = one wave)"
+                    )));
+                }
+                self.sim.wave_size = v as usize;
+            }
+            "sim.feed_bulk" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0 (0 = calibrated bulk)"
+                    )));
+                }
+                self.sim.feed_bulk = v as usize;
+            }
+            "sim.stage_in_hit_ratio" => {
+                let v = num()?;
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected 0..=1"
+                    )));
+                }
+                self.sim.stage_in_hit_ratio = v;
+            }
+            "sim.seed" => {
+                let v = num()?;
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "override {key}={value}: expected >= 0"
+                    )));
+                }
+                self.sim.seed = v as u64;
+            }
             k if k.starts_with("calib.") => {
                 let v = num()?;
                 let c = &mut self.calib;
@@ -467,7 +541,32 @@ mod tests {
         assert_eq!(c.staging.cache_bytes, 256 << 20, "stage cache defaults to 256 MiB");
         assert_eq!(c.staging.prefetch_workers, 2);
         assert_eq!(c.staging.policy, "prefetch");
+        assert_eq!(c.sim.wave_size, 0, "sim defaults to one-wave binding");
+        assert_eq!(c.sim.feed_bulk, 0, "0 = calibrated feed bulk");
+        assert_eq!(c.sim.stage_in_hit_ratio, 0.0, "cold cache by default");
+        assert_eq!(c.sim.seed, 0);
         assert_eq!(c.calib.sched_rate_mean, 158.0);
+    }
+
+    #[test]
+    fn sim_section_parsed_and_validated() {
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4,
+                "sim": {"wave_size": 128, "feed_bulk": 32,
+                        "stage_in_hit_ratio": 0.9, "seed": 7}}"#,
+        )
+        .unwrap();
+        let c = ResourceConfig::from_json(&v).unwrap();
+        assert_eq!(c.sim.wave_size, 128);
+        assert_eq!(c.sim.feed_bulk, 32);
+        assert_eq!(c.sim.stage_in_hit_ratio, 0.9);
+        assert_eq!(c.sim.seed, 7);
+        // an out-of-range hit ratio fails loudly, like the enum strings
+        let v = Value::parse(
+            r#"{"label": "x", "cores_per_node": 4, "sim": {"stage_in_hit_ratio": 1.5}}"#,
+        )
+        .unwrap();
+        assert!(ResourceConfig::from_json(&v).is_err());
     }
 
     #[test]
@@ -597,6 +696,17 @@ mod tests {
         c.apply_override("staging.policy", "serial").unwrap();
         assert_eq!(c.staging.policy, "serial");
         assert!(c.apply_override("staging.policy", "eager").is_err());
+        c.apply_override("sim.wave_size", "256").unwrap();
+        assert_eq!(c.sim.wave_size, 256);
+        assert!(c.apply_override("sim.wave_size", "-1").is_err());
+        c.apply_override("sim.feed_bulk", "64").unwrap();
+        assert_eq!(c.sim.feed_bulk, 64);
+        c.apply_override("sim.stage_in_hit_ratio", "0.5").unwrap();
+        assert_eq!(c.sim.stage_in_hit_ratio, 0.5);
+        assert!(c.apply_override("sim.stage_in_hit_ratio", "1.5").is_err());
+        c.apply_override("sim.seed", "42").unwrap();
+        assert_eq!(c.sim.seed, 42);
+        assert!(c.apply_override("sim.bogus", "1").is_err());
         // typos are rejected rather than silently falling back to fifo
         assert!(c.apply_override("agent.scheduler_policy", "backfil").is_err());
         assert!(c.apply_override("agent.search_mode", "quadratic").is_err());

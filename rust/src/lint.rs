@@ -16,8 +16,8 @@
 //!   [`crate::util::lockcheck`] wrappers instead.
 //! * **`todo!` / `unimplemented!`** anywhere — unreachable stubs
 //!   do not ship.
-//! * **config-key drift** — every `agent.*`/`staging.*` key that
-//!   `ResourceConfig::from_json` reads must appear in all four
+//! * **config-key drift** — every `agent.*`/`staging.*`/`sim.*` key
+//!   that `ResourceConfig::from_json` reads must appear in all four
 //!   `configs/*.json`, so a key added to the schema cannot silently
 //!   fall back to its default on the shipped resources.
 //!
@@ -171,10 +171,11 @@ pub fn lint_text(rel_path: &str, text: &str) -> Vec<Violation> {
     out
 }
 
-/// Harvest the `agent.*` / `staging.*` keys `ResourceConfig::from_json`
-/// reads, straight from `config/resource.rs` source text: every string
-/// literal passed to a `get_*` call on the `ag` / `sg` JSON handles.
-pub fn schema_keys(resource_rs: &str) -> (Vec<String>, Vec<String>) {
+/// Harvest the `agent.*` / `staging.*` / `sim.*` keys
+/// `ResourceConfig::from_json` reads, straight from
+/// `config/resource.rs` source text: every string literal passed to a
+/// `get_*` call on the `ag` / `sg` / `sm` JSON handles.
+pub fn schema_keys(resource_rs: &str) -> (Vec<String>, Vec<String>, Vec<String>) {
     // collapse whitespace so multi-line builder chains read linearly
     let mut collapsed = String::with_capacity(resource_rs.len());
     let mut last_space = false;
@@ -216,7 +217,7 @@ pub fn schema_keys(resource_rs: &str) -> (Vec<String>, Vec<String>) {
         }
         keys
     };
-    (harvest("ag"), harvest("sg"))
+    (harvest("ag"), harvest("sg"), harvest("sm"))
 }
 
 /// Cross-check schema keys against the shipped resource configs.
@@ -224,21 +225,23 @@ pub fn check_config_keys(
     resource_rs: &str,
     configs: &[(String, Value)],
 ) -> Vec<Violation> {
-    let (agent_keys, staging_keys) = schema_keys(resource_rs);
+    let (agent_keys, staging_keys, sim_keys) = schema_keys(resource_rs);
     let mut out = Vec::new();
-    if agent_keys.is_empty() || staging_keys.is_empty() {
+    if agent_keys.is_empty() || staging_keys.is_empty() || sim_keys.is_empty() {
         out.push(Violation {
             file: "config/resource.rs".into(),
             line: 0,
             rule: "config-keys",
-            message: "schema harvest found no agent/staging keys — \
+            message: "schema harvest found no agent/staging/sim keys — \
                       the extractor no longer matches from_json"
                 .into(),
         });
         return out;
     }
     for (name, doc) in configs {
-        for (section, keys) in [("agent", &agent_keys), ("staging", &staging_keys)] {
+        for (section, keys) in
+            [("agent", &agent_keys), ("staging", &staging_keys), ("sim", &sim_keys)]
+        {
             let sec = doc.get(section);
             for key in keys {
                 if *sec.get(key) == Value::Null {
@@ -394,26 +397,34 @@ mod tests {
                 ) as usize,
             }
             StagingConfig { cache_bytes: sg.get_u64("cache_bytes", ds.cache_bytes) }
+            let sm = v.get("sim");
+            SimDefaults {
+                wave_size: sm.get_u64("wave_size", dm.wave_size as u64) as usize,
+                stage_in_hit_ratio: sm.get_f64("stage_in_hit_ratio", dm.stage_in_hit_ratio),
+            }
             let flag = other_flag.get_str("not_an_agent_key", "x");
         "#;
-        let (agent, staging) = schema_keys(src);
+        let (agent, staging, sim) = schema_keys(src);
         assert_eq!(agent, vec!["scheduler_policy", "schedulers", "reserve_window"]);
         assert_eq!(staging, vec!["cache_bytes"]);
+        assert_eq!(sim, vec!["wave_size", "stage_in_hit_ratio"]);
     }
 
     #[test]
     fn config_cross_check_flags_missing_key() {
-        let src = r#"ag.get_u64("executers", 1); sg.get_str("policy", "prefetch");"#;
+        let src = r#"ag.get_u64("executers", 1); sg.get_str("policy", "prefetch");
+                     sm.get_u64("seed", 0);"#;
         let full = Value::parse(
-            r#"{"agent": {"executers": 2}, "staging": {"policy": "serial"}}"#,
+            r#"{"agent": {"executers": 2}, "staging": {"policy": "serial"},
+                "sim": {"seed": 0}}"#,
         )
         .unwrap();
-        let hollow = Value::parse(r#"{"agent": {}, "staging": {}}"#).unwrap();
+        let hollow = Value::parse(r#"{"agent": {}, "staging": {}, "sim": {}}"#).unwrap();
         let v = check_config_keys(
             src,
             &[("full.json".into(), full), ("hollow.json".into(), hollow)],
         );
-        assert_eq!(v.len(), 2, "{v:?}");
+        assert_eq!(v.len(), 3, "{v:?}");
         assert!(v.iter().all(|x| x.file == "hollow.json" && x.rule == "config-keys"));
     }
 

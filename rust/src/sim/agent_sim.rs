@@ -13,11 +13,19 @@
 //! `fair_share` — the overtaking policies bounded by the
 //! anti-starvation reservation window (see [`WaitPool`]).
 //! Component timings come from the calibrated [`MachineModel`].
+//!
+//! The sim is *steppable* (see the [`sim`](crate::sim) module docs):
+//! [`AgentSim::run`] is a thin loop over [`AgentSim::init`],
+//! [`AgentSim::next_time`], and [`AgentSim::step`], so a hierarchical
+//! co-simulator ([`FullSim`](crate::sim::FullSim)) can interleave this
+//! component with others and [`AgentSim::feed`] it units from outside
+//! instead of seeding the whole workload up front.
 
 use std::collections::{HashMap, VecDeque};
 
 use super::engine::EventQueue;
 use super::machine::MachineModel;
+use super::unit::{SimUnitSpec, shape_units};
 use crate::agent::nodelist::Allocation;
 use crate::agent::scheduler::{
     ContinuousScheduler, CoreScheduler, DEFAULT_RESERVE_WINDOW, SchedPolicy, SearchMode,
@@ -104,6 +112,11 @@ pub struct AgentSimConfig {
     pub profile: bool,
     /// PRNG seed.
     pub seed: u64,
+    /// RNG stream selector ([`Pcg::seeded_stream`]): stream 0 is
+    /// bit-identical to the classic seeded generator, so standalone
+    /// traces are unchanged; the integrated twin gives pilot `k` stream
+    /// `k` to decorrelate sibling pilots under one master seed.
+    pub rng_stream: u64,
 }
 
 impl AgentSimConfig {
@@ -131,6 +144,7 @@ impl AgentSimConfig {
             torus: false,
             profile: true,
             seed: 0,
+            rng_stream: 0,
         }
     }
 }
@@ -161,7 +175,8 @@ pub struct AgentSimResult {
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// A batch of units arrives at the agent (index range into `units`).
+    /// A batch of units arrives at the agent (index range into the
+    /// arrival `inbox`, whose entries are unit indices).
     Arrive(u32, u32),
     /// Input stager finished a unit.
     StageInDone(u32),
@@ -178,12 +193,10 @@ enum Ev {
 }
 
 struct SimUnit {
-    duration: f64,
-    cores: usize,
-    /// Placement preference under the `priority` policy.
-    priority: i32,
-    /// Submitter tag under the `fair_share` policy (workload key).
-    share: String,
+    /// Scheduler-relevant shape, shared with the other twins
+    /// ([`shape_units`]); `spec.workload` doubles as the `fair_share`
+    /// submitter tag.
+    spec: SimUnitSpec,
     alloc: Option<Allocation>,
     /// (modeled slots scanned, real words touched) of this unit's
     /// allocation.
@@ -200,6 +213,18 @@ pub struct AgentSim {
     profiler: Profiler,
 
     units: Vec<SimUnit>,
+    /// Arrival order: `Ev::Arrive(lo, hi)` names a range of *this*
+    /// vector, whose entries are unit indices.  Standalone runs fill it
+    /// with the identity (`init`), so ranges read exactly as before; an
+    /// external feeder ([`AgentSim::feed`]) appends arbitrary subsets.
+    inbox: Vec<u32>,
+    /// Units handed to this agent so far (completion target).
+    fed: usize,
+    /// Completions since the last [`AgentSim::drain_completions`]:
+    /// `(virtual time, unit index)` — the upward feedback channel the
+    /// co-simulator routes back into the UM pool.
+    completions: Vec<(f64, u32)>,
+    wall0: std::time::Instant,
     /// One scheduler per core partition (paper design: exactly one).
     scheds: Vec<Box<dyn CoreScheduler>>,
     /// One wait-pool per partition — the same pool type the real Agent
@@ -243,17 +268,9 @@ impl AgentSim {
                 }
             })
             .collect();
-        let units = workload
-            .units
-            .iter()
-            .map(|u| SimUnit {
-                duration: u.duration().unwrap_or(0.0),
-                cores: u.cores,
-                priority: u.priority,
-                share: crate::api::um_scheduler::workload_key(&u.name),
-                alloc: None,
-                alloc_cost: (0, 0),
-            })
+        let units = shape_units(workload)
+            .into_iter()
+            .map(|spec| SimUnit { spec, alloc: None, alloc_cost: (0, 0) })
             .collect::<Vec<_>>();
         let gen = cfg.generation_size.max(1);
         let n = units.len();
@@ -263,6 +280,7 @@ impl AgentSim {
             .collect();
         let profile = cfg.profile;
         let seed = cfg.seed;
+        let stream = cfg.rng_stream;
         let policy = cfg.policy;
         let reserve_window = cfg.reserve_window;
         AgentSim {
@@ -270,9 +288,13 @@ impl AgentSim {
             machine: MachineModel::new(resource.clone()),
             db: LatencyModel::from_calib(&resource.calib),
             q: EventQueue::new(),
-            rng: Pcg::seeded(seed),
+            rng: Pcg::seeded_stream(seed, stream),
             profiler: Profiler::new(profile),
             units,
+            inbox: Vec::new(),
+            fed: 0,
+            completions: Vec::new(),
+            wall0: std::time::Instant::now(),
             pools: (0..scheds.len())
                 .map(|_| WaitPool::new(policy).with_reserve_window(reserve_window))
                 .collect(),
@@ -450,17 +472,18 @@ impl AgentSim {
         let now = self.q.now();
         self.prof(now, u, S::ASchedulingPending);
         let p = self.partition(u);
-        let unit = &self.units[u as usize];
-        let (cores, priority, share) = (unit.cores, unit.priority, unit.share.clone());
+        let spec = &self.units[u as usize].spec;
+        let (cores, priority, share) = (spec.cores, spec.priority, spec.workload.clone());
         self.pools[p].push_req(u, cores, priority, share);
         self.kick_scheduler(p);
     }
 
-    fn handle(&mut self, ev: Ev) {
+    fn handle(&mut self, t: f64, ev: Ev) {
         match ev {
             Ev::Arrive(s, e) => {
-                let now = self.q.now();
-                for u in s..e {
+                let now = t;
+                for i in s..e {
+                    let u = self.inbox[i as usize];
                     self.prof(now, u, S::AStagingInPending);
                     if self.cfg.stage_in {
                         self.stage_in_queue.push_back(u);
@@ -487,7 +510,7 @@ impl AgentSim {
             Ev::SchedDone(u) => {
                 let p = self.partition(u);
                 self.sched_busy[p] = false;
-                let now = self.q.now();
+                let now = t;
                 self.prof(now, u, S::AExecutingPending);
                 self.exec_queue.push_back(u);
                 self.kick_executer();
@@ -502,9 +525,9 @@ impl AgentSim {
                 self.exec_busy = false;
                 self.exec_inflight += 1;
                 self.spawned_count += 1;
-                let now = self.q.now();
+                let now = t;
                 self.prof(now, u, S::AExecuting);
-                let mut d = self.units[u as usize].duration;
+                let mut d = self.units[u as usize].spec.duration;
                 if self.cfg.reap_latency > 0.0 {
                     // sweep-based reaping notices the exit up to a
                     // backoff late; the readiness reactor (default 0.0,
@@ -516,26 +539,26 @@ impl AgentSim {
             }
             Ev::ExecDone(u) => {
                 self.exec_inflight -= 1;
-                let now = self.q.now();
+                let now = t;
                 self.prof(now, u, S::AStagingOutPending);
                 // cores are released when the unit leaves AExecuting
                 if let Some(alloc) = self.units[u as usize].alloc.take() {
                     let p = self.partition(u);
                     self.scheds[p].release(&alloc);
                     // fair-share: the tag's outstanding cores shrink
-                    // (no-op under the other policies; max(1) mirrors
-                    // the pool's push clamp so the gauge stays balanced
-                    // even for a clamped zero-core request)
+                    // (no-op under the other policies; `spec.cores` is
+                    // already clamped >= 1, matching the pool's push
+                    // clamp, so the gauge stays balanced)
                     self.pools[p].release_share(
-                        &self.units[u as usize].share,
-                        self.units[u as usize].cores.max(1),
+                        &self.units[u as usize].spec.workload,
+                        self.units[u as usize].spec.cores,
                     );
                 }
                 if self.cfg.stage_out {
                     self.stage_out_queue.push_back(u);
                     self.kick_stage_out();
                 } else {
-                    self.finish_unit(u);
+                    self.finish_unit(t, u);
                 }
                 let p = self.partition(u);
                 self.kick_scheduler(p);
@@ -548,7 +571,7 @@ impl AgentSim {
             }
             Ev::StageOutDone(u) => {
                 self.stage_out_busy = false;
-                self.finish_unit(u);
+                self.finish_unit(t, u);
                 self.kick_stage_out();
             }
             Ev::FeedGeneration(g) => {
@@ -557,10 +580,11 @@ impl AgentSim {
         }
     }
 
-    fn finish_unit(&mut self, u: u32) {
-        let now = self.q.now();
+    fn finish_unit(&mut self, t: f64, u: u32) {
+        let now = t;
         self.prof(now, u, S::UmStagingOutPending);
         self.completed += 1;
+        self.completions.push((t, u));
         if self.cfg.barrier == BarrierMode::Generation {
             let g = self
                 .gens
@@ -581,21 +605,63 @@ impl AgentSim {
         }
     }
 
-    /// Run to completion; returns the result bundle.
-    pub fn run(mut self) -> AgentSimResult {
-        let wall0 = std::time::Instant::now();
+    // ---- steppable component interface ------------------------------
+    //
+    // `run()` is exactly `init(); while step() { }; finish()` — the
+    // split exists so `FullSim` can interleave several components on
+    // one virtual clock and `feed()` this one from outside.  A fed
+    // agent skips `init()` (nothing arrives until the UM binds).
+
+    /// Standalone mode: every unit of the workload arrives through the
+    /// configured barrier.  Not called by an external feeder.
+    pub fn init(&mut self) {
+        let n = self.units.len() as u32;
+        self.inbox.extend(0..n);
+        self.fed = self.units.len();
         self.seed_arrivals();
-        while let Some((_, ev)) = self.q.pop() {
-            self.handle(ev);
+    }
+
+    /// Time of this component's next local event, if any.
+    pub fn next_time(&self) -> Option<f64> {
+        self.q.peek_time()
+    }
+
+    /// Process one event; returns its virtual time, or `None` when the
+    /// component is quiescent (it may wake again on a later `feed`).
+    pub fn step(&mut self) -> Option<f64> {
+        let (t, ev) = self.q.pop()?;
+        self.handle(t, ev);
+        Some(t)
+    }
+
+    /// Externally hand this agent a batch of unit indices at absolute
+    /// virtual time `t` (>= the component's local clock — guaranteed
+    /// when the caller only steps the globally-earliest component).
+    pub fn feed(&mut self, t: f64, units: &[u32]) {
+        if units.is_empty() {
+            return;
         }
+        let lo = self.inbox.len() as u32;
+        self.inbox.extend_from_slice(units);
+        self.fed += units.len();
+        self.q.at(t, Ev::Arrive(lo, lo + units.len() as u32));
+    }
+
+    /// Take the completions recorded since the last drain:
+    /// `(virtual time, unit index)` in completion order.
+    pub fn drain_completions(&mut self) -> Vec<(f64, u32)> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Finalize a fully-stepped component into its result bundle.
+    pub fn finish(self) -> AgentSimResult {
         assert_eq!(
-            self.completed,
-            self.units.len(),
-            "all units must complete (deadlock in the pipeline?)"
+            self.completed, self.fed,
+            "all fed units must complete (deadlock in the pipeline?)"
         );
         let profile = self.profiler.snapshot();
         let analysis = Analysis::new(&profile);
-        let cores_per_unit = self.units.first().map(|u| u.cores).unwrap_or(1);
+        let cores_per_unit = self.units.first().map(|u| u.spec.cores).unwrap_or(1);
         let alloc_costs: Vec<(u32, u32)> = self.units.iter().map(|u| u.alloc_cost).collect();
         let sched_slots_scanned = alloc_costs.iter().map(|&(s, _)| s as u64).sum();
         let sched_words_scanned = alloc_costs.iter().map(|&(_, w)| w as u64).sum();
@@ -605,12 +671,19 @@ impl AgentSim {
             peak_concurrency: analysis.peak_concurrency(),
             makespan: self.q.now(),
             events: self.q.processed(),
-            wall_s: wall0.elapsed().as_secs_f64(),
+            wall_s: self.wall0.elapsed().as_secs_f64(),
             alloc_costs,
             sched_slots_scanned,
             sched_words_scanned,
             profile,
         }
+    }
+
+    /// Run to completion; returns the result bundle.
+    pub fn run(mut self) -> AgentSimResult {
+        self.init();
+        while self.step().is_some() {}
+        self.finish()
     }
 }
 
@@ -708,6 +781,37 @@ mod tests {
         let r2 = run(64, 2, 10.0, BarrierMode::Agent);
         assert_eq!(r1.ttc_a, r2.ttc_a);
         assert_eq!(r1.events, r2.events);
+        assert_eq!(r1.profile.events, r2.profile.events, "same seed, same trace");
+    }
+
+    #[test]
+    fn changed_seed_perturbs_trace() {
+        let wl = WorkloadSpec::generations(64, 2, 10.0).build();
+        let mut a = AgentSimConfig::paper_default(64);
+        a.seed = 1;
+        let mut b = a.clone();
+        b.seed = 2;
+        let ra = AgentSim::new(&stampede(), a, &wl).run();
+        let rb = AgentSim::new(&stampede(), b, &wl).run();
+        assert_ne!(
+            ra.profile.events, rb.profile.events,
+            "a different seed must actually perturb the trace"
+        );
+    }
+
+    #[test]
+    fn empty_workload_returns_zero_makespan() {
+        for barrier in
+            [BarrierMode::Agent, BarrierMode::Application, BarrierMode::Generation]
+        {
+            let mut cfg = AgentSimConfig::paper_default(64);
+            cfg.barrier = barrier;
+            let r = AgentSim::new(&stampede(), cfg, &Workload { units: vec![] }).run();
+            assert_eq!(r.makespan, 0.0, "{barrier:?}: empty workload, zero makespan");
+            assert_eq!(r.ttc_a, 0.0);
+            assert_eq!(r.peak_concurrency, 0);
+            assert!(r.profile.events.is_empty());
+        }
     }
 
     #[test]

@@ -74,6 +74,13 @@ impl<E> EventQueue<E> {
         self.at(t, event);
     }
 
+    /// Time of the earliest scheduled event, without popping it — the
+    /// "next local event" probe a hierarchical co-simulator uses to
+    /// decide which component to step next ([`crate::sim::FullSim`]).
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(item)| item.t)
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         let Reverse(item) = self.heap.pop()?;
@@ -144,6 +151,20 @@ mod tests {
             last = t;
         }
         assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.at(2.0, "b");
+        q.at(1.0, "a");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.now(), 0.0, "peeking must not advance the clock");
+        assert_eq!(q.pop().map(|(_, e)| e), Some("a"));
+        assert_eq!(q.peek_time(), Some(2.0));
+        q.pop();
+        assert_eq!(q.peek_time(), None);
     }
 
     #[test]

@@ -1,0 +1,579 @@
+//! Integrated full-stack DES twin: the UnitManager binding layer of
+//! [`UmSim`](super::UmSim) composed over one *real*
+//! [`AgentSim`](super::AgentSim) instance per pilot.
+//!
+//! `UmSim` models each pilot as core admission plus a rate-limited
+//! launcher, which is faithful for launcher-bound calibrations but
+//! blind to every intra-agent effect — scheduler policy, reservation
+//! windows, staging caches, partitioned schedulers.  This co-simulator
+//! replaces that stub: the UM's wave binding (the same [`UmWaitPool`]
+//! + policy code the real UnitManager drives) feeds each pilot's full
+//! agent pipeline, and agent completions flow back up to the UM pool,
+//! so `load_aware`/`residency` views and generation waves react to
+//! *simulated agent* behavior.  That is what lets one experiment sweep
+//! UM policy × agent policy × reserve window × stage-in hit ratio
+//! jointly (`benches/fig11_fullstack.rs`).
+//!
+//! ## Composition model
+//!
+//! Each component (the UM's own [`EventQueue`], plus each agent's) is
+//! steppable: probe its next local event time, step whichever is
+//! globally earliest (ties: UM first, then lowest pilot index — both
+//! deterministic).  Because only the globally-minimal component
+//! advances, every component's clock stays at or behind the global
+//! frontier, so absolute-time cross-component injections
+//! ([`AgentSim::feed`], completion-triggered `Bind`s) can never
+//! schedule into a component's past.
+//!
+//! ## Fidelity anchor
+//!
+//! With a single pilot and a pass-through UM (one wave, whole
+//! workload, no feed latency) this twin reproduces the standalone
+//! `AgentSim` trace **bit-identically** — same RNG draw order, same
+//! profile events (pinned by `degenerate_full_sim_is_standalone_agent`
+//! below).  Pilot `k`'s agent draws from RNG stream `k`
+//! ([`Pcg::seeded_stream`](crate::util::rng::Pcg::seeded_stream)), so
+//! stream 0 is the classic seeded sequence and sibling pilots stay
+//! decorrelated under one master seed.
+
+use super::agent_sim::{AgentSim, AgentSimConfig, AgentSimResult};
+use super::engine::EventQueue;
+use super::unit::{SimUnitSpec, shape_units};
+use crate::api::um_scheduler::{
+    make_um_scheduler, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
+};
+use crate::config::ResourceConfig;
+use crate::db::LatencyModel;
+use crate::ids::UnitId;
+use crate::profiler::{Analysis, Profile, Profiler};
+use crate::states::UnitState as S;
+use crate::workload::{BarrierMode, Workload};
+
+/// Parameters of one integrated full-stack experiment.
+#[derive(Debug, Clone)]
+pub struct FullSimConfig {
+    /// Pilot sizes in cores (≥1 pilot; heterogeneous sizes allowed).
+    pub pilots: Vec<usize>,
+    /// UnitManager late-binding policy.
+    pub policy: UmPolicy,
+    /// Units bound per UM wave; wave *g+1* binds only after wave *g*
+    /// completed (0 = bind the whole workload at once).
+    pub wave_size: usize,
+    /// Override the UM→Agent feed bulk size (`None` = the calibrated
+    /// `db.bulk_size`).
+    pub feed_bulk: Option<usize>,
+    /// Pass-through UM: feed each pilot its bound units in one batch
+    /// with zero store latency.  This is the degenerate mode in which
+    /// a single-pilot run is bit-identical to standalone [`AgentSim`].
+    pub passthrough: bool,
+    /// Per-pilot agent template.  `pilot_cores` / `generation_size` /
+    /// `barrier` / `profile` / `seed` / `rng_stream` are overridden per
+    /// pilot; every other knob (policy, reserve window, staging,
+    /// executers, …) applies to all agents.
+    pub agent: AgentSimConfig,
+    /// Profiler enabled (UM states + every agent's states)?
+    pub profile: bool,
+    /// Master PRNG seed; pilot `k`'s agent uses RNG stream `k`.
+    pub seed: u64,
+}
+
+impl FullSimConfig {
+    /// Single-wave setup over the given pilots with the paper-default
+    /// agent configuration.
+    pub fn new(pilots: Vec<usize>, policy: UmPolicy) -> Self {
+        let first = pilots.first().copied().unwrap_or(1);
+        FullSimConfig {
+            pilots,
+            policy,
+            wave_size: 0,
+            feed_bulk: None,
+            passthrough: false,
+            agent: AgentSimConfig::paper_default(first),
+            profile: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of an integrated full-stack simulation.
+#[derive(Debug)]
+pub struct FullSimResult {
+    /// Merged trace: UM binding states + every agent's states, sorted
+    /// by virtual time (stable, so equal-time events keep UM-first /
+    /// pilot-index order).
+    pub profile: Profile,
+    /// `ttc_a` over the merged trace (first agent arrival .. last
+    /// agent-side completion).
+    pub ttc_a: f64,
+    /// Core utilization over the *summed* pilot capacity.
+    pub utilization: f64,
+    /// Virtual completion time of the whole run.
+    pub makespan: f64,
+    /// Units bound per pilot (binding distribution).
+    pub per_pilot_units: Vec<usize>,
+    /// Virtual time each pilot's agent finished its last unit.
+    pub per_pilot_makespan: Vec<f64>,
+    /// Full per-pilot agent results (profiles, alloc costs, …).
+    pub per_pilot: Vec<AgentSimResult>,
+    /// Units never bound (no eligible pilot for their core request).
+    pub unbound: usize,
+    /// DES events processed across the UM queue and every agent.
+    pub events: u64,
+    /// Wall-clock seconds the co-simulation took.
+    pub wall_s: f64,
+}
+
+/// UM-side bookkeeping for one pilot.  Unlike [`super::UmSim`]'s pilot
+/// model this holds no execution machinery — the agent does the work —
+/// only what the UnitManager itself can observe: units bound and
+/// completion notices received.
+struct UmPilot {
+    cores: usize,
+    bound: usize,
+    done: usize,
+    /// Cores of bound-but-not-completed units: the UM's estimate of the
+    /// pilot's occupancy (it cannot see inside the agent).
+    outstanding_cores: usize,
+    /// Residency bloom of inputs staged onto this pilot.
+    resident: u64,
+    last_done_t: f64,
+}
+
+/// The hierarchical co-simulator.  The UM event queue carries only
+/// `Bind(wave)` pulses — everything else happens inside the agents.
+pub struct FullSim {
+    db: LatencyModel,
+    /// UM-local queue; the event payload is the wave index to bind.
+    q: EventQueue<u32>,
+    profiler: Profiler,
+
+    units: Vec<SimUnitSpec>,
+    waves: Vec<(u32, u32)>,
+    next_wave: u32,
+    scheduler: Box<dyn UmScheduler>,
+    pool: UmWaitPool<u32>,
+    pilots: Vec<UmPilot>,
+    agents: Vec<AgentSim>,
+    bound_total: usize,
+    done_total: usize,
+    feed_bulk: Option<usize>,
+    passthrough: bool,
+    wall0: std::time::Instant,
+}
+
+impl FullSim {
+    pub fn new(resource: &ResourceConfig, cfg: FullSimConfig, workload: &Workload) -> Self {
+        assert!(!cfg.pilots.is_empty(), "full sim needs at least one pilot");
+        let units = shape_units(workload);
+        let n = units.len();
+        let wave = if cfg.wave_size == 0 { n.max(1) } else { cfg.wave_size };
+        let waves: Vec<(u32, u32)> = (0..n)
+            .step_by(wave)
+            .map(|s| (s as u32, ((s + wave).min(n)) as u32))
+            .collect();
+        // every agent sees the full unit table (the UM feeds it indices
+        // into that table), its own core count, and its own RNG stream
+        let agents: Vec<AgentSim> = cfg
+            .pilots
+            .iter()
+            .enumerate()
+            .map(|(k, &cores)| {
+                let mut a = cfg.agent.clone();
+                a.pilot_cores = cores;
+                a.generation_size = cores;
+                a.barrier = BarrierMode::Agent; // waves are UM-side here
+                a.profile = cfg.profile;
+                a.seed = cfg.seed;
+                a.rng_stream = k as u64;
+                AgentSim::new(resource, a, workload)
+            })
+            .collect();
+        let pilots = cfg
+            .pilots
+            .iter()
+            .map(|&cores| UmPilot {
+                cores,
+                bound: 0,
+                done: 0,
+                outstanding_cores: 0,
+                resident: 0,
+                last_done_t: 0.0,
+            })
+            .collect();
+        FullSim {
+            db: LatencyModel::from_calib(&resource.calib),
+            q: EventQueue::new(),
+            profiler: Profiler::new(cfg.profile),
+            units,
+            waves,
+            next_wave: 0,
+            scheduler: make_um_scheduler(cfg.policy),
+            pool: UmWaitPool::new(),
+            pilots,
+            agents,
+            bound_total: 0,
+            done_total: 0,
+            feed_bulk: cfg.feed_bulk,
+            passthrough: cfg.passthrough,
+            wall0: std::time::Instant::now(),
+        }
+    }
+
+    #[inline]
+    fn prof(&self, t: f64, unit: u32, state: S) {
+        self.profiler.record(t, UnitId(unit as u64), state);
+    }
+
+    /// One UM placement pass (same pool + policy code as [`super::UmSim`]
+    /// and the real UnitManager), then feed each pilot's *agent* its
+    /// newly bound units.
+    fn bind_wave(&mut self, now: f64, w: u32) {
+        if let Some(&(s, e)) = self.waves.get(w as usize) {
+            self.next_wave = w + 1;
+            for u in s..e {
+                self.prof(now, u, S::UmSchedulingPending);
+                let unit = &self.units[u as usize];
+                self.pool.push(
+                    u,
+                    UnitReq {
+                        cores: unit.cores,
+                        workload: unit.workload.clone(),
+                        digest_mask: unit.digest_mask,
+                    },
+                );
+            }
+        }
+        let mut views: Vec<PilotView> = self
+            .pilots
+            .iter()
+            .map(|p| PilotView {
+                cores: p.cores,
+                free_cores: p.cores.saturating_sub(p.outstanding_cores),
+                outstanding: p.bound - p.done,
+                active: true,
+                resident: p.resident,
+            })
+            .collect();
+        let mut newly: Vec<Vec<u32>> = vec![Vec::new(); self.pilots.len()];
+        let (pool, scheduler) = (&mut self.pool, &mut self.scheduler);
+        let placed = pool.place_all(scheduler.as_mut(), &mut views, |u, k| {
+            newly[k].push(u);
+        });
+        self.bound_total += placed;
+        for (k, batch) in newly.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            self.pilots[k].bound += batch.len();
+            for u in &batch {
+                self.prof(now, *u, S::UmScheduling);
+                self.pilots[k].resident |= self.units[*u as usize].digest_mask;
+                self.pilots[k].outstanding_cores += self.units[*u as usize].cores;
+            }
+            if self.passthrough {
+                // degenerate mode: one whole batch, zero latency — the
+                // agent sees exactly what a standalone `init` would seed
+                self.agents[k].feed(now, &batch);
+            } else {
+                // the batch travels UM -> store -> agent in calibrated
+                // bulks, same latency model as `UmSim`
+                let bulk =
+                    self.feed_bulk.unwrap_or(self.db.bulk_size.max(1) as usize).max(1);
+                let mut t = now + self.db.notice_delay();
+                for chunk in batch.chunks(bulk) {
+                    t += self.db.transfer_time(chunk.len() as u64);
+                    self.agents[k].feed(t, chunk);
+                }
+            }
+        }
+        // a wave that binds nothing while nothing is in flight must not
+        // stall the feed (no completion will ever trigger the next Bind)
+        if self.done_total == self.bound_total && (self.next_wave as usize) < self.waves.len()
+        {
+            self.q.after(0.0, self.next_wave);
+        }
+    }
+
+    /// Step the UM component: pop one Bind pulse and run the pass.
+    fn step_um(&mut self) {
+        if let Some((t, w)) = self.q.pop() {
+            self.bind_wave(t, w);
+        }
+    }
+
+    /// Step agent `k` one event, then route its completion feedback
+    /// back up to the UM (occupancy release + wave barrier).
+    fn step_agent(&mut self, k: usize) {
+        self.agents[k].step();
+        for (t, u) in self.agents[k].drain_completions() {
+            let cores = self.units[u as usize].cores;
+            let p = &mut self.pilots[k];
+            p.done += 1;
+            p.outstanding_cores = p.outstanding_cores.saturating_sub(cores);
+            p.last_done_t = t;
+            self.done_total += 1;
+            // wave barrier: completion notices travel back to the UM
+            // before the next wave binds (free in pass-through mode)
+            if self.done_total == self.bound_total
+                && (self.next_wave as usize) < self.waves.len()
+            {
+                let gap = if self.passthrough { 0.0 } else { 2.0 * self.db.notice_delay() };
+                self.q.at(t + gap, self.next_wave);
+            }
+        }
+    }
+
+    /// Run to completion; returns the result bundle.
+    pub fn run(mut self) -> FullSimResult {
+        self.q.at(0.0, 0);
+        loop {
+            // next local event per component; step the globally earliest
+            // (ties: UM before agents, then lowest pilot index)
+            let um_t = self.q.peek_time();
+            let mut agent_next: Option<(f64, usize)> = None;
+            for (k, a) in self.agents.iter().enumerate() {
+                if let Some(t) = a.next_time() {
+                    if agent_next.is_none_or(|(bt, _)| t < bt) {
+                        agent_next = Some((t, k));
+                    }
+                }
+            }
+            match (um_t, agent_next) {
+                (None, None) => break,
+                (Some(tu), Some((ta, _))) if tu <= ta => self.step_um(),
+                (Some(_), None) => self.step_um(),
+                (_, Some((_, k))) => self.step_agent(k),
+            }
+        }
+        self.finish()
+    }
+
+    fn finish(self) -> FullSimResult {
+        assert_eq!(
+            self.done_total, self.bound_total,
+            "every bound unit must complete (deadlock in an agent?)"
+        );
+        let per_pilot_units: Vec<usize> = self.pilots.iter().map(|p| p.bound).collect();
+        let per_pilot_makespan: Vec<f64> =
+            self.pilots.iter().map(|p| p.last_done_t).collect();
+        let capacity: usize = self.pilots.iter().map(|p| p.cores).sum();
+        let unbound = self.pool.len();
+        let mut events = self.q.processed();
+        let mut makespan = self.q.now();
+        let per_pilot: Vec<AgentSimResult> =
+            self.agents.into_iter().map(AgentSim::finish).collect();
+        let mut merged = self.profiler.snapshot().events;
+        for r in &per_pilot {
+            events += r.events;
+            makespan = makespan.max(r.makespan);
+            merged.extend_from_slice(&r.profile.events);
+        }
+        // stable by-time sort keeps UM-first / pilot-index order on ties
+        merged.sort_by(|a, b| a.t.total_cmp(&b.t));
+        let profile = Profile { events: merged };
+        let analysis = Analysis::new(&profile);
+        let cores_per_unit = self.units.first().map(|u| u.cores).unwrap_or(1);
+        FullSimResult {
+            ttc_a: analysis.ttc_a(),
+            utilization: analysis.utilization(capacity, cores_per_unit),
+            makespan,
+            per_pilot_units,
+            per_pilot_makespan,
+            per_pilot,
+            unbound,
+            events,
+            wall_s: self.wall0.elapsed().as_secs_f64(),
+            profile,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin;
+    use crate::sim::{UmSim, UmSimConfig};
+    use crate::workload::WorkloadSpec;
+
+    fn stampede() -> ResourceConfig {
+        builtin("stampede").unwrap()
+    }
+
+    /// The load-bearing correctness anchor: single pilot + pass-through
+    /// UM reproduces the standalone agent trace bit-identically — same
+    /// RNG draw order, same profile events, same event count.
+    #[test]
+    fn degenerate_full_sim_is_standalone_agent() {
+        let wl = WorkloadSpec::generations(64, 3, 10.0).build();
+        let standalone = AgentSim::new(&stampede(), AgentSimConfig::paper_default(64), &wl)
+            .run();
+        let mut cfg = FullSimConfig::new(vec![64], UmPolicy::RoundRobin);
+        cfg.passthrough = true;
+        let full = FullSim::new(&stampede(), cfg, &wl).run();
+        assert_eq!(full.per_pilot_units, vec![192]);
+        assert_eq!(full.unbound, 0);
+        let agent = &full.per_pilot[0];
+        assert_eq!(
+            agent.profile.events, standalone.profile.events,
+            "pass-through single-pilot FullSim must replay the standalone trace"
+        );
+        assert_eq!(agent.events, standalone.events);
+        assert_eq!(agent.makespan, standalone.makespan);
+        assert_eq!(agent.ttc_a, standalone.ttc_a);
+        assert_eq!(full.makespan, standalone.makespan);
+    }
+
+    /// Multi-pilot, single wave: the UM pass starts from identical
+    /// fresh views in both twins and `place_all` updates views in-pass,
+    /// so the binding distribution agrees *exactly* with `UmSim`; the
+    /// makespans agree within tolerance on this launcher-bound
+    /// calibration (0.5 s units, ~64 launches/s) where `UmSim`'s
+    /// launcher-stub pilots are a fair stand-in for full agents.
+    #[test]
+    fn multi_pilot_binding_agrees_with_um_sim() {
+        let wl = WorkloadSpec::uniform(240, 0.5).build();
+        for policy in [UmPolicy::RoundRobin, UmPolicy::LoadAware] {
+            let um = UmSim::new(
+                &stampede(),
+                UmSimConfig::new(vec![96, 24], policy),
+                &wl,
+            )
+            .run();
+            let full =
+                FullSim::new(&stampede(), FullSimConfig::new(vec![96, 24], policy), &wl)
+                    .run();
+            assert_eq!(
+                full.per_pilot_units,
+                um.per_pilot_units,
+                "{}: same pool + policy code, same single-wave binding",
+                policy.name()
+            );
+            assert_eq!(full.unbound, 0);
+            let ratio = full.makespan / um.makespan;
+            assert!(
+                (0.6..1.67).contains(&ratio),
+                "{}: launcher-bound makespans must roughly agree: full={:.1} um={:.1}",
+                policy.name(),
+                full.makespan,
+                um.makespan
+            );
+        }
+    }
+
+    /// UM waves bind against live agent feedback: a later wave must not
+    /// bind before the earlier one completed, and load_aware splits
+    /// heterogeneous pilots proportionally across waves.
+    #[test]
+    fn waves_react_to_agent_completion_feedback() {
+        let wl = WorkloadSpec::uniform(120, 5.0).build();
+        let mut cfg = FullSimConfig::new(vec![48, 24], UmPolicy::LoadAware);
+        cfg.wave_size = 24;
+        let r = FullSim::new(&stampede(), cfg, &wl).run();
+        assert_eq!(r.per_pilot_units.iter().sum::<usize>(), 120);
+        assert_eq!(r.unbound, 0);
+        assert!(
+            r.per_pilot_units[0] > r.per_pilot_units[1],
+            "bigger pilot takes more across waves: {:?}",
+            r.per_pilot_units
+        );
+        // 120 units of 5s over 72 cores in 5 waves: at least two
+        // sequential waves' worth of runtime plus feed latency
+        assert!(r.makespan > 10.0, "makespan={}", r.makespan);
+    }
+
+    /// Intra-agent knobs are invisible to `UmSim` but first-class here:
+    /// on a mixed wide/narrow workload, backfill agents beat fifo
+    /// agents under the *same* UM policy.
+    #[test]
+    fn agent_policy_matters_through_the_full_stack() {
+        use crate::agent::scheduler::SchedPolicy;
+        use crate::api::UnitDescription;
+        let mut units = vec![];
+        for i in 0..120 {
+            let wide = i % 3 == 0;
+            units.push(
+                UnitDescription::sleep(if wide { 60.0 } else { 10.0 })
+                    .name(format!("u{i}"))
+                    .cores(if wide { 16 } else { 1 })
+                    .mpi(wide),
+            );
+        }
+        let wl = Workload { units };
+        let mut fifo = FullSimConfig::new(vec![32, 32], UmPolicy::RoundRobin);
+        let mut bf = fifo.clone();
+        bf.agent.policy = SchedPolicy::Backfill;
+        fifo.agent.policy = SchedPolicy::Fifo;
+        let rf = FullSim::new(&stampede(), fifo, &wl).run();
+        let rb = FullSim::new(&stampede(), bf, &wl).run();
+        assert!(
+            rb.makespan < rf.makespan,
+            "backfill agents must finish sooner: fifo={:.1} backfill={:.1}",
+            rf.makespan,
+            rb.makespan
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_perturbed_by_seed() {
+        let wl = WorkloadSpec::uniform(96, 2.0).build();
+        let cfg = FullSimConfig::new(vec![48, 24], UmPolicy::LoadAware);
+        let a = FullSim::new(&stampede(), cfg.clone(), &wl).run();
+        let b = FullSim::new(&stampede(), cfg.clone(), &wl).run();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.profile.events, b.profile.events, "same seed, same merged trace");
+        let mut seeded = cfg;
+        seeded.seed = 7;
+        let c = FullSim::new(&stampede(), seeded, &wl).run();
+        assert_ne!(
+            a.profile.events, c.profile.events,
+            "a different master seed must perturb the trace"
+        );
+    }
+
+    #[test]
+    fn sibling_pilots_draw_from_distinct_streams() {
+        // equal pilots, equal halves of the workload: if both agents
+        // shared one RNG stream their service draws would correlate;
+        // distinct streams make the two agent traces differ
+        let wl = WorkloadSpec::uniform(128, 2.0).build();
+        let r = FullSim::new(
+            &stampede(),
+            FullSimConfig::new(vec![64, 64], UmPolicy::RoundRobin),
+            &wl,
+        )
+        .run();
+        assert_eq!(r.per_pilot_units, vec![64, 64]);
+        let t0: Vec<f64> = r.per_pilot[0].profile.events.iter().map(|e| e.t).collect();
+        let t1: Vec<f64> = r.per_pilot[1].profile.events.iter().map(|e| e.t).collect();
+        assert_ne!(t0, t1, "decorrelated pilots must not replay each other's timings");
+    }
+
+    #[test]
+    fn empty_workload_returns_zero_makespan() {
+        let r = FullSim::new(
+            &stampede(),
+            FullSimConfig::new(vec![64, 32], UmPolicy::RoundRobin),
+            &Workload { units: vec![] },
+        )
+        .run();
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.ttc_a, 0.0);
+        assert_eq!(r.per_pilot_units, vec![0, 0]);
+        assert_eq!(r.unbound, 0);
+        assert!(r.profile.events.is_empty());
+    }
+
+    #[test]
+    fn oversize_units_stay_unbound() {
+        let wl = WorkloadSpec::uniform(8, 1.0).with_cores(64, true).build();
+        let r = FullSim::new(
+            &stampede(),
+            FullSimConfig::new(vec![32, 16], UmPolicy::RoundRobin),
+            &wl,
+        )
+        .run();
+        assert_eq!(r.unbound, 8, "no eligible pilot: units wait rather than fail");
+        assert_eq!(r.per_pilot_units, vec![0, 0]);
+    }
+}

@@ -14,6 +14,13 @@
 //! * Stager scaling is capped per network-router group (Blue Waters
 //!   Gemini: 2 nodes/router, Fig. 5 bottom) and by the shared-FS
 //!   aggregate metadata rate (Lustre ~1k ops/s/client).
+//!
+//! One model instance is shared by all three DES twins: the standalone
+//! agent twin ([`super::agent_sim`]) samples every component from it,
+//! the UnitManager twin ([`super::um_sim`]) uses its launcher/DB
+//! latencies, and the integrated twin ([`super::full_sim`]) hands each
+//! per-pilot agent sim its own seeded view of the same calibration so
+//! composed traces stay comparable across layers.
 
 use crate::config::ResourceConfig;
 use crate::util::rng::Pcg;

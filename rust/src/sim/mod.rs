@@ -11,6 +11,8 @@
 //!   process-spawn costs with instance-scaling saturation), calibrated
 //!   to the component throughputs the paper reports (see
 //!   `configs/*.json` and DESIGN.md §2);
+//! * [`unit`] — the shared unit-shaping helper every twin uses, so the
+//!   layers cannot drift on core clamping / priority / residency masks;
 //! * [`agent_sim`] — the Agent pipeline (stage-in -> schedule -> execute
 //!   -> stage-out) with barrier feeders, driving a real
 //!   [`crate::agent::CoreScheduler`] through the same event-driven
@@ -20,17 +22,64 @@
 //! * [`um_sim`] — the UnitManager layer above it: late binding over
 //!   multiple simulated pilots under the same exchangeable
 //!   [`crate::api::UmScheduler`] policies the real UnitManager runs,
-//!   with the calibrated UM→Agent feed latency in between;
+//!   with the calibrated UM→Agent feed latency in between (each pilot
+//!   stays a compact admission + launcher model);
+//! * [`full_sim`] — the integrated full-stack twin: the UM binding
+//!   layer composed over one *real* `AgentSim` per pilot, for joint
+//!   UM-policy × agent-policy experiments;
 //! * [`microbench`] — the clone-10k-units-in-one-component micro-bench
 //!   harness of §IV-B.
+//!
+//! # Component model
+//!
+//! Every sim is a *steppable component* over its own
+//! [`EventQueue`]: `init()` seeds the first events, `next_time()`
+//! probes the earliest local event without advancing anything, `step()`
+//! pops exactly one event and dispatches it through the component's
+//! `handle(t, event)`, and `finish()` consumes the component into its
+//! result bundle.  `run()` is always the trivial composition
+//! `init(); while step() { }; finish()` — standalone behavior is the
+//! one-component special case, not a separate code path.  A
+//! co-simulator ([`FullSim`]) holds several components, repeatedly
+//! steps whichever has the globally-earliest `next_time()` (ties
+//! broken deterministically: UM first, then lowest pilot index), and
+//! moves work between them with absolute-time injections
+//! ([`AgentSim::feed`]).  Stepping only the globally-minimal component
+//! keeps every local clock at or behind the global frontier, so those
+//! injections can never schedule into a component's past.
+//!
+//! # Determinism contract
+//!
+//! Two runs with the same configuration and seed produce bit-identical
+//! traces: same profile events, same makespan, same event count.  The
+//! pieces that make this hold are (a) the event queue pops equal-time
+//! events in insertion order ([`EventQueue`]), (b) all randomness comes
+//! from seeded [`Pcg`](crate::util::rng::Pcg) streams, and (c)
+//! co-simulation tie-breaks are positional, never pointer- or
+//! hash-ordered.  Every sim carries a `deterministic_given_seed` test,
+//! and changing the seed must actually perturb the trace.
+//!
+//! # RNG splitting
+//!
+//! One master seed drives any number of components without correlation:
+//! component `k` draws from
+//! [`Pcg::seeded_stream(seed, k)`](crate::util::rng::Pcg::seeded_stream).
+//! Stream 0 is bit-identical to the classic `Pcg::seeded(seed)`
+//! sequence, which is what makes the degenerate single-pilot `FullSim`
+//! replay a standalone `AgentSim` trace exactly while sibling pilots
+//! stay decorrelated.
 
 pub mod agent_sim;
 pub mod engine;
+pub mod full_sim;
 pub mod machine;
 pub mod microbench;
 pub mod um_sim;
+pub mod unit;
 
 pub use agent_sim::{AgentSim, AgentSimConfig, AgentSimResult};
 pub use engine::EventQueue;
+pub use full_sim::{FullSim, FullSimConfig, FullSimResult};
 pub use machine::MachineModel;
 pub use um_sim::{UmSim, UmSimConfig, UmSimResult};
+pub use unit::{SimUnitSpec, shape_units};

@@ -26,9 +26,9 @@ use std::collections::VecDeque;
 
 use super::engine::EventQueue;
 use super::machine::MachineModel;
-use crate::agent::stager::cache::{digest_bit, digest_str};
+use super::unit::{SimUnitSpec, shape_units};
 use crate::api::um_scheduler::{
-    make_um_scheduler, workload_key, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
+    make_um_scheduler, PilotView, UmPolicy, UmScheduler, UmWaitPool, UnitReq,
 };
 use crate::config::ResourceConfig;
 use crate::db::LatencyModel;
@@ -108,17 +108,6 @@ enum Ev {
     ExecDone(u16, u32),
 }
 
-struct SimUnit {
-    duration: f64,
-    cores: usize,
-    workload: String,
-    /// Input residency mask: OR of the digest bits of the unit's
-    /// stage-in sources.  The twin has no file content, so the digest
-    /// is over the source *name* ([`digest_str`]) — self-consistent
-    /// within a run, which is all the binding model needs.
-    digest_mask: u64,
-}
-
 struct SimPilot {
     cores: usize,
     free: usize,
@@ -144,7 +133,9 @@ pub struct UmSim {
     rng: Pcg,
     profiler: Profiler,
 
-    units: Vec<SimUnit>,
+    /// Scheduler-relevant unit shapes, shared with the other twins
+    /// ([`shape_units`]).
+    units: Vec<SimUnitSpec>,
     waves: Vec<(u32, u32)>,
     /// Index of the next wave to bind.
     next_wave: u32,
@@ -156,24 +147,13 @@ pub struct UmSim {
     feed_bulk: Option<usize>,
     inflight: usize,
     peak_inflight: usize,
+    wall0: std::time::Instant,
 }
 
 impl UmSim {
     pub fn new(resource: &ResourceConfig, cfg: UmSimConfig, workload: &Workload) -> Self {
         assert!(!cfg.pilots.is_empty(), "UM sim needs at least one pilot");
-        let units: Vec<SimUnit> = workload
-            .units
-            .iter()
-            .map(|u| SimUnit {
-                duration: u.duration().unwrap_or(0.0),
-                cores: u.cores.max(1),
-                workload: workload_key(&u.name),
-                digest_mask: u
-                    .input_staging
-                    .iter()
-                    .fold(0u64, |m, d| m | digest_bit(digest_str(&d.source))),
-            })
-            .collect();
+        let units = shape_units(workload);
         let n = units.len();
         let gen = if cfg.generation_size == 0 { n.max(1) } else { cfg.generation_size };
         let waves: Vec<(u32, u32)> = (0..n)
@@ -213,6 +193,7 @@ impl UmSim {
             feed_bulk: cfg.feed_bulk,
             inflight: 0,
             peak_inflight: 0,
+            wall0: std::time::Instant::now(),
         }
     }
 
@@ -310,11 +291,11 @@ impl UmSim {
         self.q.after(service, Ev::Spawned(p as u16, u));
     }
 
-    fn handle(&mut self, ev: Ev) {
+    fn handle(&mut self, t: f64, ev: Ev) {
         match ev {
             Ev::Bind(w) => self.bind_wave(w),
             Ev::Arrive(p, lo, hi) => {
-                let now = self.q.now();
+                let now = t;
                 for i in lo..hi {
                     let u = self.pilots[p as usize].inbox[i as usize];
                     self.prof(now, u, S::ASchedulingPending);
@@ -323,7 +304,7 @@ impl UmSim {
                 self.kick(p as usize);
             }
             Ev::Spawned(p, u) => {
-                let now = self.q.now();
+                let now = t;
                 self.pilots[p as usize].launch_busy = false;
                 self.prof(now, u, S::AExecuting);
                 self.inflight += 1;
@@ -333,7 +314,7 @@ impl UmSim {
                 self.kick(p as usize);
             }
             Ev::ExecDone(p, u) => {
-                let now = self.q.now();
+                let now = t;
                 self.prof(now, u, S::AStagingOutPending);
                 self.prof(now, u, S::Done);
                 let pilot = &mut self.pilots[p as usize];
@@ -354,13 +335,28 @@ impl UmSim {
         }
     }
 
-    /// Run to completion; returns the result bundle.
-    pub fn run(mut self) -> UmSimResult {
-        let wall0 = std::time::Instant::now();
+    // ---- steppable component interface ------------------------------
+
+    /// Seed the first binding pass.
+    pub fn init(&mut self) {
         self.q.at(0.0, Ev::Bind(0));
-        while let Some((_, ev)) = self.q.pop() {
-            self.handle(ev);
-        }
+    }
+
+    /// Time of this component's next local event, if any.
+    pub fn next_time(&self) -> Option<f64> {
+        self.q.peek_time()
+    }
+
+    /// Process one event; returns its virtual time, or `None` when the
+    /// component is quiescent.
+    pub fn step(&mut self) -> Option<f64> {
+        let (t, ev) = self.q.pop()?;
+        self.handle(t, ev);
+        Some(t)
+    }
+
+    /// Finalize a fully-stepped component into its result bundle.
+    pub fn finish(self) -> UmSimResult {
         assert_eq!(
             self.done_total, self.bound_total,
             "every bound unit must complete (deadlock in a pilot model?)"
@@ -372,9 +368,16 @@ impl UmSim {
             unbound: self.pool.len(),
             peak_inflight: self.peak_inflight,
             events: self.q.processed(),
-            wall_s: wall0.elapsed().as_secs_f64(),
+            wall_s: self.wall0.elapsed().as_secs_f64(),
             profile: self.profiler.snapshot(),
         }
+    }
+
+    /// Run to completion; returns the result bundle.
+    pub fn run(mut self) -> UmSimResult {
+        self.init();
+        while self.step().is_some() {}
+        self.finish()
     }
 }
 
@@ -408,6 +411,35 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.events, b.events);
         assert_eq!(a.per_pilot_units, b.per_pilot_units);
+        assert_eq!(a.profile.events, b.profile.events, "same seed, same trace");
+    }
+
+    #[test]
+    fn changed_seed_perturbs_trace() {
+        let wl = WorkloadSpec::uniform(144, 5.0).build();
+        let mut cfg = UmSimConfig::new(vec![48, 24], UmPolicy::LoadAware);
+        cfg.seed = 1;
+        let a = UmSim::new(&comet(), cfg.clone(), &wl).run();
+        cfg.seed = 2;
+        let b = UmSim::new(&comet(), cfg, &wl).run();
+        assert_ne!(
+            a.profile.events, b.profile.events,
+            "a different seed must perturb the launch-service draws"
+        );
+    }
+
+    #[test]
+    fn empty_workload_returns_zero_makespan() {
+        let r = UmSim::new(
+            &comet(),
+            UmSimConfig::new(vec![64, 64], UmPolicy::RoundRobin),
+            &Workload { units: vec![] },
+        )
+        .run();
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.per_pilot_units, vec![0, 0]);
+        assert_eq!(r.unbound, 0);
+        assert!(r.profile.events.is_empty());
     }
 
     #[test]

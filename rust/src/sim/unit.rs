@@ -1,0 +1,91 @@
+//! Shared unit shaping for the DES twins.
+//!
+//! [`AgentSim`](super::AgentSim), [`UmSim`](super::UmSim) and
+//! [`FullSim`](super::FullSim) all reduce a [`Workload`]'s unit
+//! descriptions to the same scheduler-relevant tuple.  The agent and UM
+//! twins used to shape units independently and drifted (the UM twin
+//! clamped `cores` and computed the residency digest mask; the agent
+//! twin carried `priority` but skipped both) — drift that would
+//! silently skew the integrated twin, where one unit table feeds both
+//! layers.  This helper is the single shaping path.
+
+use crate::agent::stager::cache::{digest_bit, digest_str};
+use crate::api::um_scheduler::workload_key;
+use crate::workload::Workload;
+
+/// The scheduler-relevant shape of one simulated unit, shared by every
+/// sim layer.
+#[derive(Debug, Clone)]
+pub struct SimUnitSpec {
+    /// Modeled runtime (s); non-duration payloads count as 0.
+    pub duration: f64,
+    /// Core request, clamped to >= 1 — a zero-core description still
+    /// occupies one core when placed, mirroring the wait-pool's own
+    /// push clamp so both layers balance the same gauge.
+    pub cores: usize,
+    /// Placement preference under the agent `priority` policy.
+    pub priority: i32,
+    /// Workload affinity / fair-share tag ([`workload_key`]).
+    pub workload: String,
+    /// Input residency mask: OR of the digest bits of the unit's
+    /// stage-in sources.  The twins have no file content, so the digest
+    /// is over the source *name* ([`digest_str`]) — self-consistent
+    /// within a run, which is all the binding model needs.
+    pub digest_mask: u64,
+}
+
+/// Shape every unit of a workload into its [`SimUnitSpec`].
+pub fn shape_units(workload: &Workload) -> Vec<SimUnitSpec> {
+    workload
+        .units
+        .iter()
+        .map(|u| SimUnitSpec {
+            duration: u.duration().unwrap_or(0.0),
+            cores: u.cores.max(1),
+            priority: u.priority,
+            workload: workload_key(&u.name),
+            digest_mask: u
+                .input_staging
+                .iter()
+                .fold(0u64, |m, d| m | digest_bit(digest_str(&d.source))),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::UnitDescription;
+
+    #[test]
+    fn shapes_all_scheduler_relevant_fields() {
+        let wl = Workload {
+            units: vec![
+                UnitDescription::sleep(3.5)
+                    .name("md-0007")
+                    .cores(4)
+                    .mpi(true)
+                    .priority(2)
+                    .stage_in("shared-A.dat", "in.dat"),
+                UnitDescription::sleep(1.0).name("solo"),
+            ],
+        };
+        let specs = shape_units(&wl);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].duration, 3.5);
+        assert_eq!(specs[0].cores, 4);
+        assert_eq!(specs[0].priority, 2);
+        assert_eq!(specs[0].workload, "md");
+        assert_eq!(specs[0].digest_mask, digest_bit(digest_str("shared-A.dat")));
+        assert_eq!(specs[1].workload, "solo");
+        assert_eq!(specs[1].digest_mask, 0, "no staged inputs, no residency bits");
+    }
+
+    #[test]
+    fn zero_core_request_clamps_to_one() {
+        let mut d = UnitDescription::sleep(1.0).name("z-0");
+        d.cores = 0;
+        let specs = shape_units(&Workload { units: vec![d] });
+        assert_eq!(specs[0].cores, 1, "mirrors the wait-pool push clamp");
+    }
+}
